@@ -1,0 +1,166 @@
+"""AOT exporter: lower every L2 entry point to HLO text + manifest.
+
+The interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Every entry is lowered with ``return_tuple=True`` — the rust side unwraps
+with ``to_tuple1()``.  ``manifest.json`` records, per entry: the artifact
+file, the input names/shapes/dtypes and the output shape, plus the global
+shape configuration so the rust runtime can validate its padding buckets
+against what was actually compiled.
+
+Usage (what ``make artifacts`` runs)::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --n 1000 --m 300 --mtilde 60 --steps 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_table(n: int, m: int, mtilde: int, steps: int, losses):
+    """(name, fn, arg specs, arg names, out shape) for every entry point.
+
+    Shapes: n = rows per observation partition, m = features per feature
+    block (M/Q), m̃ = features per sub-block (M/QP), steps = L.
+    """
+    entries = []
+    # loss-independent distributed pieces
+    entries.append(
+        ("partial_z", model.partial_z,
+         [spec((n, m)), spec((m,))], ["x", "w"], (n,))
+    )
+    entries.append(
+        ("grad_slice", model.grad_slice,
+         [spec((n, m)), spec((n,))], ["x", "u"], (m,))
+    )
+    for loss in losses:
+        entries.append(
+            (f"dloss_u_{loss}", model.make_dloss_u(loss),
+             [spec((n,)), spec((n,))], ["z", "y"], (n,))
+        )
+        entries.append(
+            (f"grad_fused_{loss}", model.make_grad_fused(loss),
+             [spec((n, m)), spec((n,)), spec((m,))], ["x", "y", "w"], (m,))
+        )
+        entries.append(
+            (f"svrg_inner_avg_{loss}", model.make_svrg_inner_avg(loss),
+             [spec((n, mtilde)), spec((n,)), spec((mtilde,)), spec((mtilde,)),
+              spec((mtilde,)), spec((steps,), I32), spec((1,))],
+             ["x", "y", "w0", "wt", "mu", "idx", "gamma"], (mtilde,))
+        )
+        entries.append(
+            (f"svrg_inner_{loss}", model.make_svrg_inner(loss),
+             [spec((n, mtilde)), spec((n,)), spec((mtilde,)), spec((mtilde,)),
+              spec((mtilde,)), spec((steps,), I32), spec((1,))],
+             ["x", "y", "w0", "wt", "mu", "idx", "gamma"], (mtilde,))
+        )
+        entries.append(
+            (f"loss_partial_{loss}", model.make_loss_partial(loss),
+             [spec((n, m)), spec((n,)), spec((m,))], ["x", "y", "w"], (1,))
+        )
+        entries.append(
+            (f"loss_from_z_{loss}", model.make_loss_from_z(loss),
+             [spec((n,)), spec((n,))], ["z", "y"], (1,))
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also write the fused "
+                         "hinge gradient HLO to this path")
+    ap.add_argument("--n", type=int, default=1000,
+                    help="rows per observation partition")
+    ap.add_argument("--m", type=int, default=300,
+                    help="features per feature block (M/Q)")
+    ap.add_argument("--mtilde", type=int, default=60,
+                    help="features per sub-block (M/QP)")
+    ap.add_argument("--steps", type=int, default=32,
+                    help="inner-loop length L baked into svrg_inner")
+    ap.add_argument("--losses", default="hinge,logistic,squared")
+    args = ap.parse_args()
+
+    losses = [s for s in args.losses.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "schema": 1,
+        "config": {
+            "n": args.n, "m": args.m, "mtilde": args.mtilde,
+            "steps": args.steps, "losses": losses, "dtype": "f32",
+        },
+        "entries": {},
+    }
+
+    for name, fn, specs, arg_names, out_shape in entry_table(
+        args.n, args.m, args.mtilde, args.steps, losses
+    ):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [
+                {
+                    "name": an,
+                    "shape": list(s.shape),
+                    "dtype": "i32" if s.dtype == I32 else "f32",
+                }
+                for an, s in zip(arg_names, specs)
+            ],
+            "output_shape": list(out_shape),
+        }
+        print(f"  lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path} ({len(manifest['entries'])} entries)")
+
+    if args.out:
+        lowered = jax.jit(model.make_grad_fused("hinge")).lower(
+            spec((args.n, args.m)), spec((args.n,)), spec((args.m,))
+        )
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

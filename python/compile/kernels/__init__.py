@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the SODDA compute hot-spots.
+
+Each kernel has a pure-jnp oracle in :mod:`.ref`; pytest keeps them equal.
+"""
+
+from . import common, linear_grad, losses, matvec, ref, svrg
+
+__all__ = ["common", "linear_grad", "losses", "matvec", "ref", "svrg"]

@@ -1,0 +1,70 @@
+"""Shared pieces for the Pallas kernels.
+
+All kernels in this package are built with ``interpret=True``: the CPU
+PJRT plugin (the runtime the rust coordinator embeds) cannot execute the
+Mosaic custom-calls that real-TPU Pallas lowering emits, while interpret
+mode lowers to plain HLO that runs anywhere.  The Block/grid structure is
+still written the way a TPU would want it (feature tiles sized for VMEM,
+row-tile accumulation) — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Interpret mode everywhere (CPU PJRT execution path).
+INTERPRET = True
+
+# Default tile sizes — multiples of the TPU (8, 128) f32 VMEM tiling.
+# 1024×512 f32 = 2 MiB per resident X block: inside a TPU core's ~16 MiB
+# VMEM with double-buffering, and large enough that the grid is 1-2 steps
+# at the default partition shapes (perf log A2-A3 in EXPERIMENTS.md §Perf:
+# shrinking the grid from (8,1) to (1,1) cut the compiled kernel time
+# ~2.6× — each grid step pays a dynamic-update-slice round trip in the
+# lowered HLO, the interpret-mode analogue of a TPU grid-step stall).
+ROW_TILE = 1024
+FEAT_TILE = 512
+
+
+def dloss(z: jnp.ndarray, y: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """∂f/∂z for the supported losses, traceable inside a kernel."""
+    if loss == "hinge":
+        return jnp.where(y * z < 1.0, -y, jnp.zeros_like(y))
+    if loss == "logistic":
+        return -y / (1.0 + jnp.exp(y * z))
+    if loss == "squared":
+        return z - y
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def floss(z: jnp.ndarray, y: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """f(z, y) for the supported losses, traceable inside a kernel."""
+    if loss == "hinge":
+        return jnp.maximum(0.0, 1.0 - y * z)
+    if loss == "logistic":
+        return jnp.logaddexp(0.0, -y * z)
+    if loss == "squared":
+        return 0.5 * (z - y) ** 2
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(arr: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad ``arr`` along ``axis`` up to the next multiple.
+
+    Accumulating kernels revisit one output block across grid steps; a
+    partial edge tile would otherwise fold uninitialized out-of-bounds
+    lanes into the sum, so every wrapper pads its reduction axes first.
+    Zero rows/features contribute exactly zero to all our sums (for the
+    loss kernel the trace-time constant f(0, 0)·pad is subtracted).
+    """
+    size = arr.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)

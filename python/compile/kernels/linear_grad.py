@@ -1,0 +1,61 @@
+"""Fused linear-model gradient kernel: g = Xᵀ f'(Xw, y) in one pass.
+
+This is the single-partition hot-spot (used by the quickstart, the
+µ^t estimate when a feature block fits in one tile, and as the baseline
+the two-pass ``matvec``/``rmatvec`` pair is benchmarked against).
+
+Grid is over row tiles only; the full parameter vector w stays resident
+(on TPU: in VMEM — fine for the sub-block widths m̃ = M/QP the paper's
+partitioning produces).  Each grid step computes its row-tile margin
+``z = X_blk w``, the loss derivative ``u = f'(z, y)``, and accumulates
+``uᵀ X_blk`` into the shared output block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _make_kernel(loss: str):
+    def kernel(x_ref, y_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        z = x_ref[...] @ w_ref[...]
+        u = common.dloss(z, y_ref[...], loss)
+        o_ref[...] += u @ x_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "row_tile"))
+def linear_grad_sum(x, y, w, *, loss: str, row_tile: int = common.ROW_TILE):
+    """Σ_i ∇_w f(x_i·w, y_i) (unnormalized — caller divides)."""
+    n, m = x.shape
+    rt = min(row_tile, n)
+    # Row axis is accumulated: pad with zero rows (u(0, 0) = 0 for every
+    # supported loss, so padding contributes nothing to the sum).
+    xp = common.pad_to(x, 0, rt)
+    yp = common.pad_to(y, 0, rt)
+    np_ = xp.shape[0]
+    return pl.pallas_call(
+        _make_kernel(loss),
+        grid=(np_ // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, m), lambda i: (i, 0)),
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp, yp, w)

@@ -1,0 +1,126 @@
+"""Loss-evaluation kernels.
+
+* ``dloss_vec`` — elementwise u_i = f'(z_i, y_i); the leader broadcasts u
+  to all feature-partition workers during the µ^t estimate.
+* ``loss_sum``  — Σ_i f(x_i·w_blk, y_i) over a local block (row-tiled,
+  scalar accumulated); partial sums are reduced across partitions by the
+  rust coordinator to report the paper's objective F(ω).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _make_dloss_kernel(loss: str):
+    def kernel(z_ref, y_ref, o_ref):
+        o_ref[...] = common.dloss(z_ref[...], y_ref[...], loss)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "row_tile"))
+def dloss_vec(z, y, *, loss: str, row_tile: int = common.ROW_TILE):
+    """u = f'(z, y) elementwise."""
+    (n,) = z.shape
+    rt = min(row_tile, n)
+    return pl.pallas_call(
+        _make_dloss_kernel(loss),
+        grid=(common.cdiv(n, rt),),
+        in_specs=[
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((rt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), z.dtype),
+        interpret=common.INTERPRET,
+    )(z, y)
+
+
+def _make_loss_z_kernel(loss: str):
+    def kernel(z_ref, y_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(common.floss(z_ref[...], y_ref[...], loss))[None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "row_tile"))
+def loss_sum_from_z(z, y, *, loss: str, row_tile: int = common.ROW_TILE):
+    """Σ_i f(z_i, y_i) from pre-reduced margins (distributed objective:
+    the leader sums partial z across the Q feature blocks first)."""
+    (n,) = z.shape
+    rt = min(row_tile, n)
+    zp = common.pad_to(z, 0, rt)
+    yp = common.pad_to(y, 0, rt)
+    np_ = zp.shape[0]
+    pad = np_ - n
+    out = pl.pallas_call(
+        _make_loss_z_kernel(loss),
+        grid=(np_ // rt,),
+        in_specs=[
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((rt,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), z.dtype),
+        interpret=common.INTERPRET,
+    )(zp, yp)
+    if pad:
+        zero = jnp.zeros((), dtype=z.dtype)
+        out = out - pad * common.floss(zero, zero, loss)
+    return out
+
+
+def _make_loss_sum_kernel(loss: str):
+    def kernel(x_ref, y_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        z = x_ref[...] @ w_ref[...]
+        o_ref[...] += jnp.sum(common.floss(z, y_ref[...], loss))[None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "row_tile"))
+def loss_sum(x, y, w, *, loss: str, row_tile: int = common.ROW_TILE):
+    """Σ_i f(x_i·w, y_i) for a local block (shape (1,) for AOT-friendliness)."""
+    n, m = x.shape
+    rt = min(row_tile, n)
+    # Row axis is accumulated: pad with zero rows, then subtract the
+    # trace-time constant f(0, 0)·pad the zero rows contributed.
+    xp = common.pad_to(x, 0, rt)
+    yp = common.pad_to(y, 0, rt)
+    np_ = xp.shape[0]
+    pad = np_ - n
+    out = pl.pallas_call(
+        _make_loss_sum_kernel(loss),
+        grid=(np_ // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, m), lambda i: (i, 0)),
+            pl.BlockSpec((rt,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp, yp, w)
+    if pad:
+        zero = jnp.zeros((), dtype=x.dtype)
+        out = out - pad * common.floss(zero, zero, loss)
+    return out

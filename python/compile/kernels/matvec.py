@@ -1,0 +1,95 @@
+"""Row/feature-tiled matvec kernels: the distributed inner-product halves.
+
+In the doubly distributed setting each worker (p, q) holds a block
+``X^{p,q}`` of the data matrix.  Estimating the stochastic full gradient
+µ^t (Algorithm 1, step 8) decomposes into
+
+* ``partial z``: every worker computes ``z_part = X_blk · w_blk`` over its
+  local features (rust reduces the partial sums across q to get the full
+  margins z_j = x_j^{B^t} w_{B^t}), then
+* ``rmatvec``:   every worker computes its gradient slice
+  ``g_blk = X_blkᵀ · u`` from the broadcast derivative vector u.
+
+Both are Pallas kernels tiled so one (row-tile × feature-tile) block of X
+is resident per grid step — exactly the HBM→VMEM schedule a TPU wants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """o[rows] += X[rows, feats] @ w[feats] for one (i, j) grid step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "feat_tile"))
+def matvec(x, w, *, row_tile: int = common.ROW_TILE, feat_tile: int = common.FEAT_TILE):
+    """z = X @ w with a (rows, feats) grid; feature axis accumulated."""
+    n, m = x.shape
+    rt, ft = min(row_tile, n), min(feat_tile, m)
+    # Feature axis is accumulated: pad it so edge tiles are all-zero.
+    xp = common.pad_to(common.pad_to(x, 1, ft), 0, rt)
+    wp = common.pad_to(w, 0, ft)
+    np_, mp = xp.shape
+    grid = (np_ // rt, mp // ft)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, ft), lambda i, j: (i, j)),
+            pl.BlockSpec((ft,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((rt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp, wp)
+    return out[:n]
+
+
+def _rmatvec_kernel(x_ref, u_ref, o_ref):
+    """o[feats] += u[rows] @ X[rows, feats] for one (j, i) grid step."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += u_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "feat_tile"))
+def rmatvec(x, u, *, row_tile: int = common.ROW_TILE, feat_tile: int = common.FEAT_TILE):
+    """g = Xᵀ @ u (unnormalized sum over rows), row axis accumulated."""
+    n, m = x.shape
+    rt, ft = min(row_tile, n), min(feat_tile, m)
+    # Row axis is accumulated: pad it so edge tiles are all-zero.
+    xp = common.pad_to(common.pad_to(x, 0, rt), 1, ft)
+    up = common.pad_to(u, 0, rt)
+    np_, mp = xp.shape
+    grid = (mp // ft, np_ // rt)
+    out = pl.pallas_call(
+        _rmatvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, ft), lambda j, i: (i, j)),
+            pl.BlockSpec((rt,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ft,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp, up)
+    return out[:m]

@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+Everything the kernels in this package compute has an exact, obviously
+correct jnp counterpart here. pytest asserts ``allclose`` between the two
+on hypothesis-driven shape/value sweeps; the rust NativeEngine implements
+the same math a third time and is cross-checked through the AOT artifacts
+in the cargo integration tests.
+
+Conventions (shared by kernels, model.py and the rust engines):
+
+* losses are functions of the margin/residual ``z = x·w`` and label ``y``;
+* reductions return **sums**, not means — the coordinator divides by the
+  relevant ``d^t``/batch count so that zero-padded rows are free;
+* hinge uses the subgradient ``-y·1[y z < 1]`` (the paper's SVM setting).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LOSSES = ("hinge", "logistic", "squared")
+
+
+# ---------------------------------------------------------------------------
+# scalar loss + dloss/dz, vectorized over z/y
+# ---------------------------------------------------------------------------
+
+def loss_values(z: jnp.ndarray, y: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """Per-row loss values f(z_i, y_i)."""
+    if loss == "hinge":
+        return jnp.maximum(0.0, 1.0 - y * z)
+    if loss == "logistic":
+        # log(1 + exp(-yz)) computed stably
+        return jnp.logaddexp(0.0, -y * z)
+    if loss == "squared":
+        return 0.5 * (z - y) ** 2
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def dloss_values(z: jnp.ndarray, y: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """Per-row derivative u_i = ∂f/∂z (z_i, y_i)."""
+    if loss == "hinge":
+        return jnp.where(y * z < 1.0, -y, 0.0)
+    if loss == "logistic":
+        # -y * sigmoid(-y z)
+        return -y / (1.0 + jnp.exp(y * z))
+    if loss == "squared":
+        return z - y
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+# ---------------------------------------------------------------------------
+# linear-model reductions
+# ---------------------------------------------------------------------------
+
+def matvec(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Partial margins z = X w for a local feature block."""
+    return x @ w
+
+
+def rmatvec(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Gradient accumulation g = Xᵀ u (sum over rows, unnormalized)."""
+    return x.T @ u
+
+
+def loss_sum(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """Σ_i f(x_i·w, y_i) (sum — caller divides)."""
+    return jnp.sum(loss_values(x @ w, y, loss))
+
+
+def linear_grad_sum(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, loss: str) -> jnp.ndarray:
+    """Fused Σ_i ∇_w f(x_i·w, y_i) = Xᵀ u with u_i = f'(x_i·w, y_i)."""
+    u = dloss_values(x @ w, y, loss)
+    return x.T @ u
+
+
+# ---------------------------------------------------------------------------
+# SVRG inner loop (Algorithm 1, steps 13-17, one (q, π_q(p)) sub-block)
+# ---------------------------------------------------------------------------
+
+def svrg_inner(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    w0: jnp.ndarray,
+    wt: jnp.ndarray,
+    mu: jnp.ndarray,
+    idx: jnp.ndarray,
+    gamma,
+    loss: str,
+) -> jnp.ndarray:
+    """L SVRG steps on one parameter sub-block.
+
+    ``w^{(i+1)} = w^{(i)} − γ [ f'(x_j·w^{(i)}) x_j − f'(x_j·w^t) x_j + µ ]``
+    with ``j = idx[i]`` a random local row per step (paper, step 16).
+    """
+    w = w0
+    for i in range(int(idx.shape[0])):
+        xj = x[idx[i]]
+        yj = y[idx[i]]
+        g_cur = dloss_values(xj @ w, yj, loss) * xj
+        g_ref = dloss_values(xj @ wt, yj, loss) * xj
+        w = w - gamma * (g_cur - g_ref + mu)
+    return w
+
+
+def svrg_inner_avg(x, y, w0, wt, mu, idx, gamma, loss):
+    """Iterate-averaged variant (RADiSA-avg combiner): uniform mean of the
+    iterates w^(1) … w^(L) (Polyak averaging)."""
+    steps = int(idx.shape[0])
+    tail_start = 0
+    w = w0
+    acc = jnp.zeros_like(w0)
+    for i in range(steps):
+        xj = x[idx[i]]
+        yj = y[idx[i]]
+        g_cur = dloss_values(xj @ w, yj, loss) * xj
+        g_ref = dloss_values(xj @ wt, yj, loss) * xj
+        w = w - gamma * (g_cur - g_ref + mu)
+        if i >= tail_start:
+            acc = acc + w
+    return acc / (steps - tail_start)

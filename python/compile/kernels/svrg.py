@@ -1,0 +1,122 @@
+"""SVRG inner-loop kernel (Algorithm 1, steps 13-17).
+
+One worker (p, q) owns the sub-block ``X_sub = x^{p,q,π_q(p)}`` (n × m̃)
+and runs L variance-reduced steps on its parameter slice:
+
+    w^{(i+1)} = w^{(i)} − γ [ f'(x_j·w^{(i)}) x_j − f'(x_j·w^t) x_j + µ ]
+
+with j = idx[i] a freshly sampled local row per step.  The whole loop is a
+single kernel so that X_sub stays resident (on TPU: in VMEM) across all L
+steps — L row-gathers + 2L tiny matvecs never touch HBM again.  The row
+indices are sampled by the rust coordinator (it owns all RNG streams) and
+passed in as an int32 vector.
+
+The per-step reference gradient f'(x_j·w^t) x_j is recomputed rather than
+cached: with single-row batches the recompute is one dot product, and it
+keeps the kernel's memory footprint at O(n·m̃) exactly like the paper's
+Spark implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _make_avg_kernel(loss: str, steps: int):
+    tail_start = 0  # uniform (Polyak) average of all L iterates
+
+    def kernel(x_ref, y_ref, w0_ref, wt_ref, mu_ref, idx_ref, gamma_ref, o_ref):
+        wt = wt_ref[...]
+        mu = mu_ref[...]
+        gamma = gamma_ref[0]
+
+        def body(i, carry):
+            w, acc = carry
+            j = idx_ref[i]
+            xj = pl.load(x_ref, (pl.dslice(j, 1), slice(None)))[0]
+            yj = pl.load(y_ref, (pl.dslice(j, 1),))[0]
+            u_cur = common.dloss(xj @ w, yj, loss)
+            u_ref_ = common.dloss(xj @ wt, yj, loss)
+            w = w - gamma * ((u_cur - u_ref_) * xj + mu)
+            acc = acc + jnp.where(i >= tail_start, w, jnp.zeros_like(w))
+            return w, acc
+
+        _, acc = jax.lax.fori_loop(0, steps, body, (w0_ref[...], jnp.zeros_like(w0_ref[...])))
+        o_ref[...] = acc / (steps - tail_start)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def svrg_inner_avg(x, y, w0, wt, mu, idx, gamma, *, loss: str):
+    """Like :func:`svrg_inner` but returns the uniform iterate average
+    ``mean(w^(1) … w^(L))`` — RADiSA-avg's combiner (Polyak averaging)."""
+    n, mt = x.shape
+    (steps,) = idx.shape
+    return pl.pallas_call(
+        _make_avg_kernel(loss, int(steps)),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, mt), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((steps,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((mt,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((mt,), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, y, w0, wt, mu, idx, gamma)
+
+
+def _make_kernel(loss: str, steps: int):
+    def kernel(x_ref, y_ref, w0_ref, wt_ref, mu_ref, idx_ref, gamma_ref, o_ref):
+        wt = wt_ref[...]
+        mu = mu_ref[...]
+        gamma = gamma_ref[0]
+
+        def body(i, w):
+            j = idx_ref[i]
+            xj = pl.load(x_ref, (pl.dslice(j, 1), slice(None)))[0]
+            yj = pl.load(y_ref, (pl.dslice(j, 1),))[0]
+            u_cur = common.dloss(xj @ w, yj, loss)
+            u_ref_ = common.dloss(xj @ wt, yj, loss)
+            return w - gamma * ((u_cur - u_ref_) * xj + mu)
+
+        o_ref[...] = jax.lax.fori_loop(0, steps, body, w0_ref[...])
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def svrg_inner(x, y, w0, wt, mu, idx, gamma, *, loss: str):
+    """Run ``idx.shape[0]`` SVRG steps on one sub-block; returns w^{(L)}.
+
+    Shapes: x (n, m̃), y (n,), w0/wt/mu (m̃,), idx (L,) int32, gamma (1,).
+    """
+    n, mt = x.shape
+    (steps,) = idx.shape
+    return pl.pallas_call(
+        _make_kernel(loss, int(steps)),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, mt), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((mt,), lambda i: (0,)),
+            pl.BlockSpec((steps,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((mt,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((mt,), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, y, w0, wt, mu, idx, gamma)

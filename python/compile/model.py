@@ -1,0 +1,134 @@
+"""L2 — the JAX compute graphs the rust coordinator executes via PJRT.
+
+Each public function here is one AOT entry point: :mod:`compile.aot`
+lowers it at a fixed shape to HLO text under ``artifacts/`` and records it
+in ``artifacts/manifest.json``; ``rust/src/runtime`` loads and compiles
+each one exactly once per process and calls it from the training loop.
+
+Masking conventions (how the paper's random sets map onto fixed shapes):
+
+* **B^t (features used in inner products)** — rust zeroes the excluded
+  coordinates of ``w`` before calling ``partial_z``; ``x_j^{B} w_B`` is
+  then literally ``x_j · w_masked``.
+* **C^t (gradient coordinates computed)** — rust zeroes the excluded
+  coordinates of the returned gradient slice (``\\bar∇`` in the paper is
+  exactly "gradient with non-C coordinates set to 0").
+* **D^t (observations sampled)** — rust gathers the sampled rows into the
+  front of the fixed-shape buffer and zero-pads the tail; zero rows have
+  ``u = f'(0,0) = 0`` so they add nothing to any gradient sum, and the
+  loss entry subtracts the trace-time pad constant.
+
+All reductions return sums; normalization (1/d^t, 1/N …) is rust's job.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear_grad, losses, matvec, svrg
+
+
+# ---------------------------------------------------------------------------
+# µ^t estimation pieces (Algorithm 1, steps 5-8), per (p, q) worker
+# ---------------------------------------------------------------------------
+
+def partial_z(x, w):
+    """Partial margins ``z_part = X_blk · w_blk`` for one feature block.
+
+    The leader sums the Q partial vectors to get z_j = x_j^{B^t} w_{B^t}.
+    """
+    return (matvec.matvec(x, w),)
+
+
+def make_dloss_u(loss: str):
+    """u = f'(z, y): broadcast to feature workers after the z-reduce."""
+
+    def dloss_u(z, y):
+        return (losses.dloss_vec(z, y, loss=loss),)
+
+    dloss_u.__name__ = f"dloss_u_{loss}"
+    return dloss_u
+
+
+def grad_slice(x, u):
+    """Gradient slice ``g_blk = X_blkᵀ u`` (sum over sampled rows)."""
+    return (matvec.rmatvec(x, u),)
+
+
+def make_grad_fused(loss: str):
+    """Single-partition fused gradient Σ ∇f (quickstart / small blocks)."""
+
+    def grad_fused(x, y, w):
+        return (linear_grad.linear_grad_sum(x, y, w, loss=loss),)
+
+    grad_fused.__name__ = f"grad_fused_{loss}"
+    return grad_fused
+
+
+# ---------------------------------------------------------------------------
+# SVRG inner loop (steps 13-17), per (p, q) worker
+# ---------------------------------------------------------------------------
+
+def make_svrg_inner(loss: str):
+    def svrg_inner(x, y, w0, wt, mu, idx, gamma):
+        return (svrg.svrg_inner(x, y, w0, wt, mu, idx, gamma, loss=loss),)
+
+    svrg_inner.__name__ = f"svrg_inner_{loss}"
+    return svrg_inner
+
+
+def make_svrg_inner_avg(loss: str):
+    """RADiSA-avg's iterate-averaged inner loop."""
+
+    def svrg_inner_avg(x, y, w0, wt, mu, idx, gamma):
+        return (svrg.svrg_inner_avg(x, y, w0, wt, mu, idx, gamma, loss=loss),)
+
+    svrg_inner_avg.__name__ = f"svrg_inner_avg_{loss}"
+    return svrg_inner_avg
+
+
+# ---------------------------------------------------------------------------
+# Objective evaluation (reporting F(ω) each outer iteration)
+# ---------------------------------------------------------------------------
+
+def make_loss_partial(loss: str):
+    def loss_partial(x, y, w):
+        return (losses.loss_sum(x, y, w, loss=loss),)
+
+    loss_partial.__name__ = f"loss_partial_{loss}"
+    return loss_partial
+
+
+def make_loss_from_z(loss: str):
+    """Distributed objective: leader reduces partial z across feature
+    blocks, then each observation partition evaluates Σ f(z, y)."""
+
+    def loss_from_z(z, y):
+        return (losses.loss_sum_from_z(z, y, loss=loss),)
+
+    loss_from_z.__name__ = f"loss_from_z_{loss}"
+    return loss_from_z
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference composition (pytest cross-checks; never exported)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def reference_mu(x_full, y, w, bmask, cmask, dmask, loss: str):
+    """Oracle for the whole µ^t estimate on a single machine.
+
+    µ^t = (1/d) Σ_{j∈D} \\bar∇_{w_C} f_j(x_j^B w_B), computed without any
+    partitioning — the distributed composition must match this exactly.
+    """
+    from .kernels import ref
+
+    wb = w * bmask
+    z = x_full @ wb
+    u = ref.dloss_values(z, y, loss) * dmask
+    g = x_full.T @ u
+    d = jnp.sum(dmask)
+    return (g * cmask) / d

@@ -1,0 +1,110 @@
+"""VMEM footprint + roofline estimator for the L1 Pallas kernels.
+
+Interpret-mode timings on CPU say nothing about TPU performance; what
+carries over is the *structure* the BlockSpecs encode.  This tool
+computes, for a given artifact shape bucket:
+
+* per-kernel VMEM residency (blocks held per grid step),
+* arithmetic intensity (flops / HBM byte) and the implied roofline
+  bound (memory- vs MXU-bound) on a v4-like core,
+* whether double-buffered blocks fit the ~16 MiB VMEM budget.
+
+Usage::
+
+    python -m compile.vmem --n 1000 --m 120 --mtilde 24 --steps 32
+
+The numbers feed EXPERIMENTS.md §Perf (TPU estimate) and DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+from .kernels import common
+
+# v4-ish single-core envelope
+HBM_BW = 300e9        # bytes/s effective
+MXU_F32 = 70e12 / 4   # f32 (non-bf16) matmul peak ≈ MXU/4
+VMEM_BYTES = 16 * 2**20
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    flops: float
+    hbm_bytes: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    @property
+    def bound(self) -> str:
+        # roofline knee: intensity where MXU peak == BW * intensity
+        knee = MXU_F32 / HBM_BW
+        return "MXU-bound" if self.intensity >= knee else "HBM-bound"
+
+    @property
+    def est_time_s(self) -> float:
+        return max(self.flops / MXU_F32, self.hbm_bytes / HBM_BW)
+
+    def fits(self, double_buffered: bool = True) -> bool:
+        mult = 2 if double_buffered else 1
+        return self.vmem_bytes * mult <= VMEM_BYTES
+
+
+def estimate(n: int, m: int, mtilde: int, steps: int) -> list[KernelEstimate]:
+    rt = min(common.ROW_TILE, n)
+    ft = min(common.FEAT_TILE, m)
+    f32 = 4
+    out = []
+    # partial_z: X tile (rt×ft) + w tile (ft) resident; streams all of X once
+    out.append(KernelEstimate(
+        "partial_z", (rt * ft + ft + rt) * f32, 2.0 * n * m, (n * m + m + n) * f32,
+    ))
+    # grad_slice: same tiles, transposed reduction
+    out.append(KernelEstimate(
+        "grad_slice", (rt * ft + rt + ft) * f32, 2.0 * n * m, (n * m + n + m) * f32,
+    ))
+    # fused gradient: one pass, two matvecs worth of flops
+    out.append(KernelEstimate(
+        "grad_fused", (rt * m + m + rt) * f32, 4.0 * n * m, (n * m + n + m) * f32,
+    ))
+    # svrg_inner: whole sub-block resident for all L steps
+    out.append(KernelEstimate(
+        "svrg_inner", (n * mtilde + n + 4 * mtilde + steps) * f32,
+        6.0 * steps * mtilde, (n * mtilde + n + 3 * mtilde) * f32,
+    ))
+    return out
+
+
+def report(n: int, m: int, mtilde: int, steps: int) -> str:
+    lines = [
+        f"shape bucket: n={n} m={m} m̃={mtilde} L={steps} "
+        f"(tiles {min(common.ROW_TILE, n)}×{min(common.FEAT_TILE, m)})",
+        f"{'kernel':<12} {'VMEM':>10} {'2xbuf fits':>10} {'intensity':>10} "
+        f"{'bound':>10} {'est time':>12}",
+    ]
+    for e in estimate(n, m, mtilde, steps):
+        lines.append(
+            f"{e.name:<12} {e.vmem_bytes / 2**20:>8.2f}Mi {str(e.fits()):>10} "
+            f"{e.intensity:>10.2f} {e.bound:>10} {e.est_time_s * 1e6:>10.1f}µs"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--m", type=int, default=120)
+    ap.add_argument("--mtilde", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+    print(report(args.n, args.m, args.mtilde, args.steps))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis drives shapes (including awkward non-tile-multiple edges) and
+values; assert_allclose at f32 tolerances is the pass criterion.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, linear_grad, losses, matvec, ref, svrg
+
+LOSSES = ref.LOSSES
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make_data(n, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, size=(n, m)).astype(np.float32)
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    w = rng.normal(scale=0.5, size=(m,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# matvec / rmatvec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), m=st.integers(1, 200), seed=SEED)
+def test_matvec_matches_oracle(n, m, seed):
+    x, _, w = make_data(n, m, seed)
+    np.testing.assert_allclose(
+        matvec.matvec(x, w), ref.matvec(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), m=st.integers(1, 200), seed=SEED)
+def test_rmatvec_matches_oracle(n, m, seed):
+    x, _, _ = make_data(n, m, seed)
+    u = jnp.asarray(np.random.default_rng(seed + 1).normal(size=(n,)).astype(np.float32))
+    np.testing.assert_allclose(
+        matvec.rmatvec(x, u), ref.rmatvec(x, u), rtol=1e-3, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("rt,ft", [(8, 8), (32, 128), (128, 256), (7, 13)])
+def test_matvec_tile_invariance(rt, ft):
+    """Tile sizes are a schedule choice; the numbers must not move."""
+    x, _, w = make_data(150, 90, 7)
+    base = ref.matvec(x, w)
+    np.testing.assert_allclose(
+        matvec.matvec(x, w, row_tile=rt, feat_tile=ft), base, rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss / dloss / fused gradient
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 300), m=st.integers(1, 150), seed=SEED)
+def test_fused_grad_matches_oracle(loss, n, m, seed):
+    x, y, w = make_data(n, m, seed)
+    np.testing.assert_allclose(
+        linear_grad.linear_grad_sum(x, y, w, loss=loss),
+        ref.linear_grad_sum(x, y, w, loss),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 300), m=st.integers(1, 150), seed=SEED)
+def test_loss_sum_matches_oracle(loss, n, m, seed):
+    x, y, w = make_data(n, m, seed)
+    got = losses.loss_sum(x, y, w, loss=loss)[0]
+    want = ref.loss_sum(x, y, w, loss)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 500), seed=SEED)
+def test_loss_sum_from_z_matches_oracle(loss, n, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32))
+    got = losses.loss_sum_from_z(z, y, loss=loss)[0]
+    want = jnp.sum(ref.loss_values(z, y, loss))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 500), seed=SEED)
+def test_dloss_matches_oracle(loss, n, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32))
+    np.testing.assert_allclose(
+        losses.dloss_vec(z, y, loss=loss),
+        ref.dloss_values(z, y, loss),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_grad_two_pass_equals_fused(loss):
+    """matvec → dloss → rmatvec composition ≡ the fused kernel."""
+    x, y, w = make_data(257, 65, 3)
+    z = matvec.matvec(x, w)
+    u = losses.dloss_vec(z, y, loss=loss)
+    g2 = matvec.rmatvec(x, u)
+    g1 = linear_grad.linear_grad_sum(x, y, w, loss=loss)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-3)
+
+
+def test_padding_rows_are_free():
+    """Explicitly appended zero rows must not change gradient sums."""
+    x, y, w = make_data(100, 40, 11)
+    xp = jnp.concatenate([x, jnp.zeros((28, 40), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.zeros((28,), jnp.float32)])
+    for loss in LOSSES:
+        np.testing.assert_allclose(
+            linear_grad.linear_grad_sum(xp, yp, w, loss=loss),
+            linear_grad.linear_grad_sum(x, y, w, loss=loss),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# SVRG inner loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    mt=st.integers(1, 64),
+    steps=st.integers(1, 24),
+    seed=SEED,
+)
+def test_svrg_inner_matches_oracle(loss, n, mt, steps, seed):
+    x, y, w0 = make_data(n, mt, seed)
+    rng = np.random.default_rng(seed + 2)
+    wt = jnp.asarray(rng.normal(scale=0.5, size=(mt,)).astype(np.float32))
+    mu = jnp.asarray(rng.normal(scale=0.05, size=(mt,)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, size=steps).astype(np.int32))
+    gamma = np.float32(0.05)
+    got = svrg.svrg_inner(x, y, w0, wt, mu, idx, jnp.asarray([gamma]), loss=loss)
+    want = ref.svrg_inner(x, y, w0, wt, mu, idx, gamma, loss)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.integers(2, 150),
+    mt=st.integers(1, 48),
+    steps=st.integers(1, 20),
+    seed=SEED,
+)
+def test_svrg_inner_avg_matches_oracle(loss, n, mt, steps, seed):
+    x, y, w0 = make_data(n, mt, seed)
+    rng = np.random.default_rng(seed + 3)
+    wt = jnp.asarray(rng.normal(scale=0.5, size=(mt,)).astype(np.float32))
+    mu = jnp.asarray(rng.normal(scale=0.05, size=(mt,)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, size=steps).astype(np.int32))
+    gamma = np.float32(0.05)
+    got = svrg.svrg_inner_avg(x, y, w0, wt, mu, idx, jnp.asarray([gamma]), loss=loss)
+    want = ref.svrg_inner_avg(x, y, w0, wt, mu, idx, gamma, loss)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_svrg_avg_of_one_step_equals_step():
+    x, y, w0 = make_data(40, 8, 21)
+    idx = jnp.asarray([3], jnp.int32)
+    mu = jnp.asarray(np.full(8, 0.1, np.float32))
+    g = jnp.asarray([0.05], jnp.float32)
+    a = svrg.svrg_inner_avg(x, y, w0, w0, mu, idx, g, loss="hinge")
+    b = svrg.svrg_inner(x, y, w0, w0, mu, idx, g, loss="hinge")
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_svrg_zero_gamma_is_identity():
+    x, y, w0 = make_data(50, 16, 5)
+    idx = jnp.zeros((8,), jnp.int32)
+    out = svrg.svrg_inner(
+        x, y, w0, w0, jnp.zeros((16,), jnp.float32), idx,
+        jnp.asarray([0.0], jnp.float32), loss="hinge",
+    )
+    np.testing.assert_allclose(out, w0, atol=0)
+
+
+def test_svrg_wt_equals_w0_reduces_to_sgd_with_mu():
+    """When w^(i) == w^t at step 0 the first update is exactly −γµ−γ(g−g)=−γµ."""
+    x, y, w0 = make_data(30, 8, 9)
+    mu = jnp.full((8,), 0.25, jnp.float32)
+    idx = jnp.asarray([4], jnp.int32)
+    out = svrg.svrg_inner(x, y, w0, w0, mu, idx, jnp.asarray([0.1], jnp.float32), loss="hinge")
+    np.testing.assert_allclose(out, w0 - 0.1 * mu, rtol=1e-5, atol=1e-6)
+
+
+def test_pad_to_helper():
+    a = jnp.ones((5, 3))
+    b = common.pad_to(a, 0, 4)
+    assert b.shape == (8, 3)
+    np.testing.assert_allclose(np.asarray(b[5:]), 0.0)
+    assert common.pad_to(a, 0, 5) is a

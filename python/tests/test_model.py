@@ -1,0 +1,127 @@
+"""L2 correctness: distributed composition ≡ single-machine oracle.
+
+These tests replicate what the rust coordinator does with the AOT entry
+points — partition the data P×Q ways, mask w by B^t, reduce partial z
+across feature blocks, broadcast u, collect gradient slices, mask by C^t —
+and check the result equals `model.reference_mu` computed monolithically.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+LOSSES = ref.LOSSES
+
+
+def make_problem(N=120, M=60, P=3, Q=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, size=(N, M)).astype(np.float32)
+    wtrue = rng.uniform(-1, 1, size=(M,)).astype(np.float32)
+    y = np.sign(x @ wtrue).astype(np.float32)
+    y[y == 0] = 1.0
+    w = rng.normal(scale=0.3, size=(M,)).astype(np.float32)
+    return x, y, w, rng
+
+
+def masks(rng, N, M, bfrac, cfrac, dfrac):
+    bsz = max(1, int(round(bfrac * M)))
+    csz = max(1, min(bsz, int(round(cfrac * M))))
+    dsz = max(1, int(round(dfrac * N)))
+    b_idx = rng.choice(M, size=bsz, replace=False)
+    c_idx = rng.choice(b_idx, size=csz, replace=False)
+    d_idx = rng.choice(N, size=dsz, replace=False)
+    bmask = np.zeros(M, np.float32); bmask[b_idx] = 1
+    cmask = np.zeros(M, np.float32); cmask[c_idx] = 1
+    dmask = np.zeros(N, np.float32); dmask[d_idx] = 1
+    return bmask, cmask, dmask
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("fracs", [(1.0, 1.0, 1.0), (0.85, 0.8, 0.85), (0.5, 0.3, 0.6)])
+def test_distributed_mu_equals_oracle(loss, fracs):
+    """P×Q-partitioned µ^t pipeline == monolithic reference_mu."""
+    N, M, P, Q = 120, 60, 3, 2
+    x, y, w, rng = make_problem(N, M, P, Q)
+    bmask, cmask, dmask = masks(rng, N, M, *fracs)
+
+    # --- what the rust coordinator does, expressed with the L2 entries ---
+    n, m = N // P, M // Q
+    wb = w * bmask
+    z = np.zeros(N, np.float32)
+    for p in range(P):
+        rows = slice(p * n, (p + 1) * n)
+        for q in range(Q):
+            cols = slice(q * m, (q + 1) * m)
+            # D^t gather: zero non-sampled rows (same as front-gather + pad)
+            xblk = x[rows, cols] * dmask[rows, None]
+            (zpart,) = model.partial_z(jnp.asarray(xblk), jnp.asarray(wb[cols]))
+            z[rows] += np.asarray(zpart)
+    u = np.zeros(N, np.float32)
+    for p in range(P):
+        rows = slice(p * n, (p + 1) * n)
+        (up,) = model.make_dloss_u(loss)(jnp.asarray(z[rows]), jnp.asarray(y[rows] * dmask[rows]))
+        u[rows] = np.asarray(up) * dmask[rows]
+    g = np.zeros(M, np.float32)
+    for p in range(P):
+        rows = slice(p * n, (p + 1) * n)
+        for q in range(Q):
+            cols = slice(q * m, (q + 1) * m)
+            (gs,) = model.grad_slice(jnp.asarray(x[rows, cols]), jnp.asarray(u[rows]))
+            g[cols] += np.asarray(gs)
+    mu = g * cmask / dmask.sum()
+
+    want = model.reference_mu(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w),
+        jnp.asarray(bmask), jnp.asarray(cmask), jnp.asarray(dmask), loss=loss,
+    )
+    np.testing.assert_allclose(mu, np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_loss_partial_sums_to_objective(loss):
+    x, y, w, _ = make_problem()
+    N, M, P, Q = 120, 60, 3, 2
+    n, m = N // P, M // Q
+    total = 0.0
+    for p in range(P):
+        rows = slice(p * n, (p + 1) * n)
+        z = np.zeros(n, np.float32)
+        for q in range(Q):
+            cols = slice(q * m, (q + 1) * m)
+            (zp,) = model.partial_z(jnp.asarray(x[rows, cols]), jnp.asarray(w[cols]))
+            z += np.asarray(zp)
+        total += float(np.sum(np.asarray(ref.loss_values(jnp.asarray(z), jnp.asarray(y[rows]), loss))))
+    want = float(ref.loss_sum(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w), loss))
+    np.testing.assert_allclose(total, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_grad_fused_equals_slices(loss):
+    """Fused single-partition entry == feature-sliced two-pass entries."""
+    x, y, w, _ = make_problem(N=90, M=40)
+    (g1,) = model.make_grad_fused(loss)(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+    (z,) = model.partial_z(jnp.asarray(x), jnp.asarray(w))
+    (u,) = model.make_dloss_u(loss)(z, jnp.asarray(y))
+    (g2,) = model.grad_slice(jnp.asarray(x), u)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_svrg_inner_entry_matches_reference(loss):
+    x, y, _, rng = make_problem(N=64, M=16, P=1, Q=1)
+    w0 = rng.normal(scale=0.2, size=16).astype(np.float32)
+    wt = rng.normal(scale=0.2, size=16).astype(np.float32)
+    mu = rng.normal(scale=0.05, size=16).astype(np.float32)
+    idx = rng.integers(0, 64, size=12).astype(np.int32)
+    (got,) = model.make_svrg_inner(loss)(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w0), jnp.asarray(wt),
+        jnp.asarray(mu), jnp.asarray(idx), jnp.asarray([0.03], jnp.float32),
+    )
+    want = ref.svrg_inner(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w0), jnp.asarray(wt),
+        jnp.asarray(mu), jnp.asarray(idx), 0.03, loss,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,35 @@
+"""The VMEM/roofline estimator: sanity of the static model."""
+
+from compile import vmem
+
+
+def test_all_kernels_fit_vmem_at_default_bucket():
+    for e in vmem.estimate(1000, 120, 24, 32):
+        assert e.fits(double_buffered=True), e
+
+
+def test_matvec_kernels_are_memory_bound():
+    # rank-1-ish reductions: intensity ≈ 2 flops/4 bytes ⇒ far below the
+    # MXU knee — the DESIGN.md §Hardware-Adaptation claim
+    for e in vmem.estimate(50_000, 6_000, 1_200, 32):
+        if e.name in ("partial_z", "grad_slice"):
+            assert e.bound == "HBM-bound", e
+            assert e.intensity < 2.0
+
+def test_paper_scale_blocks_exceed_single_tile_budget_gracefully():
+    # 50k×6k block does not fit VMEM whole — the tiling must be what fits
+    es = {e.name: e for e in vmem.estimate(50_000, 6_000, 1_200, 32)}
+    tile_bytes = es["partial_z"].vmem_bytes
+    assert tile_bytes < vmem.VMEM_BYTES  # a tile fits even if X does not
+
+
+def test_report_renders():
+    r = vmem.report(1000, 120, 24, 32)
+    assert "partial_z" in r and "svrg_inner" in r
+    assert "Mi" in r
+
+
+def test_estimate_scales_with_shape():
+    small = {e.name: e for e in vmem.estimate(100, 30, 10, 16)}
+    large = {e.name: e for e in vmem.estimate(1000, 300, 100, 16)}
+    assert large["partial_z"].flops > small["partial_z"].flops * 50

@@ -1,0 +1,46 @@
+//! End-to-end outer iterations: wall-clock per iteration for each
+//! algorithm on the `small` preset at laptop scale (the meso-benchmark
+//! behind the Figure 2/3 time axes).
+
+use std::sync::Arc;
+
+use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::coordinator::train_with_engine;
+use sodda::engine::NativeEngine;
+use sodda::loss::Loss;
+use sodda::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("full_iteration");
+    let pr = preset("small").unwrap();
+    let dc = pr.data_config(pr.default_scale, 5, 3);
+    let ds = dc.materialize(1);
+
+    for algo in [AlgorithmKind::Sodda, AlgorithmKind::Radisa, AlgorithmKind::RadisaAvg] {
+        let cfg = ExperimentConfig {
+            name: format!("bench_{algo}"),
+            data: dc.clone(),
+            p: 5,
+            q: 3,
+            loss: Loss::Hinge,
+            algorithm: algo,
+            fractions: if algo == AlgorithmKind::Sodda {
+                SamplingFractions::PAPER
+            } else {
+                SamplingFractions::FULL
+            },
+            inner_steps: 32,
+            outer_iters: 2,
+            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
+            seed: 1,
+            engine: Default::default(),
+            network: None,
+            eval_every: 2, // keep objective eval out of the measured loop
+        };
+        b.bench(&format!("{algo}/2 iters (small preset)"), || {
+            train_with_engine(&cfg, &ds, Arc::new(NativeEngine)).unwrap()
+        });
+    }
+
+    b.finish();
+}

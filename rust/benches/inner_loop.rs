@@ -1,0 +1,56 @@
+//! The SVRG inner loop (Algorithm 1 steps 13-17) — the per-worker hot
+//! path — across widths, storage formats, combiners and engines.
+
+use std::sync::Arc;
+
+use sodda::data::synth;
+use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
+use sodda::loss::Loss;
+use sodda::runtime::XlaRuntime;
+use sodda::util::bench::Bench;
+use sodda::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env("inner_loop");
+    let key = BlockKey { p: 0, q: 0 };
+    let native = NativeEngine;
+    let mut rng = Rng::seed_from_u64(3);
+
+    for (mt, steps) in [(24usize, 32usize), (60, 32), (24, 128)] {
+        let ds = synth::dense_zhang(1000, mt, 2);
+        let w0: Vec<f32> = (0..mt).map(|i| (i as f32).cos() * 0.1).collect();
+        let mu = vec![0.01f32; mt];
+        let idx = rng.sample_with_replacement(1000, steps);
+        b.bench(&format!("native/dense m̃={mt} L={steps}"), || {
+            native.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 0..mt, &w0, &w0, &mu, &idx, 0.05)
+        });
+        b.bench(&format!("native/avg/dense m̃={mt} L={steps}"), || {
+            native.svrg_inner_avg(key, Loss::Hinge, &ds.x, &ds.y, 0..mt, &w0, &w0, &mu, &idx, 0.05)
+        });
+    }
+
+    let sp = synth::sparse_pra(1000, 24, 8, 4);
+    let w0 = vec![0.05f32; 24];
+    let mu = vec![0.01f32; 24];
+    let idx = rng.sample_with_replacement(1000, 32);
+    b.bench("native/sparse m̃=24 L=32", || {
+        native.svrg_inner(key, Loss::Hinge, &sp.x, &sp.y, 0..24, &w0, &w0, &mu, &idx, 0.05)
+    });
+
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => {
+            let xla = XlaEngine::new(Arc::new(rt), 1000, 120, 24, 32).expect("bucket");
+            let ds = synth::dense_zhang(1000, 120, 2);
+            let idx = Rng::seed_from_u64(5).sample_with_replacement(1000, 32);
+            let w0 = vec![0.05f32; 24];
+            let mu = vec![0.01f32; 24];
+            let _ = xla.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 0..24, &w0, &w0, &mu, &idx, 0.05);
+            b.bench("xla/dense m̃=24 L=32", || {
+                xla.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 0..24, &w0, &w0, &mu, &idx, 0.05)
+            });
+        }
+        Err(e) => eprintln!("(skipping xla rows: {e:#})"),
+    }
+
+    b.finish();
+}

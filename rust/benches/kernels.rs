@@ -1,0 +1,64 @@
+//! Micro-benchmarks of the L1-equivalent compute primitives: native rust
+//! vs the AOT JAX/Pallas artifacts through PJRT.
+//!
+//! Run `make artifacts` first for the XLA rows (they skip otherwise).
+//! BENCH_QUICK=1 shortens measurement for CI smoke.
+
+use std::sync::Arc;
+
+use sodda::data::synth;
+use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
+use sodda::loss::Loss;
+use sodda::runtime::XlaRuntime;
+use sodda::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("kernels");
+    let key = BlockKey { p: 0, q: 0 };
+
+    // shapes matching the default artifact bucket (n=1000, m=120)
+    let dense = synth::dense_zhang(1000, 120, 1);
+    let sparse = synth::sparse_pra(1000, 120, 12, 1);
+    let w: Vec<f32> = (0..120).map(|i| (i as f32 * 0.1).sin()).collect();
+    let rows: Vec<u32> = (0..1000).collect();
+    let u: Vec<f32> = (0..1000).map(|i| ((i % 3) as f32 - 1.0) * 0.5).collect();
+    let native = NativeEngine;
+
+    b.bench("native/partial_z/dense 1000x120", || {
+        native.partial_z(key, &dense.x, 0..120, &w, &rows)
+    });
+    b.bench("native/partial_z/sparse 1000x120", || {
+        native.partial_z(key, &sparse.x, 0..120, &w, &rows)
+    });
+    b.bench("native/grad_slice/dense 1000x120", || {
+        native.grad_slice(key, &dense.x, 0..120, &rows, &u)
+    });
+    b.bench("native/grad_slice/sparse 1000x120", || {
+        native.grad_slice(key, &sparse.x, 0..120, &rows, &u)
+    });
+    let z = native.partial_z(key, &dense.x, 0..120, &w, &rows);
+    b.bench("native/dloss_u/hinge 1000", || native.dloss_u(Loss::Hinge, &z, &dense.y));
+    b.bench("native/loss_from_z/hinge 1000", || native.loss_from_z(Loss::Hinge, &z, &dense.y));
+
+    // XLA path (needs the default artifact bucket)
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => {
+            let xla = XlaEngine::new(Arc::new(rt), 1000, 120, 24, 32).expect("bucket matches");
+            // first calls compile + stage; do them outside timing
+            let _ = xla.partial_z(key, &dense.x, 0..120, &w, &rows);
+            let _ = xla.grad_slice(key, &dense.x, 0..120, &rows, &u);
+            let _ = xla.dloss_u(Loss::Hinge, &z, &dense.y);
+            b.bench("xla/partial_z/dense 1000x120", || {
+                xla.partial_z(key, &dense.x, 0..120, &w, &rows)
+            });
+            b.bench("xla/grad_slice/dense 1000x120", || {
+                xla.grad_slice(key, &dense.x, 0..120, &rows, &u)
+            });
+            b.bench("xla/dloss_u/hinge 1000", || xla.dloss_u(Loss::Hinge, &z, &dense.y));
+            b.bench("xla/loss_from_z/hinge 1000", || xla.loss_from_z(Loss::Hinge, &z, &dense.y));
+        }
+        Err(e) => eprintln!("(skipping xla rows: {e:#})"),
+    }
+
+    b.finish();
+}

@@ -1,0 +1,34 @@
+//! One bench row per paper table/figure: times the harness that
+//! regenerates each artifact (shortened iteration counts; the full
+//! regeneration is `make figures`). Always uses tmp output dirs.
+
+use sodda::config::EngineKind;
+use sodda::harness::{self, Opts};
+use sodda::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("paper_tables");
+    let base = Opts {
+        out_dir: std::env::temp_dir().join("sodda-bench-results"),
+        scale: 400, // small data: this measures harness overhead + shape
+        iters: 4,
+        engine: EngineKind::Native,
+        p: 5,
+        q: 3,
+        inner_steps: 16,
+        gamma0: 0.08,
+        seed: 1,
+    };
+
+    b.bench("table1", || harness::table1(&base).unwrap());
+    b.bench("table3", || harness::table3(&base).unwrap());
+    b.bench("fig2/panel-a", || harness::fig2(&base, 'a').unwrap());
+    b.bench("fig2/panel-c", || harness::fig2(&base, 'c').unwrap());
+    b.bench("fig3", || harness::fig3(&base).unwrap());
+    b.bench("fig4", || harness::fig4(&base).unwrap());
+    let mut t2 = base.clone();
+    t2.iters = 3;
+    b.bench("table2", || harness::table2(&t2).unwrap());
+
+    b.finish();
+}

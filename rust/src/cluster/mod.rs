@@ -1,0 +1,336 @@
+//! Simulated doubly distributed cluster: one leader (the caller) and
+//! `P×Q` persistent worker threads, message-passing only.
+//!
+//! Each worker owns its shard `x^{p,q}` outright (the leader never
+//! touches block data after launch — exactly the paper's Spark layout
+//! where partitions live on executors) plus a shared [`ComputeEngine`].
+//! The leader orchestrates the three phases of Algorithm 1 through typed
+//! commands and collects replies over a single mpsc channel; the
+//! [`simnet::SimNet`] cost model charges each phase (see DESIGN.md).
+
+pub mod simnet;
+
+pub use simnet::{CostModel, SimNet};
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::{Block, Grid};
+use crate::engine::{BlockKey, ComputeEngine};
+use crate::loss::Loss;
+
+/// Commands the leader sends to a worker.
+enum Cmd {
+    /// z_part = X[rows, :] · w  (w pre-masked by B^t, full block width)
+    PartialZ { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    /// g = Σ_rows u·x_row over the full block width
+    GradSlice { u: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    /// L SVRG steps on the sub-block `cols` (block-local range); `avg`
+    /// selects RADiSA-avg's suffix-averaged combiner
+    Svrg { cols: Range<usize>, w0: Vec<f32>, wt: Vec<f32>, mu: Vec<f32>, idx: Vec<u32>, gamma: f32, avg: bool },
+    Shutdown,
+}
+
+/// Worker replies (tagged with the worker's linear id by the channel).
+enum Reply {
+    Z(Vec<f32>),
+    Grad(Vec<f32>),
+    W(Vec<f32>),
+}
+
+struct Worker {
+    p: usize,
+    q: usize,
+    block: Block,
+    engine: Arc<dyn ComputeEngine>,
+    loss: Loss,
+}
+
+impl Worker {
+    fn run(self, rx: Receiver<Cmd>, tx: Sender<(usize, Reply)>, id: usize) {
+        let key = BlockKey { p: self.p, q: self.q };
+        let m = self.block.x.cols();
+        while let Ok(cmd) = rx.recv() {
+            let reply = match cmd {
+                Cmd::PartialZ { w, rows } => {
+                    Reply::Z(self.engine.partial_z(key, &self.block.x, 0..m, &w, &rows))
+                }
+                Cmd::GradSlice { u, rows } => {
+                    Reply::Grad(self.engine.grad_slice(key, &self.block.x, 0..m, &rows, &u))
+                }
+                Cmd::Svrg { cols, w0, wt, mu, idx, gamma, avg } => {
+                    let e = &self.engine;
+                    let (x, y) = (&self.block.x, &self.block.y);
+                    Reply::W(if avg {
+                        e.svrg_inner_avg(key, self.loss, x, y, cols, &w0, &wt, &mu, &idx, gamma)
+                    } else {
+                        e.svrg_inner(key, self.loss, x, y, cols, &w0, &wt, &mu, &idx, gamma)
+                    })
+                }
+                Cmd::Shutdown => break,
+            };
+            if tx.send((id, reply)).is_err() {
+                break;
+            }
+        }
+    }
+}
+
+/// One SVRG assignment for the inner-loop phase.
+pub struct SvrgTask {
+    pub p: usize,
+    pub q: usize,
+    /// block-local column range (`sub_cols(k)` for SODDA/RADiSA, the full
+    /// block for RADiSA-avg)
+    pub cols: Range<usize>,
+    pub w0: Vec<f32>,
+    pub wt: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub idx: Vec<u32>,
+    pub gamma: f32,
+    /// use the suffix-averaged combiner (RADiSA-avg)
+    pub avg: bool,
+}
+
+/// Handle to the launched cluster (leader side).
+pub struct Cluster {
+    pub p: usize,
+    pub q: usize,
+    pub n_per: usize,
+    pub m_per: usize,
+    pub mtilde: usize,
+    pub n_total: usize,
+    pub m_total: usize,
+    /// labels per observation partition (leader copy, for dloss/loss)
+    pub y: Vec<Vec<f32>>,
+    /// density (nnz fraction) per worker `[p][q]`, for the cost model
+    pub density: Vec<f64>,
+    cmd_txs: Vec<Sender<Cmd>>,
+    reply_rx: Receiver<(usize, Reply)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Move the grid's blocks into worker threads.
+    pub fn launch(grid: Grid, engine: Arc<dyn ComputeEngine>, loss: Loss) -> Cluster {
+        let (p, q) = (grid.p, grid.q);
+        let (n_per, m_per, mtilde) = (grid.n_per, grid.m_per, grid.mtilde);
+        let (n_total, m_total) = (grid.n_total, grid.m_total);
+        let y: Vec<Vec<f32>> = (0..p).map(|pi| grid.block(pi, 0).y.clone()).collect();
+        let density: Vec<f64> = grid
+            .blocks()
+            .map(|b| b.x.nnz() as f64 / (b.x.rows() as f64 * b.x.cols() as f64).max(1.0))
+            .collect();
+
+        let (reply_tx, reply_rx) = channel();
+        let mut cmd_txs = Vec::with_capacity(p * q);
+        let mut handles = Vec::with_capacity(p * q);
+        // Grid stores blocks row-major [p][q]; consume it in that order.
+        let mut blocks: Vec<Block> = Vec::with_capacity(p * q);
+        for pi in 0..p {
+            for qi in 0..q {
+                blocks.push(grid.block(pi, qi).clone());
+            }
+        }
+        for (id, block) in blocks.into_iter().enumerate() {
+            let (tx, rx) = channel();
+            cmd_txs.push(tx);
+            let worker = Worker { p: block.p, q: block.q, block, engine: Arc::clone(&engine), loss };
+            let reply = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{id}"))
+                    .spawn(move || worker.run(rx, reply, id))
+                    .expect("spawn worker"),
+            );
+        }
+        Cluster { p, q, n_per, m_per, mtilde, n_total, m_total, y, density, cmd_txs, reply_rx, handles }
+    }
+
+    #[inline]
+    fn wid(&self, p: usize, q: usize) -> usize {
+        p * self.q + q
+    }
+
+    pub fn density_at(&self, p: usize, q: usize) -> f64 {
+        self.density[self.wid(p, q)]
+    }
+
+    /// Phase 1 of the µ^t estimate: partial margins, reduced over feature
+    /// partitions. `w_blocks[q]` is the (masked) parameter slice of block
+    /// q; `rows[p]` the sampled local row ids of partition p. Returns
+    /// `z[p][k] = x_{rows[p][k]}^{B} · w_B`.
+    pub fn partial_z(&self, w_blocks: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<Vec<f32>> {
+        for pi in 0..self.p {
+            for qi in 0..self.q {
+                self.cmd_txs[self.wid(pi, qi)]
+                    .send(Cmd::PartialZ { w: Arc::clone(&w_blocks[qi]), rows: Arc::clone(&rows[pi]) })
+                    .expect("worker alive");
+            }
+        }
+        // buffer replies by worker id, then reduce in a fixed order —
+        // f32 addition is non-associative and runs must be reproducible
+        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p * self.q).map(|_| None).collect();
+        for _ in 0..self.p * self.q {
+            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let Reply::Z(part) = reply else { panic!("expected Z reply") };
+            parts[id] = Some(part);
+        }
+        let mut z: Vec<Vec<f32>> = rows.iter().map(|r| vec![0.0f32; r.len()]).collect();
+        for (id, part) in parts.into_iter().enumerate() {
+            let pi = id / self.q;
+            for (acc, v) in z[pi].iter_mut().zip(part.expect("reply")) {
+                *acc += v;
+            }
+        }
+        z
+    }
+
+    /// Phase 2: gradient slices. `u[p]` aligned with `rows[p]`. Returns
+    /// the global gradient-sum vector (length `m_total`), summed over
+    /// observation partitions per feature block.
+    pub fn grad(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<f32> {
+        for pi in 0..self.p {
+            for qi in 0..self.q {
+                self.cmd_txs[self.wid(pi, qi)]
+                    .send(Cmd::GradSlice { u: Arc::clone(&u[pi]), rows: Arc::clone(&rows[pi]) })
+                    .expect("worker alive");
+            }
+        }
+        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p * self.q).map(|_| None).collect();
+        for _ in 0..self.p * self.q {
+            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let Reply::Grad(slice) = reply else { panic!("expected Grad reply") };
+            parts[id] = Some(slice);
+        }
+        let mut g = vec![0.0f32; self.m_total];
+        for (id, slice) in parts.into_iter().enumerate() {
+            let qi = id % self.q;
+            let base = qi * self.m_per;
+            for (k, v) in slice.expect("reply").into_iter().enumerate() {
+                g[base + k] += v;
+            }
+        }
+        g
+    }
+
+    /// Phase 3: the parallel inner loops. Returns `(task_index, w_L)` in
+    /// completion order.
+    pub fn svrg(&self, tasks: Vec<SvrgTask>) -> Vec<(usize, Vec<f32>)> {
+        let n = tasks.len();
+        let mut id_to_task: Vec<usize> = vec![usize::MAX; self.p * self.q];
+        for (ti, t) in tasks.into_iter().enumerate() {
+            let wid = self.wid(t.p, t.q);
+            assert_eq!(id_to_task[wid], usize::MAX, "one task per worker per phase");
+            id_to_task[wid] = ti;
+            self.cmd_txs[wid]
+                .send(Cmd::Svrg {
+                    cols: t.cols,
+                    w0: t.w0,
+                    wt: t.wt,
+                    mu: t.mu,
+                    idx: t.idx,
+                    gamma: t.gamma,
+                    avg: t.avg,
+                })
+                .expect("worker alive");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let Reply::W(w) = reply else { panic!("expected W reply") };
+            out.push((id_to_task[id], w));
+        }
+        out
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::util::testing::assert_close_slice;
+
+    fn cluster(n: usize, m: usize, p: usize, q: usize, seed: u64) -> (Cluster, crate::data::Dataset) {
+        let ds = synth::dense_zhang(n, m, seed);
+        let grid = Grid::partition(&ds, p, q).unwrap();
+        let c = Cluster::launch(grid, Arc::new(NativeEngine), Loss::Hinge);
+        (c, ds)
+    }
+
+    #[test]
+    fn partial_z_matches_serial_matvec() {
+        let (c, ds) = cluster(30, 12, 3, 2, 1);
+        let w: Vec<f32> = (0..12).map(|i| 0.1 * i as f32 - 0.5).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 6..(qi + 1) * 6].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
+        let z = c.partial_z(&w_blocks, &rows);
+        for pi in 0..3 {
+            for k in 0..10 {
+                let gr = pi * 10 + k;
+                let want = ds.x.row_dot_range(gr, 0, 12, &w);
+                crate::assert_close!(z[pi][k], want, 1e-4, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_serial_rmatvec() {
+        let (c, ds) = cluster(20, 8, 2, 2, 2);
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new((0..10u32).collect())).collect();
+        let u: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|pi| Arc::new((0..10).map(|k| (pi * 10 + k) as f32 * 0.1).collect())).collect();
+        let g = c.grad(&u, &rows);
+        let mut want = vec![0.0f32; 8];
+        for gr in 0..20 {
+            let uv = gr as f32 * 0.1;
+            let mut row = vec![0.0f32; 8];
+            ds.x.copy_row_range(gr, 0, 8, &mut row);
+            for cidx in 0..8 {
+                want[cidx] += uv * row[cidx];
+            }
+        }
+        assert_close_slice(&g, &want, 1e-3, 1e-3, "grad");
+    }
+
+    #[test]
+    fn svrg_tasks_route_to_correct_workers() {
+        let (c, _ds) = cluster(20, 8, 2, 2, 3);
+        // zero gamma => w_L == w0, so routing shows through the payloads
+        let tasks = vec![
+            SvrgTask { p: 0, q: 0, cols: 0..2, w0: vec![1.0, 2.0], wt: vec![1.0, 2.0], mu: vec![0.0; 2], idx: vec![0; 4], gamma: 0.0, avg: false },
+            SvrgTask { p: 1, q: 1, cols: 2..4, w0: vec![3.0, 4.0], wt: vec![3.0, 4.0], mu: vec![0.0; 2], idx: vec![0; 4], gamma: 0.0, avg: true },
+        ];
+        let mut out = c.svrg(tasks);
+        out.sort_by_key(|(ti, _)| *ti);
+        assert_eq!(out[0].1, vec![1.0, 2.0]);
+        assert_eq!(out[1].1, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn density_is_one_for_dense() {
+        let (c, _) = cluster(10, 4, 1, 2, 4);
+        crate::assert_close!(c.density_at(0, 0), 1.0, 1e-9, 1e-9);
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let (c, _) = cluster(10, 4, 2, 2, 5);
+        drop(c); // Drop joins all workers; hang = test timeout
+    }
+}

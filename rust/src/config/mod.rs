@@ -1,0 +1,420 @@
+//! Typed experiment configuration: the single source of truth a run is
+//! launched from (CLI flags build one; TOML files round-trip it; presets
+//! mirror the paper's Tables 1 and 3 at configurable scale).
+
+mod presets;
+mod schedule;
+
+pub use presets::{preset, Preset, PRESETS};
+pub use schedule::Schedule;
+
+use anyhow::{ensure, Result};
+
+use crate::loss::Loss;
+use crate::util::json::{self, Value};
+
+/// Which optimizer variant to run (paper §3 / §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    /// Algorithm 1: stochastic (b, c, d)-sampled full-gradient estimate.
+    Sodda,
+    /// RADiSA: exact full gradient each outer iteration
+    /// (`b = c = M, d = N`), sub-block updates concatenated.
+    Radisa,
+    /// RADiSA-avg: the paper's benchmark — like RADiSA but the sub-block
+    /// solutions overlapping the same `w_[q]` are averaged across the P
+    /// random assignments instead of concatenated once.
+    RadisaAvg,
+}
+
+impl std::fmt::Display for AlgorithmKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AlgorithmKind::Sodda => "sodda",
+            AlgorithmKind::Radisa => "radisa",
+            AlgorithmKind::RadisaAvg => "radisa-avg",
+        })
+    }
+}
+
+impl std::str::FromStr for AlgorithmKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sodda" => Ok(Self::Sodda),
+            "radisa" => Ok(Self::Radisa),
+            "radisa-avg" | "radisa_avg" | "radisaavg" => Ok(Self::RadisaAvg),
+            other => Err(format!("unknown algorithm {other:?}")),
+        }
+    }
+}
+
+/// Which compute backend executes the kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Pure-rust math (always available; sparse-aware).
+    #[default]
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts through the PJRT CPU client.
+    Xla,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Self::Native),
+            "xla" => Ok(Self::Xla),
+            other => Err(format!("unknown engine {other:?} (native|xla)")),
+        }
+    }
+}
+
+/// Dataset specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataConfig {
+    /// §5.1 dense synthetic (Zhang et al. generator).
+    Dense { n: usize, m: usize },
+    /// §5.2 sparse SemMed/PRA substitute.
+    Sparse { n: usize, m: usize, avg_nnz: usize },
+    /// External dataset on disk (`.svm`/`.libsvm` text or `.bin` binary,
+    /// written by `repro gen-data` or any LIBSVM tool). Dimensions are
+    /// read at load time; `n`/`m` here are what the file is expected to
+    /// contain (validated on materialize).
+    File { path: String, n: usize, m: usize },
+}
+
+impl DataConfig {
+    pub fn n(&self) -> usize {
+        match self {
+            DataConfig::Dense { n, .. }
+            | DataConfig::Sparse { n, .. }
+            | DataConfig::File { n, .. } => *n,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        match self {
+            DataConfig::Dense { m, .. }
+            | DataConfig::Sparse { m, .. }
+            | DataConfig::File { m, .. } => *m,
+        }
+    }
+
+    /// Generate (synthetic) or load (file) the dataset. Panics on I/O
+    /// failure only through `try_materialize`'s expect — prefer that in
+    /// fallible contexts.
+    pub fn materialize(&self, seed: u64) -> crate::data::Dataset {
+        self.try_materialize(seed).expect("materializing dataset")
+    }
+
+    pub fn try_materialize(&self, seed: u64) -> Result<crate::data::Dataset> {
+        match self {
+            &DataConfig::Dense { n, m } => Ok(crate::data::synth::dense_zhang(n, m, seed)),
+            &DataConfig::Sparse { n, m, avg_nnz } => {
+                Ok(crate::data::synth::sparse_pra(n, m, avg_nnz, seed))
+            }
+            DataConfig::File { path, n, m } => {
+                let p = std::path::Path::new(path);
+                let ds = if path.ends_with(".bin") {
+                    crate::data::io::read_binary(p)?
+                } else {
+                    crate::data::io::read_libsvm(p, *m)?
+                };
+                ensure!(
+                    ds.n() == *n && ds.m() == *m,
+                    "{path}: contains {}x{}, config expects {n}x{m}",
+                    ds.n(),
+                    ds.m()
+                );
+                Ok(ds)
+            }
+        }
+    }
+}
+
+/// Fractions of the paper's `(b^t, c^t, d^t)` sequences, as constants in
+/// (0, 1]. The paper's tuned values are `(0.85, 0.80, 0.85)` (§5.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingFractions {
+    /// `b^t / M` — features used in inner products.
+    pub b: f64,
+    /// `c^t / b^t`-independent: `c^t / M` — gradient coordinates kept.
+    pub c: f64,
+    /// `d^t / N` — observations sampled for µ^t.
+    pub d: f64,
+}
+
+impl SamplingFractions {
+    pub const PAPER: SamplingFractions = SamplingFractions { b: 0.85, c: 0.80, d: 0.85 };
+    pub const FULL: SamplingFractions = SamplingFractions { b: 1.0, c: 1.0, d: 1.0 };
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("b", self.b), ("c", self.c), ("d", self.d)] {
+            ensure!(v > 0.0 && v <= 1.0, "fraction {name}={v} outside (0, 1]");
+        }
+        ensure!(self.c <= self.b, "c^t must be ≤ b^t (C^t ⊆ B^t), got c={} > b={}", self.c, self.b);
+        Ok(())
+    }
+}
+
+/// SimNet cost-model parameters (models the paper's 4-node cluster).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkConfig {
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        // 1 GbE-ish with datacenter-LAN latency
+        Self { latency_s: 50e-6, bandwidth_bps: 125e6 }
+    }
+}
+
+/// Everything needed to launch one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub data: DataConfig,
+    /// observation partitions (paper default 5)
+    pub p: usize,
+    /// feature partitions (paper default 3)
+    pub q: usize,
+    pub loss: Loss,
+    pub algorithm: AlgorithmKind,
+    pub fractions: SamplingFractions,
+    /// inner-loop length L
+    pub inner_steps: usize,
+    /// outer iterations T
+    pub outer_iters: usize,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub network: Option<NetworkConfig>,
+    /// evaluate F(w) every k outer iterations (1 = every iteration)
+    pub eval_every: usize,
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.p > 0 && self.q > 0, "P, Q must be positive");
+        ensure!(self.data.n() % self.p == 0, "N={} % P={} != 0", self.data.n(), self.p);
+        ensure!(
+            self.data.m() % (self.p * self.q) == 0,
+            "M={} % (Q·P)={} != 0",
+            self.data.m(),
+            self.p * self.q
+        );
+        ensure!(self.inner_steps > 0, "inner_steps must be positive");
+        ensure!(self.outer_iters > 0, "outer_iters must be positive");
+        ensure!(self.eval_every > 0, "eval_every must be positive");
+        self.fractions.validate()?;
+        Ok(())
+    }
+
+    /// Serialize to pretty JSON (offline build: in-tree json, no serde).
+    pub fn to_json(&self) -> String {
+        let data = match self.data {
+            DataConfig::Dense { n, m } => json::obj(vec![
+                ("kind", json::s("dense")),
+                ("n", json::num(n as f64)),
+                ("m", json::num(m as f64)),
+            ]),
+            DataConfig::Sparse { n, m, avg_nnz } => json::obj(vec![
+                ("kind", json::s("sparse")),
+                ("n", json::num(n as f64)),
+                ("m", json::num(m as f64)),
+                ("avg_nnz", json::num(avg_nnz as f64)),
+            ]),
+            DataConfig::File { ref path, n, m } => json::obj(vec![
+                ("kind", json::s("file")),
+                ("path", json::s(path.clone())),
+                ("n", json::num(n as f64)),
+                ("m", json::num(m as f64)),
+            ]),
+        };
+        let schedule = match self.schedule {
+            Schedule::PaperSqrt => json::obj(vec![("kind", json::s("paper-sqrt"))]),
+            Schedule::ScaledSqrt { gamma0 } => json::obj(vec![
+                ("kind", json::s("scaled-sqrt")),
+                ("gamma0", json::num(gamma0)),
+            ]),
+            Schedule::InvT { gamma0 } => json::obj(vec![
+                ("kind", json::s("inv-t")),
+                ("gamma0", json::num(gamma0)),
+            ]),
+            Schedule::Constant { gamma } => json::obj(vec![
+                ("kind", json::s("constant")),
+                ("gamma", json::num(gamma)),
+            ]),
+        };
+        let mut fields = vec![
+            ("name", json::s(self.name.clone())),
+            ("data", data),
+            ("p", json::num(self.p as f64)),
+            ("q", json::num(self.q as f64)),
+            ("loss", json::s(self.loss.name())),
+            ("algorithm", json::s(self.algorithm.to_string())),
+            (
+                "fractions",
+                json::obj(vec![
+                    ("b", json::num(self.fractions.b)),
+                    ("c", json::num(self.fractions.c)),
+                    ("d", json::num(self.fractions.d)),
+                ]),
+            ),
+            ("inner_steps", json::num(self.inner_steps as f64)),
+            ("outer_iters", json::num(self.outer_iters as f64)),
+            ("schedule", schedule),
+            ("seed", json::num(self.seed as f64)),
+            (
+                "engine",
+                json::s(match self.engine {
+                    EngineKind::Native => "native",
+                    EngineKind::Xla => "xla",
+                }),
+            ),
+            ("eval_every", json::num(self.eval_every as f64)),
+        ];
+        if let Some(net) = self.network {
+            fields.push((
+                "network",
+                json::obj(vec![
+                    ("latency_s", json::num(net.latency_s)),
+                    ("bandwidth_bps", json::num(net.bandwidth_bps)),
+                ]),
+            ));
+        }
+        json::obj(fields).to_string_pretty()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let data_v = v.get("data")?;
+        let data = match data_v.get("kind")?.as_str()? {
+            "dense" => DataConfig::Dense {
+                n: data_v.get("n")?.as_usize()?,
+                m: data_v.get("m")?.as_usize()?,
+            },
+            "sparse" => DataConfig::Sparse {
+                n: data_v.get("n")?.as_usize()?,
+                m: data_v.get("m")?.as_usize()?,
+                avg_nnz: data_v.get("avg_nnz")?.as_usize()?,
+            },
+            "file" => DataConfig::File {
+                path: data_v.get("path")?.as_str()?.to_string(),
+                n: data_v.get("n")?.as_usize()?,
+                m: data_v.get("m")?.as_usize()?,
+            },
+            other => anyhow::bail!("unknown data kind {other:?}"),
+        };
+        let sched_v = v.get("schedule")?;
+        let schedule = match sched_v.get("kind")?.as_str()? {
+            "paper-sqrt" => Schedule::PaperSqrt,
+            "scaled-sqrt" => Schedule::ScaledSqrt { gamma0: sched_v.get("gamma0")?.as_f64()? },
+            "inv-t" => Schedule::InvT { gamma0: sched_v.get("gamma0")?.as_f64()? },
+            "constant" => Schedule::Constant { gamma: sched_v.get("gamma")?.as_f64()? },
+            other => anyhow::bail!("unknown schedule kind {other:?}"),
+        };
+        let fr = v.get("fractions")?;
+        let network = match v.opt("network") {
+            Some(net) => Some(NetworkConfig {
+                latency_s: net.get("latency_s")?.as_f64()?,
+                bandwidth_bps: net.get("bandwidth_bps")?.as_f64()?,
+            }),
+            None => None,
+        };
+        let cfg = ExperimentConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            data,
+            p: v.get("p")?.as_usize()?,
+            q: v.get("q")?.as_usize()?,
+            loss: v.get("loss")?.as_str()?.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            algorithm: v.get("algorithm")?.as_str()?.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+            fractions: SamplingFractions {
+                b: fr.get("b")?.as_f64()?,
+                c: fr.get("c")?.as_f64()?,
+                d: fr.get("d")?.as_f64()?,
+            },
+            inner_steps: v.get("inner_steps")?.as_usize()?,
+            outer_iters: v.get("outer_iters")?.as_usize()?,
+            schedule,
+            seed: v.get("seed")?.as_f64()? as u64,
+            engine: match v.opt("engine").map(|e| e.as_str()).transpose()? {
+                Some("xla") => EngineKind::Xla,
+                _ => EngineKind::Native,
+            },
+            network,
+            eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "t".into(),
+            data: DataConfig::Dense { n: 100, m: 30 },
+            p: 5,
+            q: 3,
+            loss: Loss::Hinge,
+            algorithm: AlgorithmKind::Sodda,
+            fractions: SamplingFractions::PAPER,
+            inner_steps: 8,
+            outer_iters: 10,
+            schedule: Schedule::PaperSqrt,
+            seed: 0,
+            engine: EngineKind::Native,
+            network: None,
+            eval_every: 1,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = sample();
+        cfg.network = Some(NetworkConfig::default());
+        cfg.schedule = Schedule::Constant { gamma: 0.005 };
+        let s = cfg.to_json();
+        let back = ExperimentConfig::from_json(&s).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.p, cfg.p);
+        assert_eq!(back.schedule, cfg.schedule);
+        assert_eq!(back.network, cfg.network);
+        assert_eq!(back.fractions, cfg.fractions);
+        assert!(matches!(back.data, DataConfig::Dense { n: 100, m: 30 }));
+    }
+
+    #[test]
+    fn validation_catches_divisibility() {
+        let mut cfg = sample();
+        cfg.data = DataConfig::Dense { n: 101, m: 30 };
+        assert!(cfg.validate().is_err());
+        let mut cfg = sample();
+        cfg.data = DataConfig::Dense { n: 100, m: 31 };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_fractions() {
+        let mut cfg = sample();
+        cfg.fractions = SamplingFractions { b: 0.5, c: 0.8, d: 0.5 };
+        assert!(cfg.validate().is_err(), "c > b must be rejected");
+        cfg.fractions = SamplingFractions { b: 0.0, c: 0.0, d: 0.5 };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn algorithm_parse() {
+        assert_eq!("radisa-avg".parse::<AlgorithmKind>().unwrap(), AlgorithmKind::RadisaAvg);
+        assert_eq!("SODDA".parse::<AlgorithmKind>().unwrap(), AlgorithmKind::Sodda);
+    }
+}

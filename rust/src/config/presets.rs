@@ -1,0 +1,97 @@
+//! Named experiment presets mirroring the paper's Tables 1 and 3.
+//!
+//! The paper's absolute sizes (up to 300k × 27k dense, 5.6M × 27k sparse)
+//! exceed a laptop-scale CI budget; each preset stores the paper's
+//! dimensions and a default laptop `scale` divisor. The partition
+//! structure (P=5, Q=3), the generator, the loss and the learning-rate
+//! schedule are exactly the paper's. Pass `--scale 1` to run paper-sized.
+
+use super::{DataConfig, SamplingFractions};
+
+/// A named dataset preset (Table 1 / Table 3 row).
+#[derive(Debug, Clone, Copy)]
+pub struct Preset {
+    pub name: &'static str,
+    /// Paper-size rows per observation partition × P.
+    pub paper_n: usize,
+    pub paper_m: usize,
+    /// paper's executor count, for Table 1 reporting
+    pub executors: usize,
+    pub sparse: bool,
+    /// avg nnz/row for sparse presets (SemMed-like density)
+    pub avg_nnz: usize,
+    /// default laptop divisor applied to both dimensions
+    pub default_scale: usize,
+}
+
+/// Table 1 (dense synthetic) + Table 3 (sparse SemMed substitutes).
+pub const PRESETS: &[Preset] = &[
+    // Table 1: size of each partition × (P=5, Q=3)
+    Preset { name: "small", paper_n: 250_000, paper_m: 18_000, executors: 18, sparse: false, avg_nnz: 0, default_scale: 50 },
+    Preset { name: "medium", paper_n: 300_000, paper_m: 21_000, executors: 25, sparse: false, avg_nnz: 0, default_scale: 50 },
+    Preset { name: "large", paper_n: 300_000, paper_m: 27_000, executors: 25, sparse: false, avg_nnz: 0, default_scale: 50 },
+    // Table 3 (N, M as published; m̃ rounded to make M divisible by QP)
+    Preset { name: "diag-neg10", paper_n: 425_185, paper_m: 26_946, executors: 15, sparse: true, avg_nnz: 30, default_scale: 85 },
+    Preset { name: "loc-neg5", paper_n: 5_638_696, paper_m: 26_966, executors: 15, sparse: true, avg_nnz: 30, default_scale: 220 },
+];
+
+pub fn preset(name: &str) -> Option<&'static Preset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+impl Preset {
+    /// Concrete data config at `scale` (divides both dimensions, then
+    /// rounds to P / Q·P divisibility).
+    pub fn data_config(&self, scale: usize, p: usize, q: usize) -> DataConfig {
+        let scale = scale.max(1);
+        let n = round_to(self.paper_n / scale, p).max(p);
+        let m = round_to(self.paper_m / scale, p * q).max(p * q);
+        if self.sparse {
+            DataConfig::Sparse { n, m, avg_nnz: self.avg_nnz }
+        } else {
+            DataConfig::Dense { n, m }
+        }
+    }
+
+    pub fn fractions(&self) -> SamplingFractions {
+        SamplingFractions::PAPER
+    }
+}
+
+fn round_to(v: usize, multiple: usize) -> usize {
+    let down = (v / multiple) * multiple;
+    if down == 0 {
+        multiple
+    } else {
+        down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_named() {
+        assert!(preset("small").is_some());
+        assert!(preset("loc-neg5").is_some());
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_configs_divide_evenly() {
+        for pr in PRESETS {
+            for scale in [1usize, 10, 50, 640] {
+                let dc = pr.data_config(scale, 5, 3);
+                assert_eq!(dc.n() % 5, 0, "{} scale {scale}", pr.name);
+                assert_eq!(dc.m() % 15, 0, "{} scale {scale}", pr.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_flag_respected() {
+        assert!(matches!(preset("diag-neg10").unwrap().data_config(10, 5, 3), DataConfig::Sparse { .. }));
+        assert!(matches!(preset("small").unwrap().data_config(10, 5, 3), DataConfig::Dense { .. }));
+    }
+}

@@ -1,0 +1,78 @@
+//! Learning-rate schedules.
+//!
+//! The paper's experiments (§5) use `γ_t = 1/(1+√(t−1))`; the analysis
+//! covers diminishing `1/t` (Theorems 1-2) and constants (Theorems 3-4).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// `γ_t = γ0/(1+√(t−1))` — the §5 experimental schedule (γ0 = 1 in
+    /// the paper's notation; the scale is a tuning constant shared by all
+    /// algorithms in a comparison).
+    PaperSqrt,
+    /// `γ_t = γ0/(1+√(t−1))` with explicit scale.
+    ScaledSqrt { gamma0: f64 },
+    /// `γ_t = γ0/t` — Theorem 2's diminishing rate.
+    InvT { gamma0: f64 },
+    /// `γ_t = γ` — Theorems 3-4's constant rate.
+    Constant { gamma: f64 },
+}
+
+impl Schedule {
+    /// Learning rate for outer iteration `t` (1-based, like the paper).
+    pub fn gamma(&self, t: usize) -> f64 {
+        let t = t.max(1) as f64;
+        match *self {
+            Schedule::PaperSqrt => 1.0 / (1.0 + (t - 1.0).sqrt()),
+            Schedule::ScaledSqrt { gamma0 } => gamma0 / (1.0 + (t - 1.0).sqrt()),
+            Schedule::InvT { gamma0 } => gamma0 / t,
+            Schedule::Constant { gamma } => gamma,
+        }
+    }
+
+    /// Theorem 3's constraint `L·M3·γ·Q·P ≤ 1` solved for γ, used to
+    /// sanity-check constant rates (M3 estimated as 1 for standardized
+    /// hinge data).
+    pub fn max_constant_gamma(inner_steps: usize, p: usize, q: usize) -> f64 {
+        1.0 / (inner_steps as f64 * p as f64 * q as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+
+    #[test]
+    fn paper_schedule_values() {
+        let s = Schedule::PaperSqrt;
+        assert_close!(s.gamma(1), 1.0);
+        assert_close!(s.gamma(2), 0.5);
+        assert_close!(s.gamma(5), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn inv_t_is_non_summable_but_square_summable_shape() {
+        let s = Schedule::InvT { gamma0: 1.0 };
+        assert_close!(s.gamma(10), 0.1);
+        // monotone decreasing
+        for t in 1..50 {
+            assert!(s.gamma(t + 1) < s.gamma(t));
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { gamma: 0.01 };
+        assert_eq!(s.gamma(1), s.gamma(1000));
+    }
+
+    #[test]
+    fn theorem3_bound() {
+        assert_close!(Schedule::max_constant_gamma(16, 5, 3), 1.0 / 240.0);
+    }
+
+    #[test]
+    fn t_zero_clamps() {
+        assert_close!(Schedule::PaperSqrt.gamma(0), 1.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's algorithms: SODDA (Algorithm 1) and the RADiSA /
+//! RADiSA-avg baselines, orchestrated over the simulated cluster.
+//!
+//! Structure per outer iteration `t` (SODDA):
+//!
+//! 1. draw `(B^t, C^t, D^t)` ([`sampling::SampleSets`]);
+//! 2. **µ^t estimate** — distributed: workers compute partial margins
+//!    over B^t-masked parameters, the leader reduces z across feature
+//!    blocks, broadcasts `u = f'(z, y)`, workers return gradient slices,
+//!    the leader projects onto C^t and divides by `d^t`;
+//! 3. draw permutations `π_q` and run the `P×Q` parallel SVRG inner
+//!    loops on disjoint sub-blocks (steps 10-18);
+//! 4. concatenate sub-blocks into `ω^{t+1}` (step 19).
+//!
+//! RADiSA is SODDA at `(b,c,d) = (100%, 100%, 100%)` (Corollary 1);
+//! RADiSA-avg is the paper's benchmark combiner: every worker updates its
+//! **whole** local feature block `ω_[q]` and the leader averages the P
+//! copies (the strategy §3 motivates the sub-block split against).
+
+pub mod baselines;
+pub mod outer;
+pub mod sampling;
+
+pub use outer::{build_engine, train, train_with_engine, TrainOutcome};

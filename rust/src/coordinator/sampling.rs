@@ -1,0 +1,175 @@
+//! The stochastic index machinery of Algorithm 1 (steps 5-7, 10, 15):
+//! the `(B^t, C^t, D^t)` sets, the per-feature-block permutations `π_q`,
+//! and the partition-local decompositions the cluster phases need.
+
+use crate::config::SamplingFractions;
+use crate::util::rng::Rng;
+
+/// One iteration's sampled index sets (global ids, sorted).
+#[derive(Debug, Clone)]
+pub struct SampleSets {
+    /// B^t — features used in inner products (`x_j^{B^t} w_{B^t}`)
+    pub b: Vec<u32>,
+    /// C^t ⊆ B^t — gradient coordinates actually evaluated
+    pub c: Vec<u32>,
+    /// D^t — observations used for the µ^t estimate
+    pub d: Vec<u32>,
+}
+
+impl SampleSets {
+    /// Draw per the paper: `b^t` features, `c^t ⊆ B^t`, `d^t` rows, all
+    /// without replacement. Sizes are `round(frac · dim)`, min 1.
+    pub fn draw(rng: &mut Rng, n: usize, m: usize, fr: &SamplingFractions) -> SampleSets {
+        let bsz = size_of(fr.b, m);
+        let csz = size_of(fr.c, m).min(bsz);
+        let dsz = size_of(fr.d, n);
+        let b = rng.sample_without_replacement(m, bsz);
+        // sample C from within B
+        let mut c: Vec<u32> = rng
+            .sample_without_replacement(bsz, csz)
+            .into_iter()
+            .map(|i| b[i as usize])
+            .collect();
+        c.sort_unstable();
+        let d = rng.sample_without_replacement(n, dsz);
+        SampleSets { b, c, d }
+    }
+
+    /// RADiSA's exact sets: `B = C = [M]`, `D = [N]`.
+    pub fn full(n: usize, m: usize) -> SampleSets {
+        SampleSets {
+            b: (0..m as u32).collect(),
+            c: (0..m as u32).collect(),
+            d: (0..n as u32).collect(),
+        }
+    }
+
+    /// |B ∩ [lo, hi)| for a sorted id list (block intersection sizes for
+    /// the cost model).
+    pub fn count_in_range(sorted: &[u32], lo: usize, hi: usize) -> usize {
+        let a = sorted.partition_point(|&v| (v as usize) < lo);
+        let b = sorted.partition_point(|&v| (v as usize) < hi);
+        b - a
+    }
+}
+
+fn size_of(frac: f64, dim: usize) -> usize {
+    ((frac * dim as f64).round() as usize).clamp(1, dim)
+}
+
+/// Split sorted global row ids into per-partition local ids.
+pub fn rows_per_partition(d: &[u32], p: usize, n_per: usize) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); p];
+    for &r in d {
+        let pi = (r as usize / n_per).min(p - 1);
+        out[pi].push(r - (pi * n_per) as u32);
+    }
+    out
+}
+
+/// `w ∘ 1_B`: copy of `w` with non-B coordinates zeroed.
+pub fn mask_keep(w: &[f32], keep_sorted: &[u32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; w.len()];
+    for &i in keep_sorted {
+        out[i as usize] = w[i as usize];
+    }
+    out
+}
+
+/// Zero every coordinate of `g` outside the sorted keep-set (the paper's
+/// `\bar∇_{ω_C}` projection).
+pub fn project_inplace(g: &mut [f32], keep_sorted: &[u32]) {
+    let mut keep_iter = keep_sorted.iter().peekable();
+    for (i, v) in g.iter_mut().enumerate() {
+        match keep_iter.peek() {
+            Some(&&k) if k as usize == i => {
+                keep_iter.next();
+            }
+            _ => *v = 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::forall;
+
+    #[test]
+    fn draw_respects_sizes_and_subset() {
+        forall(50, 42, |rng| {
+            let n = 1 + rng.below(200);
+            let m = 1 + rng.below(100);
+            let fr = SamplingFractions {
+                b: 0.05 + rng.unit_f64() * 0.95,
+                c: 0.0,
+                d: 0.05 + rng.unit_f64() * 0.95,
+            };
+            let fr = SamplingFractions { c: fr.b * rng.unit_f64().max(0.05), ..fr };
+            let s = SampleSets::draw(rng, n, m, &fr);
+            assert!(!s.b.is_empty() && s.b.len() <= m);
+            assert!(!s.d.is_empty() && s.d.len() <= n);
+            assert!(s.c.len() <= s.b.len());
+            // C ⊆ B
+            assert!(s.c.iter().all(|c| s.b.binary_search(c).is_ok()));
+            // sorted unique
+            assert!(s.b.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.c.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.d.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+
+    #[test]
+    fn full_sets() {
+        let s = SampleSets::full(3, 2);
+        assert_eq!(s.b, vec![0, 1]);
+        assert_eq!(s.c, vec![0, 1]);
+        assert_eq!(s.d, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn count_in_range_binary_search() {
+        let v = vec![1u32, 3, 4, 9, 10];
+        assert_eq!(SampleSets::count_in_range(&v, 0, 5), 3);
+        assert_eq!(SampleSets::count_in_range(&v, 5, 9), 0);
+        assert_eq!(SampleSets::count_in_range(&v, 9, 11), 2);
+    }
+
+    #[test]
+    fn rows_split_preserves_everything() {
+        forall(30, 7, |rng| {
+            let p = 1 + rng.below(5);
+            let n_per = 1 + rng.below(50);
+            let n = p * n_per;
+            let k = 1 + rng.below(n);
+            let d = rng.sample_without_replacement(n, k);
+            let split = rows_per_partition(&d, p, n_per);
+            let total: usize = split.iter().map(|v| v.len()).sum();
+            assert_eq!(total, d.len());
+            for (pi, rows) in split.iter().enumerate() {
+                for &r in rows {
+                    assert!((r as usize) < n_per);
+                    let global = pi * n_per + r as usize;
+                    assert!(d.binary_search(&(global as u32)).is_ok());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn masking_and_projection() {
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let masked = mask_keep(&w, &[1, 3]);
+        assert_eq!(masked, vec![0.0, 2.0, 0.0, 4.0]);
+        let mut g = vec![1.0, 1.0, 1.0, 1.0];
+        project_inplace(&mut g, &[0, 2]);
+        assert_eq!(g, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn projection_of_full_set_is_identity() {
+        let mut g = vec![1.0, 2.0, 3.0];
+        project_inplace(&mut g, &[0, 1, 2]);
+        assert_eq!(g, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Dense row-major matrix — the storage for the paper's §5.1 synthetic
+//! experiments ("all the data is in the dense format").
+
+/// Row-major dense `n × m` block of the design matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "dense data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `x_r[lo..hi] · w` where `w.len() == hi - lo`.
+    #[inline]
+    pub fn row_dot_range(&self, r: usize, lo: usize, hi: usize, w: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), hi - lo);
+        let row = &self.row(r)[lo..hi];
+        // 4-way unrolled accumulation: this is the innermost hot loop of
+        // the native engine (see EXPERIMENTS.md §Perf).
+        let mut acc = [0.0f32; 4];
+        let chunks = row.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += row[i] * w[i];
+            acc[1] += row[i + 1] * w[i + 1];
+            acc[2] += row[i + 2] * w[i + 2];
+            acc[3] += row[i + 3] * w[i + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..row.len() {
+            s += row[i] * w[i];
+        }
+        s
+    }
+
+    /// `out += scale · x_r[lo..hi]` where `out.len() == hi - lo`.
+    #[inline]
+    pub fn add_row_scaled_range(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), hi - lo);
+        if scale == 0.0 {
+            return; // hinge gradients are frequently exactly zero
+        }
+        let row = &self.row(r)[lo..hi];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += scale * v;
+        }
+    }
+
+    /// Copy a column range of a row into `out` (XLA buffer staging).
+    pub fn copy_row_range(&self, r: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.row(r)[lo..hi]);
+    }
+
+    /// Slice a sub-matrix by column range (partitioning path, not hot).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> DenseMatrix {
+        let cols = hi - lo;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.row(r)[lo..hi]);
+        }
+        DenseMatrix { rows: self.rows, cols, data }
+    }
+
+    /// Slice a sub-matrix by row range.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> DenseMatrix {
+        DenseMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+
+    fn sample() -> DenseMatrix {
+        DenseMatrix::from_rows(3, 4, (0..12).map(|v| v as f32).collect())
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn row_dot_range_matches_naive() {
+        let m = sample();
+        let w = [2.0, -1.0, 0.5];
+        let got = m.row_dot_range(2, 1, 4, &w);
+        let naive: f32 = m.row(2)[1..4].iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert_close!(got, naive);
+    }
+
+    #[test]
+    fn row_dot_unroll_edge_cases() {
+        // widths around the 4-way unroll boundary
+        for cols in 1..=9 {
+            let m = DenseMatrix::from_rows(1, cols, (0..cols).map(|v| v as f32 + 1.0).collect());
+            let w: Vec<f32> = (0..cols).map(|v| 0.5 - v as f32).collect();
+            let naive: f32 = m.row(0).iter().zip(&w).map(|(a, b)| a * b).sum();
+            assert_close!(m.row_dot_range(0, 0, cols, &w), naive, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn add_row_scaled() {
+        let m = sample();
+        let mut out = vec![1.0; 2];
+        m.add_row_scaled_range(0, 1, 3, 2.0, &mut out);
+        assert_eq!(out, vec![1.0 + 2.0 * 1.0, 1.0 + 2.0 * 2.0]);
+    }
+
+    #[test]
+    fn slices() {
+        let m = sample();
+        let c = m.slice_cols(1, 3);
+        assert_eq!(c.rows, 3);
+        assert_eq!(c.cols, 2);
+        assert_eq!(c.row(2), &[9.0, 10.0]);
+        let r = m.slice_rows(1, 3);
+        assert_eq!(r.rows, 2);
+        assert_eq!(r.row(0), m.row(1));
+    }
+
+    #[test]
+    fn nnz_counts_nonzeros() {
+        let m = DenseMatrix::from_rows(1, 4, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(m.nnz(), 2);
+    }
+}

@@ -1,0 +1,265 @@
+//! Dataset I/O: LIBSVM text format (the lingua franca for sparse SVM
+//! data — real SemMed-style matrices would arrive this way) and a
+//! compact binary format for fast reloads of generated data.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CsrMatrix, Dataset, DenseMatrix, Store};
+
+/// Parse LIBSVM text (`label idx:val idx:val …`, 1-based indices).
+/// `m_hint` fixes the feature count (0 ⇒ infer from the max index).
+pub fn read_libsvm(path: &Path, m_hint: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut entries: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0u32;
+    for (lno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("{path:?}:{}: bad label", lno + 1))?;
+        let mut row = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("{path:?}:{}: bad feature {tok:?}", lno + 1))?;
+            let idx: u32 = idx.parse().with_context(|| format!("bad index {idx:?}"))?;
+            if idx == 0 {
+                bail!("{path:?}:{}: LIBSVM indices are 1-based", lno + 1);
+            }
+            let val: f32 = val.parse().with_context(|| format!("bad value {val:?}"))?;
+            max_col = max_col.max(idx);
+            row.push((idx - 1, val));
+        }
+        entries.push(row);
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+    }
+    let m = if m_hint > 0 { m_hint } else { max_col as usize };
+    if (max_col as usize) > m {
+        bail!("feature index {max_col} exceeds m = {m}");
+    }
+    let rows = entries.len();
+    let x = CsrMatrix::from_row_entries(rows, m, entries);
+    Ok(Dataset {
+        x: Store::Sparse(x),
+        y,
+        name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+    })
+}
+
+/// Write LIBSVM text.
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let m = ds.m();
+    let mut buf = vec![0.0f32; m];
+    for r in 0..ds.n() {
+        write!(w, "{}", if ds.y[r] > 0.0 { "+1" } else { "-1" })?;
+        match &ds.x {
+            Store::Sparse(x) => {
+                for (c, v) in x.row_entries(r) {
+                    write!(w, " {}:{}", c + 1, v)?;
+                }
+            }
+            Store::Dense(_) => {
+                ds.x.copy_row_range(r, 0, m, &mut buf);
+                for (c, &v) in buf.iter().enumerate() {
+                    if v != 0.0 {
+                        write!(w, " {}:{}", c + 1, v)?;
+                    }
+                }
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"SODDAB01";
+
+/// Compact binary dump (dense or CSR) for fast reloads.
+pub fn write_binary(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    let put64 = |w: &mut BufWriter<std::fs::File>, v: u64| w.write_all(&v.to_le_bytes());
+    match &ds.x {
+        Store::Dense(x) => {
+            w.write_all(&[0u8])?;
+            put64(&mut w, x.rows as u64)?;
+            put64(&mut w, x.cols as u64)?;
+            for v in &x.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Store::Sparse(x) => {
+            w.write_all(&[1u8])?;
+            put64(&mut w, x.rows as u64)?;
+            put64(&mut w, x.cols as u64)?;
+            put64(&mut w, x.values.len() as u64)?;
+            for v in &x.indptr {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            for v in &x.indices {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            for v in &x.values {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    for v in &ds.y {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> Result<Dataset> {
+    let mut f = BufReader::new(std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("{path:?} is not a SODDA binary dataset");
+    }
+    let mut kind = [0u8; 1];
+    f.read_exact(&mut kind)?;
+    let get64 = |f: &mut BufReader<std::fs::File>| -> Result<u64> {
+        let mut b = [0u8; 8];
+        f.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    };
+    let read_f32s = |f: &mut BufReader<std::fs::File>, n: usize| -> Result<Vec<f32>> {
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let read_u32s = |f: &mut BufReader<std::fs::File>, n: usize| -> Result<Vec<u32>> {
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let (x, rows) = match kind[0] {
+        0 => {
+            let rows = get64(&mut f)? as usize;
+            let cols = get64(&mut f)? as usize;
+            let data = read_f32s(&mut f, rows * cols)?;
+            (Store::Dense(DenseMatrix::from_rows(rows, cols, data)), rows)
+        }
+        1 => {
+            let rows = get64(&mut f)? as usize;
+            let cols = get64(&mut f)? as usize;
+            let nnz = get64(&mut f)? as usize;
+            let indptr = read_u32s(&mut f, rows + 1)?;
+            let indices = read_u32s(&mut f, nnz)?;
+            let values = read_f32s(&mut f, nnz)?;
+            (Store::Sparse(CsrMatrix { rows, cols, indptr, indices, values }), rows)
+        }
+        k => bail!("unknown storage kind {k}"),
+    };
+    let y = read_f32s(&mut f, rows)?;
+    Ok(Dataset {
+        x,
+        y,
+        name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sodda-io-{name}"))
+    }
+
+    #[test]
+    fn libsvm_roundtrip_sparse() {
+        let ds = synth::sparse_pra(50, 80, 6, 1);
+        let p = tmp("rt.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, 80).unwrap();
+        assert_eq!(back.n(), 50);
+        assert_eq!(back.m(), 80);
+        assert_eq!(back.y, ds.y);
+        match (&ds.x, &back.x) {
+            (Store::Sparse(a), Store::Sparse(b)) => {
+                assert_eq!(a.indices, b.indices);
+                for (va, vb) in a.values.iter().zip(&b.values) {
+                    assert!((va - vb).abs() < 1e-5);
+                }
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn libsvm_reads_dense_written_data() {
+        let ds = synth::dense_zhang(10, 6, 2);
+        let p = tmp("dense.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, 6).unwrap();
+        // dense data has no exact zeros generically; objective must agree
+        let w = vec![0.1f32; 6];
+        crate::assert_close!(
+            back.objective(&w, crate::loss::Loss::Hinge),
+            ds.objective(&w, crate::loss::Loss::Hinge),
+            1e-4
+        );
+    }
+
+    #[test]
+    fn libsvm_rejects_zero_index() {
+        let p = tmp("bad.svm");
+        std::fs::write(&p, "+1 0:1.5\n").unwrap();
+        assert!(read_libsvm(&p, 0).is_err());
+    }
+
+    #[test]
+    fn libsvm_infers_m_and_skips_comments() {
+        let p = tmp("infer.svm");
+        std::fs::write(&p, "# header\n+1 3:1.0\n-1 7:2.0 # trailing\n\n").unwrap();
+        let ds = read_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.m(), 7);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn binary_roundtrip_dense_and_sparse() {
+        for ds in [synth::dense_zhang(20, 8, 3), synth::sparse_pra(20, 30, 5, 3)] {
+            let p = tmp(&format!("bin-{}", ds.x.is_sparse()));
+            write_binary(&ds, &p).unwrap();
+            let back = read_binary(&p).unwrap();
+            assert_eq!(back.n(), ds.n());
+            assert_eq!(back.m(), ds.m());
+            assert_eq!(back.y, ds.y);
+            let w = vec![0.07f32; ds.m()];
+            crate::assert_close!(
+                back.objective(&w, crate::loss::Loss::Squared),
+                ds.objective(&w, crate::loss::Loss::Squared),
+                1e-5
+            );
+        }
+    }
+
+    #[test]
+    fn binary_rejects_wrong_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTSODDA....").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Doubly distributed data substrate.
+//!
+//! The paper assumes the `N × M` design matrix is stored as `P × Q`
+//! partitions `x^{p,q}` (observation partition p, feature partition q),
+//! each of which is further column-split into `P` sub-blocks
+//! `x^{p,q,k}` of width `m̃ = M/QP` (Figure 1). This module provides:
+//!
+//! * [`dense::DenseMatrix`] / [`sparse::CsrMatrix`] storage,
+//! * [`Store`] — the runtime-polymorphic block (both §5.1 dense and
+//!   §5.2 sparse experiments run through the same coordinator),
+//! * [`synth`] — the paper's synthetic generators,
+//! * [`partition`] — the P×Q(×P) partitioner and [`partition::Grid`].
+
+pub mod dense;
+pub mod io;
+pub mod partition;
+pub mod sparse;
+pub mod synth;
+
+pub use dense::DenseMatrix;
+pub use partition::{Block, Grid};
+pub use sparse::CsrMatrix;
+
+/// A data block in either storage format. All coordinator/engine code is
+/// written against this enum so dense and sparse datasets share one path.
+#[derive(Debug, Clone)]
+pub enum Store {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl Store {
+    pub fn rows(&self) -> usize {
+        match self {
+            Store::Dense(m) => m.rows,
+            Store::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Store::Dense(m) => m.cols,
+            Store::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Store::Dense(m) => m.nnz(),
+            Store::Sparse(m) => m.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Store::Sparse(_))
+    }
+
+    /// `x_r[lo..hi] · w` (w local to the range).
+    #[inline]
+    pub fn row_dot_range(&self, r: usize, lo: usize, hi: usize, w: &[f32]) -> f32 {
+        match self {
+            Store::Dense(m) => m.row_dot_range(r, lo, hi, w),
+            Store::Sparse(m) => m.row_dot_range(r, lo, hi, w),
+        }
+    }
+
+    /// `out += scale · x_r[lo..hi]`.
+    #[inline]
+    pub fn add_row_scaled_range(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
+        match self {
+            Store::Dense(m) => m.add_row_scaled_range(r, lo, hi, scale, out),
+            Store::Sparse(m) => m.add_row_scaled_range(r, lo, hi, scale, out),
+        }
+    }
+
+    /// Densify `x_r[lo..hi]` into `out` (XLA staging).
+    pub fn copy_row_range(&self, r: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        match self {
+            Store::Dense(m) => m.copy_row_range(r, lo, hi, out),
+            Store::Sparse(m) => m.copy_row_range(r, lo, hi, out),
+        }
+    }
+
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Store {
+        match self {
+            Store::Dense(m) => Store::Dense(m.slice_cols(lo, hi)),
+            Store::Sparse(m) => Store::Sparse(m.slice_cols(lo, hi)),
+        }
+    }
+
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Store {
+        match self {
+            Store::Dense(m) => Store::Dense(m.slice_rows(lo, hi)),
+            Store::Sparse(m) => Store::Sparse(m.slice_rows(lo, hi)),
+        }
+    }
+
+    /// Bytes this block would occupy on the wire / on disk (the SimNet
+    /// cost model charges data shuffles with this).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Store::Dense(m) => m.data.len() * 4,
+            Store::Sparse(m) => m.values.len() * 8 + m.indptr.len() * 4,
+        }
+    }
+}
+
+/// A labeled dataset before partitioning: global `N × M` matrix + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Store,
+    pub y: Vec<f32>,
+    /// Human-readable provenance ("synthetic-small", "diag-neg10", …).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Full objective `F(w) = (1/N) Σ f(x_i·w, y_i)` evaluated serially —
+    /// the reporting oracle used by tests (the cluster evaluates it in a
+    /// distributed reduce; both must agree).
+    pub fn objective(&self, w: &[f32], loss: crate::loss::Loss) -> f64 {
+        let m = self.m();
+        let mut total = 0.0f64;
+        for r in 0..self.n() {
+            let z = self.x.row_dot_range(r, 0, m, w);
+            total += loss.value(z, self.y[r]) as f64;
+        }
+        total / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_store() -> Store {
+        Store::Dense(DenseMatrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]))
+    }
+
+    fn sparse_store() -> Store {
+        Store::Sparse(CsrMatrix::from_row_entries(
+            2,
+            3,
+            vec![vec![(0, 1.0), (1, 2.0), (2, 3.0)], vec![(0, 4.0), (1, 5.0), (2, 6.0)]],
+        ))
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_every_op() {
+        let (d, s) = (dense_store(), sparse_store());
+        let w = [0.5, -1.0, 2.0];
+        for r in 0..2 {
+            assert_eq!(d.row_dot_range(r, 0, 3, &w), s.row_dot_range(r, 0, 3, &w));
+            assert_eq!(d.row_dot_range(r, 1, 3, &w[1..]), s.row_dot_range(r, 1, 3, &w[1..]));
+            let mut od = vec![0.0; 2];
+            let mut os = vec![0.0; 2];
+            d.add_row_scaled_range(r, 0, 2, 1.5, &mut od);
+            s.add_row_scaled_range(r, 0, 2, 1.5, &mut os);
+            assert_eq!(od, os);
+            let mut cd = vec![0.0; 3];
+            let mut cs = vec![0.0; 3];
+            d.copy_row_range(r, 0, 3, &mut cd);
+            s.copy_row_range(r, 0, 3, &mut cs);
+            assert_eq!(cd, cs);
+        }
+    }
+
+    #[test]
+    fn objective_is_mean_loss() {
+        let ds = Dataset { x: dense_store(), y: vec![1.0, -1.0], name: "t".into() };
+        let w = [0.0, 0.0, 0.0];
+        // hinge at z=0: 1 for each row
+        crate::assert_close!(ds.objective(&w, crate::loss::Loss::Hinge), 1.0);
+    }
+}

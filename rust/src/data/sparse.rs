@@ -1,0 +1,210 @@
+//! CSR sparse matrix — storage for the §5.2 SemMed-style experiments
+//! ("all the datasets considered are in the sparse format").
+
+/// Compressed sparse row matrix, f32 values, u32 column indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
+    }
+
+    /// Build from per-row (col, value) lists; cols must be in-range but
+    /// need not be sorted (they are sorted here).
+    pub fn from_row_entries(rows: usize, cols: usize, mut entries: Vec<Vec<(u32, f32)>>) -> Self {
+        assert_eq!(entries.len(), rows);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for row in entries.iter_mut() {
+            row.sort_unstable_by_key(|(c, _)| *c);
+            for &(c, v) in row.iter() {
+                assert!((c as usize) < cols, "column {c} out of range {cols}");
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.indptr[r] as usize..self.indptr[r + 1] as usize
+    }
+
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let rng = self.row_range(r);
+        self.indices[rng.clone()].iter().copied().zip(self.values[rng].iter().copied())
+    }
+
+    /// `x_r[lo..hi] · w` with `w` local to the range (`w.len() == hi-lo`).
+    #[inline]
+    pub fn row_dot_range(&self, r: usize, lo: usize, hi: usize, w: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), hi - lo);
+        let rng = self.row_range(r);
+        let (idx, val) = (&self.indices[rng.clone()], &self.values[rng]);
+        // indices are sorted: binary-search the window once, then scan.
+        let start = idx.partition_point(|&c| (c as usize) < lo);
+        let mut s = 0.0f32;
+        for k in start..idx.len() {
+            let c = idx[k] as usize;
+            if c >= hi {
+                break;
+            }
+            s += val[k] * w[c - lo];
+        }
+        s
+    }
+
+    /// `out += scale · x_r[lo..hi]`.
+    #[inline]
+    pub fn add_row_scaled_range(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), hi - lo);
+        if scale == 0.0 {
+            return;
+        }
+        let rng = self.row_range(r);
+        let (idx, val) = (&self.indices[rng.clone()], &self.values[rng]);
+        let start = idx.partition_point(|&c| (c as usize) < lo);
+        for k in start..idx.len() {
+            let c = idx[k] as usize;
+            if c >= hi {
+                break;
+            }
+            out[c - lo] += scale * val[k];
+        }
+    }
+
+    /// Densify a row range into `out` (XLA buffer staging).
+    pub fn copy_row_range(&self, r: usize, lo: usize, hi: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        let rng = self.row_range(r);
+        let (idx, val) = (&self.indices[rng.clone()], &self.values[rng]);
+        let start = idx.partition_point(|&c| (c as usize) < lo);
+        for k in start..idx.len() {
+            let c = idx[k] as usize;
+            if c >= hi {
+                break;
+            }
+            out[c - lo] = val[k];
+        }
+    }
+
+    /// Column-range slice with reindexed columns.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> CsrMatrix {
+        let mut entries = Vec::with_capacity(self.rows);
+        for r in 0..self.rows {
+            entries.push(
+                self.row_entries(r)
+                    .filter(|&(c, _)| (c as usize) >= lo && (c as usize) < hi)
+                    .map(|(c, v)| (c - lo as u32, v))
+                    .collect(),
+            );
+        }
+        CsrMatrix::from_row_entries(self.rows, hi - lo, entries)
+    }
+
+    /// Row-range slice.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> CsrMatrix {
+        let mut entries = Vec::with_capacity(hi - lo);
+        for r in lo..hi {
+            entries.push(self.row_entries(r).collect());
+        }
+        CsrMatrix::from_row_entries(hi - lo, self.cols, entries)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries relative to the dense size.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+
+    fn sample() -> CsrMatrix {
+        // [ 1 0 2 0 ]
+        // [ 0 0 0 3 ]
+        // [ 4 5 0 6 ]
+        CsrMatrix::from_row_entries(
+            3,
+            4,
+            vec![
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(3, 3.0)],
+                vec![(3, 6.0), (0, 4.0), (1, 5.0)], // unsorted on purpose
+            ],
+        )
+    }
+
+    #[test]
+    fn construction_sorts_and_drops_zeros() {
+        let m = CsrMatrix::from_row_entries(1, 3, vec![vec![(2, 1.0), (0, 0.0), (1, 7.0)]]);
+        assert_eq!(m.nnz(), 2);
+        let row: Vec<_> = m.row_entries(0).collect();
+        assert_eq!(row, vec![(1, 7.0), (2, 1.0)]);
+    }
+
+    #[test]
+    fn row_dot_full_and_windowed() {
+        let m = sample();
+        let w4 = [1.0, 1.0, 1.0, 1.0];
+        assert_close!(m.row_dot_range(2, 0, 4, &w4), 15.0);
+        let w2 = [10.0, 100.0];
+        // window cols [1,3): row2 has (1,5.0) only in range
+        assert_close!(m.row_dot_range(2, 1, 3, &w2), 50.0);
+        assert_close!(m.row_dot_range(1, 1, 3, &w2), 0.0);
+    }
+
+    #[test]
+    fn add_row_scaled_windowed() {
+        let m = sample();
+        let mut out = vec![0.0; 2];
+        m.add_row_scaled_range(0, 1, 3, 2.0, &mut out);
+        assert_eq!(out, vec![0.0, 4.0]);
+    }
+
+    #[test]
+    fn copy_row_range_densifies() {
+        let m = sample();
+        let mut out = vec![9.0; 3];
+        m.copy_row_range(2, 1, 4, &mut out);
+        assert_eq!(out, vec![5.0, 0.0, 6.0]);
+    }
+
+    #[test]
+    fn slicing() {
+        let m = sample();
+        let c = m.slice_cols(1, 4);
+        assert_eq!(c.cols, 3);
+        let row2: Vec<_> = c.row_entries(2).collect();
+        assert_eq!(row2, vec![(0, 5.0), (2, 6.0)]);
+        let r = m.slice_rows(1, 3);
+        assert_eq!(r.rows, 2);
+        assert_eq!(r.row_entries(0).collect::<Vec<_>>(), vec![(3, 3.0)]);
+    }
+
+    #[test]
+    fn density() {
+        let m = sample();
+        assert_close!(m.density(), 6.0 / 12.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Synthetic dataset generators.
+//!
+//! * [`dense_zhang`] — the §5.1 procedure (from Zhang, Lee & Shin 2012,
+//!   also used by RADiSA): `x_i ~ U[-1,1]^M`, a planted `z ~ U[-1,1]^M`,
+//!   `y_i = sgn(x_i·z)` with 1% label flips, features standardized to
+//!   unit variance.
+//! * [`sparse_pra`] — the §5.2 substitute for the SemMedDB/PRA datasets
+//!   (not publicly available as matrices): binary-ish path-feature rows
+//!   with power-law nnz, labels from a planted sparse hyperplane with
+//!   flips. Preserves what matters for the experiment: a large sparse
+//!   SVM problem in CSR format.
+
+use crate::util::rng::Rng;
+
+use super::{CsrMatrix, Dataset, DenseMatrix, Store};
+
+/// Label-flip probability used by the paper ("probability 0.01 of
+/// flipping the sign").
+pub const FLIP_PROB: f64 = 0.01;
+
+/// §5.1 dense generator. Deterministic in `seed`.
+pub fn dense_zhang(n: usize, m: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x = DenseMatrix::zeros(n, m);
+    for v in x.data.iter_mut() {
+        *v = rng.f32_range(-1.0, 1.0);
+    }
+    let z: Vec<f32> = (0..m).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+
+    // labels before standardization, as in the source procedure
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let dot: f32 = x.row(r).iter().zip(&z).map(|(a, b)| a * b).sum();
+        let mut label = if dot >= 0.0 { 1.0 } else { -1.0 };
+        if rng.bool_with(FLIP_PROB) {
+            label = -label;
+        }
+        y.push(label);
+    }
+
+    standardize(&mut x);
+    Dataset { x: Store::Dense(x), y, name: format!("synthetic-dense-{n}x{m}") }
+}
+
+/// Standardize features to unit variance (mean untouched, matching the
+/// paper's "features are standardized to have unit variance").
+pub fn standardize(x: &mut DenseMatrix) {
+    let n = x.rows as f32;
+    for c in 0..x.cols {
+        let mut sum = 0.0f32;
+        let mut sumsq = 0.0f32;
+        for r in 0..x.rows {
+            let v = x.row(r)[c];
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum / n;
+        let var = (sumsq / n - mean * mean).max(1e-12);
+        let inv_sd = 1.0 / var.sqrt();
+        for r in 0..x.rows {
+            x.row_mut(r)[c] *= inv_sd;
+        }
+    }
+}
+
+/// §5.2 sparse substitute (SemMed/PRA-like). Deterministic in `seed`.
+///
+/// * nnz per row ~ clamp(Zipf-ish power law, 1, `max_nnz`) around
+///   `avg_nnz` — PRA path-feature vectors are extremely sparse with a
+///   heavy tail.
+/// * values in (0, 1] (path probabilities), planted sparse hyperplane
+///   over ~5% of features, `FLIP_PROB` label noise.
+pub fn sparse_pra(n: usize, m: usize, avg_nnz: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5EED_5EED);
+    let support = (m / 20).max(1);
+    let mut w_true = vec![0.0f32; m];
+    for _ in 0..support {
+        let c = rng.below(m);
+        w_true[c] = rng.f32_range(-1.0, 1.0) * 2.0;
+    }
+    let max_nnz = (avg_nnz * 8).min(m);
+
+    let mut entries = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        // heavy-tailed nnz: inverse-CDF of a truncated power law
+        let u: f64 = rng.unit_f64().max(1e-6);
+        let nnz = ((avg_nnz as f64 * 0.5) / u.powf(0.5)).round() as usize;
+        let nnz = nnz.clamp(1, max_nnz);
+        let mut row: Vec<(u32, f32)> = Vec::with_capacity(nnz);
+        let mut seen = std::collections::HashSet::with_capacity(nnz);
+        while row.len() < nnz {
+            let c = rng.below(m) as u32;
+            if seen.insert(c) {
+                row.push((c, rng.f32_range(0.05, 1.0)));
+            }
+        }
+        let dot: f32 = row.iter().map(|&(c, v)| v * w_true[c as usize]).sum();
+        let mut label = if dot >= 0.0 { 1.0 } else { -1.0 };
+        if rng.bool_with(FLIP_PROB) {
+            label = -label;
+        }
+        entries.push(row);
+        y.push(label);
+    }
+    let x = CsrMatrix::from_row_entries(n, m, entries);
+    Dataset { x: Store::Sparse(x), y, name: format!("synthetic-pra-{n}x{m}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_is_deterministic_per_seed() {
+        let a = dense_zhang(50, 20, 7);
+        let b = dense_zhang(50, 20, 7);
+        let c = dense_zhang(50, 20, 8);
+        match (&a.x, &b.x, &c.x) {
+            (Store::Dense(ma), Store::Dense(mb), Store::Dense(mc)) => {
+                assert_eq!(ma.data, mb.data);
+                assert_ne!(ma.data, mc.data);
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn dense_features_have_unit_variance() {
+        let ds = dense_zhang(2000, 10, 3);
+        let Store::Dense(x) = &ds.x else { unreachable!() };
+        for c in 0..10 {
+            let vals: Vec<f32> = (0..x.rows).map(|r| x.row(r)[c]).collect();
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            assert!((var - 1.0).abs() < 0.05, "col {c} var {var}");
+        }
+    }
+
+    #[test]
+    fn dense_labels_mostly_match_plant() {
+        // 1% flips => a re-derived separator should classify ≳90% correctly;
+        // we just assert labels are ±1 and both classes appear.
+        let ds = dense_zhang(500, 30, 11);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(ds.y.iter().any(|&v| v == 1.0) && ds.y.iter().any(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn sparse_has_requested_shape_and_density() {
+        let ds = sparse_pra(400, 1000, 12, 5);
+        let Store::Sparse(x) = &ds.x else { unreachable!() };
+        assert_eq!((x.rows, x.cols), (400, 1000));
+        let avg = x.nnz() as f64 / 400.0;
+        assert!(avg > 2.0 && avg < 60.0, "avg nnz {avg}");
+        assert!(x.density() < 0.06);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn sparse_is_deterministic_per_seed() {
+        let a = sparse_pra(100, 200, 8, 1);
+        let b = sparse_pra(100, 200, 8, 1);
+        match (&a.x, &b.x) {
+            (Store::Sparse(ma), Store::Sparse(mb)) => {
+                assert_eq!(ma.indices, mb.indices);
+                assert_eq!(ma.values, mb.values);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Compute engines: the numeric backends the coordinator drives.
+//!
+//! Two interchangeable implementations of [`ComputeEngine`]:
+//!
+//! * [`NativeEngine`] — pure-rust math, sparse-aware, zero staging cost.
+//!   Always available; the baseline the XLA path is validated against.
+//! * [`XlaEngine`] — executes the AOT-compiled JAX/Pallas artifacts
+//!   through the PJRT CPU client ([`crate::runtime`]). This is the
+//!   "python never on the request path" production configuration.
+//!
+//! The coordinator is engine-generic; integration tests assert the two
+//! engines produce identical training trajectories (up to f32 rounding).
+
+mod native;
+mod xla;
+
+pub use native::NativeEngine;
+pub use xla::XlaEngine;
+
+use std::ops::Range;
+
+use crate::data::Store;
+use crate::loss::Loss;
+
+/// Identifies a worker's shard so engines can cache per-block state
+/// (the XLA engine stages each block on device exactly once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    pub p: usize,
+    pub q: usize,
+}
+
+/// Numeric backend for the per-block operations of Algorithm 1.
+///
+/// Row index slices refer to rows of the *local* block; column ranges are
+/// block-local. Parameter slices (`w`, `mu`, …) are local to the column
+/// range passed. All reductions are **sums** (normalization happens in
+/// the coordinator), matching the AOT artifact conventions.
+pub trait ComputeEngine: Send + Sync {
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Partial margins `z_k = x_{rows[k]}[cols] · w` (steps 5-8: the
+    /// feature-block contribution to `x_j^{B^t} w_{B^t}`; `w` comes in
+    /// pre-masked by B^t).
+    fn partial_z(&self, key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32>;
+
+    /// Elementwise derivative `u_k = f'(z_k, y_k)`.
+    fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32>;
+
+    /// Gradient slice `g[cols] = Σ_k u_k · x_{rows[k]}[cols]`.
+    fn grad_slice(&self, key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32>;
+
+    /// L SVRG steps on one sub-block (Algorithm 1 step 16). `idx` holds
+    /// the pre-sampled local row per step; returns `w^{(L)}`.
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32>;
+
+    /// `Σ_k f(z_k, y_k)` from pre-reduced margins (objective reporting).
+    fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64;
+
+    /// RADiSA-avg's combiner: same L steps as [`Self::svrg_inner`] but
+    /// returns the **uniform iterate average** `mean(w^(1) … w^(L))`
+    /// instead of the last iterate (Polyak averaging — the "-avg" in the
+    /// benchmark's name; see DESIGN.md on the [13] reconstruction).
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner_avg(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32>;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::data::DenseMatrix;
+
+    /// Tiny deterministic block shared by engine tests.
+    pub fn block(n: usize, m: usize, seed: u64) -> (Store, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let mut d = DenseMatrix::zeros(n, m);
+        for v in d.data.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0);
+        }
+        let y = (0..n).map(|_| if rng.bool_with(0.5) { 1.0 } else { -1.0 }).collect();
+        (Store::Dense(d), y)
+    }
+}

@@ -1,0 +1,196 @@
+//! Pure-rust reference engine.
+//!
+//! Implements the identical math as the Pallas kernels (see
+//! `python/compile/kernels/ref.py`) directly over [`Store`] blocks, which
+//! makes it sparse-aware: §5.2's CSR datasets never densify on this path.
+
+use std::ops::Range;
+
+use super::{BlockKey, ComputeEngine};
+use crate::data::Store;
+use crate::loss::Loss;
+
+/// Always-available rust backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine;
+
+impl ComputeEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn partial_z(&self, _key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
+        debug_assert_eq!(w.len(), cols.len());
+        rows.iter()
+            .map(|&r| x.row_dot_range(r as usize, cols.start, cols.end, w))
+            .collect()
+    }
+
+    fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(z.len(), y.len());
+        z.iter().zip(y).map(|(&z, &y)| loss.dloss(z, y)).collect()
+    }
+
+    fn grad_slice(&self, _key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(rows.len(), u.len());
+        let mut g = vec![0.0f32; cols.len()];
+        for (&r, &uk) in rows.iter().zip(u) {
+            x.add_row_scaled_range(r as usize, cols.start, cols.end, uk, &mut g);
+        }
+        g
+    }
+
+    fn svrg_inner(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32> {
+        let mt = cols.len();
+        debug_assert!(w0.len() == mt && wt.len() == mt && mu.len() == mt);
+        let mut w = w0.to_vec();
+        // Reusable buffer for −γ(u_cur − u_ref)·x_j − γµ updates: the axpy
+        // is applied in place, no per-step allocation.
+        for &j in idx {
+            let j = j as usize;
+            let z_cur = x.row_dot_range(j, cols.start, cols.end, &w);
+            let z_ref = x.row_dot_range(j, cols.start, cols.end, wt);
+            let u_cur = loss.dloss(z_cur, y[j]);
+            let u_ref = loss.dloss(z_ref, y[j]);
+            let du = u_cur - u_ref;
+            // w -= γ·(du·x_j + µ)
+            if du != 0.0 {
+                x.add_row_scaled_range(j, cols.start, cols.end, -gamma * du, &mut w);
+            }
+            for (wk, &mk) in w.iter_mut().zip(mu) {
+                *wk -= gamma * mk;
+            }
+        }
+        w
+    }
+
+    fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64 {
+        z.iter().zip(y).map(|(&z, &y)| loss.value(z, y) as f64).sum()
+    }
+
+    fn svrg_inner_avg(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32> {
+        let mt = cols.len();
+        let steps = idx.len();
+        let tail_start = 0; // uniform (Polyak) average of all L iterates
+        let mut w = w0.to_vec();
+        let mut acc = vec![0.0f32; mt];
+        for (i, &j) in idx.iter().enumerate() {
+            let j = j as usize;
+            let z_cur = x.row_dot_range(j, cols.start, cols.end, &w);
+            let z_ref = x.row_dot_range(j, cols.start, cols.end, wt);
+            let du = loss.dloss(z_cur, y[j]) - loss.dloss(z_ref, y[j]);
+            if du != 0.0 {
+                x.add_row_scaled_range(j, cols.start, cols.end, -gamma * du, &mut w);
+            }
+            for (wk, &mk) in w.iter_mut().zip(mu) {
+                *wk -= gamma * mk;
+            }
+            if i >= tail_start {
+                for (a, &wk) in acc.iter_mut().zip(&w) {
+                    *a += wk;
+                }
+            }
+        }
+        let inv = 1.0 / (steps - tail_start) as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+    use crate::engine::testutil::block;
+
+    const K: BlockKey = BlockKey { p: 0, q: 0 };
+
+    #[test]
+    fn partial_z_matches_naive() {
+        let (x, _) = block(10, 6, 1);
+        let w = vec![0.5f32; 3];
+        let rows: Vec<u32> = vec![0, 3, 7];
+        let z = NativeEngine.partial_z(K, &x, 2..5, &w, &rows);
+        for (k, &r) in rows.iter().enumerate() {
+            let mut buf = vec![0.0f32; 3];
+            x.copy_row_range(r as usize, 2, 5, &mut buf);
+            let naive: f32 = buf.iter().map(|v| v * 0.5).sum();
+            assert_close!(z[k], naive, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn grad_slice_matches_transpose_product() {
+        let (x, _) = block(8, 5, 2);
+        let rows: Vec<u32> = (0..8).collect();
+        let u: Vec<f32> = (0..8).map(|v| v as f32 * 0.1 - 0.3).collect();
+        let g = NativeEngine.grad_slice(K, &x, 0..5, &rows, &u);
+        let mut want = vec![0.0f32; 5];
+        for r in 0..8 {
+            let mut buf = vec![0.0f32; 5];
+            x.copy_row_range(r, 0, 5, &mut buf);
+            for c in 0..5 {
+                want[c] += u[r] * buf[c];
+            }
+        }
+        for c in 0..5 {
+            assert_close!(g[c], want[c], 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn svrg_zero_gamma_identity() {
+        let (x, y) = block(6, 4, 3);
+        let w0 = vec![0.3f32; 4];
+        let out = NativeEngine.svrg_inner(
+            K,
+            Loss::Hinge, &x, &y, 0..4, &w0, &w0, &[0.0; 4], &[0, 1, 2], 0.0,
+        );
+        assert_eq!(out, w0);
+    }
+
+    #[test]
+    fn svrg_first_step_is_minus_gamma_mu_when_w_eq_wt() {
+        let (x, y) = block(6, 4, 4);
+        let w0 = vec![0.3f32; 4];
+        let mu = vec![0.25f32; 4];
+        let out = NativeEngine.svrg_inner(K, Loss::Hinge, &x, &y, 0..4, &w0, &w0, &mu, &[2], 0.1);
+        for k in 0..4 {
+            assert_close!(out[k], 0.3 - 0.1 * 0.25, 1e-4, 1e-6);
+        }
+    }
+
+    #[test]
+    fn loss_from_z_sums() {
+        let z = [0.0f32, 2.0];
+        let y = [1.0f32, 1.0];
+        // hinge: 1 + 0
+        assert_close!(NativeEngine.loss_from_z(Loss::Hinge, &z, &y) as f32, 1.0);
+    }
+}

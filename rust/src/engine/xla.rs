@@ -1,0 +1,221 @@
+//! XLA engine: drives the AOT JAX/Pallas artifacts through PJRT.
+//!
+//! Padding/masking conventions (shared with `python/compile/model.py`):
+//!
+//! * artifacts are compiled at the fixed bucket `(n, m, m̃, L)` recorded
+//!   in the manifest; [`XlaEngine::new`] validates the dataset partition
+//!   dims against it and refuses to run on a mismatch;
+//! * row subsets (`D^t`) are expressed by scattering `u` into a
+//!   zero-filled full-length vector — zero rows contribute exactly zero
+//!   to every gradient sum;
+//! * each block `x^{p,q}` (and each sub-block used by the inner loop) is
+//!   densified and staged on device **once**, keyed by [`BlockKey`]; the
+//!   steady-state per-call traffic is only the small parameter vectors.
+
+use std::collections::HashSet;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{BlockKey, ComputeEngine};
+use crate::data::Store;
+use crate::loss::Loss;
+use crate::runtime::{Input, XlaRuntime};
+
+pub struct XlaEngine {
+    rt: Arc<XlaRuntime>,
+    /// keys already staged on device ("x:p:q", "xsub:p:q:k", "y:p:q")
+    staged: Mutex<HashSet<String>>,
+    n: usize,
+    m: usize,
+    mtilde: usize,
+    steps: usize,
+}
+
+impl XlaEngine {
+    /// Wrap a loaded runtime, validating the artifact bucket against the
+    /// dataset partitioning (`n_per × m_per` blocks, `m̃`-wide sub-blocks,
+    /// inner-loop length L).
+    pub fn new(rt: Arc<XlaRuntime>, n_per: usize, m_per: usize, mtilde: usize, steps: usize) -> Result<Self> {
+        rt.manifest.validate_for(n_per, m_per, mtilde, steps)?;
+        Ok(Self { rt, staged: Mutex::new(HashSet::new()), n: n_per, m: m_per, mtilde, steps })
+    }
+
+    fn ensure_block(&self, key: BlockKey, x: &Store) {
+        let skey = format!("x:{}:{}", key.p, key.q);
+        let mut staged = self.staged.lock().unwrap();
+        if staged.contains(&skey) {
+            return;
+        }
+        let mut data = vec![0.0f32; self.n * self.m];
+        for r in 0..self.n {
+            x.copy_row_range(r, 0, self.m, &mut data[r * self.m..(r + 1) * self.m]);
+        }
+        self.rt.stage(skey.clone(), data, vec![self.n, self.m]).expect("staging block");
+        staged.insert(skey);
+    }
+
+    fn ensure_sub_block(&self, key: BlockKey, x: &Store, cols: &Range<usize>) -> String {
+        let k = cols.start / self.mtilde;
+        let skey = format!("xsub:{}:{}:{k}", key.p, key.q);
+        let mut staged = self.staged.lock().unwrap();
+        if !staged.contains(&skey) {
+            let mut data = vec![0.0f32; self.n * self.mtilde];
+            for r in 0..self.n {
+                x.copy_row_range(r, cols.start, cols.end, &mut data[r * self.mtilde..(r + 1) * self.mtilde]);
+            }
+            self.rt.stage(skey.clone(), data, vec![self.n, self.mtilde]).expect("staging sub-block");
+            staged.insert(skey.clone());
+        }
+        skey
+    }
+
+    fn ensure_labels(&self, key: BlockKey, y: &[f32]) -> String {
+        let skey = format!("y:{}:{}", key.p, key.q);
+        let mut staged = self.staged.lock().unwrap();
+        if !staged.contains(&skey) {
+            self.rt.stage(skey.clone(), y.to_vec(), vec![self.n]).expect("staging labels");
+            staged.insert(skey.clone());
+        }
+        skey
+    }
+
+    fn pad(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        out[..v.len()].copy_from_slice(v);
+        out
+    }
+}
+
+impl ComputeEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn partial_z(&self, key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
+        assert_eq!(cols, 0..self.m, "XLA engine computes z over full blocks");
+        self.ensure_block(key, x);
+        let z = self
+            .rt
+            .call(
+                "partial_z",
+                vec![
+                    Input::Staged(format!("x:{}:{}", key.p, key.q)),
+                    Input::F32(w.to_vec(), vec![self.m]),
+                ],
+            )
+            .expect("partial_z");
+        rows.iter().map(|&r| z[r as usize]).collect()
+    }
+
+    fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
+        let len = z.len();
+        let u = self
+            .rt
+            .call(
+                &format!("dloss_u_{}", loss.name()),
+                vec![Input::F32(self.pad(z), vec![self.n]), Input::F32(self.pad(y), vec![self.n])],
+            )
+            .expect("dloss_u");
+        u[..len].to_vec()
+    }
+
+    fn grad_slice(&self, key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
+        assert_eq!(cols, 0..self.m, "XLA engine computes gradient slices over full blocks");
+        self.ensure_block(key, x);
+        // scatter u onto the full row space; zero rows contribute zero
+        let mut uf = vec![0.0f32; self.n];
+        for (&r, &uk) in rows.iter().zip(u) {
+            uf[r as usize] = uk;
+        }
+        self.rt
+            .call(
+                "grad_slice",
+                vec![
+                    Input::Staged(format!("x:{}:{}", key.p, key.q)),
+                    Input::F32(uf, vec![self.n]),
+                ],
+            )
+            .expect("grad_slice")
+    }
+
+    fn svrg_inner(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32> {
+        assert_eq!(cols.len(), self.mtilde, "XLA svrg_inner runs on m̃-wide sub-blocks");
+        assert_eq!(idx.len(), self.steps, "idx length must equal the compiled L");
+        let xkey = self.ensure_sub_block(key, x, &cols);
+        let ykey = self.ensure_labels(key, y);
+        self.rt
+            .call(
+                &format!("svrg_inner_{}", loss.name()),
+                vec![
+                    Input::Staged(xkey),
+                    Input::Staged(ykey),
+                    Input::F32(w0.to_vec(), vec![self.mtilde]),
+                    Input::F32(wt.to_vec(), vec![self.mtilde]),
+                    Input::F32(mu.to_vec(), vec![self.mtilde]),
+                    Input::I32(idx.iter().map(|&v| v as i32).collect(), vec![self.steps]),
+                    Input::F32(vec![gamma], vec![1]),
+                ],
+            )
+            .expect("svrg_inner")
+    }
+
+    fn svrg_inner_avg(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+    ) -> Vec<f32> {
+        assert_eq!(cols.len(), self.mtilde, "XLA svrg_inner_avg runs on m̃-wide sub-blocks");
+        assert_eq!(idx.len(), self.steps, "idx length must equal the compiled L");
+        let xkey = self.ensure_sub_block(key, x, &cols);
+        let ykey = self.ensure_labels(key, y);
+        self.rt
+            .call(
+                &format!("svrg_inner_avg_{}", loss.name()),
+                vec![
+                    Input::Staged(xkey),
+                    Input::Staged(ykey),
+                    Input::F32(w0.to_vec(), vec![self.mtilde]),
+                    Input::F32(wt.to_vec(), vec![self.mtilde]),
+                    Input::F32(mu.to_vec(), vec![self.mtilde]),
+                    Input::I32(idx.iter().map(|&v| v as i32).collect(), vec![self.steps]),
+                    Input::F32(vec![gamma], vec![1]),
+                ],
+            )
+            .expect("svrg_inner_avg")
+    }
+
+    fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64 {
+        let pad = self.n - z.len();
+        let out = self
+            .rt
+            .call(
+                &format!("loss_from_z_{}", loss.name()),
+                vec![Input::F32(self.pad(z), vec![self.n]), Input::F32(self.pad(y), vec![self.n])],
+            )
+            .expect("loss_from_z");
+        // zero-padded rows each contributed f(0, 0)
+        out[0] as f64 - pad as f64 * loss.value(0.0, 0.0) as f64
+    }
+}

@@ -1,0 +1,429 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! §5 evaluation (see DESIGN.md §3 for the experiment index).
+//!
+//! Each `figN`/`tableN` function runs the right set of configurations,
+//! writes one CSV per curve under the output directory, and prints a
+//! summary. Scales default to the presets' laptop divisors; pass
+//! `--scale 1` for paper-sized runs.
+//!
+//! Calibration note: all comparisons use the paper's learning-rate shape
+//! `γ_t = γ0/(1+√(t−1))` with one shared `γ0 = 0.08`, chosen once so the
+//! first iterations of *all* algorithms are in the stable (non-overshoot)
+//! regime at laptop partition sizes — the paper's `γ0 = 1` is tuned to
+//! its 50k×6k partitions.
+
+pub mod theory;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{
+    preset, AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, Preset, SamplingFractions,
+    Schedule,
+};
+use crate::coordinator::{build_engine, train_with_engine};
+use crate::data::Dataset;
+use crate::engine::ComputeEngine;
+use crate::loss::Loss;
+use crate::metrics::plot::{self, Curve};
+use crate::metrics::{seed_variation, History};
+
+/// Shared harness options (from the CLI).
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub out_dir: PathBuf,
+    /// dataset scale divisor (0 ⇒ preset default)
+    pub scale: usize,
+    pub iters: usize,
+    pub engine: EngineKind,
+    pub p: usize,
+    pub q: usize,
+    pub inner_steps: usize,
+    pub gamma0: f64,
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Self {
+            out_dir: "results".into(),
+            scale: 0,
+            iters: 30,
+            engine: EngineKind::Native,
+            p: 5,
+            q: 3,
+            inner_steps: 32,
+            gamma0: 0.08,
+            seed: 1,
+        }
+    }
+}
+
+impl Opts {
+    fn scale_for(&self, pr: &Preset) -> usize {
+        if self.scale == 0 {
+            pr.default_scale
+        } else {
+            self.scale
+        }
+    }
+
+    fn base_cfg(&self, name: &str, data: DataConfig, algo: AlgorithmKind) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.to_string(),
+            data,
+            p: self.p,
+            q: self.q,
+            loss: Loss::Hinge, // the paper's SVM objective throughout §5
+            algorithm: algo,
+            fractions: SamplingFractions::PAPER,
+            inner_steps: self.inner_steps,
+            outer_iters: self.iters,
+            schedule: Schedule::ScaledSqrt { gamma0: self.gamma0 },
+            seed: self.seed,
+            engine: self.engine,
+            network: None,
+            eval_every: 1,
+        }
+    }
+}
+
+/// Run one config against a shared dataset, write its CSV, return history.
+fn run_curve(opts: &Opts, cfg: &ExperimentConfig, ds: &Dataset, engine: &Arc<dyn ComputeEngine>) -> Result<History> {
+    let out = train_with_engine(cfg, ds, Arc::clone(engine))
+        .with_context(|| format!("running {}", cfg.name))?;
+    let path = opts.out_dir.join(format!("{}.csv", cfg.name));
+    out.history.write_csv(&path)?;
+    println!(
+        "  {:<44} final F = {:.4}   sim {:.2}s   comm {:.1} MB",
+        cfg.name,
+        out.history.final_loss().unwrap_or(f64::NAN),
+        out.history.records.last().map(|r| r.sim_s).unwrap_or(0.0),
+        out.comm_bytes as f64 / 1e6
+    );
+    Ok(out.history)
+}
+
+fn engine_for(opts: &Opts, cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
+    build_engine(cfg).with_context(|| {
+        format!(
+            "building {:?} engine (XLA needs artifacts at the partition shape; \
+             see `make artifacts N_PER=… M_PER=… MTILDE=… STEPS={}`)",
+            opts.engine, cfg.inner_steps
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 & Table 3 — dataset summaries
+// ---------------------------------------------------------------------------
+
+/// Table 1: synthetic dense dataset configurations at the active scale.
+pub fn table1(opts: &Opts) -> Result<String> {
+    let mut rows = String::new();
+    rows.push_str("data size                     | small | medium | large\n");
+    let mut line_pq = String::from("P x Q                         ");
+    let mut line_size = String::from("size of each partition (n x m)");
+    let mut line_exec = String::from("paper Spark executors         ");
+    for name in ["small", "medium", "large"] {
+        let pr = preset(name).unwrap();
+        let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+        line_pq.push_str(&format!("| {} x {} ", opts.p, opts.q));
+        line_size.push_str(&format!("| {} x {} ", dc.n() / opts.p, dc.m() / opts.q));
+        line_exec.push_str(&format!("| {} ", pr.executors));
+    }
+    rows.push_str(&line_pq);
+    rows.push('\n');
+    rows.push_str(&line_size);
+    rows.push('\n');
+    rows.push_str(&line_exec);
+    rows.push('\n');
+    println!("== Table 1 (scale: preset/{}x) ==\n{rows}", opts.scale);
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(opts.out_dir.join("table1.txt"), &rows)?;
+    Ok(rows)
+}
+
+/// Table 3: the sparse SemMed-substitute datasets, with measured nnz.
+pub fn table3(opts: &Opts) -> Result<String> {
+    let mut rows = String::from("dataset    | N | M | n x m per partition | avg nnz/row\n");
+    for name in ["diag-neg10", "loc-neg5"] {
+        let pr = preset(name).unwrap();
+        let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+        let ds = dc.materialize(opts.seed);
+        let nnz = ds.x.nnz() as f64 / ds.n() as f64;
+        rows.push_str(&format!(
+            "{name} | {} | {} | {} x {} | {nnz:.1}\n",
+            ds.n(),
+            ds.m(),
+            ds.n() / opts.p,
+            ds.m() / opts.q
+        ));
+    }
+    println!("== Table 3 (SemMed substitutes) ==\n{rows}");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(opts.out_dir.join("table3.txt"), &rows)?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — (b, c, d) sweeps on the small dataset, vs RADiSA-avg
+// ---------------------------------------------------------------------------
+
+/// One Figure-2 panel. Panels follow the paper:
+/// a: d ∈ {60..90}%, b = c = 100%;  b: c ∈ {40..80}%, b = 100%;
+/// c: b = c ∈ {65..95}%;  d/e/f: b ∈ {95, 85, 75}% × c sweep;
+/// g: long-run extension of d.
+pub fn fig2(opts: &Opts, panel: char) -> Result<()> {
+    let pr = preset("small").unwrap();
+    let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+    let ds = dc.materialize(opts.seed);
+    println!("== Figure 2({panel}) on {} ({}x{}) ==", ds.name, ds.n(), ds.m());
+
+    let mut variants: Vec<(String, SamplingFractions)> = Vec::new();
+    let f = |b: f64, c: f64, d: f64| SamplingFractions { b, c, d };
+    let mut iters = opts.iters;
+    match panel {
+        'a' => {
+            for d in [0.6, 0.7, 0.8, 0.9] {
+                variants.push((format!("fig2a_sodda_d{:02.0}", d * 100.0), f(1.0, 1.0, d)));
+            }
+        }
+        'b' => {
+            for c in [0.4, 0.6, 0.8] {
+                variants.push((format!("fig2b_sodda_c{:02.0}", c * 100.0), f(1.0, c, 0.85)));
+            }
+        }
+        'c' => {
+            for bc in [0.65, 0.75, 0.85, 0.95] {
+                variants.push((format!("fig2c_sodda_bc{:02.0}", bc * 100.0), f(bc, bc, 0.85)));
+            }
+        }
+        'd' | 'e' | 'f' | 'g' => {
+            let b = match panel {
+                'd' | 'g' => 0.95,
+                'e' => 0.85,
+                _ => 0.75,
+            };
+            if panel == 'g' {
+                iters = opts.iters * 3; // long-run extension
+            }
+            for c in [0.4f64, 0.6, 0.8] {
+                let c = c.min(b);
+                variants.push((format!("fig2{panel}_sodda_b{:02.0}_c{:02.0}", b * 100.0, c * 100.0), f(b, c, 0.85)));
+            }
+        }
+        other => anyhow::bail!("unknown fig2 panel {other:?} (a-g)"),
+    }
+
+    let mut cfg0 = opts.base_cfg("tmp", dc.clone(), AlgorithmKind::Sodda);
+    cfg0.outer_iters = iters;
+    let engine = engine_for(opts, &cfg0)?;
+    let mut curves = Vec::new();
+    for (name, fr) in variants {
+        let mut cfg = cfg0.clone();
+        cfg.name = name.clone();
+        cfg.fractions = fr;
+        let h = run_curve(opts, &cfg, &ds, &engine)?;
+        curves.push(Curve::from_history(name, &h, true));
+    }
+    let mut cfg = cfg0.clone();
+    cfg.name = format!("fig2{panel}_radisa_avg");
+    cfg.algorithm = AlgorithmKind::RadisaAvg;
+    let h = run_curve(opts, &cfg, &ds, &engine)?;
+    curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+    render(opts, &format!("fig2{panel}"), &format!("Figure 2({panel}) — small dataset"), &curves)?;
+    Ok(())
+}
+
+/// Write the SVG + ASCII render of one figure's curves.
+fn render(opts: &Opts, stem: &str, title: &str, curves: &[Curve]) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(
+        opts.out_dir.join(format!("{stem}.svg")),
+        plot::svg(curves, title, "simulated cluster seconds"),
+    )?;
+    std::fs::write(opts.out_dir.join(format!("{stem}.txt")), plot::ascii(curves, 22, 72))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — mid & large datasets, 3 seeds, SODDA vs RADiSA-avg
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &Opts) -> Result<()> {
+    for name in ["medium", "large"] {
+        let pr = preset(name).unwrap();
+        let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+        println!("== Figure 3: {name} ==");
+        let mut curves = Vec::new();
+        for seed in [1u64, 2, 3] {
+            let ds = dc.materialize(seed);
+            for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
+                let mut cfg = opts.base_cfg(&format!("fig3_{name}_{algo}_seed{seed}"), dc.clone(), algo);
+                cfg.seed = seed;
+                let engine = engine_for(opts, &cfg)?;
+                let h = run_curve(opts, &cfg, &ds, &engine)?;
+                curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+            }
+        }
+        render(opts, &format!("fig3_{name}"), &format!("Figure 3 — {name} dataset, 3 seeds"), &curves)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — seed variation on the large dataset (10 seeds × 40 iters)
+// ---------------------------------------------------------------------------
+
+pub fn table2(opts: &Opts) -> Result<String> {
+    let pr = preset("large").unwrap();
+    let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+    let ds = dc.materialize(opts.seed);
+    println!("== Table 2 (seed variation, {} seeds × {} iters) ==", 10, opts.iters);
+    let mut out = String::from("algorithm | avg(max-avg) | avg(avg-min) | max(max-avg) | max(avg-min)\n");
+    for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for seed in 0..10u64 {
+            let mut cfg = opts.base_cfg(&format!("table2_{algo}_seed{seed}"), dc.clone(), algo);
+            cfg.seed = seed;
+            let engine = engine_for(opts, &cfg)?;
+            let hist = train_with_engine(&cfg, &ds, engine)?.history;
+            curves.push(hist.losses());
+        }
+        let v = seed_variation(&curves);
+        out.push_str(&format!(
+            "{algo} | {:.4e} | {:.4e} | {:.4e} | {:.4e}\n",
+            v.avg_max_minus_avg, v.avg_avg_minus_min, v.max_max_minus_avg, v.max_avg_minus_min
+        ));
+    }
+    println!("{out}");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(opts.out_dir.join("table2.txt"), &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — sparse SemMed substitutes, SODDA vs RADiSA-avg
+// ---------------------------------------------------------------------------
+
+pub fn fig4(opts: &Opts) -> Result<()> {
+    for name in ["diag-neg10", "loc-neg5"] {
+        let pr = preset(name).unwrap();
+        let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+        let ds = dc.materialize(opts.seed);
+        println!("== Figure 4: {name} ({}x{}, sparse) ==", ds.n(), ds.m());
+        let mut curves = Vec::new();
+        for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
+            let cfg = opts.base_cfg(&format!("fig4_{}_{algo}", name.replace('-', "_")), dc.clone(), algo);
+            let engine = engine_for(opts, &cfg)?;
+            let h = run_curve(opts, &cfg, &ds, &engine)?;
+            curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+        }
+        render(opts, &format!("fig4_{}", name.replace('-', "_")), &format!("Figure 4 — {name} (sparse)"), &curves)?;
+    }
+    Ok(())
+}
+
+/// Print who-wins summary for a pair of histories (used by the CLI and
+/// EXPERIMENTS.md): time for each algorithm to reach a set of loss levels.
+pub fn time_to_loss_summary(sodda: &History, ravg: &History) -> String {
+    let f0 = sodda.losses()[0];
+    let best = sodda
+        .min_loss()
+        .unwrap()
+        .max(ravg.min_loss().unwrap());
+    let mut out = String::from("target_loss,sodda_sim_s,radisa_avg_sim_s\n");
+    for frac in [0.8, 0.6, 0.4, 0.3] {
+        let target = best + (f0 - best) * frac;
+        let a = sodda.time_to_loss(target).map(|t| format!("{t:.3}")).unwrap_or_else(|| "-".into());
+        let b = ravg.time_to_loss(target).map(|t| format!("{t:.3}")).unwrap_or_else(|| "-".into());
+        out.push_str(&format!("{target:.4},{a},{b}\n"));
+    }
+    out
+}
+
+/// Load a curve back (used by tests of the harness itself).
+pub fn read_curve(path: &Path) -> Result<Vec<(usize, f64, f64)>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let mut it = line.split(',');
+        let iter: usize = it.next().unwrap_or("0").parse()?;
+        let loss: f64 = it.next().unwrap_or("0").parse()?;
+        let _wall = it.next();
+        let sim: f64 = it.next().unwrap_or("0").parse()?;
+        out.push((iter, loss, sim));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts(dir: &str) -> Opts {
+        Opts {
+            out_dir: std::env::temp_dir().join(dir),
+            scale: 2000, // tiny datasets for the harness's own tests
+            iters: 3,
+            p: 2,
+            q: 2,
+            inner_steps: 4,
+            ..Opts::default()
+        }
+    }
+
+    #[test]
+    fn table1_renders() {
+        let o = tiny_opts("sodda-t1");
+        let t = table1(&o).unwrap();
+        assert!(t.contains("small"));
+        assert!(o.out_dir.join("table1.txt").exists());
+    }
+
+    #[test]
+    fn fig2_panel_a_writes_curves() {
+        let o = tiny_opts("sodda-f2");
+        fig2(&o, 'a').unwrap();
+        let curve = read_curve(&o.out_dir.join("fig2a_sodda_d60.csv")).unwrap();
+        assert_eq!(curve.len(), 4); // iter 0 + 3
+        assert!(o.out_dir.join("fig2a_radisa_avg.csv").exists());
+    }
+
+    #[test]
+    fn fig2_rejects_unknown_panel() {
+        assert!(fig2(&tiny_opts("sodda-f2x"), 'z').is_err());
+    }
+
+    #[test]
+    fn table3_measures_sparsity() {
+        let o = tiny_opts("sodda-t3");
+        let t = table3(&o).unwrap();
+        assert!(t.contains("diag-neg10"));
+    }
+
+    #[test]
+    fn time_to_loss_summary_format() {
+        use crate::metrics::IterRecord;
+        let mut a = History::new("a");
+        let mut b = History::new("b");
+        for i in 0..5 {
+            let rec = |loss: f64, s: f64| IterRecord {
+                iter: i,
+                loss,
+                wall_s: s,
+                sim_s: s,
+                comm_bytes: 0,
+                grad_coord_evals: 0,
+            };
+            a.push(rec(1.0 / (i + 1) as f64, i as f64 * 0.5));
+            b.push(rec(1.2 / (i + 1) as f64, i as f64 * 0.7));
+        }
+        let s = time_to_loss_summary(&a, &b);
+        assert!(s.starts_with("target_loss"));
+        assert_eq!(s.lines().count(), 5);
+    }
+}

@@ -1,0 +1,36 @@
+//! # SODDA — StOchastic Doubly Distributed Algorithm
+//!
+//! Production-grade reproduction of *"A Stochastic Large-scale Machine
+//! Learning Algorithm for Distributed Features and Observations"*
+//! (Fang & Klabjan, 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the doubly distributed training runtime:
+//!   a leader and `P×Q` workers exchanging messages over a simulated
+//!   cluster ([`cluster`]), the SODDA / RADiSA / RADiSA-avg outer loops
+//!   ([`coordinator`]), data partitioning ([`data`]), and metrics.
+//! * **L2 (python/compile/model.py, build-time)** — JAX compute graphs
+//!   (stochastic full-gradient estimate, SVRG inner loop, loss eval),
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas row-tile
+//!   gradient kernels called from L2.
+//!
+//! At runtime the [`runtime`] module loads the HLO artifacts through the
+//! PJRT CPU client (`xla` crate); python never runs on the training path.
+//! A pure-rust [`engine::NativeEngine`] implements the identical math and
+//! is cross-checked against the XLA path in the integration tests.
+
+pub mod util;
+
+pub mod config;
+pub mod data;
+pub mod loss;
+pub mod engine;
+pub mod runtime;
+pub mod cluster;
+pub mod coordinator;
+pub mod harness;
+pub mod metrics;
+
+pub use config::ExperimentConfig;

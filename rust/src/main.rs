@@ -1,0 +1,326 @@
+//! `repro` — the SODDA launcher.
+//!
+//! Subcommands:
+//!   train        one training run (preset or explicit dims, any algorithm)
+//!   table1/2/3   regenerate the paper's tables
+//!   fig2/3/4     regenerate the paper's figures (CSV curves under --out)
+//!   perf         per-phase timing breakdown for the perf log
+//!   help         this text
+//!
+//! Examples:
+//!   repro train --preset small --algo sodda --iters 40
+//!   repro train --n 5000 --m 360 --algo radisa-avg --engine xla
+//!   repro fig2 --panel a --out results
+//!   repro fig3 --scale 100 --iters 20
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use sodda::config::{
+    preset, AlgorithmKind, DataConfig, ExperimentConfig, SamplingFractions, Schedule,
+};
+use sodda::coordinator::{build_engine, train_with_engine};
+use sodda::harness::{self, Opts};
+use sodda::loss::Loss;
+use sodda::util::cli::Args;
+
+const HELP: &str = "\
+repro — SODDA (Fang & Klabjan 2018) reproduction driver
+
+USAGE: repro <subcommand> [flags]
+
+SUBCOMMANDS
+  train    run one configuration and write its loss curve
+  table1   print Table 1 (synthetic dataset configurations)
+  table2   run the 10-seed variation study (Table 2)
+  table3   print Table 3 (sparse SemMed-substitute datasets)
+  fig2     (b,c,d) sweeps vs RADiSA-avg on `small` — panels a..g
+  fig3     SODDA vs RADiSA-avg on medium+large, 3 seeds
+  fig4     SODDA vs RADiSA-avg on the sparse datasets
+  perf     per-phase wall-clock breakdown (EXPERIMENTS.md §Perf)
+  theory   empirical checks of Theorems 2-4 (rates, error floors)
+  gen-data materialize a dataset to LIBSVM text or SODDA binary
+  baselines  mini-batch SGD + CentralVR vs SODDA on one dataset
+
+COMMON FLAGS
+  --out DIR        output directory (default results)
+  --scale K        dataset scale divisor (default: preset laptop scale)
+  --iters T        outer iterations (default 30; table2 40)
+  --engine E       native | xla (default native)
+  --p P --q Q      partition grid (default 5 x 3, the paper's)
+  --steps L        inner-loop length (default 32)
+  --gamma0 G       learning-rate scale (default 0.08, see DESIGN.md)
+  --seed S         RNG seed (default 1)
+
+TRAIN FLAGS
+  --preset NAME    small | medium | large | diag-neg10 | loc-neg5
+  --n N --m M      explicit dense dims (instead of --preset)
+  --data FILE      load a .svm/.libsvm or .bin dataset from disk
+  --sparse-nnz K   make explicit dims sparse with avg K nnz/row
+  --algo A         sodda | radisa | radisa-avg (default sodda)
+  --loss F         hinge | logistic | squared (default hinge)
+  --b --c --d      sampling fractions (default 0.85/0.80/0.85)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn opts_from(args: &Args) -> Result<Opts> {
+    let mut o = Opts {
+        out_dir: args.str_or("out", "results").into(),
+        scale: args.parse_or("scale", 0usize)?,
+        iters: args.parse_or("iters", 30usize)?,
+        engine: args.str_or("engine", "native").parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        p: args.parse_or("p", 5usize)?,
+        q: args.parse_or("q", 3usize)?,
+        inner_steps: args.parse_or("steps", 32usize)?,
+        gamma0: args.parse_or("gamma0", 0.08f64)?,
+        seed: args.parse_or("seed", 1u64)?,
+    };
+    if args.has("iters") {
+        o.iters = args.parse_or("iters", o.iters)?;
+    }
+    Ok(o)
+}
+
+fn data_config(args: &Args, o: &Opts) -> Result<DataConfig> {
+    if let Some(path) = args.get("data") {
+        // dims must be declared (or discoverable) for partition validation
+        let probe = if path.ends_with(".bin") {
+            sodda::data::io::read_binary(std::path::Path::new(path))?
+        } else {
+            sodda::data::io::read_libsvm(std::path::Path::new(path), args.parse_or("m", 0usize)?)?
+        };
+        return Ok(DataConfig::File { path: path.to_string(), n: probe.n(), m: probe.m() });
+    }
+    if let Some(name) = args.get("preset") {
+        let pr = preset(name).with_context(|| format!("unknown preset {name:?}"))?;
+        Ok(pr.data_config(if o.scale == 0 { pr.default_scale } else { o.scale }, o.p, o.q))
+    } else {
+        let n = args.parse_or("n", 5000usize)?;
+        let m = args.parse_or("m", 360usize)?;
+        match args.get("sparse-nnz") {
+            Some(_) => Ok(DataConfig::Sparse { n, m, avg_nnz: args.parse_or("sparse-nnz", 20usize)? }),
+            None => Ok(DataConfig::Dense { n, m }),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let o = opts_from(&args)?;
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("train") => cmd_train(&args, &o),
+        Some("table1") => harness::table1(&o).map(drop),
+        Some("table2") => {
+            let mut o = o;
+            if !args.has("iters") {
+                o.iters = 40; // the paper's Table 2 protocol
+            }
+            harness::table2(&o).map(drop)
+        }
+        Some("table3") => harness::table3(&o).map(drop),
+        Some("fig2") => {
+            let panel = args.str_or("panel", "a");
+            let panel = panel.chars().next().unwrap_or('a');
+            harness::fig2(&o, panel)
+        }
+        Some("fig3") => harness::fig3(&o),
+        Some("fig4") => harness::fig4(&o),
+        Some("perf") => cmd_perf(&args, &o),
+        Some("theory") => sodda::harness::theory::run(&o).map(drop),
+        Some("gen-data") => cmd_gen_data(&args, &o),
+        Some("baselines") => cmd_baselines(&args, &o),
+        Some(other) => bail!("unknown subcommand {other:?}; try `repro help`"),
+    }
+}
+
+fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
+    let data = data_config(args, o)?;
+    let algo: AlgorithmKind =
+        args.str_or("algo", "sodda").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let loss: Loss = args.str_or("loss", "hinge").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let cfg = ExperimentConfig {
+        name: args.str_or("name", &format!("train_{algo}")),
+        data,
+        p: o.p,
+        q: o.q,
+        loss,
+        algorithm: algo,
+        fractions: SamplingFractions {
+            b: args.parse_or("b", 0.85f64)?,
+            c: args.parse_or("c", 0.80f64)?,
+            d: args.parse_or("d", 0.85f64)?,
+        },
+        inner_steps: o.inner_steps,
+        outer_iters: o.iters,
+        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
+        seed: o.seed,
+        engine: o.engine,
+        network: None,
+        eval_every: args.parse_or("eval-every", 1usize)?,
+    };
+    cfg.validate()?;
+    println!("config:\n{}", cfg.to_json());
+    let ds = cfg.data.materialize(cfg.seed);
+    let engine = build_engine(&cfg)?;
+    println!(
+        "dataset {} ({} x {}), engine {}, algorithm {}",
+        ds.name,
+        ds.n(),
+        ds.m(),
+        engine.name(),
+        algo
+    );
+    let t0 = Instant::now();
+    let out = train_with_engine(&cfg, &ds, engine)?;
+    let path = o.out_dir.join(format!("{}.csv", cfg.name));
+    out.history.write_csv(&path)?;
+    out.history.write_json(&o.out_dir.join(format!("{}.json", cfg.name)))?;
+    println!("\niter   F(w)       sim_s     comm_MB");
+    for r in out.history.records.iter() {
+        println!("{:4}   {:.5}   {:8.3}  {:8.2}", r.iter, r.loss, r.sim_s, r.comm_bytes as f64 / 1e6);
+    }
+    println!(
+        "\ndone in {:.2}s wall; final F = {:.5}; wrote {}",
+        t0.elapsed().as_secs_f64(),
+        out.history.final_loss().unwrap_or(f64::NAN),
+        path.display()
+    );
+    Ok(())
+}
+
+/// Materialize a preset/explicit dataset to disk (LIBSVM or binary).
+fn cmd_gen_data(args: &Args, o: &Opts) -> Result<()> {
+    use sodda::data::io;
+    let data = data_config(args, o)?;
+    let ds = data.materialize(o.seed);
+    let format = args.str_or("format", "libsvm");
+    let default_name = format!(
+        "{}.{}",
+        ds.name,
+        if format == "binary" { "bin" } else { "svm" }
+    );
+    let path = o.out_dir.join(args.str_or("file", &default_name));
+    std::fs::create_dir_all(&o.out_dir)?;
+    match format.as_str() {
+        "libsvm" => io::write_libsvm(&ds, &path)?,
+        "binary" => io::write_binary(&ds, &path)?,
+        other => bail!("unknown --format {other:?} (libsvm|binary)"),
+    }
+    // round-trip check so the file is guaranteed loadable
+    let back = match format.as_str() {
+        "libsvm" => io::read_libsvm(&path, ds.m())?,
+        _ => io::read_binary(&path)?,
+    };
+    anyhow::ensure!(back.n() == ds.n() && back.m() == ds.m(), "round-trip mismatch");
+    println!(
+        "wrote {} ({} x {}, {} nnz, {} bytes)",
+        path.display(),
+        ds.n(),
+        ds.m(),
+        ds.x.nnz(),
+        std::fs::metadata(&path)?.len()
+    );
+    Ok(())
+}
+
+/// Related-work baselines head-to-head (§2): mini-batch SGD, CentralVR.
+fn cmd_baselines(args: &Args, o: &Opts) -> Result<()> {
+    use sodda::coordinator::baselines;
+    use sodda::engine::NativeEngine;
+    let data = data_config(args, o)?;
+    let batch = args.parse_or("batch", 128usize)?;
+    let cfg = ExperimentConfig {
+        name: "baselines".into(),
+        data,
+        p: o.p,
+        q: o.q,
+        loss: Loss::Hinge,
+        algorithm: AlgorithmKind::Sodda,
+        fractions: SamplingFractions::PAPER,
+        inner_steps: o.inner_steps,
+        outer_iters: o.iters,
+        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
+        seed: o.seed,
+        engine: o.engine,
+        network: None,
+        eval_every: 1,
+    };
+    let ds = cfg.data.materialize(cfg.seed);
+    println!("dataset {} ({} x {})\n", ds.name, ds.n(), ds.m());
+    let engine = build_engine(&cfg)?;
+    let sodda = train_with_engine(&cfg, &ds, Arc::clone(&engine))?.history;
+    let sgd = baselines::minibatch_sgd(&cfg, &ds, Arc::new(NativeEngine), batch)?;
+    let cvr = baselines::central_vr(&cfg, &ds, Arc::new(NativeEngine), batch, 10)?;
+    println!("{:<12} {:>10} {:>10} {:>12}", "method", "final F", "sim_s", "comm MB");
+    for (name, h) in [("sodda", &sodda), ("sgd", &sgd), ("central-vr", &cvr)] {
+        let last = h.records.last().unwrap();
+        println!(
+            "{name:<12} {:>10.4} {:>10.3} {:>12.2}",
+            last.loss,
+            last.sim_s,
+            last.comm_bytes as f64 / 1e6
+        );
+        h.write_csv(&o.out_dir.join(format!("baseline_{name}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Phase-level wall-clock breakdown on a standard run (native + xla).
+fn cmd_perf(args: &Args, o: &Opts) -> Result<()> {
+    let data = data_config(args, o)?;
+    println!("== perf breakdown ({} x {}, engine {:?}) ==", data.n(), data.m(), o.engine);
+    let mut cfg = ExperimentConfig {
+        name: "perf".into(),
+        data,
+        p: o.p,
+        q: o.q,
+        loss: Loss::Hinge,
+        algorithm: AlgorithmKind::Sodda,
+        fractions: SamplingFractions::PAPER,
+        inner_steps: o.inner_steps,
+        outer_iters: o.iters.min(10),
+        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
+        seed: o.seed,
+        engine: o.engine,
+        network: None,
+        eval_every: 1,
+    };
+    cfg.validate()?;
+    let ds = cfg.data.materialize(cfg.seed);
+    let engine = build_engine(&cfg)?;
+    // warm-up run (XLA: compiles + stages), then timed run
+    let _ = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let t0 = Instant::now();
+    let out = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} iterations in {wall:.3}s wall ({:.1} ms/iter) — engine {}",
+        cfg.outer_iters,
+        1e3 * wall / cfg.outer_iters as f64,
+        engine.name()
+    );
+    // eval-off run isolates the training path from objective evaluation
+    cfg.eval_every = cfg.outer_iters;
+    let t1 = Instant::now();
+    let _ = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let train_only = t1.elapsed().as_secs_f64();
+    println!(
+        "training path only: {train_only:.3}s ({:.1} ms/iter); objective eval: {:.1} ms/iter",
+        1e3 * train_only / cfg.outer_iters as f64,
+        1e3 * (wall - train_only) / cfg.outer_iters as f64,
+    );
+    println!("sim totals: {:.2} MB comm, {} msgs", out.comm_bytes as f64 / 1e6, out.comm_msgs);
+    Ok(())
+}

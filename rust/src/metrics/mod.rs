@@ -1,0 +1,169 @@
+//! Run metrics: per-iteration history, CSV/JSON emission and the
+//! seed-variation statistics behind the paper's Table 2.
+
+pub mod plot;
+mod stats;
+
+pub use stats::{seed_variation, SeedVariation};
+
+use std::io::Write;
+
+use crate::util::json::{self, Value};
+
+/// One outer iteration's record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// objective F(w^t) (evaluated every `eval_every` iterations)
+    pub loss: f64,
+    /// wall-clock seconds since training start (this process)
+    pub wall_s: f64,
+    /// simulated cluster seconds (max worker compute + SimNet comm)
+    pub sim_s: f64,
+    /// cumulative bytes moved over the simulated network
+    pub comm_bytes: u64,
+    /// cumulative scalar gradient-coordinate evaluations — the paper's
+    /// "number of gradient coordinate computations" saving in §1
+    pub grad_coord_evals: u64,
+}
+
+/// Append-only training history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub run: String,
+    pub records: Vec<IterRecord>,
+}
+
+impl History {
+    pub fn new(run: impl Into<String>) -> Self {
+        Self { run: run.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn min_loss(&self) -> Option<f64> {
+        self.records.iter().map(|r| r.loss).fold(None, |a, b| Some(a.map_or(b, |a: f64| a.min(b))))
+    }
+
+    /// Loss values in iteration order (used by comparison harnesses).
+    pub fn losses(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.loss).collect()
+    }
+
+    /// First simulated time at which loss ≤ `target` (linear scan).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.loss <= target).map(|r| r.sim_s)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("iter,loss,wall_s,sim_s,comm_bytes,grad_coord_evals\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6e},{:.6},{:.6},{},{}\n",
+                r.iter, r.loss, r.wall_s, r.sim_s, r.comm_bytes, r.grad_coord_evals
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("run", json::s(self.run.clone())),
+            (
+                "records",
+                Value::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("iter", json::num(r.iter as f64)),
+                                ("loss", json::num(r.loss)),
+                                ("wall_s", json::num(r.wall_s)),
+                                ("sim_s", json::num(r.sim_s)),
+                                ("comm_bytes", json::num(r.comm_bytes as f64)),
+                                ("grad_coord_evals", json::num(r.grad_coord_evals as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<History> {
+        let mut h = History::new(v.get("run")?.as_str()?);
+        for r in v.get("records")?.as_arr()? {
+            h.push(IterRecord {
+                iter: r.get("iter")?.as_usize()?,
+                loss: r.get("loss")?.as_f64()?,
+                wall_s: r.get("wall_s")?.as_f64()?,
+                sim_s: r.get("sim_s")?.as_f64()?,
+                comm_bytes: r.get("comm_bytes")?.as_f64()? as u64,
+                grad_coord_evals: r.get("grad_coord_evals")?.as_f64()? as u64,
+            });
+        }
+        Ok(h)
+    }
+
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string_pretty().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, loss: f64, sim_s: f64) -> IterRecord {
+        IterRecord { iter, loss, wall_s: sim_s, sim_s, comm_bytes: 10, grad_coord_evals: 100 }
+    }
+
+    #[test]
+    fn push_and_summaries() {
+        let mut h = History::new("t");
+        h.push(rec(1, 1.0, 0.1));
+        h.push(rec(2, 0.4, 0.2));
+        h.push(rec(3, 0.6, 0.3));
+        assert_eq!(h.final_loss(), Some(0.6));
+        assert_eq!(h.min_loss(), Some(0.4));
+        assert_eq!(h.time_to_loss(0.5), Some(0.2));
+        assert_eq!(h.time_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut h = History::new("t");
+        h.push(rec(1, 0.5, 0.1));
+        let csv = h.to_csv();
+        assert!(csv.starts_with("iter,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = History::new("t");
+        h.push(rec(1, 0.5, 0.1));
+        let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
+        let back = History::from_json(&v).unwrap();
+        assert_eq!(back.records, h.records);
+        assert_eq!(back.run, "t");
+    }
+}

@@ -1,0 +1,215 @@
+//! Terminal (ASCII) and SVG plotting of loss curves — the figure
+//! renderer behind `repro fig2/fig3/fig4 --svg` and the examples.
+//!
+//! No plotting crates exist offline; SVG is tiny to emit by hand and
+//! renders the paper's figures faithfully (log-y loss vs simulated time).
+
+use std::fmt::Write as _;
+
+/// One named curve: (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self { name: name.into(), points }
+    }
+
+    pub fn from_history(name: impl Into<String>, h: &crate::metrics::History, time_axis: bool) -> Self {
+        let points = h
+            .records
+            .iter()
+            .map(|r| (if time_axis { r.sim_s } else { r.iter as f64 }, r.loss))
+            .collect();
+        Self::new(name, points)
+    }
+}
+
+fn bounds(curves: &[Curve]) -> (f64, f64, f64, f64) {
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for c in curves {
+        for &(x, y) in &c.points {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+    }
+    if x0 >= x1 {
+        x1 = x0 + 1.0;
+    }
+    if y0 >= y1 {
+        y1 = y0 + 1.0;
+    }
+    (x0, x1, y0, y1)
+}
+
+/// Render curves as an ASCII chart (rows × cols characters).
+pub fn ascii(curves: &[Curve], rows: usize, cols: usize) -> String {
+    assert!(!curves.is_empty());
+    let (x0, x1, y0, y1) = bounds(curves);
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; cols]; rows];
+    for (ci, c) in curves.iter().enumerate() {
+        let mark = marks[ci % marks.len()];
+        for &(x, y) in &c.points {
+            let col = (((x - x0) / (x1 - x0)) * (cols - 1) as f64).round() as usize;
+            let row = (((y - y0) / (y1 - y0)) * (rows - 1) as f64).round() as usize;
+            let row = rows - 1 - row.min(rows - 1);
+            grid[row][col.min(cols - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{y1:>10.4} ┐");
+    for row in grid {
+        let line: String = row.into_iter().collect();
+        let _ = writeln!(out, "{:>10} │{line}", "");
+    }
+    let _ = writeln!(out, "{y0:>10.4} └{}", "─".repeat(cols));
+    let _ = writeln!(out, "{:>12}{x0:<12.4}{:>width$}{x1:.4}", "", "", width = cols.saturating_sub(24));
+    for (ci, c) in curves.iter().enumerate() {
+        let _ = writeln!(out, "  {} {}", marks[ci % marks.len()], c.name);
+    }
+    out
+}
+
+const PALETTE: [&str; 8] =
+    ["#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b", "#17becf", "#7f7f7f"];
+
+/// Render curves as a standalone SVG (loss vs x, linear axes), in the
+/// visual style of the paper's matplotlib figures.
+pub fn svg(curves: &[Curve], title: &str, xlabel: &str) -> String {
+    let (w, h) = (760.0, 480.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 50.0);
+    let (x0, x1, y0, y1) = bounds(curves);
+    let px = |x: f64| ml + (x - x0) / (x1 - x0) * (w - ml - mr);
+    let py = |y: f64| h - mb - (y - y0) / (y1 - y0) * (h - mt - mb);
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">
+<rect width="{w}" height="{h}" fill="white"/>
+<text x="{}" y="24" text-anchor="middle" font-family="sans-serif" font-size="16">{title}</text>
+"#,
+        w / 2.0
+    );
+    // axes
+    let _ = write!(
+        s,
+        r#"<line x1="{ml}" y1="{}" x2="{}" y2="{}" stroke="black"/>
+<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{}" stroke="black"/>
+"#,
+        h - mb,
+        w - mr,
+        h - mb,
+        h - mb
+    );
+    // ticks (5 per axis)
+    for i in 0..=4 {
+        let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+        let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+        let _ = write!(
+            s,
+            r##"<text x="{:.1}" y="{:.1}" text-anchor="middle" font-family="sans-serif" font-size="11">{:.3}</text>
+<text x="{:.1}" y="{:.1}" text-anchor="end" font-family="sans-serif" font-size="11">{:.3}</text>
+<line x1="{:.1}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#ddd"/>
+"##,
+            px(fx),
+            h - mb + 18.0,
+            fx,
+            ml - 6.0,
+            py(fy) + 4.0,
+            fy,
+            px(fx),
+            h - mb,
+            px(fx),
+            mt
+        );
+    }
+    let _ = write!(
+        s,
+        r#"<text x="{}" y="{}" text-anchor="middle" font-family="sans-serif" font-size="13">{xlabel}</text>
+<text x="18" y="{}" text-anchor="middle" font-family="sans-serif" font-size="13" transform="rotate(-90 18 {})">objective F(w)</text>
+"#,
+        (ml + w - mr) / 2.0,
+        h - 12.0,
+        (mt + h - mb) / 2.0,
+        (mt + h - mb) / 2.0
+    );
+    for (ci, c) in curves.iter().enumerate() {
+        let color = PALETTE[ci % PALETTE.len()];
+        let pts: Vec<String> = c.points.iter().map(|&(x, y)| format!("{:.1},{:.1}", px(x), py(y))).collect();
+        let _ = write!(
+            s,
+            r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="1.8"/>
+"#,
+            pts.join(" ")
+        );
+        let ly = mt + 18.0 * ci as f64 + 10.0;
+        let _ = write!(
+            s,
+            r#"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="3"/>
+<text x="{}" y="{}" font-family="sans-serif" font-size="12">{}</text>
+"#,
+            w - mr - 180.0,
+            w - mr - 150.0,
+            w - mr - 144.0,
+            ly + 4.0,
+            c.name
+        );
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Curve> {
+        vec![
+            Curve::new("sodda", vec![(0.0, 1.0), (1.0, 0.5), (2.0, 0.3)]),
+            Curve::new("radisa-avg", vec![(0.0, 1.0), (1.5, 0.4), (3.0, 0.25)]),
+        ]
+    }
+
+    #[test]
+    fn ascii_contains_marks_and_legend() {
+        let a = ascii(&sample(), 10, 40);
+        assert!(a.contains('*') && a.contains('o'));
+        assert!(a.contains("sodda"));
+        assert!(a.contains("radisa-avg"));
+    }
+
+    #[test]
+    fn svg_is_wellformed_enough() {
+        let s = svg(&sample(), "Figure X", "simulated seconds");
+        assert!(s.starts_with("<svg"));
+        assert!(s.ends_with("</svg>\n"));
+        assert_eq!(s.matches("<polyline").count(), 2);
+        assert!(s.contains("Figure X"));
+    }
+
+    #[test]
+    fn degenerate_single_point_does_not_panic() {
+        let c = vec![Curve::new("p", vec![(1.0, 2.0)])];
+        let _ = ascii(&c, 5, 20);
+        let _ = svg(&c, "t", "x");
+    }
+
+    #[test]
+    fn from_history_axes() {
+        use crate::metrics::{History, IterRecord};
+        let mut h = History::new("x");
+        h.push(IterRecord { iter: 3, loss: 0.5, wall_s: 1.0, sim_s: 2.0, comm_bytes: 0, grad_coord_evals: 0 });
+        let t = Curve::from_history("a", &h, true);
+        assert_eq!(t.points, vec![(2.0, 0.5)]);
+        let i = Curve::from_history("b", &h, false);
+        assert_eq!(i.points, vec![(3.0, 0.5)]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Seed-variation statistics (paper Table 2).
+//!
+//! For S seeds × T iterations of objective values, the paper reports the
+//! average and maximum over iterations of `max_s − avg_s` and
+//! `avg_s − min_s`, where max/avg/min are taken across seeds at a fixed
+//! iteration.
+
+/// Table 2 row for one algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeedVariation {
+    pub avg_max_minus_avg: f64,
+    pub avg_avg_minus_min: f64,
+    pub max_max_minus_avg: f64,
+    pub max_avg_minus_min: f64,
+}
+
+/// `curves[s][t]` = objective at iteration t for seed s. All curves must
+/// have equal length ≥ 1.
+pub fn seed_variation(curves: &[Vec<f64>]) -> SeedVariation {
+    assert!(!curves.is_empty(), "need at least one seed");
+    let t_len = curves[0].len();
+    assert!(t_len > 0 && curves.iter().all(|c| c.len() == t_len), "ragged curves");
+
+    let s = curves.len() as f64;
+    let mut sum_hi = 0.0f64;
+    let mut sum_lo = 0.0f64;
+    let mut max_hi = f64::MIN;
+    let mut max_lo = f64::MIN;
+    for t in 0..t_len {
+        let vals = curves.iter().map(|c| c[t]);
+        let mx = vals.clone().fold(f64::MIN, f64::max);
+        let mn = vals.clone().fold(f64::MAX, f64::min);
+        let avg = vals.sum::<f64>() / s;
+        sum_hi += mx - avg;
+        sum_lo += avg - mn;
+        max_hi = max_hi.max(mx - avg);
+        max_lo = max_lo.max(avg - mn);
+    }
+    SeedVariation {
+        avg_max_minus_avg: sum_hi / t_len as f64,
+        avg_avg_minus_min: sum_lo / t_len as f64,
+        max_max_minus_avg: max_hi,
+        max_avg_minus_min: max_lo,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+
+    #[test]
+    fn identical_seeds_have_zero_variation() {
+        let v = seed_variation(&[vec![1.0, 0.5], vec![1.0, 0.5], vec![1.0, 0.5]]);
+        assert_eq!(v.avg_max_minus_avg, 0.0);
+        assert_eq!(v.max_avg_minus_min, 0.0);
+    }
+
+    #[test]
+    fn hand_computed_case() {
+        // t=0: vals {1, 2, 3}: max-avg = 1, avg-min = 1
+        // t=1: vals {0, 0, 3}: max-avg = 2, avg-min = 1
+        let v = seed_variation(&[vec![1.0, 0.0], vec![2.0, 0.0], vec![3.0, 3.0]]);
+        assert_close!(v.avg_max_minus_avg, 1.5);
+        assert_close!(v.avg_avg_minus_min, 1.0);
+        assert_close!(v.max_max_minus_avg, 2.0);
+        assert_close!(v.max_avg_minus_min, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged() {
+        seed_variation(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

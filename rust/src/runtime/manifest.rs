@@ -1,0 +1,168 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! consumed here to validate shapes before anything touches PJRT.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema: u32,
+    pub config: ManifestConfig,
+    pub entries: HashMap<String, Entry>,
+}
+
+/// The shape bucket every artifact was lowered at.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    /// rows per observation partition
+    pub n: usize,
+    /// features per feature block (M/Q)
+    pub m: usize,
+    /// features per sub-block (M/QP)
+    pub mtilde: usize,
+    /// inner-loop length L baked into svrg_inner
+    pub steps: usize,
+    pub losses: Vec<String>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let man = Self::parse(&text).context("parsing manifest.json")?;
+        ensure!(man.schema == 1, "unsupported manifest schema {}", man.schema);
+        ensure!(man.config.dtype == "f32", "only f32 artifacts supported");
+        Ok(man)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let c = v.get("config")?;
+        let config = ManifestConfig {
+            n: c.get("n")?.as_usize()?,
+            m: c.get("m")?.as_usize()?,
+            mtilde: c.get("mtilde")?.as_usize()?,
+            steps: c.get("steps")?.as_usize()?,
+            losses: c
+                .get("losses")?
+                .as_arr()?
+                .iter()
+                .map(|l| Ok(l.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            dtype: c.get("dtype")?.as_str()?.to_string(),
+        };
+        let mut entries = HashMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: i
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                Entry {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    sha256: e.opt("sha256").map(|s| s.as_str().map(String::from)).transpose()?.unwrap_or_default(),
+                    inputs,
+                    output_shape: e
+                        .get("output_shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+        Ok(Manifest { schema: v.get("schema")?.as_usize()? as u32, config, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact entry {name:?} missing — re-run `make artifacts`"))
+    }
+
+    /// Check the artifact bucket can serve a (P, Q)-partitioned dataset.
+    pub fn validate_for(&self, n_per: usize, m_per: usize, mtilde: usize, steps: usize) -> Result<()> {
+        let c = &self.config;
+        ensure!(
+            c.n == n_per && c.m == m_per && c.mtilde == mtilde,
+            "artifact shapes (n={}, m={}, m̃={}) do not match dataset partitioning \
+             (n={n_per}, m={m_per}, m̃={mtilde}); rebuild with `make artifacts N={n_per} M_PER={m_per} MTILDE={mtilde}`",
+            c.n, c.m, c.mtilde
+        );
+        ensure!(
+            c.steps == steps,
+            "artifact inner-loop length L={} != configured L={steps}",
+            c.steps
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+            "schema": 1,
+            "config": {"n": 64, "m": 32, "mtilde": 8, "steps": 4,
+                        "losses": ["hinge"], "dtype": "f32"},
+            "entries": {
+                "partial_z": {
+                    "file": "partial_z.hlo.txt",
+                    "inputs": [
+                        {"name": "x", "shape": [64, 32], "dtype": "f32"},
+                        {"name": "w", "shape": [32], "dtype": "f32"}
+                    ],
+                    "output_shape": [64]
+                }
+            }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let man = Manifest::parse(&sample_json()).unwrap();
+        assert!(man.entry("partial_z").is_ok());
+        assert!(man.entry("nope").is_err());
+        assert!(man.validate_for(64, 32, 8, 4).is_ok());
+        assert!(man.validate_for(64, 32, 8, 5).is_err());
+        assert!(man.validate_for(128, 32, 8, 4).is_err());
+    }
+}

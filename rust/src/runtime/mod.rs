@@ -1,0 +1,201 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! The `xla` crate's handles are `Rc`-based (`!Send`), so one dedicated
+//! OS thread owns the `PjRtClient`, every compiled executable, and all
+//! device-resident staged buffers; the rest of the process talks to it
+//! through an mpsc request channel. This mirrors a production deployment
+//! where one PJRT context serves the whole coordinator (the CPU client
+//! itself multithreads across cores internally).
+//!
+//! Compilation is lazy (first call per entry) and cached. Large static
+//! operands — the data blocks — are staged once as `PjRtBuffer`s via
+//! [`XlaRuntime::stage`] and referenced by key afterwards, so the steady
+//! state moves only the small per-call vectors (w, u, idx, γ).
+
+mod manifest;
+
+pub use manifest::{Entry, Manifest, ManifestConfig, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// One call argument.
+#[derive(Debug, Clone)]
+pub enum Input {
+    /// f32 tensor with dims (row-major).
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor with dims.
+    I32(Vec<i32>, Vec<usize>),
+    /// Reference to a buffer previously uploaded with [`XlaRuntime::stage`].
+    Staged(String),
+}
+
+enum Request {
+    Stage { key: String, data: Vec<f32>, dims: Vec<usize>, reply: mpsc::Sender<Result<()>> },
+    Call { entry: String, inputs: Vec<Input>, reply: mpsc::Sender<Result<Vec<f32>>> },
+}
+
+/// Handle to the PJRT actor thread. Cheap to clone behind `Arc`.
+pub struct XlaRuntime {
+    tx: Mutex<mpsc::Sender<Request>>,
+    pub manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and spin up the PJRT actor for `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let man2 = manifest.clone();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-actor".into())
+            .spawn(move || actor_main(dir, man2, rx, ready_tx))
+            .map_err(|e| anyhow!("spawning pjrt actor: {e}"))?;
+        ready_rx.recv().map_err(|_| anyhow!("pjrt actor died during startup"))??;
+        Ok(Self { tx: Mutex::new(tx), manifest })
+    }
+
+    /// Upload a device-resident f32 buffer reusable across calls.
+    pub fn stage(&self, key: impl Into<String>, data: Vec<f32>, dims: Vec<usize>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Stage { key: key.into(), data, dims, reply })?;
+        rx.recv().map_err(|_| anyhow!("pjrt actor gone"))?
+    }
+
+    /// Execute `entry` with `inputs` (order must match the manifest) and
+    /// return the flattened f32 output.
+    pub fn call(&self, entry: &str, inputs: Vec<Input>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Call { entry: entry.to_string(), inputs, reply })?;
+        rx.recv().map_err(|_| anyhow!("pjrt actor gone"))?
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow!("pjrt sender poisoned"))?
+            .send(req)
+            .map_err(|_| anyhow!("pjrt actor gone"))
+    }
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+fn actor_main(
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu().map_err(xerr) {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut staged: HashMap<String, xla::PjRtBuffer> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Stage { key, data, dims, reply } => {
+                let r = client
+                    .buffer_from_host_buffer(&data, &dims, None)
+                    .map_err(xerr)
+                    .map(|buf| {
+                        staged.insert(key, buf);
+                    });
+                let _ = reply.send(r);
+            }
+            Request::Call { entry, inputs, reply } => {
+                let _ = reply.send(run_call(&client, &dir, &manifest, &mut exes, &staged, &entry, inputs));
+            }
+        }
+    }
+}
+
+fn run_call(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    manifest: &Manifest,
+    exes: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    staged: &HashMap<String, xla::PjRtBuffer>,
+    entry: &str,
+    inputs: Vec<Input>,
+) -> Result<Vec<f32>> {
+    if !exes.contains_key(entry) {
+        let meta = manifest.entry(entry)?;
+        let path = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(xerr)?;
+        exes.insert(entry.to_string(), exe);
+    }
+    let exe = &exes[entry];
+
+    // Fresh inputs become device buffers; staged keys are looked up.
+    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut order: Vec<usize> = Vec::new(); // index into owned (usize::MAX => staged)
+    let mut staged_refs: Vec<&xla::PjRtBuffer> = Vec::new();
+    for inp in &inputs {
+        match inp {
+            Input::F32(data, dims) => {
+                owned.push(client.buffer_from_host_buffer(data, dims, None).map_err(xerr)?);
+                order.push(owned.len() - 1);
+            }
+            Input::I32(data, dims) => {
+                owned.push(client.buffer_from_host_buffer(data, dims, None).map_err(xerr)?);
+                order.push(owned.len() - 1);
+            }
+            Input::Staged(key) => {
+                let buf = staged
+                    .get(key)
+                    .ok_or_else(|| anyhow!("staged buffer {key:?} not found"))?;
+                staged_refs.push(buf);
+                order.push(usize::MAX - (staged_refs.len() - 1));
+            }
+        }
+    }
+    let args: Vec<&xla::PjRtBuffer> = order
+        .iter()
+        .map(|&i| {
+            if i >= usize::MAX - staged_refs.len() {
+                staged_refs[usize::MAX - i]
+            } else {
+                &owned[i]
+            }
+        })
+        .collect();
+
+    let result = exe.execute_b(&args).map_err(xerr)?;
+    let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+    // entries are lowered with return_tuple=True
+    let out = lit.to_tuple1().map_err(xerr)?;
+    out.to_vec::<f32>().map_err(xerr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = match XlaRuntime::load("/definitely/not/here") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

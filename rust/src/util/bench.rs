@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! let mut b = sodda::util::bench::Bench::from_env("kernels");
+//! b.bench("row_dot/1k", || { /* work */ });
+//! b.finish();
+//! ```
+//! Reports min/median/mean per iteration after a warmup phase, and writes
+//! a CSV next to the binary's working dir for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    /// target measurement time per benchmark
+    budget: Duration,
+    warmup: Duration,
+    rows: Vec<(String, Stats)>,
+    /// quick mode (`BENCH_QUICK=1`): one-tenth budget for CI smoke
+    pub quick: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Bench {
+    pub fn from_env(group: &str) -> Bench {
+        let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1");
+        let (budget, warmup) = if quick {
+            (Duration::from_millis(200), Duration::from_millis(50))
+        } else {
+            (Duration::from_secs(2), Duration::from_millis(300))
+        };
+        println!("== bench group: {group} (quick={quick}) ==");
+        Bench { group: group.to_string(), budget, warmup, rows: Vec::new(), quick }
+    }
+
+    /// Time `f`, batching iterations adaptively.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // warmup + estimate cost
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls < 3 {
+            std::hint::black_box(f());
+            calls += 1;
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / calls as f64).max(1.0);
+        // sample in batches so Instant overhead stays < ~1%
+        let batch = ((100_000.0 / est_ns).ceil() as u64).clamp(1, 10_000);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0u64;
+        while start.elapsed() < self.budget || samples.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() >= 200 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            iters: total_iters,
+            min_ns: samples[0],
+            median_ns: samples[samples.len() / 2],
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        };
+        println!(
+            "{:<40} {:>12} {:>12} {:>12}   ({} iters)",
+            format!("{}/{}", self.group, name),
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            stats.iters
+        );
+        self.rows.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Print the summary table; returns CSV content for persistence.
+    pub fn finish(self) -> String {
+        let mut csv = String::from("group,name,min_ns,median_ns,mean_ns,iters\n");
+        for (name, s) in &self.rows {
+            csv.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.1},{}\n",
+                self.group, name, s.min_ns, s.median_ns, s.mean_ns, s.iters
+            ));
+        }
+        let path = format!("target/bench-{}.csv", self.group);
+        let _ = std::fs::write(&path, &csv);
+        println!("(wrote {path})");
+        csv
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::from_env("selftest");
+        let s = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(s.min_ns >= 0.0 && s.median_ns < 1e6, "{s:?}");
+        let csv = b.finish();
+        assert!(csv.contains("selftest,noop-ish"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+    }
+}

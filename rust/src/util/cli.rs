@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser for the `repro` binary and examples:
+//! `prog <subcommand> --key value --flag` with typed getters.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut items = items.into_iter().peekable();
+        if let Some(first) = items.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = items.next();
+            }
+        }
+        while let Some(item) = items.next() {
+            let Some(name) = item.strip_prefix("--") else {
+                bail!("unexpected positional argument {item:?}");
+            };
+            let name = name.to_string();
+            // --key=value or --key value or bare flag
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+                out.present.push(k.to_string());
+            } else if items.peek().is_some_and(|n| !n.starts_with("--")) {
+                out.flags.insert(name.clone(), items.next().unwrap());
+                out.present.push(name);
+            } else {
+                out.present.push(name.clone());
+                out.flags.insert(name, String::new());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --preset small --iters 40 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.parse_or("iters", 0usize).unwrap(), 40);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--p=5 --q=3");
+        assert_eq!(a.parse_or("p", 0usize).unwrap(), 5);
+        assert_eq!(a.parse_or("q", 0usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("bench --offset -3");
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run");
+        assert_eq!(a.str_or("engine", "native"), "native");
+        assert!(a.required("preset").is_err());
+        assert_eq!(a.parse_or("scale", 50usize).unwrap(), 50);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(vec!["run".into(), "oops".into()]).is_err());
+    }
+}

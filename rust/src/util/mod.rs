@@ -1,0 +1,17 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! small generic pieces a crates.io project would pull in are implemented
+//! here, each with its own tests:
+//!
+//! * [`rng`] — deterministic xoshiro256** PRNG + sampling helpers
+//! * [`json`] — minimal JSON parser/emitter (manifest, metrics, configs)
+//! * [`cli`] — flag parser for the `repro` binary and examples
+//! * [`bench`] — micro-benchmark harness (criterion-style reporting)
+//! * [`testing`] — assert helpers + a tiny property-test driver
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod testing;

@@ -1,0 +1,221 @@
+//! Deterministic PRNG (xoshiro256** seeded via splitmix64) and the
+//! sampling primitives Algorithm 1 needs: uniform ranges, Bernoulli,
+//! permutations (`π_q`), and without-replacement subsets (`B^t`, `C^t`,
+//! `D^t`).
+//!
+//! Determinism contract: a run is fully reproducible from
+//! `ExperimentConfig::seed`; every stochastic component draws from a
+//! stream forked with a distinct tag so adding a consumer never perturbs
+//! the others (the Table 2 seed-variation experiment depends on this).
+
+/// xoshiro256** — 64-bit, fast, passes BigCrush; plenty for experiment
+/// reproducibility (no crypto use).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a named consumer.
+    pub fn fork(&self, tag: u64) -> Rng {
+        // hash the current state with the tag through splitmix
+        let mut sm = self.s[0] ^ self.s[1].rotate_left(17) ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` (Lemire rejection-free-enough via widening mul).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.unit_f64() as f32
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// Random permutation of `0..n` (Fisher-Yates) — the paper's `π_q`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            v.swap(i, self.below(i + 1));
+        }
+        v
+    }
+
+    /// `k` distinct values from `0..n`, sorted — the paper's
+    /// "elements randomly sampled without replacement" (steps 5-7).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "sample {k} from {n}");
+        if k == n {
+            return (0..n as u32).collect();
+        }
+        // partial Fisher-Yates over an index array
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            v.swap(i, j);
+        }
+        let mut out = v[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    /// `k` values from `0..n` **with** replacement (inner-loop row picks,
+    /// step 15's `randomly pick j ∈ {1..n}`).
+    pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<u32> {
+        (0..k).map(|_| self.below(n) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        let mut c = Rng::seed_from_u64(43);
+        let va: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let root = Rng::seed_from_u64(1);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+        // forking again with same tag reproduces
+        let mut f1b = root.fork(1);
+        let mut f1c = root.fork(1);
+        assert_eq!(f1b.next_u64(), f1c.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn unit_f64_bounds_and_mean() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let v = rng.unit_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut rng = Rng::seed_from_u64(5);
+        for n in [1usize, 2, 7, 100] {
+            let p = rng.permutation(n);
+            let mut seen = vec![false; n];
+            for &v in &p {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn wor_sample_distinct_sorted_in_range() {
+        let mut rng = Rng::seed_from_u64(11);
+        for (n, k) in [(10usize, 3usize), (100, 100), (1000, 1), (50, 49)] {
+            let s = rng.sample_without_replacement(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted+distinct");
+            assert!(s.iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn wor_full_is_identity() {
+        let mut rng = Rng::seed_from_u64(2);
+        assert_eq!(rng.sample_without_replacement(5, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wor_is_unbiasedish() {
+        // each element of 0..20 should appear in a k=10 sample about half
+        // the time
+        let mut rng = Rng::seed_from_u64(13);
+        let mut counts = [0usize; 20];
+        for _ in 0..20_000 {
+            for v in rng.sample_without_replacement(20, 10) {
+                counts[v as usize] += 1;
+            }
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn with_replacement_in_range() {
+        let mut rng = Rng::seed_from_u64(17);
+        let s = rng.sample_with_replacement(4, 1000);
+        assert_eq!(s.len(), 1000);
+        assert!(s.iter().all(|&v| v < 4));
+        // with replacement duplicates must occur
+        assert!(s.windows(2).any(|w| w[0] == w[1]));
+    }
+}

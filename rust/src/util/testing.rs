@@ -1,0 +1,105 @@
+//! Test support: float comparison + a tiny property-test driver
+//! (proptest is unavailable offline; `forall` gives us seeded random
+//! case generation with shrink-free but reproducible failure reports).
+
+use super::rng::Rng;
+
+/// Relative+absolute float closeness (mirrors numpy's allclose).
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+pub fn assert_close_slice(a: &[f32], b: &[f32], rtol: f32, atol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            close(x, y, rtol, atol),
+            "{ctx}: element {i}: {x} vs {y} (rtol={rtol}, atol={atol})"
+        );
+    }
+}
+
+/// Run `cases` randomized test cases; on failure the panic message names
+/// the case index and seed so the exact case can be replayed with
+/// `forall_case`.
+pub fn forall(cases: usize, seed: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        forall_case(case, seed, &mut f);
+    }
+}
+
+/// Replay a single property case.
+pub fn forall_case(case: usize, seed: u64, f: &mut impl FnMut(&mut Rng)) {
+    let mut rng = Rng::seed_from_u64(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+    if let Err(payload) = result {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        panic!("property failed at case {case} (seed {seed}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_semantics() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 0.0));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        forall(25, 1, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_case() {
+        forall(10, 2, |rng| {
+            // fail eventually
+            assert!(rng.below(4) != 3, "hit the bad value");
+        });
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        forall(5, 3, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = vec![];
+        forall(5, 3, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}
+
+/// `assert_close!(a, b)` / `assert_close!(a, b, rtol, atol)` for f32/f64
+/// scalars (approx-crate replacement).
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-4, 1e-5)
+    };
+    ($a:expr, $b:expr, $rtol:expr) => {
+        $crate::assert_close!($a, $b, $rtol, 1e-5)
+    };
+    ($a:expr, $b:expr, $rtol:expr, $atol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        assert!(
+            (a - b).abs() <= $atol as f64 + $rtol as f64 * b.abs(),
+            "assert_close failed: {} vs {} (rtol={}, atol={})",
+            a,
+            b,
+            $rtol,
+            $atol
+        );
+    }};
+}

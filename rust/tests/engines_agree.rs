@@ -1,0 +1,129 @@
+//! Integration: the XLA engine (AOT JAX/Pallas artifacts via PJRT) and
+//! the native rust engine must produce the *same training trajectory* up
+//! to f32 rounding — this is the end-to-end proof that all three layers
+//! compose.
+//!
+//! Requires `make artifacts` (the tiny `artifacts/test` bucket). Tests
+//! skip with a loud message when the bucket is missing so plain
+//! `cargo test` stays usable before artifacts are built.
+
+use std::sync::Arc;
+
+use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::coordinator::{train_with_engine, TrainOutcome};
+use sodda::data::synth;
+use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
+use sodda::loss::Loss;
+use sodda::runtime::XlaRuntime;
+
+fn test_bucket() -> Option<Arc<XlaRuntime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP: artifacts/test not available ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn cfg(algo: AlgorithmKind, loss: Loss) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "xla-vs-native".into(),
+        // p=3, q=2 over 300×60 ⇒ blocks 100×30, sub-blocks 100×10: exactly
+        // the artifacts/test bucket (n=100, m=30, m̃=10, L=16)
+        data: DataConfig::Dense { n: 300, m: 60 },
+        p: 3,
+        q: 2,
+        loss,
+        algorithm: algo,
+        fractions: SamplingFractions::PAPER,
+        inner_steps: 16,
+        outer_iters: 6,
+        schedule: Schedule::PaperSqrt,
+        seed: 11,
+        engine: EngineKind::Native,
+        network: None,
+        eval_every: 1,
+    }
+}
+
+fn run(algo: AlgorithmKind, loss: Loss, engine: Arc<dyn ComputeEngine>) -> TrainOutcome {
+    let c = cfg(algo, loss);
+    let ds = c.data.materialize(c.seed);
+    train_with_engine(&c, &ds, engine).unwrap()
+}
+
+#[test]
+fn sodda_trajectory_matches_across_engines() {
+    let Some(rt) = test_bucket() else { return };
+    for loss in [Loss::Hinge, Loss::Logistic, Loss::Squared] {
+        let xla = Arc::new(XlaEngine::new(Arc::clone(&rt), 100, 30, 10, 16).unwrap());
+        let a = run(AlgorithmKind::Sodda, loss, Arc::new(NativeEngine));
+        let b = run(AlgorithmKind::Sodda, loss, xla);
+        assert_eq!(a.w.len(), b.w.len());
+        for (i, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                "{loss}: w[{i}] diverged: native={x} xla={y}"
+            );
+        }
+        for (la, lb) in a.history.losses().iter().zip(b.history.losses()) {
+            assert!((la - lb).abs() <= 1e-3 * (1.0 + lb.abs()), "{loss}: loss curves diverged: {la} vs {lb}");
+        }
+    }
+}
+
+#[test]
+fn radisa_trajectory_matches_across_engines() {
+    let Some(rt) = test_bucket() else { return };
+    let xla = Arc::new(XlaEngine::new(rt, 100, 30, 10, 16).unwrap());
+    let a = run(AlgorithmKind::Radisa, Loss::Hinge, Arc::new(NativeEngine));
+    let b = run(AlgorithmKind::Radisa, Loss::Hinge, xla);
+    for (x, y) in a.w.iter().zip(&b.w) {
+        assert!((x - y).abs() <= 1e-3 + 1e-3 * y.abs());
+    }
+}
+
+#[test]
+fn xla_engine_rejects_wrong_shapes() {
+    let Some(rt) = test_bucket() else { return };
+    assert!(XlaEngine::new(Arc::clone(&rt), 100, 30, 10, 17).is_err(), "wrong L must fail");
+    assert!(XlaEngine::new(rt, 128, 30, 10, 16).is_err(), "wrong n must fail");
+}
+
+#[test]
+fn xla_primitives_match_native_on_one_block() {
+    let Some(rt) = test_bucket() else { return };
+    let xla = XlaEngine::new(rt, 100, 30, 10, 16).unwrap();
+    let native = NativeEngine;
+    let ds = synth::dense_zhang(100, 30, 3);
+    let key = BlockKey { p: 0, q: 0 };
+    let w: Vec<f32> = (0..30).map(|i| (i as f32 * 0.37).sin() * 0.5).collect();
+    let rows: Vec<u32> = (0..100u32).step_by(3).collect();
+
+    let zx = xla.partial_z(key, &ds.x, 0..30, &w, &rows);
+    let zn = native.partial_z(key, &ds.x, 0..30, &w, &rows);
+    for (a, b) in zx.iter().zip(&zn) {
+        assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "partial_z {a} vs {b}");
+    }
+
+    let u = native.dloss_u(Loss::Hinge, &zn, &vec![1.0; zn.len()]);
+    let gx = xla.grad_slice(key, &ds.x, 0..30, &rows, &u);
+    let gn = native.grad_slice(key, &ds.x, 0..30, &rows, &u);
+    for (a, b) in gx.iter().zip(&gn) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "grad_slice {a} vs {b}");
+    }
+
+    let idx: Vec<u32> = (0..16).map(|i| (i * 7) % 100).collect();
+    let mu = vec![0.01f32; 10];
+    let wx = xla.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 10..20, &w[10..20], &w[10..20], &mu, &idx, 0.05);
+    let wn = native.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 10..20, &w[10..20], &w[10..20], &mu, &idx, 0.05);
+    for (a, b) in wx.iter().zip(&wn) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "svrg {a} vs {b}");
+    }
+
+    let lx = xla.loss_from_z(Loss::Hinge, &zn, &vec![1.0; zn.len()]);
+    let ln = native.loss_from_z(Loss::Hinge, &zn, &vec![1.0; zn.len()]);
+    assert!((lx - ln).abs() < 1e-3 * (1.0 + ln.abs()), "loss {lx} vs {ln}");
+}

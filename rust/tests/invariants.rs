@@ -1,0 +1,168 @@
+//! Property-based end-to-end invariants (in-tree `forall` driver; see
+//! `util::testing` — proptest is unavailable offline).
+
+use std::sync::Arc;
+
+use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::coordinator::{train, train_with_engine};
+use sodda::data::{synth, Grid};
+use sodda::engine::NativeEngine;
+use sodda::loss::Loss;
+use sodda::util::testing::forall;
+
+fn cfg_for(rng: &mut sodda::util::rng::Rng) -> ExperimentConfig {
+    let p = 1 + rng.below(4);
+    let q = 1 + rng.below(3);
+    let n = (1 + rng.below(6)) * p * 50;
+    let m = (1 + rng.below(4)) * p * q * 4;
+    ExperimentConfig {
+        name: "prop".into(),
+        data: DataConfig::Dense { n, m },
+        p,
+        q,
+        loss: [Loss::Hinge, Loss::Logistic, Loss::Squared][rng.below(3)],
+        algorithm: AlgorithmKind::Sodda,
+        fractions: SamplingFractions {
+            b: 0.4 + rng.unit_f64() * 0.6,
+            c: 0.3,
+            d: 0.4 + rng.unit_f64() * 0.6,
+        },
+        inner_steps: 1 + rng.below(16),
+        outer_iters: 2,
+        schedule: Schedule::ScaledSqrt { gamma0: 0.05 },
+        seed: rng.next_u64(),
+        engine: EngineKind::Native,
+        network: None,
+        eval_every: 1,
+    }
+}
+
+#[test]
+fn training_never_produces_nonfinite_weights() {
+    forall(12, 101, |rng| {
+        let cfg = cfg_for(rng);
+        let out = train(&cfg).unwrap();
+        assert!(out.w.iter().all(|v| v.is_finite()), "{cfg:?}");
+        assert!(out.history.losses().iter().all(|l| l.is_finite()));
+    });
+}
+
+#[test]
+fn sodda_with_full_fractions_equals_radisa_exactly() {
+    // Corollary 1: RADiSA is SODDA at (b, c, d) = (M, M, N). The two code
+    // paths must coincide bit-for-bit given the same seed.
+    forall(8, 202, |rng| {
+        let mut cfg = cfg_for(rng);
+        cfg.fractions = SamplingFractions::FULL;
+        cfg.algorithm = AlgorithmKind::Sodda;
+        let a = train(&cfg).unwrap();
+        cfg.algorithm = AlgorithmKind::Radisa;
+        let b = train(&cfg).unwrap();
+        assert_eq!(a.w, b.w, "full-fraction SODDA must equal RADiSA");
+        assert_eq!(a.history.losses(), b.history.losses());
+    });
+}
+
+#[test]
+fn cluster_objective_matches_serial_objective() {
+    forall(10, 303, |rng| {
+        let cfg = cfg_for(rng);
+        let ds = cfg.data.materialize(cfg.seed);
+        let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine)).unwrap();
+        let serial = ds.objective(&out.w, cfg.loss);
+        let reported = out.history.final_loss().unwrap();
+        assert!(
+            (serial - reported).abs() <= 1e-4 * (1.0 + serial.abs()),
+            "serial {serial} vs distributed {reported}"
+        );
+    });
+}
+
+#[test]
+fn partition_blocks_cover_matrix_disjointly() {
+    forall(15, 404, |rng| {
+        let p = 1 + rng.below(4);
+        let q = 1 + rng.below(4);
+        let n = p * (1 + rng.below(20));
+        let m = p * q * (1 + rng.below(6));
+        let ds = synth::dense_zhang(n, m, rng.next_u64());
+        let g = Grid::partition(&ds, p, q).unwrap();
+        // total entries across blocks == N×M and every sub-block col range
+        // is within its block
+        let total: usize = g.blocks().map(|b| b.x.rows() * b.x.cols()).sum();
+        assert_eq!(total, n * m);
+        for k in 0..p {
+            let r = g.sub_cols(k);
+            assert!(r.end <= g.m_per);
+            assert_eq!(r.len(), g.mtilde);
+        }
+        // global_cols tile [0, M) disjointly
+        let mut seen = vec![false; m];
+        for qi in 0..q {
+            for k in 0..p {
+                for c in g.global_cols(qi, k) {
+                    assert!(!seen[c]);
+                    seen[c] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn grad_coord_evals_scale_with_fractions() {
+    // the paper's §1 claim: fewer gradient coordinate computations in
+    // early iterations is exactly what (b, c, d) < 1 buys
+    let mk = |c: f64, d: f64| ExperimentConfig {
+        name: "gc".into(),
+        data: DataConfig::Dense { n: 400, m: 60 },
+        p: 2,
+        q: 2,
+        loss: Loss::Hinge,
+        algorithm: AlgorithmKind::Sodda,
+        fractions: SamplingFractions { b: 1.0, c, d },
+        inner_steps: 8,
+        outer_iters: 3,
+        schedule: Schedule::ScaledSqrt { gamma0: 0.05 },
+        seed: 1,
+        engine: EngineKind::Native,
+        network: None,
+        eval_every: 1,
+    };
+    let lo = train(&mk(0.4, 0.5)).unwrap();
+    let hi = train(&mk(1.0, 1.0)).unwrap();
+    let lo_evals = lo.history.records.last().unwrap().grad_coord_evals;
+    let hi_evals = hi.history.records.last().unwrap().grad_coord_evals;
+    assert!(
+        lo_evals < hi_evals,
+        "sampling must reduce coordinate evaluations: {lo_evals} vs {hi_evals}"
+    );
+}
+
+#[test]
+fn eval_every_thins_history_but_not_training() {
+    let mut cfg = ExperimentConfig {
+        name: "ee".into(),
+        data: DataConfig::Dense { n: 200, m: 24 },
+        p: 2,
+        q: 2,
+        loss: Loss::Hinge,
+        algorithm: AlgorithmKind::Sodda,
+        fractions: SamplingFractions::PAPER,
+        inner_steps: 4,
+        outer_iters: 9,
+        schedule: Schedule::PaperSqrt,
+        seed: 3,
+        engine: EngineKind::Native,
+        network: None,
+        eval_every: 1,
+    };
+    let dense_hist = train(&cfg).unwrap();
+    cfg.eval_every = 4;
+    let thin_hist = train(&cfg).unwrap();
+    assert_eq!(dense_hist.w, thin_hist.w, "eval cadence must not affect training");
+    assert!(thin_hist.history.records.len() < dense_hist.history.records.len());
+    // final iteration always recorded
+    assert_eq!(thin_hist.history.records.last().unwrap().iter, 9);
+}
