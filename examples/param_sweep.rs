@@ -1,18 +1,24 @@
 //! Sweep the paper's three sampling fractions (Figure 2 in miniature):
 //! how (b^t, c^t, d^t) trade early speed against final accuracy.
 //!
+//! The whole sweep runs on **one** `Trainer` session: the dataset is
+//! materialized, partitioned and staged once, and each variant just
+//! `reconfigure`s the session — the API the figure harnesses use.
+//!
 //!     cargo run --release --example param_sweep
 
-use std::sync::Arc;
-
-use sodda::config::{AlgorithmKind, DataConfig, ExperimentConfig, SamplingFractions, Schedule};
-use sodda::coordinator::train_with_engine;
-use sodda::engine::NativeEngine;
-use sodda::loss::Loss;
+use sodda::{ExperimentConfig, Trainer};
 
 fn main() -> anyhow::Result<()> {
-    let dc = DataConfig::Dense { n: 3000, m: 240 };
-    let ds = dc.materialize(9);
+    let base = ExperimentConfig::builder()
+        .name("sweep_base")
+        .dense(3000, 240)
+        .grid(5, 3)
+        .seed(9)
+        .build()?;
+
+    let mut session = Trainer::new(base.clone())?;
+    let ds = session.dataset();
     println!("sweep on {} ({} × {})\n", ds.name, ds.n(), ds.m());
     println!("{:<24} {:>10} {:>10} {:>12}", "fractions (b,c,d)", "F @ 10", "F @ 30", "coord-evals");
 
@@ -24,23 +30,13 @@ fn main() -> anyhow::Result<()> {
         (0.65, 0.40, 0.60),
     ];
     for (b, c, d) in sweeps {
-        let cfg = ExperimentConfig {
-            name: format!("sweep_b{b}_c{c}_d{d}"),
-            data: dc.clone(),
-            p: 5,
-            q: 3,
-            loss: Loss::Hinge,
-            algorithm: AlgorithmKind::Sodda,
-            fractions: SamplingFractions { b, c, d },
-            inner_steps: 32,
-            outer_iters: 30,
-            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
-            seed: 9,
-            engine: Default::default(),
-            network: None,
-            eval_every: 1,
-        };
-        let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine))?;
+        session.reconfigure(
+            base.to_builder()
+                .name(format!("sweep_b{b}_c{c}_d{d}"))
+                .fractions_bcd(b, c, d)
+                .build()?,
+        )?;
+        let out = session.run()?;
         let at = |i: usize| out.history.records.iter().find(|r| r.iter == i).map(|r| r.loss).unwrap();
         println!(
             "({b:.2}, {c:.2}, {d:.2})       {:>10.4} {:>10.4} {:>12}",

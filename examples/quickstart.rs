@@ -1,18 +1,17 @@
 //! Quickstart: train a hinge-loss SVM with SODDA on a doubly distributed
-//! synthetic dataset and print the loss curve.
+//! synthetic dataset, streaming the loss curve through an observer.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Uses the native engine so it runs without `make artifacts`; pass
-//! `--engine xla` (after `make artifacts`) to execute the AOT JAX/Pallas
-//! kernels through PJRT instead.
+//! `--engine xla` (after `make artifacts` and building with
+//! `--features xla`) to execute the AOT JAX/Pallas kernels through PJRT.
 
-use std::sync::Arc;
+use std::ops::ControlFlow;
 
-use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
-use sodda::coordinator::{build_engine, train_with_engine};
-use sodda::loss::Loss;
+use sodda::config::EngineKind;
 use sodda::util::cli::Args;
+use sodda::{ExperimentConfig, Trainer};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -20,35 +19,30 @@ fn main() -> anyhow::Result<()> {
         args.str_or("engine", "native").parse().map_err(anyhow::Error::msg)?;
 
     // The paper's default partitioning: P = 5 observation partitions,
-    // Q = 3 feature partitions; (b, c, d) = (85%, 80%, 85%).
-    let cfg = ExperimentConfig {
-        name: "quickstart".into(),
-        data: DataConfig::Dense { n: 5000, m: 360 },
-        p: 5,
-        q: 3,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: 32,
-        outer_iters: 25,
-        schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
-        seed: 42,
-        engine: engine_kind,
-        network: None,
-        eval_every: 1,
-    };
-    cfg.validate()?;
+    // Q = 3 feature partitions; (b, c, d) = (85%, 80%, 85%) — the
+    // builder's defaults. Validation (divisibility, fraction ranges,
+    // schedule sanity) happens at build time.
+    let cfg = ExperimentConfig::builder()
+        .name("quickstart")
+        .dense(5000, 360)
+        .grid(5, 3)
+        .outer_iters(25)
+        .seed(42)
+        .engine(engine_kind)
+        .build()?;
 
-    let ds = cfg.data.materialize(cfg.seed);
+    // The Trainer stages everything once — dataset, partition grid,
+    // engine, worker cluster — and streams records as they land.
+    let mut trainer = Trainer::new(cfg)?;
+    let ds = trainer.dataset();
     println!("dataset: {} ({} observations × {} features)", ds.name, ds.n(), ds.m());
-    let engine = build_engine(&cfg)?;
-    println!("engine:  {}\n", engine.name());
+    println!("engine:  {}\n", trainer.engine().name());
 
-    let out = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
     println!("iter   F(w)      sim_s");
-    for r in &out.history.records {
+    let out = trainer.run_with_observer(|r| {
         println!("{:4}   {:.5}   {:.4}", r.iter, r.loss, r.sim_s);
-    }
+        ControlFlow::Continue(())
+    })?;
     println!(
         "\nF(0) = {:.4} → F(w_T) = {:.4}; {:.2} MB simulated communication",
         out.history.losses()[0],

@@ -1,16 +1,14 @@
 //! §5.1-style experiment: SODDA vs RADiSA vs RADiSA-avg on dense
-//! synthetic SVM data (the Zhang et al. generator), reporting time-to-loss.
+//! synthetic SVM data (the Zhang et al. generator), reporting
+//! time-to-loss — all three algorithms on **one** staged session, plus a
+//! warm-started chained run (Nathan & Klabjan-style comparisons).
 //!
 //!     cargo run --release --example svm_dense -- --scale 100 --iters 25
 
-use std::sync::Arc;
-
-use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
-use sodda::coordinator::train_with_engine;
-use sodda::engine::NativeEngine;
+use sodda::config::{preset, AlgorithmKind, ExperimentConfig};
 use sodda::harness::time_to_loss_summary;
-use sodda::loss::Loss;
 use sodda::util::cli::Args;
+use sodda::Trainer;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -18,37 +16,54 @@ fn main() -> anyhow::Result<()> {
     let iters = args.parse_or("iters", 30usize)?;
     let pr = preset("small").unwrap();
     let dc = pr.data_config(if scale == 0 { pr.default_scale } else { scale }, 5, 3);
-    let ds = dc.materialize(7);
+
+    let base = ExperimentConfig::builder()
+        .name("svm_dense_base")
+        .data(dc)
+        .grid(5, 3)
+        .outer_iters(iters)
+        .seed(7)
+        .build()?;
+
+    let mut session = Trainer::new(base.clone())?;
+    let ds = session.dataset();
     println!("dataset {} ({} × {})\n", ds.name, ds.n(), ds.m());
 
     let mut histories = Vec::new();
+    let mut sodda_w: Vec<f32> = Vec::new();
     for algo in [AlgorithmKind::Sodda, AlgorithmKind::Radisa, AlgorithmKind::RadisaAvg] {
-        let cfg = ExperimentConfig {
-            name: format!("svm_dense_{algo}"),
-            data: dc.clone(),
-            p: 5,
-            q: 3,
-            loss: Loss::Hinge,
-            algorithm: algo,
-            fractions: SamplingFractions::PAPER,
-            inner_steps: 32,
-            outer_iters: iters,
-            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
-            seed: 7,
-            engine: Default::default(),
-            network: None,
-            eval_every: 1,
-        };
-        let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine))?;
+        session.reconfigure(
+            base.to_builder().name(format!("svm_dense_{algo}")).algorithm(algo).build()?,
+        )?;
+        let out = session.run()?;
         println!(
             "{algo:<12} final F = {:.4}   simulated time {:.2}s",
             out.history.final_loss().unwrap(),
             out.history.records.last().unwrap().sim_s
         );
+        if algo == AlgorithmKind::Sodda {
+            sodda_w = out.w.clone();
+        }
         histories.push(out.history);
     }
 
     println!("\ntime to reach loss targets (simulated seconds):");
     print!("{}", time_to_loss_summary(&histories[0], &histories[2]));
+
+    // chained run: RADiSA-avg warm-started from SODDA's final iterate —
+    // the session keeps its staged dataset/cluster, only ω^0 changes
+    session.reconfigure(
+        base.to_builder()
+            .name("svm_dense_radisa-avg_warm")
+            .algorithm(AlgorithmKind::RadisaAvg)
+            .build()?,
+    )?;
+    session.warm_start(&sodda_w)?;
+    let warm = session.run()?;
+    println!(
+        "\nwarm-started radisa-avg: F(ω^0) = {:.4} → F(ω^T) = {:.4}",
+        warm.history.losses()[0],
+        warm.history.final_loss().unwrap()
+    );
     Ok(())
 }

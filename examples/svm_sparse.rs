@@ -1,15 +1,14 @@
 //! §5.2-style experiment: sparse CSR SVM (the SemMedDB/PRA substitute —
-//! see DESIGN.md §Substitutions), SODDA vs RADiSA-avg.
+//! see DESIGN.md §Substitutions), SODDA vs RADiSA-avg on one staged
+//! session. Pass `--budget SECONDS` to cap each run at a simulated-time
+//! deadline (the paper's early-iteration regime).
 //!
 //!     cargo run --release --example svm_sparse -- --dataset loc-neg5
 
-use std::sync::Arc;
-
-use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
-use sodda::coordinator::train_with_engine;
-use sodda::engine::NativeEngine;
-use sodda::loss::Loss;
+use sodda::config::{preset, AlgorithmKind, ExperimentConfig};
+use sodda::train::observers;
 use sodda::util::cli::Args;
+use sodda::Trainer;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -17,8 +16,19 @@ fn main() -> anyhow::Result<()> {
     let pr = preset(&name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
     anyhow::ensure!(pr.sparse, "{name} is not a sparse preset");
     let scale = args.parse_or("scale", 0usize)?;
+    let budget = args.parse_or("budget", f64::INFINITY)?;
     let dc = pr.data_config(if scale == 0 { pr.default_scale } else { scale }, 5, 3);
-    let ds = dc.materialize(3);
+
+    let base = ExperimentConfig::builder()
+        .name("svm_sparse_base")
+        .data(dc)
+        .grid(5, 3)
+        .outer_iters(args.parse_or("iters", 25usize)?)
+        .seed(3)
+        .build()?;
+
+    let mut session = Trainer::new(base.clone())?;
+    let ds = session.dataset();
     let density = ds.x.nnz() as f64 / (ds.n() as f64 * ds.m() as f64);
     println!(
         "dataset {name}: {} × {} CSR, {:.3}% dense, {:.1} nnz/row\n",
@@ -29,26 +39,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
-        let cfg = ExperimentConfig {
-            name: format!("svm_sparse_{algo}"),
-            data: dc.clone(),
-            p: 5,
-            q: 3,
-            loss: Loss::Hinge,
-            algorithm: algo,
-            fractions: SamplingFractions::PAPER,
-            inner_steps: 32,
-            outer_iters: args.parse_or("iters", 25usize)?,
-            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
-            seed: 3,
-            engine: Default::default(),
-            network: None,
-            eval_every: 1,
-        };
-        let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine))?;
+        session.reconfigure(
+            base.to_builder().name(format!("svm_sparse_{algo}")).algorithm(algo).build()?,
+        )?;
+        let out = session.run_with_observer(observers::sim_deadline(budget))?;
         println!("{algo:<12} loss curve:");
         for r in out.history.records.iter().step_by(5) {
             println!("   iter {:3}  F = {:.4}  sim {:.2}s", r.iter, r.loss, r.sim_s);
+        }
+        if (out.history.records.last().unwrap().iter) < session.config().outer_iters {
+            println!("   (stopped at the {budget}s simulated-time budget)");
         }
         println!();
     }

@@ -1,46 +1,55 @@
 //! End-to-end outer iterations: wall-clock per iteration for each
 //! algorithm on the `small` preset at laptop scale (the meso-benchmark
-//! behind the Figure 2/3 time axes).
+//! behind the Figure 2/3 time axes). Also contrasts the per-run session
+//! staging cost (legacy shim) against a reused `Trainer` session.
 
 use std::sync::Arc;
 
-use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions};
 use sodda::coordinator::train_with_engine;
 use sodda::engine::NativeEngine;
-use sodda::loss::Loss;
 use sodda::util::bench::Bench;
+use sodda::Trainer;
 
 fn main() {
     let mut b = Bench::from_env("full_iteration");
     let pr = preset("small").unwrap();
     let dc = pr.data_config(pr.default_scale, 5, 3);
-    let ds = dc.materialize(1);
+    let ds = dc.try_materialize(1).expect("materializing small preset");
+
+    let base = ExperimentConfig::builder()
+        .name("bench_base")
+        .data(dc)
+        .grid(5, 3)
+        .outer_iters(2)
+        .eval_every(2) // keep objective eval out of the measured loop
+        .build()
+        .expect("bench config");
 
     for algo in [AlgorithmKind::Sodda, AlgorithmKind::Radisa, AlgorithmKind::RadisaAvg] {
-        let cfg = ExperimentConfig {
-            name: format!("bench_{algo}"),
-            data: dc.clone(),
-            p: 5,
-            q: 3,
-            loss: Loss::Hinge,
-            algorithm: algo,
-            fractions: if algo == AlgorithmKind::Sodda {
+        let cfg = base
+            .to_builder()
+            .name(format!("bench_{algo}"))
+            .algorithm(algo)
+            .fractions(if algo == AlgorithmKind::Sodda {
                 SamplingFractions::PAPER
             } else {
                 SamplingFractions::FULL
-            },
-            inner_steps: 32,
-            outer_iters: 2,
-            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
-            seed: 1,
-            engine: Default::default(),
-            network: None,
-            eval_every: 2, // keep objective eval out of the measured loop
-        };
+            })
+            .build()
+            .expect("bench config");
         b.bench(&format!("{algo}/2 iters (small preset)"), || {
             train_with_engine(&cfg, &ds, Arc::new(NativeEngine)).unwrap()
         });
     }
+
+    // the session API amortizes staging: reconfigure + run vs full re-stage
+    let mut session =
+        Trainer::with_parts(base.clone(), ds.clone(), Arc::new(NativeEngine)).expect("session");
+    b.bench("sodda/2 iters (reused session)", || {
+        session.reset();
+        session.run().unwrap()
+    });
 
     b.finish();
 }

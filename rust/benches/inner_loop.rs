@@ -1,12 +1,9 @@
 //! The SVRG inner loop (Algorithm 1 steps 13-17) — the per-worker hot
 //! path — across widths, storage formats, combiners and engines.
 
-use std::sync::Arc;
-
 use sodda::data::synth;
-use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
+use sodda::engine::{BlockKey, ComputeEngine, NativeEngine};
 use sodda::loss::Loss;
-use sodda::runtime::XlaRuntime;
 use sodda::util::bench::Bench;
 use sodda::util::rng::Rng;
 
@@ -37,9 +34,11 @@ fn main() {
         native.svrg_inner(key, Loss::Hinge, &sp.x, &sp.y, 0..24, &w0, &w0, &mu, &idx, 0.05)
     });
 
-    match XlaRuntime::load("artifacts") {
+    #[cfg(feature = "xla")]
+    match sodda::runtime::XlaRuntime::load("artifacts") {
         Ok(rt) => {
-            let xla = XlaEngine::new(Arc::new(rt), 1000, 120, 24, 32).expect("bucket");
+            let xla = sodda::engine::XlaEngine::new(std::sync::Arc::new(rt), 1000, 120, 24, 32)
+                .expect("bucket");
             let ds = synth::dense_zhang(1000, 120, 2);
             let idx = Rng::seed_from_u64(5).sample_with_replacement(1000, 32);
             let w0 = vec![0.05f32; 24];
@@ -51,6 +50,8 @@ fn main() {
         }
         Err(e) => eprintln!("(skipping xla rows: {e:#})"),
     }
+    #[cfg(not(feature = "xla"))]
+    eprintln!("(skipping xla rows: built without the `xla` feature)");
 
     b.finish();
 }

@@ -4,12 +4,9 @@
 //! Run `make artifacts` first for the XLA rows (they skip otherwise).
 //! BENCH_QUICK=1 shortens measurement for CI smoke.
 
-use std::sync::Arc;
-
 use sodda::data::synth;
-use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
+use sodda::engine::{BlockKey, ComputeEngine, NativeEngine};
 use sodda::loss::Loss;
-use sodda::runtime::XlaRuntime;
 use sodda::util::bench::Bench;
 
 fn main() {
@@ -40,10 +37,12 @@ fn main() {
     b.bench("native/dloss_u/hinge 1000", || native.dloss_u(Loss::Hinge, &z, &dense.y));
     b.bench("native/loss_from_z/hinge 1000", || native.loss_from_z(Loss::Hinge, &z, &dense.y));
 
-    // XLA path (needs the default artifact bucket)
-    match XlaRuntime::load("artifacts") {
+    // XLA path (needs the default artifact bucket and --features xla)
+    #[cfg(feature = "xla")]
+    match sodda::runtime::XlaRuntime::load("artifacts") {
         Ok(rt) => {
-            let xla = XlaEngine::new(Arc::new(rt), 1000, 120, 24, 32).expect("bucket matches");
+            let xla = sodda::engine::XlaEngine::new(std::sync::Arc::new(rt), 1000, 120, 24, 32)
+                .expect("bucket matches");
             // first calls compile + stage; do them outside timing
             let _ = xla.partial_z(key, &dense.x, 0..120, &w, &rows);
             let _ = xla.grad_slice(key, &dense.x, 0..120, &rows, &u);
@@ -59,6 +58,8 @@ fn main() {
         }
         Err(e) => eprintln!("(skipping xla rows: {e:#})"),
     }
+    #[cfg(not(feature = "xla"))]
+    eprintln!("(skipping xla rows: built without the `xla` feature)");
 
     b.finish();
 }

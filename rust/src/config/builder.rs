@@ -1,0 +1,282 @@
+//! The builder is the single supported way to construct an
+//! [`ExperimentConfig`] outside this module: defaults mirror the paper's
+//! experimental setup (P=5, Q=3, hinge loss, the tuned (b, c, d) of
+//! §5.3, `γ_t = 0.08/(1+√(t−1))`), and [`ExperimentConfigBuilder::build`]
+//! runs the full validation pass (partition divisibility, fraction
+//! ranges, schedule sanity) so an invalid configuration can never reach
+//! a [`crate::train::Trainer`].
+
+use anyhow::{Context, Result};
+
+use super::{
+    AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, NetworkConfig, SamplingFractions,
+    Schedule,
+};
+use crate::loss::Loss;
+
+/// Fluent, validating builder for [`ExperimentConfig`].
+///
+/// ```no_run
+/// use sodda::ExperimentConfig;
+///
+/// let cfg = ExperimentConfig::builder()
+///     .name("demo")
+///     .dense(5000, 360)
+///     .grid(5, 3)
+///     .outer_iters(25)
+///     .build()?;
+/// # anyhow::Ok(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct ExperimentConfigBuilder {
+    name: String,
+    data: Option<DataConfig>,
+    p: usize,
+    q: usize,
+    loss: Loss,
+    algorithm: AlgorithmKind,
+    fractions: SamplingFractions,
+    inner_steps: usize,
+    outer_iters: usize,
+    schedule: Schedule,
+    seed: u64,
+    engine: EngineKind,
+    network: Option<NetworkConfig>,
+    eval_every: usize,
+}
+
+impl Default for ExperimentConfigBuilder {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            data: None,
+            p: 5,
+            q: 3,
+            loss: Loss::Hinge,
+            algorithm: AlgorithmKind::Sodda,
+            fractions: SamplingFractions::PAPER,
+            inner_steps: 32,
+            outer_iters: 30,
+            schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
+            seed: 1,
+            engine: EngineKind::Native,
+            network: None,
+            eval_every: 1,
+        }
+    }
+}
+
+impl ExperimentConfigBuilder {
+    /// Run name (labels history, CSV/JSON outputs and error messages).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Dataset specification (required — no default).
+    pub fn data(mut self, data: DataConfig) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    /// Shorthand for a dense synthetic dataset (§5.1 Zhang generator).
+    pub fn dense(self, n: usize, m: usize) -> Self {
+        self.data(DataConfig::Dense { n, m })
+    }
+
+    /// Shorthand for a sparse synthetic dataset (§5.2 PRA substitute).
+    pub fn sparse(self, n: usize, m: usize, avg_nnz: usize) -> Self {
+        self.data(DataConfig::Sparse { n, m, avg_nnz })
+    }
+
+    /// Partition grid: `p` observation × `q` feature partitions.
+    pub fn grid(mut self, p: usize, q: usize) -> Self {
+        self.p = p;
+        self.q = q;
+        self
+    }
+
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    pub fn algorithm(mut self, algorithm: AlgorithmKind) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    pub fn fractions(mut self, fractions: SamplingFractions) -> Self {
+        self.fractions = fractions;
+        self
+    }
+
+    /// Shorthand for the three sampling fractions `(b^t, c^t, d^t)`.
+    pub fn fractions_bcd(self, b: f64, c: f64, d: f64) -> Self {
+        self.fractions(SamplingFractions { b, c, d })
+    }
+
+    /// Inner-loop length L (Algorithm 1 steps 13-17).
+    pub fn inner_steps(mut self, steps: usize) -> Self {
+        self.inner_steps = steps;
+        self
+    }
+
+    /// Outer iterations T.
+    pub fn outer_iters(mut self, iters: usize) -> Self {
+        self.outer_iters = iters;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Enable the SimNet cost model with explicit link parameters.
+    pub fn network(mut self, network: NetworkConfig) -> Self {
+        self.network = Some(network);
+        self
+    }
+
+    /// Evaluate F(ω) every `k` outer iterations (1 = every iteration).
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k;
+        self
+    }
+
+    /// Assemble and validate. This is the only path that hands out an
+    /// [`ExperimentConfig`], so every config reaching a trainer has
+    /// passed divisibility, fraction-range and schedule checks.
+    pub fn build(self) -> Result<ExperimentConfig> {
+        let data = self
+            .data
+            .context("ExperimentConfig::builder(): no dataset set (use .dense()/.sparse()/.data())")?;
+        let cfg = ExperimentConfig {
+            name: self.name,
+            data,
+            p: self.p,
+            q: self.q,
+            loss: self.loss,
+            algorithm: self.algorithm,
+            fractions: self.fractions,
+            inner_steps: self.inner_steps,
+            outer_iters: self.outer_iters,
+            schedule: self.schedule,
+            seed: self.seed,
+            engine: self.engine,
+            network: self.network,
+            eval_every: self.eval_every,
+        };
+        cfg.validate().with_context(|| format!("invalid config {:?}", cfg.name))?;
+        Ok(cfg)
+    }
+}
+
+impl ExperimentConfig {
+    /// Start a builder pre-loaded with the paper's defaults.
+    pub fn builder() -> ExperimentConfigBuilder {
+        ExperimentConfigBuilder::default()
+    }
+
+    /// Builder seeded from an existing config — the idiom for sweep
+    /// variants: `base.to_builder().name("v2").fractions(f).build()?`.
+    pub fn to_builder(&self) -> ExperimentConfigBuilder {
+        ExperimentConfigBuilder {
+            name: self.name.clone(),
+            data: Some(self.data.clone()),
+            p: self.p,
+            q: self.q,
+            loss: self.loss,
+            algorithm: self.algorithm,
+            fractions: self.fractions,
+            inner_steps: self.inner_steps,
+            outer_iters: self.outer_iters,
+            schedule: self.schedule,
+            seed: self.seed,
+            engine: self.engine,
+            network: self.network,
+            eval_every: self.eval_every,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_with_divisible_data() {
+        let cfg = ExperimentConfig::builder().dense(300, 60).grid(3, 2).build().unwrap();
+        assert_eq!(cfg.p, 3);
+        assert_eq!(cfg.q, 2);
+        assert_eq!(cfg.loss, Loss::Hinge);
+        assert_eq!(cfg.fractions, SamplingFractions::PAPER);
+        assert_eq!(cfg.eval_every, 1);
+    }
+
+    #[test]
+    fn missing_data_is_rejected() {
+        assert!(ExperimentConfig::builder().build().is_err());
+    }
+
+    #[test]
+    fn divisibility_is_rejected_at_build_time() {
+        // N=100 not divisible by P=3
+        assert!(ExperimentConfig::builder().dense(100, 30).grid(3, 2).build().is_err());
+        // M=30 not divisible by Q·P=10? 30 % (5·3)=0 is fine; use m=32
+        assert!(ExperimentConfig::builder().dense(100, 32).grid(5, 3).build().is_err());
+    }
+
+    #[test]
+    fn fraction_ranges_are_rejected_at_build_time() {
+        let b = || ExperimentConfig::builder().dense(300, 60).grid(3, 2);
+        assert!(b().fractions_bcd(0.0, 0.0, 0.5).build().is_err());
+        assert!(b().fractions_bcd(0.5, 0.8, 0.5).build().is_err(), "c > b");
+        assert!(b().fractions_bcd(0.9, 0.8, 1.5).build().is_err(), "d > 1");
+        assert!(b().fractions_bcd(0.9, 0.8, 0.9).build().is_ok());
+    }
+
+    #[test]
+    fn schedule_sanity_is_rejected_at_build_time() {
+        let b = || ExperimentConfig::builder().dense(300, 60).grid(3, 2);
+        assert!(b().schedule(Schedule::Constant { gamma: 0.0 }).build().is_err());
+        assert!(b().schedule(Schedule::ScaledSqrt { gamma0: -1.0 }).build().is_err());
+        assert!(b().schedule(Schedule::InvT { gamma0: f64::NAN }).build().is_err());
+    }
+
+    #[test]
+    fn zero_iterations_rejected() {
+        let b = || ExperimentConfig::builder().dense(300, 60).grid(3, 2);
+        assert!(b().outer_iters(0).build().is_err());
+        assert!(b().inner_steps(0).build().is_err());
+        assert!(b().eval_every(0).build().is_err());
+    }
+
+    #[test]
+    fn to_builder_roundtrips_and_overrides() {
+        let base = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .seed(9)
+            .outer_iters(7)
+            .build()
+            .unwrap();
+        let v = base.to_builder().name("variant").fractions_bcd(0.9, 0.7, 0.8).build().unwrap();
+        assert_eq!(v.seed, 9);
+        assert_eq!(v.outer_iters, 7);
+        assert_eq!(v.name, "variant");
+        assert_eq!(v.fractions.b, 0.9);
+        assert_eq!(base.to_builder().build().unwrap().name, base.name);
+    }
+}

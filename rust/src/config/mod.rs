@@ -1,10 +1,16 @@
 //! Typed experiment configuration: the single source of truth a run is
-//! launched from (CLI flags build one; TOML files round-trip it; presets
+//! launched from (CLI flags build one; JSON files round-trip it; presets
 //! mirror the paper's Tables 1 and 3 at configurable scale).
+//!
+//! Construct configs through [`ExperimentConfig::builder`] — the builder
+//! applies the paper's defaults and validates at build time, so every
+//! config that reaches a [`crate::train::Trainer`] is known-good.
 
+mod builder;
 mod presets;
 mod schedule;
 
+pub use builder::ExperimentConfigBuilder;
 pub use presets::{preset, Preset, PRESETS};
 pub use schedule::Schedule;
 
@@ -101,13 +107,9 @@ impl DataConfig {
         }
     }
 
-    /// Generate (synthetic) or load (file) the dataset. Panics on I/O
-    /// failure only through `try_materialize`'s expect — prefer that in
-    /// fallible contexts.
-    pub fn materialize(&self, seed: u64) -> crate::data::Dataset {
-        self.try_materialize(seed).expect("materializing dataset")
-    }
-
+    /// Generate (synthetic) or load (file) the dataset. Fallible: file
+    /// configs can hit I/O or dimension-mismatch errors, and callers on
+    /// the session path propagate them instead of panicking.
     pub fn try_materialize(&self, seed: u64) -> Result<crate::data::Dataset> {
         match self {
             &DataConfig::Dense { n, m } => Ok(crate::data::synth::dense_zhang(n, m, seed)),
@@ -212,6 +214,7 @@ impl ExperimentConfig {
         ensure!(self.outer_iters > 0, "outer_iters must be positive");
         ensure!(self.eval_every > 0, "eval_every must be positive");
         self.fractions.validate()?;
+        self.schedule.validate()?;
         Ok(())
     }
 

@@ -18,6 +18,21 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Sanity-check the schedule's scale: every variant must produce
+    /// positive, finite rates (checked once at config build time).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let scale = match *self {
+            Schedule::PaperSqrt => 1.0,
+            Schedule::ScaledSqrt { gamma0 } | Schedule::InvT { gamma0 } => gamma0,
+            Schedule::Constant { gamma } => gamma,
+        };
+        anyhow::ensure!(
+            scale.is_finite() && scale > 0.0,
+            "learning-rate scale must be positive and finite, got {scale} in {self:?}"
+        );
+        Ok(())
+    }
+
     /// Learning rate for outer iteration `t` (1-based, like the paper).
     pub fn gamma(&self, t: usize) -> f64 {
         let t = t.max(1) as f64;

@@ -189,33 +189,27 @@ pub fn central_vr(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{AlgorithmKind, DataConfig, EngineKind, SamplingFractions, Schedule};
+    use crate::config::SamplingFractions;
     use crate::engine::NativeEngine;
-    use crate::loss::Loss;
 
     fn cfg() -> ExperimentConfig {
-        ExperimentConfig {
-            name: "baseline".into(),
-            data: DataConfig::Dense { n: 400, m: 48 },
-            p: 2,
-            q: 2,
-            loss: Loss::Hinge,
-            algorithm: AlgorithmKind::Sodda, // unused by the baselines
-            fractions: SamplingFractions::FULL,
-            inner_steps: 1,
-            outer_iters: 15,
-            schedule: Schedule::ScaledSqrt { gamma0: 0.3 },
-            seed: 4,
-            engine: EngineKind::Native,
-            network: None,
-            eval_every: 1,
-        }
+        ExperimentConfig::builder()
+            .name("baseline")
+            .dense(400, 48)
+            .grid(2, 2)
+            .fractions(SamplingFractions::FULL)
+            .inner_steps(1)
+            .outer_iters(15)
+            .schedule(crate::config::Schedule::ScaledSqrt { gamma0: 0.3 })
+            .seed(4)
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn sgd_decreases_loss() {
         let c = cfg();
-        let ds = c.data.materialize(c.seed);
+        let ds = c.data.try_materialize(c.seed).unwrap();
         let h = minibatch_sgd(&c, &ds, Arc::new(NativeEngine), 64).unwrap();
         assert!(h.final_loss().unwrap() < 0.8 * h.losses()[0], "{:?}", h.losses());
     }
@@ -223,7 +217,7 @@ mod tests {
     #[test]
     fn central_vr_decreases_loss_with_fewer_full_passes() {
         let c = cfg();
-        let ds = c.data.materialize(c.seed);
+        let ds = c.data.try_materialize(c.seed).unwrap();
         let h = central_vr(&c, &ds, Arc::new(NativeEngine), 64, 5).unwrap();
         assert!(h.final_loss().unwrap() < 0.8 * h.losses()[0]);
     }
@@ -231,7 +225,7 @@ mod tests {
     #[test]
     fn baselines_are_deterministic() {
         let c = cfg();
-        let ds = c.data.materialize(c.seed);
+        let ds = c.data.try_materialize(c.seed).unwrap();
         let a = minibatch_sgd(&c, &ds, Arc::new(NativeEngine), 32).unwrap();
         let b = minibatch_sgd(&c, &ds, Arc::new(NativeEngine), 32).unwrap();
         assert_eq!(a.losses(), b.losses());
@@ -242,10 +236,9 @@ mod tests {
         // mini-batch SGD over doubly distributed data ships full feature
         // slices every step — the motivation for SODDA's design
         let c = cfg();
-        let ds = c.data.materialize(c.seed);
+        let ds = c.data.try_materialize(c.seed).unwrap();
         let sgd = minibatch_sgd(&c, &ds, Arc::new(NativeEngine), 64).unwrap();
-        let mut sc = c.clone();
-        sc.fractions = SamplingFractions::PAPER;
+        let sc = c.to_builder().fractions(SamplingFractions::PAPER).build().unwrap();
         let sodda = crate::coordinator::train_with_engine(&sc, &ds, Arc::new(NativeEngine)).unwrap();
         let per_iter_sgd = sgd.records.last().unwrap().comm_bytes as f64 / c.outer_iters as f64;
         let per_iter_sodda = sodda.history.records.last().unwrap().comm_bytes as f64 / c.outer_iters as f64;

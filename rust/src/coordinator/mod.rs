@@ -16,6 +16,11 @@
 //! RADiSA-avg is the paper's benchmark combiner: every worker updates its
 //! **whole** local feature block `ω_[q]` and the leader averages the P
 //! copies (the strategy §3 motivates the sub-block split against).
+//!
+//! The outer loop itself lives in [`crate::train`]: a reusable
+//! [`crate::train::Trainer`] session owns the staged dataset, grid,
+//! engine and cluster, and [`outer`] keeps the legacy one-shot
+//! `train`/`train_with_engine` entry points as shims over it.
 
 pub mod baselines;
 pub mod outer;

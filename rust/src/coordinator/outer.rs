@@ -1,274 +1,55 @@
-//! The outer training loop (leader side).
+//! Legacy one-shot entry points, kept as thin shims over the session
+//! type [`Trainer`](crate::train::Trainer): each call stages a fresh
+//! session and drives it to completion. Sweeps and anything that runs
+//! more than once per dataset should hold a `Trainer` instead and
+//! `reconfigure` between runs — staging (materialize + partition +
+//! engine build + cluster launch) is the dominant avoidable cost.
 
 use std::sync::Arc;
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::sampling::{self, SampleSets};
-use crate::cluster::{Cluster, CostModel, SimNet, SvrgTask};
-use crate::config::{AlgorithmKind, EngineKind, ExperimentConfig};
-use crate::data::{Dataset, Grid};
-use crate::engine::{ComputeEngine, NativeEngine, XlaEngine};
-use crate::metrics::{History, IterRecord};
-use crate::runtime::XlaRuntime;
-use crate::util::rng::Rng;
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::engine::ComputeEngine;
+use crate::train::Trainer;
 
-/// Result of one training run.
-pub struct TrainOutcome {
-    /// final parameter vector ω^T
-    pub w: Vec<f32>,
-    pub history: History,
-    /// simulated-network totals for reporting
-    pub comm_bytes: u64,
-    pub comm_msgs: u64,
-}
+pub use crate::train::{build_engine, TrainOutcome};
 
-/// Materialize the dataset from the config and train.
+/// Materialize the dataset from the config and train once.
 pub fn train(cfg: &ExperimentConfig) -> Result<TrainOutcome> {
-    cfg.validate()?;
-    let ds = cfg.data.materialize(cfg.seed);
-    let engine = build_engine(cfg)?;
-    train_on(cfg, &ds, engine)
+    Trainer::new(cfg.clone())?.run()
 }
 
-/// Train on a caller-provided dataset with a caller-provided engine
-/// (integration tests use this to cross-check native vs XLA, and the
-/// figure harnesses use it to reuse one dataset across many runs).
+/// Train once on a caller-provided dataset with a caller-provided engine
+/// (integration tests use this to cross-check native vs XLA). The
+/// dataset is cloned into the session; hold a [`Trainer`] directly to
+/// share one staged copy across runs.
 pub fn train_with_engine(
     cfg: &ExperimentConfig,
     ds: &Dataset,
     engine: Arc<dyn ComputeEngine>,
 ) -> Result<TrainOutcome> {
-    cfg.validate()?;
-    train_on(cfg, ds, engine)
-}
-
-/// Build the engine named by the config. The XLA engine loads the AOT
-/// artifacts from `$SODDA_ARTIFACTS` (default `artifacts/`).
-pub fn build_engine(cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
-    match cfg.engine {
-        EngineKind::Native => Ok(Arc::new(NativeEngine)),
-        EngineKind::Xla => {
-            let dir = std::env::var("SODDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-            let rt = Arc::new(XlaRuntime::load(&dir).context("loading AOT artifacts")?);
-            let n_per = cfg.data.n() / cfg.p;
-            let m_per = cfg.data.m() / cfg.q;
-            let mtilde = m_per / cfg.p;
-            Ok(Arc::new(XlaEngine::new(rt, n_per, m_per, mtilde, cfg.inner_steps)?))
-        }
-    }
-}
-
-fn train_on(cfg: &ExperimentConfig, ds: &Dataset, engine: Arc<dyn ComputeEngine>) -> Result<TrainOutcome> {
-    let grid = Grid::partition(ds, cfg.p, cfg.q)?;
-    let (p, q) = (cfg.p, cfg.q);
-    let (n_per, m_per, mtilde) = (grid.n_per, grid.m_per, grid.mtilde);
-    let (n_total, m_total) = (grid.n_total, grid.m_total);
-    let loss = cfg.loss;
-    // Leader-side elementwise ops (u = f'(z,y), Σf(z,y)) are O(n) scalar
-    // maps — dispatching them through PJRT costs more than computing them
-    // (perf log A1 in EXPERIMENTS.md §Perf): the leader always uses the
-    // native engine for them, workers use the configured engine.
-    let leader_engine: Arc<dyn ComputeEngine> = Arc::new(NativeEngine);
-    let cluster = Cluster::launch(grid, engine, loss);
-
-    let cost = CostModel { net: cfg.network.unwrap_or_default(), ..CostModel::default() };
-    let mut net = SimNet::new(cost);
-
-    // independent RNG streams (see util::rng docs)
-    let root = Rng::seed_from_u64(cfg.seed);
-    let mut rng_sets = root.fork(0xB0);
-    let mut rng_perm = root.fork(0xC0);
-    let mut rng_rows = root.fork(0xD0);
-
-    let mut w = vec![0.0f32; m_total];
-    let mut history = History::new(&cfg.name);
-    let mut grad_coord_evals: u64 = 0;
-    let t_start = Instant::now();
-
-    // iteration 0 record: F(ω^0) = F(0)
-    history.push(IterRecord {
-        iter: 0,
-        loss: objective(&cluster, &leader_engine, loss, &w, n_total),
-        wall_s: t_start.elapsed().as_secs_f64(),
-        sim_s: 0.0,
-        comm_bytes: 0,
-        grad_coord_evals: 0,
-    });
-
-    for t in 1..=cfg.outer_iters {
-        let gamma = cfg.schedule.gamma(t) as f32;
-
-        // ---- sets (steps 5-7) ---------------------------------------------
-        let sets = match cfg.algorithm {
-            AlgorithmKind::Sodda => SampleSets::draw(&mut rng_sets, n_total, m_total, &cfg.fractions),
-            AlgorithmKind::Radisa | AlgorithmKind::RadisaAvg => SampleSets::full(n_total, m_total),
-        };
-        let rows_arc: Vec<Arc<Vec<u32>>> = sampling::rows_per_partition(&sets.d, p, n_per)
-            .into_iter()
-            .map(Arc::new)
-            .collect();
-
-        // ---- µ^t estimate (step 8) ------------------------------------------
-        let w_masked = sampling::mask_keep(&w, &sets.b);
-        let w_blocks: Vec<Arc<Vec<f32>>> =
-            (0..q).map(|qi| Arc::new(w_masked[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
-
-        let z = cluster.partial_z(&w_blocks, &rows_arc);
-        {
-            let mut bytes = 0u64;
-            let mut max_flops = 0f64;
-            for pi in 0..p {
-                for qi in 0..q {
-                    let bq = SampleSets::count_in_range(&sets.b, qi * m_per, (qi + 1) * m_per);
-                    bytes += 4 * (bq as u64 + rows_arc[pi].len() as u64);
-                    let fl = 2.0 * rows_arc[pi].len() as f64 * bq as f64 * cluster.density_at(pi, qi);
-                    max_flops = max_flops.max(fl);
-                }
-            }
-            net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
-        }
-
-        // u = f'(z, y) at the reduce site (leader)
-        let mut u_per_p: Vec<Arc<Vec<f32>>> = Vec::with_capacity(p);
-        for pi in 0..p {
-            let y_rows: Vec<f32> = rows_arc[pi].iter().map(|&r| cluster.y[pi][r as usize]).collect();
-            u_per_p.push(Arc::new(leader_engine.dloss_u(loss, &z[pi], &y_rows)));
-        }
-        net.local(sets.d.len() as f64);
-
-        let mut g = cluster.grad(&u_per_p, &rows_arc);
-        {
-            let mut bytes = 0u64;
-            let mut max_flops = 0f64;
-            for pi in 0..p {
-                for qi in 0..q {
-                    let cq = SampleSets::count_in_range(&sets.c, qi * m_per, (qi + 1) * m_per);
-                    bytes += 4 * (rows_arc[pi].len() as u64 + cq as u64);
-                    let fl = 2.0 * rows_arc[pi].len() as f64 * cq as f64 * cluster.density_at(pi, qi);
-                    max_flops = max_flops.max(fl);
-                }
-            }
-            net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
-        }
-
-        // µ = (g ∘ C) / d^t
-        sampling::project_inplace(&mut g, &sets.c);
-        let inv_d = 1.0 / sets.d.len() as f32;
-        for v in g.iter_mut() {
-            *v *= inv_d;
-        }
-        let mu = g;
-        net.local(sets.c.len() as f64);
-        grad_coord_evals += (sets.c.len() * sets.d.len()) as u64;
-
-        // ---- inner loops (steps 9-18) + assembly (step 19) ------------------
-        // All three algorithms run one parallel sub-epoch: π_q assigns each
-        // worker a disjoint sub-block (bijection ⇒ disjoint cover of ω_[q]).
-        // SODDA/RADiSA write back the last iterate; RADiSA-avg writes back
-        // the suffix-averaged iterate (its "-avg" combiner).
-        let avg = cfg.algorithm == AlgorithmKind::RadisaAvg;
-        let mut tasks: Vec<SvrgTask> = Vec::with_capacity(p * q);
-        let mut task_cols: Vec<std::ops::Range<usize>> = Vec::with_capacity(p * q);
-        for qi in 0..q {
-            let perm = rng_perm.permutation(p);
-            for pi in 0..p {
-                let k = perm[pi] as usize;
-                let gcols = qi * m_per + k * mtilde..qi * m_per + (k + 1) * mtilde;
-                tasks.push(SvrgTask {
-                    p: pi,
-                    q: qi,
-                    cols: k * mtilde..(k + 1) * mtilde,
-                    w0: w[gcols.clone()].to_vec(),
-                    wt: w[gcols.clone()].to_vec(),
-                    mu: mu[gcols.clone()].to_vec(),
-                    idx: rng_rows.sample_with_replacement(n_per, cfg.inner_steps),
-                    gamma,
-                    avg,
-                });
-                task_cols.push(gcols);
-            }
-        }
-        for (ti, w_l) in cluster.svrg(tasks) {
-            w[task_cols[ti].clone()].copy_from_slice(&w_l);
-        }
-        let max_density = (0..p)
-            .flat_map(|pi| (0..q).map(move |qi| (pi, qi)))
-            .fold(0.0f64, |acc, (pi, qi)| acc.max(cluster.density_at(pi, qi)));
-        let flops = 6.0 * cfg.inner_steps as f64 * mtilde as f64 * max_density;
-        let bytes = ((p * q) as u64) * 4 * (3 * mtilde as u64 + cfg.inner_steps as u64 + mtilde as u64);
-        net.phase(flops, bytes, 2 * (p * q) as u64, 1);
-        grad_coord_evals += (p * q * cfg.inner_steps * mtilde) as u64;
-
-        // ---- reporting -------------------------------------------------------
-        if t % cfg.eval_every == 0 || t == cfg.outer_iters {
-            history.push(IterRecord {
-                iter: t,
-                loss: objective(&cluster, &leader_engine, loss, &w, n_total),
-                wall_s: t_start.elapsed().as_secs_f64(),
-                sim_s: net.sim_s(),
-                comm_bytes: net.total_bytes(),
-                grad_coord_evals,
-            });
-        }
-    }
-
-    Ok(TrainOutcome {
-        w,
-        history,
-        comm_bytes: net.total_bytes(),
-        comm_msgs: net.total_msgs(),
-    })
-}
-
-/// Distributed objective F(ω) = (1/N) Σ f(x_i·ω, y_i): partial-z reduce
-/// across feature blocks, loss sum per observation partition. Not charged
-/// to the cost model (the paper evaluates loss curves offline).
-fn objective(
-    cluster: &Cluster,
-    engine: &Arc<dyn ComputeEngine>,
-    loss: crate::loss::Loss,
-    w: &[f32],
-    n_total: usize,
-) -> f64 {
-    let q = cluster.q;
-    let m_per = cluster.m_per;
-    let w_blocks: Vec<Arc<Vec<f32>>> =
-        (0..q).map(|qi| Arc::new(w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
-    let rows: Vec<Arc<Vec<u32>>> =
-        (0..cluster.p).map(|_| Arc::new((0..cluster.n_per as u32).collect())).collect();
-    let z = cluster.partial_z(&w_blocks, &rows);
-    let mut total = 0.0f64;
-    for pi in 0..cluster.p {
-        total += engine.loss_from_z(loss, &z[pi], &cluster.y[pi]);
-    }
-    total / n_total as f64
+    Trainer::with_parts(cfg.clone(), ds.clone(), engine)?.run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DataConfig, SamplingFractions, Schedule};
-    use crate::loss::Loss;
+    use crate::config::{AlgorithmKind, DataConfig};
 
     fn base_cfg(algo: AlgorithmKind) -> ExperimentConfig {
-        ExperimentConfig {
-            name: format!("test-{algo}"),
-            data: DataConfig::Dense { n: 300, m: 60 },
-            p: 3,
-            q: 2,
-            loss: Loss::Hinge,
-            algorithm: algo,
-            fractions: SamplingFractions::PAPER,
-            inner_steps: 16,
-            outer_iters: 12,
-            schedule: Schedule::PaperSqrt,
-            seed: 7,
-            engine: EngineKind::Native,
-            network: None,
-            eval_every: 1,
-        }
+        ExperimentConfig::builder()
+            .name(format!("test-{algo}"))
+            .dense(300, 60)
+            .grid(3, 2)
+            .algorithm(algo)
+            .inner_steps(16)
+            .outer_iters(12)
+            .schedule(crate::config::Schedule::PaperSqrt)
+            .seed(7)
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -299,8 +80,7 @@ mod tests {
         let b = train(&base_cfg(AlgorithmKind::Sodda)).unwrap();
         assert_eq!(a.w, b.w);
         assert_eq!(a.history.losses(), b.history.losses());
-        let mut cfg = base_cfg(AlgorithmKind::Sodda);
-        cfg.seed = 8;
+        let cfg = base_cfg(AlgorithmKind::Sodda).to_builder().seed(8).build().unwrap();
         let c = train(&cfg).unwrap();
         assert_ne!(a.w, c.w);
     }
@@ -319,8 +99,11 @@ mod tests {
 
     #[test]
     fn sparse_dataset_trains() {
-        let mut cfg = base_cfg(AlgorithmKind::Sodda);
-        cfg.data = DataConfig::Sparse { n: 300, m: 120, avg_nnz: 10 };
+        let cfg = base_cfg(AlgorithmKind::Sodda)
+            .to_builder()
+            .data(DataConfig::Sparse { n: 300, m: 120, avg_nnz: 10 })
+            .build()
+            .unwrap();
         let out = train(&cfg).unwrap();
         assert!(out.history.min_loss().unwrap() < out.history.losses()[0]);
     }

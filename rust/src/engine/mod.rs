@@ -12,9 +12,11 @@
 //! engines produce identical training trajectories (up to f32 rounding).
 
 mod native;
+#[cfg(feature = "xla")]
 mod xla;
 
 pub use native::NativeEngine;
+#[cfg(feature = "xla")]
 pub use xla::XlaEngine;
 
 use std::ops::Range;
@@ -39,6 +41,14 @@ pub struct BlockKey {
 pub trait ComputeEngine: Send + Sync {
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;
+
+    /// Inner-loop length the backend's kernels are compiled at, when the
+    /// engine is shape-specialized (the AOT XLA artifacts); `None` for
+    /// shape-agnostic engines. Sessions refuse to `reconfigure` to a
+    /// different `inner_steps` when this is `Some`.
+    fn fixed_inner_steps(&self) -> Option<usize> {
+        None
+    }
 
     /// Partial margins `z_k = x_{rows[k]}[cols] · w` (steps 5-8: the
     /// feature-block contribution to `x_j^{B^t} w_{B^t}`; `w` comes in

@@ -93,6 +93,10 @@ impl ComputeEngine for XlaEngine {
         "xla"
     }
 
+    fn fixed_inner_steps(&self) -> Option<usize> {
+        Some(self.steps)
+    }
+
     fn partial_z(&self, key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
         assert_eq!(cols, 0..self.m, "XLA engine computes z over full blocks");
         self.ensure_block(key, x);

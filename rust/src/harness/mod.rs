@@ -6,6 +6,12 @@
 //! summary. Scales default to the presets' laptop divisors; pass
 //! `--scale 1` for paper-sized runs.
 //!
+//! Every sweep stages **one [`Trainer`] session per dataset** and
+//! `reconfigure`s it between runs, so the dataset is materialized,
+//! partitioned and engine-staged once per preset instead of once per
+//! curve — re-staging per run is the dominant avoidable cost in these
+//! workloads.
+//!
 //! Calibration note: all comparisons use the paper's learning-rate shape
 //! `γ_t = γ0/(1+√(t−1))` with one shared `γ0 = 0.08`, chosen once so the
 //! first iterations of *all* algorithms are in the stable (non-overshoot)
@@ -15,20 +21,16 @@
 pub mod theory;
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::{
-    preset, AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, Preset, SamplingFractions,
-    Schedule,
+    preset, AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, ExperimentConfigBuilder,
+    Preset, SamplingFractions, Schedule,
 };
-use crate::coordinator::{build_engine, train_with_engine};
-use crate::data::Dataset;
-use crate::engine::ComputeEngine;
-use crate::loss::Loss;
 use crate::metrics::plot::{self, Curve};
 use crate::metrics::{seed_variation, History};
+use crate::train::Trainer;
 
 /// Shared harness options (from the CLI).
 #[derive(Debug, Clone)]
@@ -70,35 +72,32 @@ impl Opts {
         }
     }
 
-    fn base_cfg(&self, name: &str, data: DataConfig, algo: AlgorithmKind) -> ExperimentConfig {
-        ExperimentConfig {
-            name: name.to_string(),
-            data,
-            p: self.p,
-            q: self.q,
-            loss: Loss::Hinge, // the paper's SVM objective throughout §5
-            algorithm: algo,
-            fractions: SamplingFractions::PAPER,
-            inner_steps: self.inner_steps,
-            outer_iters: self.iters,
-            schedule: Schedule::ScaledSqrt { gamma0: self.gamma0 },
-            seed: self.seed,
-            engine: self.engine,
-            network: None,
-            eval_every: 1,
-        }
+    /// Builder pre-loaded with the harness-wide settings (hinge loss —
+    /// the paper's SVM objective throughout §5 — and the shared γ0).
+    fn builder(&self, name: &str, data: DataConfig, algo: AlgorithmKind) -> ExperimentConfigBuilder {
+        ExperimentConfig::builder()
+            .name(name)
+            .data(data)
+            .grid(self.p, self.q)
+            .algorithm(algo)
+            .inner_steps(self.inner_steps)
+            .outer_iters(self.iters)
+            .schedule(Schedule::ScaledSqrt { gamma0: self.gamma0 })
+            .seed(self.seed)
+            .engine(self.engine)
     }
 }
 
-/// Run one config against a shared dataset, write its CSV, return history.
-fn run_curve(opts: &Opts, cfg: &ExperimentConfig, ds: &Dataset, engine: &Arc<dyn ComputeEngine>) -> Result<History> {
-    let out = train_with_engine(cfg, ds, Arc::clone(engine))
-        .with_context(|| format!("running {}", cfg.name))?;
-    let path = opts.out_dir.join(format!("{}.csv", cfg.name));
+/// Run the session's current config to completion, write its CSV,
+/// return the history.
+fn run_curve(opts: &Opts, session: &mut Trainer) -> Result<History> {
+    let name = session.config().name.clone();
+    let out = session.run().with_context(|| format!("running {name}"))?;
+    let path = opts.out_dir.join(format!("{name}.csv"));
     out.history.write_csv(&path)?;
     println!(
         "  {:<44} final F = {:.4}   sim {:.2}s   comm {:.1} MB",
-        cfg.name,
+        name,
         out.history.final_loss().unwrap_or(f64::NAN),
         out.history.records.last().map(|r| r.sim_s).unwrap_or(0.0),
         out.comm_bytes as f64 / 1e6
@@ -106,12 +105,13 @@ fn run_curve(opts: &Opts, cfg: &ExperimentConfig, ds: &Dataset, engine: &Arc<dyn
     Ok(out.history)
 }
 
-fn engine_for(opts: &Opts, cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
-    build_engine(cfg).with_context(|| {
+/// Stage one session for a sweep, with the XLA shape hint on failure.
+fn stage_session(cfg: ExperimentConfig, ds: crate::data::Dataset) -> Result<Trainer> {
+    let steps = cfg.inner_steps;
+    Trainer::with_dataset(cfg, ds).with_context(|| {
         format!(
-            "building {:?} engine (XLA needs artifacts at the partition shape; \
-             see `make artifacts N_PER=… M_PER=… MTILDE=… STEPS={}`)",
-            opts.engine, cfg.inner_steps
+            "staging session (XLA needs artifacts at the partition shape; \
+             see `make artifacts N_PER=… M_PER=… MTILDE=… STEPS={steps}`)"
         )
     })
 }
@@ -152,7 +152,7 @@ pub fn table3(opts: &Opts) -> Result<String> {
     for name in ["diag-neg10", "loc-neg5"] {
         let pr = preset(name).unwrap();
         let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
-        let ds = dc.materialize(opts.seed);
+        let ds = dc.try_materialize(opts.seed)?;
         let nnz = ds.x.nnz() as f64 / ds.n() as f64;
         rows.push_str(&format!(
             "{name} | {} | {} | {} x {} | {nnz:.1}\n",
@@ -177,11 +177,6 @@ pub fn table3(opts: &Opts) -> Result<String> {
 /// c: b = c ∈ {65..95}%;  d/e/f: b ∈ {95, 85, 75}% × c sweep;
 /// g: long-run extension of d.
 pub fn fig2(opts: &Opts, panel: char) -> Result<()> {
-    let pr = preset("small").unwrap();
-    let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
-    let ds = dc.materialize(opts.seed);
-    println!("== Figure 2({panel}) on {} ({}x{}) ==", ds.name, ds.n(), ds.m());
-
     let mut variants: Vec<(String, SamplingFractions)> = Vec::new();
     let f = |b: f64, c: f64, d: f64| SamplingFractions { b, c, d };
     let mut iters = opts.iters;
@@ -212,28 +207,39 @@ pub fn fig2(opts: &Opts, panel: char) -> Result<()> {
             }
             for c in [0.4f64, 0.6, 0.8] {
                 let c = c.min(b);
-                variants.push((format!("fig2{panel}_sodda_b{:02.0}_c{:02.0}", b * 100.0, c * 100.0), f(b, c, 0.85)));
+                variants.push((
+                    format!("fig2{panel}_sodda_b{:02.0}_c{:02.0}", b * 100.0, c * 100.0),
+                    f(b, c, 0.85),
+                ));
             }
         }
         other => anyhow::bail!("unknown fig2 panel {other:?} (a-g)"),
     }
 
-    let mut cfg0 = opts.base_cfg("tmp", dc.clone(), AlgorithmKind::Sodda);
-    cfg0.outer_iters = iters;
-    let engine = engine_for(opts, &cfg0)?;
+    let pr = preset("small").unwrap();
+    let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
+    let ds = dc.try_materialize(opts.seed)?;
+    println!("== Figure 2({panel}) on {} ({}x{}) ==", ds.name, ds.n(), ds.m());
+
+    // one staged session for the whole panel: every variant and the
+    // RADiSA-avg benchmark reuse the same dataset/grid/engine/cluster
+    let base = opts
+        .builder("fig2-session", dc.clone(), AlgorithmKind::Sodda)
+        .outer_iters(iters)
+        .build()?;
+    let mut session = stage_session(base.clone(), ds)?;
     let mut curves = Vec::new();
     for (name, fr) in variants {
-        let mut cfg = cfg0.clone();
-        cfg.name = name.clone();
-        cfg.fractions = fr;
-        let h = run_curve(opts, &cfg, &ds, &engine)?;
+        session.reconfigure(base.to_builder().name(&name).fractions(fr).build()?)?;
+        let h = run_curve(opts, &mut session)?;
         curves.push(Curve::from_history(name, &h, true));
     }
-    let mut cfg = cfg0.clone();
-    cfg.name = format!("fig2{panel}_radisa_avg");
-    cfg.algorithm = AlgorithmKind::RadisaAvg;
-    let h = run_curve(opts, &cfg, &ds, &engine)?;
-    curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+    let name = format!("fig2{panel}_radisa_avg");
+    session.reconfigure(
+        base.to_builder().name(&name).algorithm(AlgorithmKind::RadisaAvg).build()?,
+    )?;
+    let h = run_curve(opts, &mut session)?;
+    curves.push(Curve::from_history(name, &h, true));
     render(opts, &format!("fig2{panel}"), &format!("Figure 2({panel}) — small dataset"), &curves)?;
     Ok(())
 }
@@ -260,13 +266,20 @@ pub fn fig3(opts: &Opts) -> Result<()> {
         println!("== Figure 3: {name} ==");
         let mut curves = Vec::new();
         for seed in [1u64, 2, 3] {
-            let ds = dc.materialize(seed);
+            // the dataset itself is seeded, so each seed is its own session
+            let ds = dc.try_materialize(seed)?;
+            let base = opts
+                .builder(&format!("fig3_{name}_session"), dc.clone(), AlgorithmKind::Sodda)
+                .seed(seed)
+                .build()?;
+            let mut session = stage_session(base.clone(), ds)?;
             for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
-                let mut cfg = opts.base_cfg(&format!("fig3_{name}_{algo}_seed{seed}"), dc.clone(), algo);
-                cfg.seed = seed;
-                let engine = engine_for(opts, &cfg)?;
-                let h = run_curve(opts, &cfg, &ds, &engine)?;
-                curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+                let run_name = format!("fig3_{name}_{algo}_seed{seed}");
+                session.reconfigure(
+                    base.to_builder().name(&run_name).algorithm(algo).build()?,
+                )?;
+                let h = run_curve(opts, &mut session)?;
+                curves.push(Curve::from_history(run_name, &h, true));
             }
         }
         render(opts, &format!("fig3_{name}"), &format!("Figure 3 — {name} dataset, 3 seeds"), &curves)?;
@@ -281,17 +294,24 @@ pub fn fig3(opts: &Opts) -> Result<()> {
 pub fn table2(opts: &Opts) -> Result<String> {
     let pr = preset("large").unwrap();
     let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
-    let ds = dc.materialize(opts.seed);
+    let ds = dc.try_materialize(opts.seed)?;
     println!("== Table 2 (seed variation, {} seeds × {} iters) ==", 10, opts.iters);
+    // one session serves all 2 algorithms × 10 seeds (the dataset is
+    // fixed here; `seed` only reseeds the training streams)
+    let base = opts.builder("table2-session", dc.clone(), AlgorithmKind::Sodda).build()?;
+    let mut session = stage_session(base.clone(), ds)?;
     let mut out = String::from("algorithm | avg(max-avg) | avg(avg-min) | max(max-avg) | max(avg-min)\n");
     for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
         let mut curves: Vec<Vec<f64>> = Vec::new();
         for seed in 0..10u64 {
-            let mut cfg = opts.base_cfg(&format!("table2_{algo}_seed{seed}"), dc.clone(), algo);
-            cfg.seed = seed;
-            let engine = engine_for(opts, &cfg)?;
-            let hist = train_with_engine(&cfg, &ds, engine)?.history;
-            curves.push(hist.losses());
+            session.reconfigure(
+                base.to_builder()
+                    .name(format!("table2_{algo}_seed{seed}"))
+                    .algorithm(algo)
+                    .seed(seed)
+                    .build()?,
+            )?;
+            curves.push(session.run()?.history.losses());
         }
         let v = seed_variation(&curves);
         out.push_str(&format!(
@@ -313,14 +333,16 @@ pub fn fig4(opts: &Opts) -> Result<()> {
     for name in ["diag-neg10", "loc-neg5"] {
         let pr = preset(name).unwrap();
         let dc = pr.data_config(opts.scale_for(pr), opts.p, opts.q);
-        let ds = dc.materialize(opts.seed);
+        let ds = dc.try_materialize(opts.seed)?;
         println!("== Figure 4: {name} ({}x{}, sparse) ==", ds.n(), ds.m());
+        let base = opts.builder(&format!("fig4_{name}_session"), dc.clone(), AlgorithmKind::Sodda).build()?;
+        let mut session = stage_session(base.clone(), ds)?;
         let mut curves = Vec::new();
         for algo in [AlgorithmKind::Sodda, AlgorithmKind::RadisaAvg] {
-            let cfg = opts.base_cfg(&format!("fig4_{}_{algo}", name.replace('-', "_")), dc.clone(), algo);
-            let engine = engine_for(opts, &cfg)?;
-            let h = run_curve(opts, &cfg, &ds, &engine)?;
-            curves.push(Curve::from_history(cfg.name.clone(), &h, true));
+            let run_name = format!("fig4_{}_{algo}", name.replace('-', "_"));
+            session.reconfigure(base.to_builder().name(&run_name).algorithm(algo).build()?)?;
+            let h = run_curve(opts, &mut session)?;
+            curves.push(Curve::from_history(run_name, &h, true));
         }
         render(opts, &format!("fig4_{}", name.replace('-', "_")), &format!("Figure 4 — {name} (sparse)"), &curves)?;
     }

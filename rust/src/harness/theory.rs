@@ -14,9 +14,9 @@
 use anyhow::Result;
 
 use super::Opts;
-use crate::config::{AlgorithmKind, DataConfig, ExperimentConfig, SamplingFractions, Schedule};
-use crate::coordinator::train;
+use crate::config::{ExperimentConfig, Schedule};
 use crate::loss::Loss;
+use crate::train::Trainer;
 
 /// Results of the rate fits (also written to `theory.txt`).
 #[derive(Debug, Clone)]
@@ -31,31 +31,29 @@ pub struct TheoryReport {
     pub contraction: f64,
 }
 
-fn base_cfg(o: &Opts, name: &str) -> ExperimentConfig {
-    ExperimentConfig {
-        name: name.into(),
-        data: DataConfig::Dense { n: 1200, m: 72 },
-        p: 3,
-        q: 2,
-        loss: Loss::Squared, // strongly convex objective, as the theorems assume
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: o.inner_steps.min(16),
-        outer_iters: 120,
-        schedule: Schedule::InvT { gamma0: 0.08 },
-        seed: o.seed,
-        engine: Default::default(),
-        network: None,
-        eval_every: 1,
-    }
+fn base_cfg(o: &Opts, name: &str) -> Result<ExperimentConfig> {
+    ExperimentConfig::builder()
+        .name(name)
+        .dense(1200, 72)
+        .grid(3, 2)
+        .loss(Loss::Squared) // strongly convex objective, as the theorems assume
+        .inner_steps(o.inner_steps.min(16))
+        .outer_iters(120)
+        .schedule(Schedule::InvT { gamma0: 0.08 })
+        .seed(o.seed)
+        .build()
 }
 
 /// Estimate F* by running much longer with a diminishing rate.
-fn estimate_fstar(o: &Opts) -> Result<f64> {
-    let mut cfg = base_cfg(o, "theory_fstar");
-    cfg.outer_iters = 400;
-    cfg.schedule = Schedule::ScaledSqrt { gamma0: 0.05 };
-    Ok(train(&cfg)?.history.min_loss().unwrap())
+fn estimate_fstar(o: &Opts, session: &mut Trainer) -> Result<f64> {
+    session.reconfigure(
+        base_cfg(o, "theory_fstar")?
+            .to_builder()
+            .outer_iters(400)
+            .schedule(Schedule::ScaledSqrt { gamma0: 0.05 })
+            .build()?,
+    )?;
+    Ok(session.run()?.history.min_loss().unwrap())
 }
 
 fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
@@ -74,12 +72,14 @@ fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 
 pub fn run(o: &Opts) -> Result<TheoryReport> {
     println!("== theory checks (Theorems 2-4 empirics) ==");
-    let fstar = estimate_fstar(o)?;
+    // every theory run shares one dataset/grid/loss — one staged session
+    let mut session = Trainer::new(base_cfg(o, "theory_session")?)?;
+    let fstar = estimate_fstar(o, &mut session)?;
     println!("  estimated F* = {fstar:.5}");
 
     // --- Theorem 2: 1/t rate --------------------------------------------
-    let cfg = base_cfg(o, "theory_invt");
-    let hist = train(&cfg)?.history;
+    session.reconfigure(base_cfg(o, "theory_invt")?)?;
+    let hist = session.run()?.history;
     let (mut xs, mut ys) = (Vec::new(), Vec::new());
     for r in hist.records.iter().filter(|r| r.iter >= 10) {
         let gap = r.loss - fstar;
@@ -92,11 +92,15 @@ pub fn run(o: &Opts) -> Result<TheoryReport> {
     println!("  Theorem 2: log-gap slope under γ=1/t: {invt_slope:.2} (≤ ~-0.5 ⇒ sublinear+)");
 
     // --- Theorem 3: constant γ floors ------------------------------------
-    let run_const = |gamma: f64, name: &str| -> Result<Vec<f64>> {
-        let mut cfg = base_cfg(o, name);
-        cfg.schedule = Schedule::Constant { gamma };
-        cfg.outer_iters = 150;
-        Ok(train(&cfg)?.history.losses())
+    let mut run_const = |gamma: f64, name: &str| -> Result<Vec<f64>> {
+        session.reconfigure(
+            base_cfg(o, name)?
+                .to_builder()
+                .schedule(Schedule::Constant { gamma })
+                .outer_iters(150)
+                .build()?,
+        )?;
+        Ok(session.run()?.history.losses())
     };
     let hi = run_const(0.02, "theory_const_hi")?;
     let lo = run_const(0.005, "theory_const_lo")?;

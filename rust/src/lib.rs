@@ -4,33 +4,88 @@
 //! Learning Algorithm for Distributed Features and Observations"*
 //! (Fang & Klabjan, 2018).
 //!
+//! ## The session API
+//!
+//! Training runs through a reusable, observable [`Trainer`] session.
+//! Configs come from a validating builder; a session stages the
+//! expensive state (dataset, `P×Q` partition grid, compute engine,
+//! worker cluster) exactly once and then runs any number of runs
+//! against it — sweeps `reconfigure` between runs instead of re-staging:
+//!
+//! ```no_run
+//! use std::ops::ControlFlow;
+//! use sodda::{ExperimentConfig, Trainer};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let cfg = ExperimentConfig::builder()
+//!         .name("quickstart")
+//!         .dense(5000, 360) // §5.1 synthetic SVM data
+//!         .grid(5, 3)       // the paper's P×Q partitioning
+//!         .outer_iters(25)
+//!         .build()?;        // validated: divisibility, fractions, schedule
+//!
+//!     let mut trainer = Trainer::new(cfg)?;
+//!     let outcome = trainer.run_with_observer(|rec| {
+//!         println!("iter {:3}  F = {:.4}", rec.iter, rec.loss);
+//!         if rec.loss < 0.05 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+//!     })?;
+//!     println!("final F = {:.4}", outcome.history.final_loss().unwrap());
+//!
+//!     // same staged session, next run: warm-started RADiSA-avg
+//!     let variant = trainer
+//!         .config()
+//!         .to_builder()
+//!         .name("ravg-warm")
+//!         .algorithm(sodda::config::AlgorithmKind::RadisaAvg)
+//!         .build()?;
+//!     trainer.reconfigure(variant)?;
+//!     trainer.warm_start(&outcome.w)?;
+//!     let chained = trainer.run()?;
+//!     println!("chained F = {:.4}", chained.history.final_loss().unwrap());
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Observers (`FnMut(&IterRecord) -> ControlFlow<()>`) make streaming
+//! loss curves, early stopping and deadline budgets first-class — see
+//! [`train::observers`]. [`Trainer::step`] drives a run one outer
+//! iteration at a time for custom loops.
+//!
+//! ## The stack
+//!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
 //! * **L3 (this crate)** — the doubly distributed training runtime:
 //!   a leader and `P×Q` workers exchanging messages over a simulated
-//!   cluster ([`cluster`]), the SODDA / RADiSA / RADiSA-avg outer loops
-//!   ([`coordinator`]), data partitioning ([`data`]), and metrics.
+//!   cluster ([`cluster`]), the [`Trainer`] session driving the SODDA /
+//!   RADiSA / RADiSA-avg outer loops ([`train`], [`coordinator`]), data
+//!   partitioning ([`data`]), and metrics.
 //! * **L2 (python/compile/model.py, build-time)** — JAX compute graphs
 //!   (stochastic full-gradient estimate, SVRG inner loop, loss eval),
 //!   AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/, build-time)** — Pallas row-tile
 //!   gradient kernels called from L2.
 //!
-//! At runtime the [`runtime`] module loads the HLO artifacts through the
-//! PJRT CPU client (`xla` crate); python never runs on the training path.
-//! A pure-rust [`engine::NativeEngine`] implements the identical math and
-//! is cross-checked against the XLA path in the integration tests.
+//! With the `xla` cargo feature (default **off**), the [`runtime`]
+//! module loads the HLO artifacts through the PJRT CPU client (`xla`
+//! crate); python never runs on the training path. The pure-rust
+//! [`engine::NativeEngine`] implements the identical math, is always
+//! available, and is cross-checked against the XLA path in the
+//! integration tests.
 
 pub mod util;
 
-pub mod config;
-pub mod data;
-pub mod loss;
-pub mod engine;
-pub mod runtime;
 pub mod cluster;
+pub mod config;
 pub mod coordinator;
+pub mod data;
+pub mod engine;
 pub mod harness;
+pub mod loss;
 pub mod metrics;
+#[cfg(feature = "xla")]
+pub mod runtime;
+pub mod train;
 
-pub use config::ExperimentConfig;
+pub use config::{ExperimentConfig, ExperimentConfigBuilder};
+pub use train::{TrainOutcome, Trainer};

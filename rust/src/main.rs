@@ -10,21 +10,20 @@
 //! Examples:
 //!   repro train --preset small --algo sodda --iters 40
 //!   repro train --n 5000 --m 360 --algo radisa-avg --engine xla
+//!   repro train --preset small --target-loss 0.1
 //!   repro fig2 --panel a --out results
 //!   repro fig3 --scale 100 --iters 20
 
-use std::sync::Arc;
+use std::ops::ControlFlow;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use sodda::config::{
-    preset, AlgorithmKind, DataConfig, ExperimentConfig, SamplingFractions, Schedule,
-};
-use sodda::coordinator::{build_engine, train_with_engine};
+use sodda::config::{preset, AlgorithmKind, DataConfig, ExperimentConfig, Schedule};
 use sodda::harness::{self, Opts};
 use sodda::loss::Loss;
 use sodda::util::cli::Args;
+use sodda::Trainer;
 
 const HELP: &str = "\
 repro — SODDA (Fang & Klabjan 2018) reproduction driver
@@ -48,7 +47,7 @@ COMMON FLAGS
   --out DIR        output directory (default results)
   --scale K        dataset scale divisor (default: preset laptop scale)
   --iters T        outer iterations (default 30; table2 40)
-  --engine E       native | xla (default native)
+  --engine E       native | xla (default native; xla needs --features xla)
   --p P --q Q      partition grid (default 5 x 3, the paper's)
   --steps L        inner-loop length (default 32)
   --gamma0 G       learning-rate scale (default 0.08, see DESIGN.md)
@@ -62,6 +61,7 @@ TRAIN FLAGS
   --algo A         sodda | radisa | radisa-avg (default sodda)
   --loss F         hinge | logistic | squared (default hinge)
   --b --c --d      sampling fractions (default 0.85/0.80/0.85)
+  --target-loss F  stop early once F(w) reaches this value
 ";
 
 fn main() {
@@ -145,51 +145,68 @@ fn run() -> Result<()> {
     }
 }
 
+/// Assemble the `train`/`perf`/`baselines` config from CLI flags through
+/// the validating builder (`algo` is parsed once by the caller, which
+/// also needs it for naming/printing).
+fn cfg_from(
+    args: &Args,
+    o: &Opts,
+    name: &str,
+    data: DataConfig,
+    algo: AlgorithmKind,
+) -> Result<ExperimentConfig> {
+    let loss: Loss = args.str_or("loss", "hinge").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    ExperimentConfig::builder()
+        .name(args.str_or("name", name))
+        .data(data)
+        .grid(o.p, o.q)
+        .loss(loss)
+        .algorithm(algo)
+        .fractions_bcd(
+            args.parse_or("b", 0.85f64)?,
+            args.parse_or("c", 0.80f64)?,
+            args.parse_or("d", 0.85f64)?,
+        )
+        .inner_steps(o.inner_steps)
+        .outer_iters(o.iters)
+        .schedule(Schedule::ScaledSqrt { gamma0: o.gamma0 })
+        .seed(o.seed)
+        .engine(o.engine)
+        .eval_every(args.parse_or("eval-every", 1usize)?)
+        .build()
+}
+
+fn parse_algo(args: &Args) -> Result<AlgorithmKind> {
+    args.str_or("algo", "sodda").parse().map_err(|e: String| anyhow::anyhow!(e))
+}
+
 fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
     let data = data_config(args, o)?;
-    let algo: AlgorithmKind =
-        args.str_or("algo", "sodda").parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let loss: Loss = args.str_or("loss", "hinge").parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let cfg = ExperimentConfig {
-        name: args.str_or("name", &format!("train_{algo}")),
-        data,
-        p: o.p,
-        q: o.q,
-        loss,
-        algorithm: algo,
-        fractions: SamplingFractions {
-            b: args.parse_or("b", 0.85f64)?,
-            c: args.parse_or("c", 0.80f64)?,
-            d: args.parse_or("d", 0.85f64)?,
-        },
-        inner_steps: o.inner_steps,
-        outer_iters: o.iters,
-        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
-        seed: o.seed,
-        engine: o.engine,
-        network: None,
-        eval_every: args.parse_or("eval-every", 1usize)?,
-    };
-    cfg.validate()?;
+    let algo = parse_algo(args)?;
+    let cfg = cfg_from(args, o, &format!("train_{algo}"), data, algo)?;
     println!("config:\n{}", cfg.to_json());
-    let ds = cfg.data.materialize(cfg.seed);
-    let engine = build_engine(&cfg)?;
-    println!(
-        "dataset {} ({} x {}), engine {}, algorithm {}",
-        ds.name,
-        ds.n(),
-        ds.m(),
-        engine.name(),
-        algo
-    );
+    let ds = cfg.data.try_materialize(cfg.seed)?;
+    println!("dataset {} ({} x {})", ds.name, ds.n(), ds.m());
+    let mut trainer = Trainer::with_dataset(cfg.clone(), ds)?;
+    println!("engine {}, algorithm {}\n", trainer.engine().name(), cfg.algorithm);
+
+    let target = args.parse_or("target-loss", f64::NEG_INFINITY)?;
     let t0 = Instant::now();
-    let out = train_with_engine(&cfg, &ds, engine)?;
+    println!("iter   F(w)       sim_s     comm_MB");
+    let out = trainer.run_with_observer(|r| {
+        println!("{:4}   {:.5}   {:8.3}  {:8.2}", r.iter, r.loss, r.sim_s, r.comm_bytes as f64 / 1e6);
+        if r.loss <= target {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    })?;
     let path = o.out_dir.join(format!("{}.csv", cfg.name));
     out.history.write_csv(&path)?;
     out.history.write_json(&o.out_dir.join(format!("{}.json", cfg.name)))?;
-    println!("\niter   F(w)       sim_s     comm_MB");
-    for r in out.history.records.iter() {
-        println!("{:4}   {:.5}   {:8.3}  {:8.2}", r.iter, r.loss, r.sim_s, r.comm_bytes as f64 / 1e6);
+    let stopped = trainer.iteration();
+    if stopped < cfg.outer_iters {
+        println!("\nearly stop: reached --target-loss {target} at iteration {stopped}");
     }
     println!(
         "\ndone in {:.2}s wall; final F = {:.5}; wrote {}",
@@ -204,7 +221,7 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
 fn cmd_gen_data(args: &Args, o: &Opts) -> Result<()> {
     use sodda::data::io;
     let data = data_config(args, o)?;
-    let ds = data.materialize(o.seed);
+    let ds = data.try_materialize(o.seed)?;
     let format = args.str_or("format", "libsvm");
     let default_name = format!(
         "{}.{}",
@@ -239,32 +256,19 @@ fn cmd_gen_data(args: &Args, o: &Opts) -> Result<()> {
 fn cmd_baselines(args: &Args, o: &Opts) -> Result<()> {
     use sodda::coordinator::baselines;
     use sodda::engine::NativeEngine;
+    use std::sync::Arc;
     let data = data_config(args, o)?;
     let batch = args.parse_or("batch", 128usize)?;
-    let cfg = ExperimentConfig {
-        name: "baselines".into(),
-        data,
-        p: o.p,
-        q: o.q,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: o.inner_steps,
-        outer_iters: o.iters,
-        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
-        seed: o.seed,
-        engine: o.engine,
-        network: None,
-        eval_every: 1,
-    };
-    let ds = cfg.data.materialize(cfg.seed);
+    let cfg = cfg_from(args, o, "baselines", data, parse_algo(args)?)?;
+    let ds = Arc::new(cfg.data.try_materialize(cfg.seed)?);
     println!("dataset {} ({} x {})\n", ds.name, ds.n(), ds.m());
-    let engine = build_engine(&cfg)?;
-    let sodda = train_with_engine(&cfg, &ds, Arc::clone(&engine))?.history;
+    let mut trainer = Trainer::with_dataset(cfg.clone(), Arc::clone(&ds))?;
+    let main_algo = cfg.algorithm.to_string();
+    let main_hist = trainer.run()?.history;
     let sgd = baselines::minibatch_sgd(&cfg, &ds, Arc::new(NativeEngine), batch)?;
     let cvr = baselines::central_vr(&cfg, &ds, Arc::new(NativeEngine), batch, 10)?;
     println!("{:<12} {:>10} {:>10} {:>12}", "method", "final F", "sim_s", "comm MB");
-    for (name, h) in [("sodda", &sodda), ("sgd", &sgd), ("central-vr", &cvr)] {
+    for (name, h) in [(main_algo.as_str(), &main_hist), ("sgd", &sgd), ("central-vr", &cvr)] {
         let last = h.records.last().unwrap();
         println!(
             "{name:<12} {:>10.4} {:>10.3} {:>12.2}",
@@ -277,44 +281,33 @@ fn cmd_baselines(args: &Args, o: &Opts) -> Result<()> {
     Ok(())
 }
 
-/// Phase-level wall-clock breakdown on a standard run (native + xla).
+/// Phase-level wall-clock breakdown on a standard run. The session is
+/// staged once and reused across the warm-up, timed and eval-off runs —
+/// so the measurement isolates the training path from staging cost.
 fn cmd_perf(args: &Args, o: &Opts) -> Result<()> {
     let data = data_config(args, o)?;
     println!("== perf breakdown ({} x {}, engine {:?}) ==", data.n(), data.m(), o.engine);
-    let mut cfg = ExperimentConfig {
-        name: "perf".into(),
-        data,
-        p: o.p,
-        q: o.q,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: o.inner_steps,
-        outer_iters: o.iters.min(10),
-        schedule: Schedule::ScaledSqrt { gamma0: o.gamma0 },
-        seed: o.seed,
-        engine: o.engine,
-        network: None,
-        eval_every: 1,
-    };
-    cfg.validate()?;
-    let ds = cfg.data.materialize(cfg.seed);
-    let engine = build_engine(&cfg)?;
-    // warm-up run (XLA: compiles + stages), then timed run
-    let _ = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let mut o_short = o.clone();
+    o_short.iters = o.iters.min(10);
+    let cfg = cfg_from(args, &o_short, "perf", data, parse_algo(args)?)?;
+    let ds = cfg.data.try_materialize(cfg.seed)?;
+    let mut trainer = Trainer::with_dataset(cfg.clone(), ds)?;
+    // warm-up run (XLA: compiles + stages), then timed run on the session
+    let _ = trainer.run()?;
+    trainer.reset();
     let t0 = Instant::now();
-    let out = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let out = trainer.run()?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "{} iterations in {wall:.3}s wall ({:.1} ms/iter) — engine {}",
         cfg.outer_iters,
         1e3 * wall / cfg.outer_iters as f64,
-        engine.name()
+        trainer.engine().name()
     );
     // eval-off run isolates the training path from objective evaluation
-    cfg.eval_every = cfg.outer_iters;
+    trainer.reconfigure(cfg.to_builder().eval_every(cfg.outer_iters).build()?)?;
     let t1 = Instant::now();
-    let _ = train_with_engine(&cfg, &ds, Arc::clone(&engine))?;
+    let _ = trainer.run()?;
     let train_only = t1.elapsed().as_secs_f64();
     println!(
         "training path only: {train_only:.3}s ({:.1} ms/iter); objective eval: {:.1} ms/iter",

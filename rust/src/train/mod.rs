@@ -1,0 +1,498 @@
+//! The training session layer: a reusable, observable [`Trainer`].
+//!
+//! A `Trainer` stages everything expensive exactly once — materializing
+//! the dataset, partitioning it into the `P×Q` [`crate::data::Grid`],
+//! building the compute engine (for XLA: compiling + device-staging the
+//! AOT artifacts), and launching the worker [`Cluster`] — and then runs
+//! any number of *runs* against that staged session. Rebuilding this
+//! state per run is the dominant avoidable cost in sweep workloads
+//! (cf. Dünner et al., arXiv:1612.01437), so the figure/table harnesses
+//! and the examples all drive one session per dataset.
+//!
+//! Three ways to drive a session:
+//!
+//! * [`Trainer::run`] — run the configured `T` outer iterations.
+//! * [`Trainer::step`] — one outer iteration at a time; the loop body
+//!   lives in [`step`](self) and is independently testable.
+//! * [`Trainer::run_with_observer`] — `run` with a streaming callback
+//!   `FnMut(&IterRecord) -> ControlFlow<()>` that sees every recorded
+//!   iteration as it lands and can stop the run early (loss targets,
+//!   simulated-time deadlines, wall-clock budgets — see [`observers`]).
+//!
+//! Between runs: [`Trainer::reconfigure`] starts a fresh run with a new
+//! (compatible) config on the same staged dataset/cluster/engine,
+//! [`Trainer::warm_start`] seeds ω^0 with a previous iterate for
+//! resumed/chained runs, and [`Trainer::reset`] restarts from scratch.
+//!
+//! The legacy free functions `coordinator::train` /
+//! `coordinator::train_with_engine` are thin shims over this type.
+
+mod step;
+
+pub mod observers;
+
+use std::ops::ControlFlow;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::{Cluster, CostModel, SimNet};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::data::{Dataset, Grid};
+use crate::engine::ComputeEngine;
+use crate::engine::NativeEngine;
+use crate::metrics::{History, IterRecord};
+use crate::util::rng::Rng;
+
+/// Result of one training run.
+pub struct TrainOutcome {
+    /// final parameter vector ω^T
+    pub w: Vec<f32>,
+    pub history: History,
+    /// simulated-network totals for reporting
+    pub comm_bytes: u64,
+    pub comm_msgs: u64,
+}
+
+/// Per-run mutable state; replaced wholesale by `reset`/`reconfigure`/
+/// `warm_start` while the staged session (dataset, cluster, engine)
+/// stays put.
+struct RunState {
+    w: Vec<f32>,
+    history: History,
+    net: SimNet,
+    rng_sets: Rng,
+    rng_perm: Rng,
+    rng_rows: Rng,
+    /// completed outer iterations (0 = freshly (re)configured)
+    t: usize,
+    grad_coord_evals: u64,
+    t_start: Instant,
+}
+
+/// A staged, reusable training session (see the module docs).
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    ds: Arc<Dataset>,
+    engine: Arc<dyn ComputeEngine>,
+    /// Leader-side elementwise ops (u = f'(z,y), Σf(z,y)) are O(n) scalar
+    /// maps — dispatching them through PJRT costs more than computing
+    /// them (perf log A1 in EXPERIMENTS.md §Perf): the leader always uses
+    /// the native engine, workers use the configured engine.
+    leader_engine: Arc<dyn ComputeEngine>,
+    cluster: Cluster,
+    state: RunState,
+}
+
+/// Build the engine named by the config. The XLA engine loads the AOT
+/// artifacts from `$SODDA_ARTIFACTS` (default `artifacts/`); it is only
+/// available when the crate is built with the `xla` cargo feature.
+pub fn build_engine(cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
+    match cfg.engine {
+        EngineKind::Native => Ok(Arc::new(NativeEngine)),
+        #[cfg(feature = "xla")]
+        EngineKind::Xla => {
+            let dir = std::env::var("SODDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            let rt = Arc::new(
+                crate::runtime::XlaRuntime::load(&dir).context(
+                    "loading AOT artifacts (build them with `make artifacts` at the partition shape)",
+                )?,
+            );
+            let n_per = cfg.data.n() / cfg.p;
+            let m_per = cfg.data.m() / cfg.q;
+            let mtilde = m_per / cfg.p;
+            Ok(Arc::new(crate::engine::XlaEngine::new(rt, n_per, m_per, mtilde, cfg.inner_steps)?))
+        }
+        #[cfg(not(feature = "xla"))]
+        EngineKind::Xla => anyhow::bail!(
+            "engine `xla` requested but this build has no PJRT support; \
+             rebuild with `cargo build --features xla`"
+        ),
+    }
+}
+
+impl Trainer {
+    /// Stage a full session from a config: materialize the dataset, build
+    /// the engine, partition, launch the cluster.
+    pub fn new(cfg: ExperimentConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let ds = cfg
+            .data
+            .try_materialize(cfg.seed)
+            .with_context(|| format!("materializing dataset for {:?}", cfg.name))?;
+        Self::with_dataset(cfg, ds)
+    }
+
+    /// Stage a session around a caller-provided dataset (figure harnesses
+    /// materialize once and hand the same dataset to several sessions;
+    /// pass an `Arc<Dataset>` to share it without copying).
+    pub fn with_dataset(
+        cfg: ExperimentConfig,
+        ds: impl Into<Arc<Dataset>>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        let engine = build_engine(&cfg)?;
+        Self::with_parts(cfg, ds, engine)
+    }
+
+    /// Stage a session around a caller-provided dataset *and* engine
+    /// (integration tests cross-check native vs XLA this way).
+    pub fn with_parts(
+        cfg: ExperimentConfig,
+        ds: impl Into<Arc<Dataset>>,
+        engine: Arc<dyn ComputeEngine>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        // a shape-specialized engine must match at staging time, not
+        // panic mid-run when the first inner loop ships a wrong-length
+        // idx vector (reconfigure enforces the same invariant)
+        if let Some(steps) = engine.fixed_inner_steps() {
+            ensure!(
+                cfg.inner_steps == steps,
+                "engine kernels are compiled at L={steps}, config {:?} wants L={}",
+                cfg.name,
+                cfg.inner_steps
+            );
+        }
+        let ds: Arc<Dataset> = ds.into();
+        ensure!(
+            ds.n() == cfg.data.n() && ds.m() == cfg.data.m(),
+            "dataset is {}x{} but config {:?} expects {}x{}",
+            ds.n(),
+            ds.m(),
+            cfg.name,
+            cfg.data.n(),
+            cfg.data.m()
+        );
+        let grid = Grid::partition(ds.as_ref(), cfg.p, cfg.q)?;
+        let cluster = Cluster::launch(grid, Arc::clone(&engine), cfg.loss);
+        Ok(Trainer {
+            state: fresh_state(&cfg, cluster.m_total),
+            cfg,
+            ds,
+            engine,
+            leader_engine: Arc::new(NativeEngine),
+            cluster,
+        })
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    pub fn engine(&self) -> &Arc<dyn ComputeEngine> {
+        &self.engine
+    }
+
+    /// Completed outer iterations of the current run.
+    pub fn iteration(&self) -> usize {
+        self.state.t
+    }
+
+    /// Current iterate ω^t.
+    pub fn weights(&self) -> &[f32] {
+        &self.state.w
+    }
+
+    /// History of the current run. The iteration-0 record `F(ω^0)` is
+    /// evaluated lazily when the run starts (first `step`/`run`), so a
+    /// freshly staged or reconfigured session has an empty history.
+    pub fn history(&self) -> &History {
+        &self.state.history
+    }
+
+    /// Has the current run reached its configured `outer_iters`?
+    pub fn is_done(&self) -> bool {
+        self.state.t >= self.cfg.outer_iters
+    }
+
+    /// Snapshot the current run as a [`TrainOutcome`] (clones).
+    pub fn outcome(&self) -> TrainOutcome {
+        TrainOutcome {
+            w: self.state.w.clone(),
+            history: self.state.history.clone(),
+            comm_bytes: self.state.net.total_bytes(),
+            comm_msgs: self.state.net.total_msgs(),
+        }
+    }
+
+    // ---- driving a run ---------------------------------------------------
+
+    /// One outer iteration. Returns the [`IterRecord`] when this
+    /// iteration was recorded (per `eval_every`), `None` otherwise.
+    /// Erroring on a finished run keeps silent no-op loops from hiding
+    /// bugs — `warm_start`/`reconfigure`/`reset` start the next run.
+    pub fn step(&mut self) -> Result<Option<IterRecord>> {
+        ensure!(
+            !self.is_done(),
+            "run {:?} already complete after {} iterations; \
+             use warm_start/reconfigure/reset to start another run",
+            self.cfg.name,
+            self.cfg.outer_iters
+        );
+        self.ensure_initial_record();
+        self.state.t += 1;
+        Ok(self.iterate())
+    }
+
+    /// Drive the current run to completion. Like [`Trainer::step`], an
+    /// already-completed run is an error — a sweep that forgot to
+    /// `reconfigure`/`reset` would otherwise silently get the previous
+    /// outcome back.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        self.run_with_observer(|_| ControlFlow::Continue(()))
+    }
+
+    /// Drive the current run to completion, streaming every recorded
+    /// [`IterRecord`] (including iteration 0 when starting fresh) to the
+    /// observer. `ControlFlow::Break` stops the run early; the returned
+    /// outcome's history is truncated at the last observed record, and
+    /// the run can be resumed by calling `run`/`step` again.
+    pub fn run_with_observer(
+        &mut self,
+        mut observer: impl FnMut(&IterRecord) -> ControlFlow<()>,
+    ) -> Result<TrainOutcome> {
+        ensure!(
+            !self.is_done(),
+            "run {:?} already complete after {} iterations; \
+             use warm_start/reconfigure/reset to start another run",
+            self.cfg.name,
+            self.cfg.outer_iters
+        );
+        // deliver iteration 0 only when it lands now — a run resumed
+        // after an early break at iteration 0 already delivered it
+        if self.state.t == 0 && self.state.history.records.is_empty() {
+            self.ensure_initial_record();
+            let first = self.state.history.records[0];
+            if observer(&first).is_break() {
+                return Ok(self.outcome());
+            }
+        }
+        while !self.is_done() {
+            if let Some(rec) = self.step()? {
+                if observer(&rec).is_break() {
+                    break;
+                }
+            }
+        }
+        Ok(self.outcome())
+    }
+
+    // ---- starting the next run ------------------------------------------
+
+    /// Restart the current config from scratch: ω^0 = 0, fresh RNG
+    /// streams, fresh cost model. The staged dataset/cluster/engine are
+    /// untouched.
+    pub fn reset(&mut self) {
+        self.state = fresh_state(&self.cfg, self.cluster.m_total);
+    }
+
+    /// Start a fresh run from a caller-provided initial iterate ω^0
+    /// (resumed/chained runs; warm-started baseline comparisons).
+    pub fn warm_start(&mut self, w0: &[f32]) -> Result<()> {
+        ensure!(
+            w0.len() == self.cluster.m_total,
+            "warm_start: w0 has {} coordinates, model has {}",
+            w0.len(),
+            self.cluster.m_total
+        );
+        self.state = fresh_state(&self.cfg, self.cluster.m_total);
+        self.state.w.copy_from_slice(w0);
+        Ok(())
+    }
+
+    /// Start a fresh run under a new config on the same staged session.
+    ///
+    /// Everything staged must stay valid, so the new config must keep the
+    /// session's dataset dimensions, partition grid, loss, and engine
+    /// kind (workers own their shards and loss; the XLA engine is
+    /// compiled at a fixed inner-loop length). Name, algorithm,
+    /// fractions, schedule, seed, iteration counts, eval cadence and
+    /// network model are free — which is exactly what the fig2/table2
+    /// sweeps vary. Note the session keeps the dataset it was staged
+    /// with: `cfg.seed` reseeds the training streams only.
+    pub fn reconfigure(&mut self, cfg: ExperimentConfig) -> Result<()> {
+        cfg.validate()?;
+        ensure!(
+            cfg.data.n() == self.ds.n() && cfg.data.m() == self.ds.m(),
+            "reconfigure: session dataset is {}x{}, new config expects {}x{}",
+            self.ds.n(),
+            self.ds.m(),
+            cfg.data.n(),
+            cfg.data.m()
+        );
+        ensure!(
+            cfg.p == self.cfg.p && cfg.q == self.cfg.q,
+            "reconfigure: session grid is {}x{}, new config wants {}x{} (stage a new Trainer)",
+            self.cfg.p,
+            self.cfg.q,
+            cfg.p,
+            cfg.q
+        );
+        ensure!(
+            cfg.loss == self.cfg.loss,
+            "reconfigure: session workers hold loss {}, new config wants {} (stage a new Trainer)",
+            self.cfg.loss.name(),
+            cfg.loss.name()
+        );
+        ensure!(
+            cfg.engine == self.cfg.engine,
+            "reconfigure: session engine kind {:?} != requested {:?} (stage a new Trainer)",
+            self.cfg.engine,
+            cfg.engine
+        );
+        // ask the engine the session actually holds, not the config kind —
+        // with_parts sessions can hold a shape-specialized engine under a
+        // Native-tagged config (the cross-check tests do exactly that)
+        if let Some(steps) = self.engine.fixed_inner_steps() {
+            ensure!(
+                cfg.inner_steps == steps,
+                "reconfigure: engine kernels are compiled at L={steps}, new config wants L={}",
+                cfg.inner_steps
+            );
+        }
+        self.cfg = cfg;
+        self.reset();
+        Ok(())
+    }
+
+    /// Push the iteration-0 record `F(ω^0)` if it isn't there yet.
+    /// Lazy (first `step`/`run`) so that staging, `reconfigure` and the
+    /// reconfigure-then-`warm_start` idiom never pay for an objective
+    /// evaluation that the next call would immediately discard.
+    fn ensure_initial_record(&mut self) {
+        if self.state.t == 0 && self.state.history.records.is_empty() {
+            // the run's wall clock starts when the run does, not at
+            // staging — sessions may sit staged for a while before use
+            self.state.t_start = Instant::now();
+            let loss = self.objective_now();
+            let rec = IterRecord {
+                iter: 0,
+                loss,
+                wall_s: self.state.t_start.elapsed().as_secs_f64(),
+                sim_s: 0.0,
+                comm_bytes: 0,
+                grad_coord_evals: 0,
+            };
+            self.state.history.push(rec);
+        }
+    }
+}
+
+fn fresh_state(cfg: &ExperimentConfig, m_total: usize) -> RunState {
+    // independent RNG streams (see util::rng docs)
+    let root = Rng::seed_from_u64(cfg.seed);
+    RunState {
+        w: vec![0.0f32; m_total],
+        history: History::new(&cfg.name),
+        net: SimNet::new(CostModel { net: cfg.network.unwrap_or_default(), ..CostModel::default() }),
+        rng_sets: root.fork(0xB0),
+        rng_perm: root.fork(0xC0),
+        rng_rows: root.fork(0xD0),
+        t: 0,
+        grad_coord_evals: 0,
+        t_start: Instant::now(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+
+    fn cfg(iters: usize) -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .name("trainer-unit")
+            .dense(200, 24)
+            .grid(2, 2)
+            .inner_steps(4)
+            .outer_iters(iters)
+            .seed(3)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn iteration_zero_is_recorded_lazily_at_run_start() {
+        let mut t = Trainer::new(cfg(5)).unwrap();
+        assert_eq!(t.iteration(), 0);
+        assert!(t.history().records.is_empty(), "no objective eval until the run starts");
+        assert!(!t.is_done());
+        t.step().unwrap();
+        assert_eq!(t.history().records[0].iter, 0);
+        assert_eq!(t.history().records.len(), 2); // F(ω^0) + iteration 1
+    }
+
+    #[test]
+    fn step_advances_and_errors_when_done() {
+        let mut t = Trainer::new(cfg(2)).unwrap();
+        assert!(t.step().unwrap().is_some());
+        assert!(t.step().unwrap().is_some());
+        assert!(t.is_done());
+        assert!(t.step().is_err());
+        assert!(t.run().is_err(), "run() on a completed run must not return stale results");
+    }
+
+    #[test]
+    fn eval_cadence_controls_step_records() {
+        let c = cfg(5).to_builder().eval_every(2).build().unwrap();
+        let mut t = Trainer::new(c).unwrap();
+        let mut recorded = Vec::new();
+        while !t.is_done() {
+            if let Some(r) = t.step().unwrap() {
+                recorded.push(r.iter);
+            }
+        }
+        // every 2nd iteration plus the final one
+        assert_eq!(recorded, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn reset_reproduces_the_same_run() {
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        let a = t.run().unwrap();
+        t.reset();
+        let b = t.run().unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.history.losses(), b.history.losses());
+    }
+
+    #[test]
+    fn reconfigure_rejects_incompatible_sessions() {
+        let mut t = Trainer::new(cfg(3)).unwrap();
+        let other_grid = cfg(3).to_builder().grid(2, 1).build().unwrap();
+        assert!(t.reconfigure(other_grid).is_err());
+        let other_loss =
+            cfg(3).to_builder().loss(crate::loss::Loss::Logistic).build().unwrap();
+        assert!(t.reconfigure(other_loss).is_err());
+        let other_dims = cfg(3).to_builder().dense(400, 24).build().unwrap();
+        assert!(t.reconfigure(other_dims).is_err());
+        // compatible: algorithm/fractions/seed changes
+        let variant = cfg(3)
+            .to_builder()
+            .algorithm(AlgorithmKind::RadisaAvg)
+            .seed(11)
+            .build()
+            .unwrap();
+        assert!(t.reconfigure(variant).is_ok());
+    }
+
+    #[test]
+    fn observer_sees_iteration_zero_first() {
+        let mut t = Trainer::new(cfg(3)).unwrap();
+        let mut seen = Vec::new();
+        t.run_with_observer(|r| {
+            seen.push(r.iter);
+            ControlFlow::Continue(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,55 @@
+//! Ready-made observers for
+//! [`Trainer::run_with_observer`](crate::train::Trainer::run_with_observer)
+//! (`FnMut(&IterRecord) -> ControlFlow<()>`): the paper's headline is
+//! *early-iteration* superiority, so stopping a run at a loss target or
+//! a time budget is a first-class scenario, not post-processing.
+
+use std::ops::ControlFlow;
+
+use crate::metrics::IterRecord;
+
+/// Stop once the objective reaches `target` (time-to-loss experiments).
+pub fn loss_below(target: f64) -> impl FnMut(&IterRecord) -> ControlFlow<()> {
+    move |r| if r.loss <= target { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+}
+
+/// Stop once the run has spent `budget_s` simulated cluster seconds
+/// (deadline budgets on the paper's time axis).
+pub fn sim_deadline(budget_s: f64) -> impl FnMut(&IterRecord) -> ControlFlow<()> {
+    move |r| if r.sim_s >= budget_s { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+}
+
+/// Stop once the run has spent `budget_s` wall-clock seconds in this
+/// process.
+pub fn wall_deadline(budget_s: f64) -> impl FnMut(&IterRecord) -> ControlFlow<()> {
+    move |r| if r.wall_s >= budget_s { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+}
+
+/// Stop after outer iteration `t` is recorded (truncated runs).
+pub fn at_iteration(t: usize) -> impl FnMut(&IterRecord) -> ControlFlow<()> {
+    move |r| if r.iter >= t { ControlFlow::Break(()) } else { ControlFlow::Continue(()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, loss: f64, sim_s: f64) -> IterRecord {
+        IterRecord { iter, loss, wall_s: sim_s, sim_s, comm_bytes: 0, grad_coord_evals: 0 }
+    }
+
+    #[test]
+    fn observers_trigger_on_their_condition() {
+        let mut o = loss_below(0.5);
+        assert!(o(&rec(1, 0.9, 0.0)).is_continue());
+        assert!(o(&rec(2, 0.4, 0.0)).is_break());
+
+        let mut o = sim_deadline(1.0);
+        assert!(o(&rec(1, 0.9, 0.5)).is_continue());
+        assert!(o(&rec(2, 0.9, 1.2)).is_break());
+
+        let mut o = at_iteration(2);
+        assert!(o(&rec(1, 0.9, 0.0)).is_continue());
+        assert!(o(&rec(2, 0.9, 0.0)).is_break());
+    }
+}

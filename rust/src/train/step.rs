@@ -1,0 +1,179 @@
+//! One outer iteration of Algorithm 1 (and the RADiSA variants), split
+//! out of the session type so the loop body is independently testable:
+//! [`Trainer::step`] is `t += 1` plus exactly one call into this module.
+//!
+//! Structure (SODDA; RADiSA variants take the full sets):
+//!
+//! 1. draw `(B^t, C^t, D^t)` (steps 5-7);
+//! 2. **µ^t estimate** (step 8) — distributed: workers compute partial
+//!    margins over B^t-masked parameters, the leader reduces z across
+//!    feature blocks, broadcasts `u = f'(z, y)`, workers return gradient
+//!    slices, the leader projects onto C^t and divides by `d^t`;
+//! 3. draw permutations `π_q` and run the `P×Q` parallel SVRG inner
+//!    loops on disjoint sub-blocks (steps 10-18);
+//! 4. concatenate sub-blocks into `ω^{t+1}` (step 19).
+
+use std::sync::Arc;
+
+use super::Trainer;
+use crate::cluster::SvrgTask;
+use crate::config::AlgorithmKind;
+use crate::coordinator::sampling::{self, SampleSets};
+use crate::metrics::IterRecord;
+
+impl Trainer {
+    /// Run outer iteration `self.state.t` (already advanced by `step`).
+    /// Returns the record when this iteration hits the eval cadence.
+    pub(super) fn iterate(&mut self) -> Option<IterRecord> {
+        let cfg = &self.cfg;
+        let (p, q) = (cfg.p, cfg.q);
+        let (n_per, m_per, mtilde) = (self.cluster.n_per, self.cluster.m_per, self.cluster.mtilde);
+        let (n_total, m_total) = (self.cluster.n_total, self.cluster.m_total);
+        let t = self.state.t;
+        let gamma = cfg.schedule.gamma(t) as f32;
+
+        // ---- sets (steps 5-7) -----------------------------------------------
+        let sets = match cfg.algorithm {
+            AlgorithmKind::Sodda => {
+                SampleSets::draw(&mut self.state.rng_sets, n_total, m_total, &cfg.fractions)
+            }
+            AlgorithmKind::Radisa | AlgorithmKind::RadisaAvg => SampleSets::full(n_total, m_total),
+        };
+        let rows_arc: Vec<Arc<Vec<u32>>> = sampling::rows_per_partition(&sets.d, p, n_per)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+
+        // ---- µ^t estimate (step 8) ------------------------------------------
+        let w_masked = sampling::mask_keep(&self.state.w, &sets.b);
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..q).map(|qi| Arc::new(w_masked[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+
+        let z = self.cluster.partial_z(&w_blocks, &rows_arc);
+        {
+            let mut bytes = 0u64;
+            let mut max_flops = 0f64;
+            for pi in 0..p {
+                for qi in 0..q {
+                    let bq = SampleSets::count_in_range(&sets.b, qi * m_per, (qi + 1) * m_per);
+                    bytes += 4 * (bq as u64 + rows_arc[pi].len() as u64);
+                    let fl =
+                        2.0 * rows_arc[pi].len() as f64 * bq as f64 * self.cluster.density_at(pi, qi);
+                    max_flops = max_flops.max(fl);
+                }
+            }
+            self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+        }
+
+        // u = f'(z, y) at the reduce site (leader)
+        let mut u_per_p: Vec<Arc<Vec<f32>>> = Vec::with_capacity(p);
+        for pi in 0..p {
+            let y_rows: Vec<f32> =
+                rows_arc[pi].iter().map(|&r| self.cluster.y[pi][r as usize]).collect();
+            u_per_p.push(Arc::new(self.leader_engine.dloss_u(cfg.loss, &z[pi], &y_rows)));
+        }
+        self.state.net.local(sets.d.len() as f64);
+
+        let mut g = self.cluster.grad(&u_per_p, &rows_arc);
+        {
+            let mut bytes = 0u64;
+            let mut max_flops = 0f64;
+            for pi in 0..p {
+                for qi in 0..q {
+                    let cq = SampleSets::count_in_range(&sets.c, qi * m_per, (qi + 1) * m_per);
+                    bytes += 4 * (rows_arc[pi].len() as u64 + cq as u64);
+                    let fl =
+                        2.0 * rows_arc[pi].len() as f64 * cq as f64 * self.cluster.density_at(pi, qi);
+                    max_flops = max_flops.max(fl);
+                }
+            }
+            self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+        }
+
+        // µ = (g ∘ C) / d^t
+        sampling::project_inplace(&mut g, &sets.c);
+        let inv_d = 1.0 / sets.d.len() as f32;
+        for v in g.iter_mut() {
+            *v *= inv_d;
+        }
+        let mu = g;
+        self.state.net.local(sets.c.len() as f64);
+        self.state.grad_coord_evals += (sets.c.len() * sets.d.len()) as u64;
+
+        // ---- inner loops (steps 9-18) + assembly (step 19) ------------------
+        // All three algorithms run one parallel sub-epoch: π_q assigns each
+        // worker a disjoint sub-block (bijection ⇒ disjoint cover of ω_[q]).
+        // SODDA/RADiSA write back the last iterate; RADiSA-avg writes back
+        // the suffix-averaged iterate (its "-avg" combiner).
+        let avg = cfg.algorithm == AlgorithmKind::RadisaAvg;
+        let mut tasks: Vec<SvrgTask> = Vec::with_capacity(p * q);
+        let mut task_cols: Vec<std::ops::Range<usize>> = Vec::with_capacity(p * q);
+        for qi in 0..q {
+            let perm = self.state.rng_perm.permutation(p);
+            for pi in 0..p {
+                let k = perm[pi] as usize;
+                let gcols = qi * m_per + k * mtilde..qi * m_per + (k + 1) * mtilde;
+                tasks.push(SvrgTask {
+                    p: pi,
+                    q: qi,
+                    cols: k * mtilde..(k + 1) * mtilde,
+                    w0: self.state.w[gcols.clone()].to_vec(),
+                    wt: self.state.w[gcols.clone()].to_vec(),
+                    mu: mu[gcols.clone()].to_vec(),
+                    idx: self.state.rng_rows.sample_with_replacement(n_per, cfg.inner_steps),
+                    gamma,
+                    avg,
+                });
+                task_cols.push(gcols);
+            }
+        }
+        for (ti, w_l) in self.cluster.svrg(tasks) {
+            self.state.w[task_cols[ti].clone()].copy_from_slice(&w_l);
+        }
+        let max_density = (0..p)
+            .flat_map(|pi| (0..q).map(move |qi| (pi, qi)))
+            .fold(0.0f64, |acc, (pi, qi)| acc.max(self.cluster.density_at(pi, qi)));
+        let flops = 6.0 * cfg.inner_steps as f64 * mtilde as f64 * max_density;
+        let bytes =
+            ((p * q) as u64) * 4 * (3 * mtilde as u64 + cfg.inner_steps as u64 + mtilde as u64);
+        self.state.net.phase(flops, bytes, 2 * (p * q) as u64, 1);
+        self.state.grad_coord_evals += (p * q * cfg.inner_steps * mtilde) as u64;
+
+        // ---- reporting -------------------------------------------------------
+        if t % cfg.eval_every == 0 || t == cfg.outer_iters {
+            let rec = IterRecord {
+                iter: t,
+                loss: self.objective_now(),
+                wall_s: self.state.t_start.elapsed().as_secs_f64(),
+                sim_s: self.state.net.sim_s(),
+                comm_bytes: self.state.net.total_bytes(),
+                grad_coord_evals: self.state.grad_coord_evals,
+            };
+            self.state.history.push(rec);
+            Some(rec)
+        } else {
+            None
+        }
+    }
+
+    /// Distributed objective F(ω^t) = (1/N) Σ f(x_i·ω, y_i): partial-z
+    /// reduce across feature blocks, loss sum per observation partition.
+    /// Not charged to the cost model (the paper evaluates loss curves
+    /// offline).
+    pub(super) fn objective_now(&self) -> f64 {
+        let q = self.cluster.q;
+        let m_per = self.cluster.m_per;
+        let w = &self.state.w;
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..q).map(|qi| Arc::new(w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
+            .map(|_| Arc::new((0..self.cluster.n_per as u32).collect()))
+            .collect();
+        let z = self.cluster.partial_z(&w_blocks, &rows);
+        let mut total = 0.0f64;
+        for pi in 0..self.cluster.p {
+            total += self.leader_engine.loss_from_z(self.cfg.loss, &z[pi], &self.cluster.y[pi]);
+        }
+        total / self.cluster.n_total as f64
+    }
+}

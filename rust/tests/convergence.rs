@@ -3,29 +3,23 @@
 
 use std::sync::Arc;
 
-use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::config::{AlgorithmKind, DataConfig, ExperimentConfig, Schedule};
 use sodda::coordinator::{train, train_with_engine};
-use sodda::data::{synth, Store};
+use sodda::data::Store;
 use sodda::engine::NativeEngine;
 use sodda::loss::Loss;
 
 fn cfg(name: &str) -> ExperimentConfig {
-    ExperimentConfig {
-        name: name.into(),
-        data: DataConfig::Dense { n: 600, m: 90 },
-        p: 3,
-        q: 3,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: 24,
-        outer_iters: 40,
-        schedule: Schedule::ScaledSqrt { gamma0: 0.25 },
-        seed: 5,
-        engine: EngineKind::Native,
-        network: None,
-        eval_every: 1,
-    }
+    ExperimentConfig::builder()
+        .name(name)
+        .dense(600, 90)
+        .grid(3, 3)
+        .inner_steps(24)
+        .outer_iters(40)
+        .schedule(Schedule::ScaledSqrt { gamma0: 0.25 })
+        .seed(5)
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -39,8 +33,7 @@ fn sodda_approaches_separable_optimum() {
 
 #[test]
 fn diminishing_rate_converges_monotonically_in_trend() {
-    let mut c = cfg("dim");
-    c.schedule = Schedule::InvT { gamma0: 1.0 };
+    let c = cfg("dim").to_builder().schedule(Schedule::InvT { gamma0: 1.0 }).build().unwrap();
     let out = train(&c).unwrap();
     let l = out.history.losses();
     // trend check: mean of last 5 well below mean of first 5
@@ -51,21 +44,24 @@ fn diminishing_rate_converges_monotonically_in_trend() {
 
 #[test]
 fn constant_rate_within_theorem3_bound_decreases() {
-    let mut c = cfg("const");
+    let base = cfg("const");
     // γ < 1/(L·M3·Q·P) with M3 ≈ 1 (standardized features)
-    let gamma = Schedule::max_constant_gamma(c.inner_steps, c.p, c.q) * 0.5;
-    c.schedule = Schedule::Constant { gamma };
+    let gamma = Schedule::max_constant_gamma(base.inner_steps, base.p, base.q) * 0.5;
+    let c = base.to_builder().schedule(Schedule::Constant { gamma }).build().unwrap();
     let out = train(&c).unwrap();
     assert!(out.history.final_loss().unwrap() < out.history.losses()[0]);
 }
 
 #[test]
 fn squared_loss_approaches_least_squares_optimum() {
-    let mut c = cfg("sq");
-    c.loss = Loss::Squared;
-    c.schedule = Schedule::Constant { gamma: 0.02 };
-    c.outer_iters = 60;
-    let ds = c.data.materialize(c.seed);
+    let c = cfg("sq")
+        .to_builder()
+        .loss(Loss::Squared)
+        .schedule(Schedule::Constant { gamma: 0.02 })
+        .outer_iters(60)
+        .build()
+        .unwrap();
+    let ds = c.data.try_materialize(c.seed).unwrap();
     let out = train_with_engine(&c, &ds, Arc::new(NativeEngine)).unwrap();
 
     // exact optimum via normal equations (ridge ε for conditioning)
@@ -132,16 +128,17 @@ fn squared_loss_approaches_least_squares_optimum() {
 fn sodda_beats_radisa_avg_early_in_sim_time() {
     // the paper's headline (Figures 2-4): SODDA reaches good solutions
     // faster in early iterations; RADiSA-avg catches up later.
-    let mut base = cfg("h2h");
-    base.data = DataConfig::Dense { n: 2500, m: 180 };
-    base.p = 5;
-    base.q = 3;
-    base.inner_steps = 32;
-    base.schedule = Schedule::ScaledSqrt { gamma0: 0.08 };
-    let ds = base.data.materialize(base.seed);
+    let base = cfg("h2h")
+        .to_builder()
+        .dense(2500, 180)
+        .grid(5, 3)
+        .inner_steps(32)
+        .schedule(Schedule::ScaledSqrt { gamma0: 0.08 })
+        .build()
+        .unwrap();
+    let ds = base.data.try_materialize(base.seed).unwrap();
     let sodda = train_with_engine(&base, &ds, Arc::new(NativeEngine)).unwrap();
-    let mut cavg = base.clone();
-    cavg.algorithm = AlgorithmKind::RadisaAvg;
+    let cavg = base.to_builder().algorithm(AlgorithmKind::RadisaAvg).build().unwrap();
     let ravg = train_with_engine(&cavg, &ds, Arc::new(NativeEngine)).unwrap();
 
     // target: the loss RADiSA-avg reaches ~1/3 into its run; SODDA must
@@ -160,9 +157,12 @@ fn sodda_beats_radisa_avg_early_in_sim_time() {
 
 #[test]
 fn logistic_trains_on_sparse_data() {
-    let mut c = cfg("sparse-logistic");
-    c.data = DataConfig::Sparse { n: 600, m: 180, avg_nnz: 12 };
-    c.loss = Loss::Logistic;
+    let c = cfg("sparse-logistic")
+        .to_builder()
+        .data(DataConfig::Sparse { n: 600, m: 180, avg_nnz: 12 })
+        .loss(Loss::Logistic)
+        .build()
+        .unwrap();
     let out = train(&c).unwrap();
     assert!(out.history.final_loss().unwrap() < out.history.losses()[0]);
 }
@@ -171,10 +171,8 @@ fn logistic_trains_on_sparse_data() {
 fn larger_d_gives_no_worse_final_loss_usually() {
     // Figure 2(a) trend: more observations in µ^t → better late accuracy.
     // Stochastic, so compare min losses with slack rather than strictly.
-    let mut lo = cfg("d60");
-    lo.fractions = SamplingFractions { b: 1.0, c: 1.0, d: 0.6 };
-    let mut hi = cfg("d90");
-    hi.fractions = SamplingFractions { b: 1.0, c: 1.0, d: 0.9 };
+    let lo = cfg("d60").to_builder().fractions_bcd(1.0, 1.0, 0.6).build().unwrap();
+    let hi = cfg("d90").to_builder().fractions_bcd(1.0, 1.0, 0.9).build().unwrap();
     let out_lo = train(&lo).unwrap();
     let out_hi = train(&hi).unwrap();
     assert!(

@@ -3,13 +3,16 @@
 //! to f32 rounding — this is the end-to-end proof that all three layers
 //! compose.
 //!
-//! Requires `make artifacts` (the tiny `artifacts/test` bucket). Tests
-//! skip with a loud message when the bucket is missing so plain
-//! `cargo test` stays usable before artifacts are built.
+//! Requires the `xla` cargo feature (`cargo test --features xla`) and
+//! `make artifacts` (the tiny `artifacts/test` bucket). Tests skip with
+//! a loud message when the bucket is missing so `cargo test` stays
+//! usable before artifacts are built; without the feature this whole
+//! file compiles away.
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 
-use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::config::{AlgorithmKind, ExperimentConfig, Schedule};
 use sodda::coordinator::{train_with_engine, TrainOutcome};
 use sodda::data::synth;
 use sodda::engine::{BlockKey, ComputeEngine, NativeEngine, XlaEngine};
@@ -28,29 +31,25 @@ fn test_bucket() -> Option<Arc<XlaRuntime>> {
 }
 
 fn cfg(algo: AlgorithmKind, loss: Loss) -> ExperimentConfig {
-    ExperimentConfig {
-        name: "xla-vs-native".into(),
-        // p=3, q=2 over 300×60 ⇒ blocks 100×30, sub-blocks 100×10: exactly
-        // the artifacts/test bucket (n=100, m=30, m̃=10, L=16)
-        data: DataConfig::Dense { n: 300, m: 60 },
-        p: 3,
-        q: 2,
-        loss,
-        algorithm: algo,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: 16,
-        outer_iters: 6,
-        schedule: Schedule::PaperSqrt,
-        seed: 11,
-        engine: EngineKind::Native,
-        network: None,
-        eval_every: 1,
-    }
+    // p=3, q=2 over 300×60 ⇒ blocks 100×30, sub-blocks 100×10: exactly
+    // the artifacts/test bucket (n=100, m=30, m̃=10, L=16)
+    ExperimentConfig::builder()
+        .name("xla-vs-native")
+        .dense(300, 60)
+        .grid(3, 2)
+        .loss(loss)
+        .algorithm(algo)
+        .inner_steps(16)
+        .outer_iters(6)
+        .schedule(Schedule::PaperSqrt)
+        .seed(11)
+        .build()
+        .unwrap()
 }
 
 fn run(algo: AlgorithmKind, loss: Loss, engine: Arc<dyn ComputeEngine>) -> TrainOutcome {
     let c = cfg(algo, loss);
-    let ds = c.data.materialize(c.seed);
+    let ds = c.data.try_materialize(c.seed).unwrap();
     train_with_engine(&c, &ds, engine).unwrap()
 }
 

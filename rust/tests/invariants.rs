@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use sodda::config::{AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::config::{AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
 use sodda::coordinator::{train, train_with_engine};
 use sodda::data::{synth, Grid};
 use sodda::engine::NativeEngine;
@@ -15,26 +15,22 @@ fn cfg_for(rng: &mut sodda::util::rng::Rng) -> ExperimentConfig {
     let q = 1 + rng.below(3);
     let n = (1 + rng.below(6)) * p * 50;
     let m = (1 + rng.below(4)) * p * q * 4;
-    ExperimentConfig {
-        name: "prop".into(),
-        data: DataConfig::Dense { n, m },
-        p,
-        q,
-        loss: [Loss::Hinge, Loss::Logistic, Loss::Squared][rng.below(3)],
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions {
+    ExperimentConfig::builder()
+        .name("prop")
+        .dense(n, m)
+        .grid(p, q)
+        .loss([Loss::Hinge, Loss::Logistic, Loss::Squared][rng.below(3)])
+        .fractions(SamplingFractions {
             b: 0.4 + rng.unit_f64() * 0.6,
             c: 0.3,
             d: 0.4 + rng.unit_f64() * 0.6,
-        },
-        inner_steps: 1 + rng.below(16),
-        outer_iters: 2,
-        schedule: Schedule::ScaledSqrt { gamma0: 0.05 },
-        seed: rng.next_u64(),
-        engine: EngineKind::Native,
-        network: None,
-        eval_every: 1,
-    }
+        })
+        .inner_steps(1 + rng.below(16))
+        .outer_iters(2)
+        .schedule(Schedule::ScaledSqrt { gamma0: 0.05 })
+        .seed(rng.next_u64())
+        .build()
+        .expect("random config within builder invariants")
 }
 
 #[test]
@@ -52,12 +48,15 @@ fn sodda_with_full_fractions_equals_radisa_exactly() {
     // Corollary 1: RADiSA is SODDA at (b, c, d) = (M, M, N). The two code
     // paths must coincide bit-for-bit given the same seed.
     forall(8, 202, |rng| {
-        let mut cfg = cfg_for(rng);
-        cfg.fractions = SamplingFractions::FULL;
-        cfg.algorithm = AlgorithmKind::Sodda;
-        let a = train(&cfg).unwrap();
-        cfg.algorithm = AlgorithmKind::Radisa;
-        let b = train(&cfg).unwrap();
+        let base = cfg_for(rng)
+            .to_builder()
+            .fractions(SamplingFractions::FULL)
+            .algorithm(AlgorithmKind::Sodda)
+            .build()
+            .unwrap();
+        let a = train(&base).unwrap();
+        let radisa = base.to_builder().algorithm(AlgorithmKind::Radisa).build().unwrap();
+        let b = train(&radisa).unwrap();
         assert_eq!(a.w, b.w, "full-fraction SODDA must equal RADiSA");
         assert_eq!(a.history.losses(), b.history.losses());
     });
@@ -67,7 +66,7 @@ fn sodda_with_full_fractions_equals_radisa_exactly() {
 fn cluster_objective_matches_serial_objective() {
     forall(10, 303, |rng| {
         let cfg = cfg_for(rng);
-        let ds = cfg.data.materialize(cfg.seed);
+        let ds = cfg.data.try_materialize(cfg.seed).unwrap();
         let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine)).unwrap();
         let serial = ds.objective(&out.w, cfg.loss);
         let reported = out.history.final_loss().unwrap();
@@ -114,21 +113,17 @@ fn partition_blocks_cover_matrix_disjointly() {
 fn grad_coord_evals_scale_with_fractions() {
     // the paper's §1 claim: fewer gradient coordinate computations in
     // early iterations is exactly what (b, c, d) < 1 buys
-    let mk = |c: f64, d: f64| ExperimentConfig {
-        name: "gc".into(),
-        data: DataConfig::Dense { n: 400, m: 60 },
-        p: 2,
-        q: 2,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions { b: 1.0, c, d },
-        inner_steps: 8,
-        outer_iters: 3,
-        schedule: Schedule::ScaledSqrt { gamma0: 0.05 },
-        seed: 1,
-        engine: EngineKind::Native,
-        network: None,
-        eval_every: 1,
+    let mk = |c: f64, d: f64| {
+        ExperimentConfig::builder()
+            .name("gc")
+            .dense(400, 60)
+            .grid(2, 2)
+            .fractions_bcd(1.0, c, d)
+            .inner_steps(8)
+            .outer_iters(3)
+            .schedule(Schedule::ScaledSqrt { gamma0: 0.05 })
+            .build()
+            .unwrap()
     };
     let lo = train(&mk(0.4, 0.5)).unwrap();
     let hi = train(&mk(1.0, 1.0)).unwrap();
@@ -142,25 +137,19 @@ fn grad_coord_evals_scale_with_fractions() {
 
 #[test]
 fn eval_every_thins_history_but_not_training() {
-    let mut cfg = ExperimentConfig {
-        name: "ee".into(),
-        data: DataConfig::Dense { n: 200, m: 24 },
-        p: 2,
-        q: 2,
-        loss: Loss::Hinge,
-        algorithm: AlgorithmKind::Sodda,
-        fractions: SamplingFractions::PAPER,
-        inner_steps: 4,
-        outer_iters: 9,
-        schedule: Schedule::PaperSqrt,
-        seed: 3,
-        engine: EngineKind::Native,
-        network: None,
-        eval_every: 1,
-    };
+    let cfg = ExperimentConfig::builder()
+        .name("ee")
+        .dense(200, 24)
+        .grid(2, 2)
+        .inner_steps(4)
+        .outer_iters(9)
+        .schedule(Schedule::PaperSqrt)
+        .seed(3)
+        .build()
+        .unwrap();
     let dense_hist = train(&cfg).unwrap();
-    cfg.eval_every = 4;
-    let thin_hist = train(&cfg).unwrap();
+    let thin_cfg = cfg.to_builder().eval_every(4).build().unwrap();
+    let thin_hist = train(&thin_cfg).unwrap();
     assert_eq!(dense_hist.w, thin_hist.w, "eval cadence must not affect training");
     assert!(thin_hist.history.records.len() < dense_hist.history.records.len());
     // final iteration always recorded

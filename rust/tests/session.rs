@@ -1,0 +1,197 @@
+//! Integration tests for the session API: builder validation at the
+//! public surface, streaming observers (early stop, deadlines), session
+//! reuse across sweep runs, warm starts, and the step-driven loop.
+
+use std::ops::ControlFlow;
+
+use sodda::config::{AlgorithmKind, Schedule};
+use sodda::train::observers;
+use sodda::{ExperimentConfig, ExperimentConfigBuilder, Trainer};
+
+fn base() -> ExperimentConfigBuilder {
+    ExperimentConfig::builder()
+        .name("session-test")
+        .dense(300, 60)
+        .grid(3, 2)
+        .inner_steps(8)
+        .outer_iters(6)
+        .seed(7)
+}
+
+// ---------------------------------------------------------------------------
+// builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_pq_non_divisibility() {
+    // N = 300 not divisible by P = 7
+    assert!(base().grid(7, 2).build().is_err());
+    // M = 60 not divisible by Q·P = 3·3 = 9
+    assert!(base().grid(3, 3).build().is_err());
+    assert!(base().grid(3, 2).build().is_ok());
+}
+
+#[test]
+fn builder_rejects_out_of_range_fractions() {
+    assert!(base().fractions_bcd(0.0, 0.0, 0.5).build().is_err(), "b = 0");
+    assert!(base().fractions_bcd(1.2, 0.8, 0.5).build().is_err(), "b > 1");
+    assert!(base().fractions_bcd(0.5, 0.8, 0.5).build().is_err(), "c > b");
+    assert!(base().fractions_bcd(0.9, 0.8, -0.1).build().is_err(), "d < 0");
+    assert!(base().fractions_bcd(0.9, 0.8, 0.9).build().is_ok());
+}
+
+#[test]
+fn builder_rejects_zero_iterations_and_bad_schedules() {
+    assert!(base().outer_iters(0).build().is_err());
+    assert!(base().inner_steps(0).build().is_err());
+    assert!(base().schedule(Schedule::Constant { gamma: 0.0 }).build().is_err());
+    assert!(base().schedule(Schedule::ScaledSqrt { gamma0: f64::NAN }).build().is_err());
+}
+
+#[test]
+fn builder_requires_data() {
+    assert!(ExperimentConfig::builder().build().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// observers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observer_early_stop_halts_with_truncated_history() {
+    let cfg = base().outer_iters(20).build().unwrap();
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let out = trainer.run_with_observer(observers::at_iteration(5)).unwrap();
+    // stopped exactly at the requested iteration: records 0..=5
+    assert_eq!(out.history.records.last().unwrap().iter, 5);
+    assert_eq!(out.history.records.len(), 6);
+    assert_eq!(trainer.iteration(), 5);
+    assert!(!trainer.is_done(), "early stop leaves the run resumable");
+}
+
+#[test]
+fn observer_streams_every_record_in_order() {
+    let cfg = base().build().unwrap();
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let mut iters = Vec::new();
+    let out = trainer
+        .run_with_observer(|r| {
+            iters.push(r.iter);
+            ControlFlow::Continue(())
+        })
+        .unwrap();
+    assert_eq!(iters, (0..=6).collect::<Vec<_>>());
+    assert_eq!(out.history.records.len(), 7);
+}
+
+#[test]
+fn loss_target_observer_stops_before_the_horizon() {
+    let cfg = base().outer_iters(40).build().unwrap();
+    let mut trainer = Trainer::new(cfg).unwrap();
+    // hinge loss at ω^0 = 0 is exactly 1; target a 5% reduction
+    let mut target = observers::loss_below(0.95);
+    let out = trainer.run_with_observer(&mut target).unwrap();
+    assert_eq!(out.history.records[0].loss, 1.0, "F(0) for hinge is 1");
+    assert!(out.history.final_loss().unwrap() <= 0.95);
+    assert!(trainer.iteration() < 40, "should reach an easy target early");
+}
+
+// ---------------------------------------------------------------------------
+// session reuse (the fig2/table2 sweep pattern)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_sweep_runs_on_one_session_match_two_fresh_sessions() {
+    let cfg_a = base().name("sweep-a").fractions_bcd(0.85, 0.80, 0.85).build().unwrap();
+    let cfg_b = base().name("sweep-b").algorithm(AlgorithmKind::RadisaAvg).build().unwrap();
+
+    // one staged session, two runs
+    let mut session = Trainer::new(cfg_a.clone()).unwrap();
+    let shared_a = session.run().unwrap();
+    session.reconfigure(cfg_b.clone()).unwrap();
+    let shared_b = session.run().unwrap();
+
+    // a fresh session per run
+    let mut fresh = Trainer::new(cfg_a).unwrap();
+    let fresh_a = fresh.run().unwrap();
+    let mut fresh = Trainer::new(cfg_b).unwrap();
+    let fresh_b = fresh.run().unwrap();
+
+    assert_eq!(shared_a.w, fresh_a.w, "reused session must not perturb run A");
+    assert_eq!(shared_a.history.losses(), fresh_a.history.losses());
+    assert_eq!(shared_b.w, fresh_b.w, "reused session must not perturb run B");
+    assert_eq!(shared_b.history.losses(), fresh_b.history.losses());
+}
+
+#[test]
+fn reseeded_runs_on_one_session_differ_and_reproduce() {
+    let cfg = base().build().unwrap();
+    let mut session = Trainer::new(cfg.clone()).unwrap();
+    let a = session.run().unwrap();
+    session.reconfigure(cfg.to_builder().seed(8).build().unwrap()).unwrap();
+    let b = session.run().unwrap();
+    assert_ne!(a.w, b.w, "different training seed must change the trajectory");
+    session.reconfigure(cfg).unwrap();
+    let a2 = session.run().unwrap();
+    assert_eq!(a.w, a2.w, "same config must reproduce bit-for-bit");
+}
+
+#[test]
+fn reconfigure_rejects_grid_loss_and_dim_changes() {
+    let mut session = Trainer::new(base().build().unwrap()).unwrap();
+    assert!(session.reconfigure(base().grid(1, 1).build().unwrap()).is_err());
+    assert!(session
+        .reconfigure(base().loss(sodda::loss::Loss::Squared).build().unwrap())
+        .is_err());
+    assert!(session.reconfigure(base().dense(600, 60).build().unwrap()).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// warm starts and step-driven runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_start_chains_runs_from_the_prior_iterate() {
+    let mut session = Trainer::new(base().build().unwrap()).unwrap();
+    let first = session.run().unwrap();
+    session.warm_start(&first.w).unwrap();
+    let second = session.run().unwrap();
+    // iteration 0 of the chained run evaluated F at the warm-start point
+    assert_eq!(second.history.records[0].loss, first.history.final_loss().unwrap());
+    assert!(
+        second.history.final_loss().unwrap() < first.history.losses()[0],
+        "chained run must stay far below the cold start"
+    );
+    // wrong length is rejected
+    assert!(session.warm_start(&[0.0; 3]).is_err());
+}
+
+#[test]
+fn step_driven_loop_matches_run() {
+    let cfg = base().build().unwrap();
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    let ra = a.run().unwrap();
+
+    let mut b = Trainer::new(cfg).unwrap();
+    let mut recorded = 1; // iteration 0
+    while !b.is_done() {
+        if b.step().unwrap().is_some() {
+            recorded += 1;
+        }
+    }
+    assert!(b.step().is_err(), "stepping past the horizon is an error");
+    let rb = b.outcome();
+    assert_eq!(ra.w, rb.w);
+    assert_eq!(ra.history.losses(), rb.history.losses());
+    assert_eq!(recorded, rb.history.records.len());
+}
+
+#[test]
+fn legacy_shim_matches_session_run() {
+    let cfg = base().build().unwrap();
+    let shim = sodda::coordinator::train(&cfg).unwrap();
+    let mut session = Trainer::new(cfg).unwrap();
+    let direct = session.run().unwrap();
+    assert_eq!(shim.w, direct.w);
+    assert_eq!(shim.history.losses(), direct.history.losses());
+}
