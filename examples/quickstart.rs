@@ -6,6 +6,9 @@
 //! Uses the native engine so it runs without `make artifacts`; pass
 //! `--engine xla` (after `make artifacts` and building with
 //! `--features xla`) to execute the AOT JAX/Pallas kernels through PJRT.
+//! `--n/--m/--iters` shrink the run — CI's example-smoke job drives
+//! `--n 600 --m 60 --iters 3` to exercise the session API end-to-end
+//! on every PR.
 
 use std::ops::ControlFlow;
 
@@ -24,9 +27,9 @@ fn main() -> anyhow::Result<()> {
     // schedule sanity) happens at build time.
     let cfg = ExperimentConfig::builder()
         .name("quickstart")
-        .dense(5000, 360)
+        .dense(args.parse_or("n", 5000usize)?, args.parse_or("m", 360usize)?)
         .grid(5, 3)
-        .outer_iters(25)
+        .outer_iters(args.parse_or("iters", 25usize)?)
         .seed(42)
         .engine(engine_kind)
         .build()?;

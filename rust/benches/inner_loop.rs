@@ -18,6 +18,24 @@ fn main() {
         let w0: Vec<f32> = (0..mt).map(|i| (i as f32).cos() * 0.1).collect();
         let mu = vec![0.01f32; mt];
         let idx = rng.sample_with_replacement(1000, steps);
+        // two-pass scalar reference: current + reference margins as
+        // separate row-dots (the pre-fusion inner step)
+        b.bench(&format!("scalar/two-pass/dense m̃={mt} L={steps}"), || {
+            let mut w = w0.clone();
+            for &j in &idx {
+                let j = j as usize;
+                let z_cur = ds.x.row_dot_range(j, 0, mt, &w);
+                let z_ref = ds.x.row_dot_range(j, 0, mt, &w0);
+                let du = Loss::Hinge.dloss(z_cur, ds.y[j]) - Loss::Hinge.dloss(z_ref, ds.y[j]);
+                if du != 0.0 {
+                    ds.x.add_row_scaled_range(j, 0, mt, -0.05 * du, &mut w);
+                }
+                for (wk, &mk) in w.iter_mut().zip(&mu) {
+                    *wk -= 0.05 * mk;
+                }
+            }
+            w
+        });
         b.bench(&format!("native/dense m̃={mt} L={steps}"), || {
             native.svrg_inner(key, Loss::Hinge, &ds.x, &ds.y, 0..mt, &w0, &w0, &mu, &idx, 0.05)
         });

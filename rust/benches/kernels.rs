@@ -1,8 +1,13 @@
-//! Micro-benchmarks of the L1-equivalent compute primitives: native rust
-//! vs the AOT JAX/Pallas artifacts through PJRT.
+//! Micro-benchmarks of the L1-equivalent compute primitives: the batched
+//! native kernel layer vs the per-row scalar path it replaced, and (with
+//! `--features xla` + `make artifacts`) the AOT JAX/Pallas artifacts
+//! through PJRT.
 //!
-//! Run `make artifacts` first for the XLA rows (they skip otherwise).
-//! BENCH_QUICK=1 shortens measurement for CI smoke.
+//! `BENCH_QUICK=1` shortens measurement for CI smoke; `BENCH_OUT`
+//! overrides the JSON report path (default `target/bench/kernels.json`).
+//! The `scalar/...` rows drive the same per-row `Store` ops the
+//! pre-batching `NativeEngine` used, so the `native/...` rows quantify
+//! exactly what batching + fusion buys (see BENCH_2.json).
 
 use sodda::data::synth;
 use sodda::engine::{BlockKey, ComputeEngine, NativeEngine};
@@ -20,22 +25,63 @@ fn main() {
     let rows: Vec<u32> = (0..1000).collect();
     let u: Vec<f32> = (0..1000).map(|i| ((i % 3) as f32 - 1.0) * 0.5).collect();
     let native = NativeEngine;
+    let dense_elems = 1000 * 120u64;
+    let sparse_elems = sparse.x.nnz() as u64;
 
-    b.bench("native/partial_z/dense 1000x120", || {
+    // ---- partial_z: per-row scalar reference vs batched kernel --------------
+    b.bench_elems("scalar/partial_z/dense 1000x120", dense_elems, || {
+        rows.iter().map(|&r| dense.x.row_dot_range(r as usize, 0, 120, &w)).collect::<Vec<f32>>()
+    });
+    b.bench_elems("native/partial_z/dense 1000x120", dense_elems, || {
         native.partial_z(key, &dense.x, 0..120, &w, &rows)
     });
-    b.bench("native/partial_z/sparse 1000x120", || {
+    b.bench_elems("scalar/partial_z/sparse 1000x120", sparse_elems, || {
+        rows.iter().map(|&r| sparse.x.row_dot_range(r as usize, 0, 120, &w)).collect::<Vec<f32>>()
+    });
+    b.bench_elems("native/partial_z/sparse 1000x120", sparse_elems, || {
         native.partial_z(key, &sparse.x, 0..120, &w, &rows)
     });
-    b.bench("native/grad_slice/dense 1000x120", || {
+
+    // ---- grad_slice ---------------------------------------------------------
+    b.bench_elems("scalar/grad_slice/dense 1000x120", dense_elems, || {
+        let mut g = vec![0.0f32; 120];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            dense.x.add_row_scaled_range(r as usize, 0, 120, uk, &mut g);
+        }
+        g
+    });
+    b.bench_elems("native/grad_slice/dense 1000x120", dense_elems, || {
         native.grad_slice(key, &dense.x, 0..120, &rows, &u)
     });
-    b.bench("native/grad_slice/sparse 1000x120", || {
+    b.bench_elems("scalar/grad_slice/sparse 1000x120", sparse_elems, || {
+        let mut g = vec![0.0f32; 120];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            sparse.x.add_row_scaled_range(r as usize, 0, 120, uk, &mut g);
+        }
+        g
+    });
+    b.bench_elems("native/grad_slice/sparse 1000x120", sparse_elems, || {
         native.grad_slice(key, &sparse.x, 0..120, &rows, &u)
     });
+
+    // ---- fused partial_u vs compose (z, gather y, dloss) --------------------
+    b.bench_elems("scalar/partial_u/dense 1000x120", dense_elems, || {
+        let z: Vec<f32> =
+            rows.iter().map(|&r| dense.x.row_dot_range(r as usize, 0, 120, &w)).collect();
+        let y_rows: Vec<f32> = rows.iter().map(|&r| dense.y[r as usize]).collect();
+        native.dloss_u(Loss::Hinge, &z, &y_rows)
+    });
+    b.bench_elems("native/partial_u/dense 1000x120", dense_elems, || {
+        native.partial_u(key, Loss::Hinge, &dense.x, 0..120, &w, &rows, &dense.y)
+    });
+
+    // ---- elementwise + objective --------------------------------------------
     let z = native.partial_z(key, &dense.x, 0..120, &w, &rows);
     b.bench("native/dloss_u/hinge 1000", || native.dloss_u(Loss::Hinge, &z, &dense.y));
     b.bench("native/loss_from_z/hinge 1000", || native.loss_from_z(Loss::Hinge, &z, &dense.y));
+    b.bench_elems("native/block_loss/dense 1000x120", dense_elems, || {
+        native.block_loss(key, Loss::Hinge, &dense.x, 0..120, &w, &rows, &dense.y)
+    });
 
     // XLA path (needs the default artifact bucket and --features xla)
     #[cfg(feature = "xla")]
@@ -47,10 +93,10 @@ fn main() {
             let _ = xla.partial_z(key, &dense.x, 0..120, &w, &rows);
             let _ = xla.grad_slice(key, &dense.x, 0..120, &rows, &u);
             let _ = xla.dloss_u(Loss::Hinge, &z, &dense.y);
-            b.bench("xla/partial_z/dense 1000x120", || {
+            b.bench_elems("xla/partial_z/dense 1000x120", dense_elems, || {
                 xla.partial_z(key, &dense.x, 0..120, &w, &rows)
             });
-            b.bench("xla/grad_slice/dense 1000x120", || {
+            b.bench_elems("xla/grad_slice/dense 1000x120", dense_elems, || {
                 xla.grad_slice(key, &dense.x, 0..120, &rows, &u)
             });
             b.bench("xla/dloss_u/hinge 1000", || xla.dloss_u(Loss::Hinge, &z, &dense.y));

@@ -25,6 +25,13 @@ use crate::loss::Loss;
 enum Cmd {
     /// z_part = X[rows, :] · w  (w pre-masked by B^t, full block width)
     PartialZ { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    /// u = f'(X[rows, :]·w, y[rows]) — fused margin + loss derivative
+    /// (batched `partial_u` engine entry point); only dispatched on
+    /// Q = 1 grids, where the block holds the complete margin
+    PartialU { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    /// Σ_rows f(X[rows, :]·w, y[rows]) — fused objective term
+    /// (batched `block_loss` engine entry point); Q = 1 grids only
+    BlockLoss { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
     /// g = Σ_rows u·x_row over the full block width
     GradSlice { u: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
     /// L SVRG steps on the sub-block `cols` (block-local range); `avg`
@@ -36,6 +43,8 @@ enum Cmd {
 /// Worker replies (tagged with the worker's linear id by the channel).
 enum Reply {
     Z(Vec<f32>),
+    U(Vec<f32>),
+    Loss(f64),
     Grad(Vec<f32>),
     W(Vec<f32>),
 }
@@ -57,6 +66,24 @@ impl Worker {
                 Cmd::PartialZ { w, rows } => {
                     Reply::Z(self.engine.partial_z(key, &self.block.x, 0..m, &w, &rows))
                 }
+                Cmd::PartialU { w, rows } => Reply::U(self.engine.partial_u(
+                    key,
+                    self.loss,
+                    &self.block.x,
+                    0..m,
+                    &w,
+                    &rows,
+                    &self.block.y,
+                )),
+                Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss(
+                    key,
+                    self.loss,
+                    &self.block.x,
+                    0..m,
+                    &w,
+                    &rows,
+                    &self.block.y,
+                )),
                 Cmd::GradSlice { u, rows } => {
                     Reply::Grad(self.engine.grad_slice(key, &self.block.x, 0..m, &rows, &u))
                 }
@@ -186,6 +213,80 @@ impl Cluster {
             }
         }
         z
+    }
+
+    /// Phase-1 derivative `u[p][k] = f'(z_k, y_k)`. On single-feature-
+    /// block grids (`Q == 1`) each block already holds the complete
+    /// margin, so workers compute `u` locally through the engines' fused
+    /// batched `partial_u` entry point — no leader-side z reduce + dloss
+    /// round. On `Q > 1` grids the margins are reduced across feature
+    /// blocks here and `leader` applies the derivative; both paths
+    /// produce bit-identical numbers.
+    pub fn partial_u(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+    ) -> Vec<Vec<f32>> {
+        if self.q > 1 {
+            let z = self.partial_z(w_blocks, rows);
+            return (0..self.p)
+                .map(|pi| {
+                    let y_rows: Vec<f32> =
+                        rows[pi].iter().map(|&r| self.y[pi][r as usize]).collect();
+                    leader.dloss_u(loss, &z[pi], &y_rows)
+                })
+                .collect();
+        }
+        for pi in 0..self.p {
+            self.cmd_txs[self.wid(pi, 0)]
+                .send(Cmd::PartialU { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) })
+                .expect("worker alive");
+        }
+        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p).map(|_| None).collect();
+        for _ in 0..self.p {
+            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let Reply::U(u) = reply else { panic!("expected U reply") };
+            parts[id] = Some(u); // worker id == p index when q == 1
+        }
+        parts.into_iter().map(|u| u.expect("reply")).collect()
+    }
+
+    /// Distributed objective term `Σ_k f(z_k, y_k)` over the given rows.
+    /// `Q == 1` grids use the workers' fused `block_loss` entry point;
+    /// `Q > 1` grids reduce z here and `leader` sums the loss values.
+    /// Either way the reduce runs in worker order, so the f64 total is
+    /// deterministic.
+    pub fn block_loss(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+    ) -> f64 {
+        if self.q > 1 {
+            let z = self.partial_z(w_blocks, rows);
+            return (0..self.p)
+                .map(|pi| {
+                    let y_rows: Vec<f32> =
+                        rows[pi].iter().map(|&r| self.y[pi][r as usize]).collect();
+                    leader.loss_from_z(loss, &z[pi], &y_rows)
+                })
+                .sum();
+        }
+        for pi in 0..self.p {
+            self.cmd_txs[self.wid(pi, 0)]
+                .send(Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) })
+                .expect("worker alive");
+        }
+        let mut parts = vec![0.0f64; self.p];
+        for _ in 0..self.p {
+            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let Reply::Loss(v) = reply else { panic!("expected Loss reply") };
+            parts[id] = v;
+        }
+        parts.iter().sum()
     }
 
     /// Phase 2: gradient slices. `u[p]` aligned with `rows[p]`. Returns
@@ -320,6 +421,58 @@ mod tests {
         out.sort_by_key(|(ti, _)| *ti);
         assert_eq!(out[0].1, vec![1.0, 2.0]);
         assert_eq!(out[1].1, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn fused_partial_u_matches_z_then_dloss_on_q1() {
+        let (c, _ds) = cluster(30, 12, 3, 1, 6);
+        let w: Vec<f32> = (0..12).map(|i| 0.05 * i as f32 - 0.2).collect();
+        let w_blocks = vec![Arc::new(w)];
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
+        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let z = c.partial_z(&w_blocks, &rows);
+        for pi in 0..3 {
+            for k in 0..10 {
+                let want = Loss::Hinge.dloss(z[pi][k], c.y[pi][k]);
+                assert_eq!(u[pi][k], want, "p={pi} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_block_loss_matches_serial_objective_on_q1() {
+        let (c, ds) = cluster(30, 12, 3, 1, 7);
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.4).sin() * 0.3).collect();
+        let w_blocks = vec![Arc::new(w.clone())];
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
+        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        crate::assert_close!(total / 30.0, ds.objective(&w, Loss::Hinge), 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn partial_u_reduce_path_matches_manual_composition_on_q2() {
+        // Q > 1: partial_u must fall back to z-reduce + leader dloss,
+        // bit-identical to composing the phases by hand
+        let (c, _ds) = cluster(20, 8, 2, 2, 8);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).cos() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3, 7])).collect();
+        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let z = c.partial_z(&w_blocks, &rows);
+        for pi in 0..2 {
+            let y_rows: Vec<f32> = rows[pi].iter().map(|&r| c.y[pi][r as usize]).collect();
+            let want = NativeEngine.dloss_u(Loss::Hinge, &z[pi], &y_rows);
+            assert_eq!(u[pi], want, "p={pi}");
+        }
+        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let want: f64 = (0..2)
+            .map(|pi| {
+                let y_rows: Vec<f32> = rows[pi].iter().map(|&r| c.y[pi][r as usize]).collect();
+                NativeEngine.loss_from_z(Loss::Hinge, &z[pi], &y_rows)
+            })
+            .sum();
+        assert_eq!(total, want);
     }
 
     #[test]

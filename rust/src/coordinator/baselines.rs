@@ -22,7 +22,6 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::sampling::{self, SampleSets};
 use crate::cluster::{Cluster, CostModel, SimNet};
 use crate::config::ExperimentConfig;
 use crate::data::{Dataset, Grid};
@@ -67,13 +66,13 @@ impl Ctx {
         let total_rows: usize = rows.iter().map(|r| r.len()).sum();
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..q).map(|qi| Arc::new(self.w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
-        let z = self.cluster.partial_z(&w_blocks, &rows_arc);
-        let mut u_per_p = Vec::with_capacity(p);
-        for pi in 0..p {
-            let y_rows: Vec<f32> =
-                rows_arc[pi].iter().map(|&r| self.cluster.y[pi][r as usize]).collect();
-            u_per_p.push(Arc::new(self.engine.dloss_u(cfg.loss, &z[pi], &y_rows)));
-        }
+        // same fused-or-reduce derivative pass as the main algorithms
+        let u_per_p: Vec<Arc<Vec<f32>>> = self
+            .cluster
+            .partial_u(&w_blocks, &rows_arc, self.engine.as_ref(), cfg.loss)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
         let mut g = self.cluster.grad(&u_per_p, &rows_arc);
         let inv = 1.0 / total_rows.max(1) as f32;
         for v in g.iter_mut() {
@@ -103,11 +102,7 @@ impl Ctx {
             let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
                 .map(|_| Arc::new((0..self.cluster.n_per as u32).collect()))
                 .collect();
-            let z = self.cluster.partial_z(&w_blocks, &rows);
-            let mut total = 0.0f64;
-            for pi in 0..self.cluster.p {
-                total += self.engine.loss_from_z(cfg.loss, &z[pi], &self.cluster.y[pi]);
-            }
+            let total = self.cluster.block_loss(&w_blocks, &rows, self.engine.as_ref(), cfg.loss);
             self.history.push(IterRecord {
                 iter: t,
                 loss: total / self.cluster.n_total as f64,

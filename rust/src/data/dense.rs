@@ -1,5 +1,90 @@
 //! Dense row-major matrix — the storage for the paper's §5.1 synthetic
 //! experiments ("all the data is in the dense format").
+//!
+//! The dot/axpy primitives here define the **one accumulation order**
+//! shared by the per-row scalar path and the batched kernel layer
+//! ([`crate::engine::kernels`]): 8-wide unrolled accumulators reduced
+//! pairwise, remainder handled sequentially. Batched variants
+//! ([`DenseMatrix::rows_dot_range_into`], [`DenseMatrix::add_rows_scaled_range`])
+//! reuse that order per row, so batching changes throughput, never bits.
+
+/// 8-lane multiply-accumulate into `acc` (one unrolled chunk).
+#[inline]
+fn madd8(acc: &mut [f32; 8], a: &[f32], b: &[f32]) {
+    for (acc_k, (&x, &y)) in acc.iter_mut().zip(a.iter().zip(b)) {
+        *acc_k += x * y;
+    }
+}
+
+/// Pairwise horizontal reduction of the 8 accumulator lanes.
+#[inline]
+fn hsum8(acc: &[f32; 8]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// `a · b` with 8-wide unrolled accumulators — the innermost hot loop of
+/// the native engine (see EXPERIMENTS.md §Perf).
+#[inline]
+pub(crate) fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        madd8(&mut acc, xs, ys);
+    }
+    let mut s = hsum8(&acc);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `(a0 · b, a1 · b)` in one streaming pass over `b` (two rows share the
+/// weight loads). Each dot accumulates exactly as [`dot8`].
+#[inline]
+pub(crate) fn dot8_rows2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    debug_assert!(a0.len() == b.len() && a1.len() == b.len());
+    let mut acc0 = [0.0f32; 8];
+    let mut acc1 = [0.0f32; 8];
+    let split = b.len() - b.len() % 8;
+    let (h0, t0) = a0.split_at(split);
+    let (h1, t1) = a1.split_at(split);
+    let (hb, tb) = b.split_at(split);
+    for ((xs0, xs1), ys) in h0.chunks_exact(8).zip(h1.chunks_exact(8)).zip(hb.chunks_exact(8)) {
+        madd8(&mut acc0, xs0, ys);
+        madd8(&mut acc1, xs1, ys);
+    }
+    let (mut s0, mut s1) = (hsum8(&acc0), hsum8(&acc1));
+    for ((&x0, &x1), &y) in t0.iter().zip(t1).zip(tb) {
+        s0 += x0 * y;
+        s1 += x1 * y;
+    }
+    (s0, s1)
+}
+
+/// `(a · b0, a · b1)` in one streaming pass over `a` (the SVRG inner
+/// step's current/reference margins). Each dot accumulates as [`dot8`].
+#[inline]
+pub(crate) fn dot8_pair(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    debug_assert!(b0.len() == a.len() && b1.len() == a.len());
+    let mut acc0 = [0.0f32; 8];
+    let mut acc1 = [0.0f32; 8];
+    let split = a.len() - a.len() % 8;
+    let (ha, ta) = a.split_at(split);
+    let (h0, t0) = b0.split_at(split);
+    let (h1, t1) = b1.split_at(split);
+    for ((xs, ys0), ys1) in ha.chunks_exact(8).zip(h0.chunks_exact(8)).zip(h1.chunks_exact(8)) {
+        madd8(&mut acc0, xs, ys0);
+        madd8(&mut acc1, xs, ys1);
+    }
+    let (mut s0, mut s1) = (hsum8(&acc0), hsum8(&acc1));
+    for ((&x, &y0), &y1) in ta.iter().zip(t0).zip(t1) {
+        s0 += x * y0;
+        s1 += x * y1;
+    }
+    (s0, s1)
+}
 
 /// Row-major dense `n × m` block of the design matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,23 +118,79 @@ impl DenseMatrix {
     #[inline]
     pub fn row_dot_range(&self, r: usize, lo: usize, hi: usize, w: &[f32]) -> f32 {
         debug_assert_eq!(w.len(), hi - lo);
-        let row = &self.row(r)[lo..hi];
-        // 4-way unrolled accumulation: this is the innermost hot loop of
-        // the native engine (see EXPERIMENTS.md §Perf).
-        let mut acc = [0.0f32; 4];
-        let chunks = row.len() / 4;
-        for c in 0..chunks {
-            let i = c * 4;
-            acc[0] += row[i] * w[i];
-            acc[1] += row[i + 1] * w[i + 1];
-            acc[2] += row[i + 2] * w[i + 2];
-            acc[3] += row[i + 3] * w[i + 3];
+        dot8(&self.row(r)[lo..hi], w)
+    }
+
+    /// `(x_r[lo..hi] · wa, x_r[lo..hi] · wb)` in a single traversal of
+    /// the row; each dot matches [`Self::row_dot_range`] bit-for-bit.
+    #[inline]
+    pub fn row_dot2_range(&self, r: usize, lo: usize, hi: usize, wa: &[f32], wb: &[f32]) -> (f32, f32) {
+        debug_assert!(wa.len() == hi - lo && wb.len() == hi - lo);
+        dot8_pair(&self.row(r)[lo..hi], wa, wb)
+    }
+
+    /// Batched `out[k] = x_{rows[k]}[lo..hi] · w`: two rows per pass
+    /// share one streaming read of `w`. Bit-for-bit equal to calling
+    /// [`Self::row_dot_range`] once per row.
+    pub fn rows_dot_range_into(&self, rows: &[u32], lo: usize, hi: usize, w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows.len());
+        debug_assert_eq!(w.len(), hi - lo);
+        let mut pairs = rows.chunks_exact(2);
+        let mut outs = out.chunks_exact_mut(2);
+        for (pr, o) in (&mut pairs).zip(&mut outs) {
+            let (z0, z1) =
+                dot8_rows2(&self.row(pr[0] as usize)[lo..hi], &self.row(pr[1] as usize)[lo..hi], w);
+            o[0] = z0;
+            o[1] = z1;
         }
-        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-        for i in chunks * 4..row.len() {
-            s += row[i] * w[i];
+        if let ([r], [o]) = (pairs.remainder(), outs.into_remainder()) {
+            *o = dot8(&self.row(*r as usize)[lo..hi], w);
         }
-        s
+    }
+
+    /// Batched `out += Σ_k u[k] · x_{rows[k]}[lo..hi]`, four active rows
+    /// per pass over `out`. Rows with `u[k] == 0` are skipped and the
+    /// per-element adds stay in row order, so the result is bit-for-bit
+    /// the sequential per-row [`Self::add_row_scaled_range`] loop while
+    /// touching `out` a quarter as often.
+    pub fn add_rows_scaled_range(&self, rows: &[u32], u: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+        debug_assert_eq!(rows.len(), u.len());
+        debug_assert_eq!(out.len(), hi - lo);
+        let mut ridx = [0usize; 4];
+        let mut scale = [0.0f32; 4];
+        let mut fill = 0;
+        for (&r, &uk) in rows.iter().zip(u) {
+            if uk == 0.0 {
+                continue; // hinge gradients are frequently exactly zero
+            }
+            ridx[fill] = r as usize;
+            scale[fill] = uk;
+            fill += 1;
+            if fill == 4 {
+                self.axpy4(ridx, scale, lo, hi, out);
+                fill = 0;
+            }
+        }
+        for (&ri, &sk) in ridx.iter().zip(&scale).take(fill) {
+            self.add_row_scaled_range(ri, lo, hi, sk, out);
+        }
+    }
+
+    /// `out += Σ s[i]·x_{r[i]}[lo..hi]` for four rows, element adds kept
+    /// in row order (bit parity with the sequential per-row loop).
+    fn axpy4(&self, r: [usize; 4], s: [f32; 4], lo: usize, hi: usize, out: &mut [f32]) {
+        let r0 = &self.row(r[0])[lo..hi];
+        let r1 = &self.row(r[1])[lo..hi];
+        let r2 = &self.row(r[2])[lo..hi];
+        let r3 = &self.row(r[3])[lo..hi];
+        for ((((o, &a), &b), &c), &d) in out.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3) {
+            let mut t = *o;
+            t += s[0] * a;
+            t += s[1] * b;
+            t += s[2] * c;
+            t += s[3] * d;
+            *o = t;
+        }
     }
 
     /// `out += scale · x_r[lo..hi]` where `out.len() == hi - lo`.
@@ -120,13 +261,54 @@ mod tests {
 
     #[test]
     fn row_dot_unroll_edge_cases() {
-        // widths around the 4-way unroll boundary
-        for cols in 1..=9 {
+        // widths around the 8-way unroll boundary (0, 1, 7, 8, 9, 15, 16, 17)
+        for cols in 1..=17 {
             let m = DenseMatrix::from_rows(1, cols, (0..cols).map(|v| v as f32 + 1.0).collect());
             let w: Vec<f32> = (0..cols).map(|v| 0.5 - v as f32).collect();
             let naive: f32 = m.row(0).iter().zip(&w).map(|(a, b)| a * b).sum();
             assert_close!(m.row_dot_range(0, 0, cols, &w), naive, 1e-4, 1e-5);
         }
+    }
+
+    #[test]
+    fn dual_dots_match_single_dots_exactly() {
+        let m = DenseMatrix::from_rows(2, 11, (0..22).map(|v| (v as f32 * 0.7).sin()).collect());
+        let wa: Vec<f32> = (0..9).map(|v| 0.3 - v as f32 * 0.11).collect();
+        let wb: Vec<f32> = (0..9).map(|v| (v as f32).cos()).collect();
+        let (za, zb) = m.row_dot2_range(1, 1, 10, &wa, &wb);
+        assert_eq!(za, m.row_dot_range(1, 1, 10, &wa));
+        assert_eq!(zb, m.row_dot_range(1, 1, 10, &wb));
+        let (z0, z1) = dot8_rows2(&m.row(0)[1..10], &m.row(1)[1..10], &wa);
+        assert_eq!(z0, m.row_dot_range(0, 1, 10, &wa));
+        assert_eq!(z1, m.row_dot_range(1, 1, 10, &wa));
+    }
+
+    #[test]
+    fn batched_rows_dot_matches_per_row_exactly() {
+        let m = DenseMatrix::from_rows(7, 13, (0..91).map(|v| (v as f32 * 0.3).cos()).collect());
+        let w: Vec<f32> = (0..10).map(|v| 0.2 * v as f32 - 0.9).collect();
+        for rows in [vec![], vec![4u32], vec![0, 2, 5], vec![6, 1, 3, 3, 0]] {
+            let mut out = vec![0.0f32; rows.len()];
+            m.rows_dot_range_into(&rows, 2, 12, &w, &mut out);
+            let want: Vec<f32> =
+                rows.iter().map(|&r| m.row_dot_range(r as usize, 2, 12, &w)).collect();
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn batched_axpy_matches_per_row_exactly() {
+        let m = DenseMatrix::from_rows(9, 6, (0..54).map(|v| (v as f32 * 0.9).sin()).collect());
+        let rows: Vec<u32> = (0..9).collect();
+        // exact zeros mixed in to exercise the skip path
+        let u: Vec<f32> = (0..9).map(|v| if v % 3 == 0 { 0.0 } else { v as f32 * 0.1 - 0.4 }).collect();
+        let mut got = vec![0.1f32; 4];
+        m.add_rows_scaled_range(&rows, &u, 1, 5, &mut got);
+        let mut want = vec![0.1f32; 4];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            m.add_row_scaled_range(r as usize, 1, 5, uk, &mut want);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub use sparse::CsrMatrix;
 
 /// A data block in either storage format. All coordinator/engine code is
 /// written against this enum so dense and sparse datasets share one path.
+///
+/// The per-row ops below dispatch through the enum **per call**; hot
+/// loops should go through [`crate::engine::kernels`], which resolves
+/// the format once per batch and then runs the monomorphized
+/// dense/CSR accessors ([`DenseMatrix::rows_dot_range_into`] and
+/// friends) with no per-row dispatch.
 #[derive(Debug, Clone)]
 pub enum Store {
     Dense(DenseMatrix),

@@ -68,6 +68,45 @@ impl CsrMatrix {
         s
     }
 
+    /// `(x_r[lo..hi] · wa, x_r[lo..hi] · wb)` in one scan of the row's
+    /// stored entries; each dot matches [`Self::row_dot_range`]
+    /// bit-for-bit (same entry order, same accumulator).
+    #[inline]
+    pub fn row_dot2_range(&self, r: usize, lo: usize, hi: usize, wa: &[f32], wb: &[f32]) -> (f32, f32) {
+        debug_assert!(wa.len() == hi - lo && wb.len() == hi - lo);
+        let rng = self.row_range(r);
+        let (idx, val) = (&self.indices[rng.clone()], &self.values[rng]);
+        let start = idx.partition_point(|&c| (c as usize) < lo);
+        let (mut sa, mut sb) = (0.0f32, 0.0f32);
+        for k in start..idx.len() {
+            let c = idx[k] as usize;
+            if c >= hi {
+                break;
+            }
+            sa += val[k] * wa[c - lo];
+            sb += val[k] * wb[c - lo];
+        }
+        (sa, sb)
+    }
+
+    /// Batched `out[k] = x_{rows[k]}[lo..hi] · w` — one monomorphized
+    /// gather loop over the whole row set (no per-row `Store` dispatch).
+    pub fn rows_dot_range_into(&self, rows: &[u32], lo: usize, hi: usize, w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows.len());
+        for (o, &r) in out.iter_mut().zip(rows) {
+            *o = self.row_dot_range(r as usize, lo, hi, w);
+        }
+    }
+
+    /// Batched `out += Σ_k u[k] · x_{rows[k]}[lo..hi]` (zero-`u` rows
+    /// skipped, row order preserved — bit-for-bit the per-row loop).
+    pub fn add_rows_scaled_range(&self, rows: &[u32], u: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+        debug_assert_eq!(rows.len(), u.len());
+        for (&r, &uk) in rows.iter().zip(u) {
+            self.add_row_scaled_range(r as usize, lo, hi, uk, out);
+        }
+    }
+
     /// `out += scale · x_r[lo..hi]`.
     #[inline]
     pub fn add_row_scaled_range(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
@@ -172,6 +211,38 @@ mod tests {
         // window cols [1,3): row2 has (1,5.0) only in range
         assert_close!(m.row_dot_range(2, 1, 3, &w2), 50.0);
         assert_close!(m.row_dot_range(1, 1, 3, &w2), 0.0);
+    }
+
+    #[test]
+    fn dual_dot_matches_single_dots_exactly() {
+        let m = sample();
+        let wa = [0.5f32, -1.5, 2.0];
+        let wb = [1.0f32, 0.25, -0.75];
+        for r in 0..3 {
+            let (sa, sb) = m.row_dot2_range(r, 1, 4, &wa, &wb);
+            assert_eq!(sa, m.row_dot_range(r, 1, 4, &wa));
+            assert_eq!(sb, m.row_dot_range(r, 1, 4, &wb));
+        }
+    }
+
+    #[test]
+    fn batched_accessors_match_per_row_exactly() {
+        let m = sample();
+        let w = [2.0f32, -0.5, 1.5];
+        let rows = [2u32, 0, 1, 2];
+        let mut z = vec![0.0f32; 4];
+        m.rows_dot_range_into(&rows, 1, 4, &w, &mut z);
+        let want: Vec<f32> = rows.iter().map(|&r| m.row_dot_range(r as usize, 1, 4, &w)).collect();
+        assert_eq!(z, want);
+
+        let u = [0.5f32, 0.0, -1.0, 2.0];
+        let mut got = vec![0.25f32; 3];
+        m.add_rows_scaled_range(&rows, &u, 1, 4, &mut got);
+        let mut want = vec![0.25f32; 3];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            m.add_row_scaled_range(r as usize, 1, 4, uk, &mut want);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

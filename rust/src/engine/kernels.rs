@@ -1,0 +1,266 @@
+//! Batched, monomorphized compute kernels — the native hot path.
+//!
+//! [`NativeEngine`](super::NativeEngine) used to walk the [`Store`] enum
+//! one row at a time: an enum `match`, a slice re-borrow and the bounds
+//! checks per row, twice per SVRG step. These kernels resolve the
+//! storage format **once per call**, then run unrolled dense loops
+//! (8-wide accumulators, two rows per pass — see `data::dense::dot8`)
+//! or CSR gather loops over the whole row set. Fusions on top of the
+//! batching:
+//!
+//! * [`partial_u`] — margin + loss derivative in one pass (no
+//!   intermediate `z` vector, no label gather);
+//! * [`block_loss`] — margin + loss value (objective evaluation);
+//! * [`svrg_inner`] / [`svrg_inner_avg`] — the inner step's current and
+//!   reference row-dots share one traversal of the sampled row.
+//!
+//! Every kernel is **bit-for-bit identical** to the per-row scalar path
+//! it replaces (`tests/kernels_prop.rs` asserts this across random
+//! shapes, column sub-ranges and empty row sets): the per-row
+//! accumulation order is shared with `Store`'s scalar ops, so only
+//! dispatch, fusion and blocking differ — never the arithmetic.
+
+use std::ops::Range;
+
+use crate::data::{CsrMatrix, DenseMatrix, Store};
+use crate::loss::Loss;
+
+/// Row primitives the generic kernel bodies are written against. Both
+/// impls are thin `#[inline]` forwards to the concrete accessors, so
+/// each public kernel monomorphizes to one dense and one CSR body.
+trait RowOps {
+    fn dot2(&self, r: usize, lo: usize, hi: usize, wa: &[f32], wb: &[f32]) -> (f32, f32);
+    fn axpy(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]);
+}
+
+impl RowOps for DenseMatrix {
+    #[inline]
+    fn dot2(&self, r: usize, lo: usize, hi: usize, wa: &[f32], wb: &[f32]) -> (f32, f32) {
+        self.row_dot2_range(r, lo, hi, wa, wb)
+    }
+
+    #[inline]
+    fn axpy(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
+        self.add_row_scaled_range(r, lo, hi, scale, out)
+    }
+}
+
+impl RowOps for CsrMatrix {
+    #[inline]
+    fn dot2(&self, r: usize, lo: usize, hi: usize, wa: &[f32], wb: &[f32]) -> (f32, f32) {
+        self.row_dot2_range(r, lo, hi, wa, wb)
+    }
+
+    #[inline]
+    fn axpy(&self, r: usize, lo: usize, hi: usize, scale: f32, out: &mut [f32]) {
+        self.add_row_scaled_range(r, lo, hi, scale, out)
+    }
+}
+
+/// Batched margins `z_k = x_{rows[k]}[cols] · w` (steps 5-8 of
+/// Algorithm 1: the feature-block contribution to `x_j^{B^t} w_{B^t}`).
+pub fn partial_z(x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), cols.len());
+    let mut z = vec![0.0f32; rows.len()];
+    match x {
+        Store::Dense(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, &mut z),
+        Store::Sparse(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, &mut z),
+    }
+    z
+}
+
+/// Batched gradient slice `g[cols] = Σ_k u_k · x_{rows[k]}[cols]`.
+pub fn grad_slice(x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(rows.len(), u.len());
+    let mut g = vec![0.0f32; cols.len()];
+    match x {
+        Store::Dense(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, &mut g),
+        Store::Sparse(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, &mut g),
+    }
+    g
+}
+
+/// Fused `partial_z` + `dloss_u`: `u_k = f'(x_{rows[k]}[cols]·w, y[rows[k]])`.
+/// `y` is the block's full local label vector (length = block rows). The
+/// margin buffer is computed with the batched paired dots and turned
+/// into `u` in place — one allocation, no label gather.
+pub fn partial_u(loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
+    let mut u = partial_z(x, cols, w, rows);
+    for (uk, &r) in u.iter_mut().zip(rows) {
+        *uk = loss.dloss(*uk, y[r as usize]);
+    }
+    u
+}
+
+/// Fused `partial_z` + `loss_from_z`: `Σ_k f(x_{rows[k]}[cols]·w, y[rows[k]])`
+/// (objective evaluation, reduced in row order like the unfused path).
+pub fn block_loss(loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
+    let z = partial_z(x, cols, w, rows);
+    z.iter().zip(rows).map(|(&zk, &r)| loss.value(zk, y[r as usize]) as f64).sum()
+}
+
+/// L SVRG steps on one sub-block (Algorithm 1 step 16), last iterate.
+/// The current and reference margins of each step share one traversal
+/// of the sampled row ([`DenseMatrix::row_dot2_range`] /
+/// [`CsrMatrix::row_dot2_range`]).
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_inner(
+    loss: Loss,
+    x: &Store,
+    y: &[f32],
+    cols: Range<usize>,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+) -> Vec<f32> {
+    match x {
+        Store::Dense(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, false),
+        Store::Sparse(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, false),
+    }
+}
+
+/// RADiSA-avg's combiner: same steps as [`svrg_inner`] but returns the
+/// uniform (Polyak) average of the L iterates.
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_inner_avg(
+    loss: Loss,
+    x: &Store,
+    y: &[f32],
+    cols: Range<usize>,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+) -> Vec<f32> {
+    match x {
+        Store::Dense(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, true),
+        Store::Sparse(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, true),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn svrg_impl<M: RowOps>(
+    loss: Loss,
+    m: &M,
+    y: &[f32],
+    cols: Range<usize>,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+    avg: bool,
+) -> Vec<f32> {
+    let mt = cols.len();
+    debug_assert!(w0.len() == mt && wt.len() == mt && mu.len() == mt);
+    let (lo, hi) = (cols.start, cols.end);
+    let mut w = w0.to_vec();
+    let mut acc = vec![0.0f32; if avg { mt } else { 0 }];
+    for &j in idx {
+        let j = j as usize;
+        // fused: current + reference margins in one traversal of row j
+        let (z_cur, z_ref) = m.dot2(j, lo, hi, &w, wt);
+        let du = loss.dloss(z_cur, y[j]) - loss.dloss(z_ref, y[j]);
+        // w -= γ·(du·x_j + µ)
+        if du != 0.0 {
+            m.axpy(j, lo, hi, -gamma * du, &mut w);
+        }
+        for (wk, &mk) in w.iter_mut().zip(mu) {
+            *wk -= gamma * mk;
+        }
+        if avg {
+            for (a, &wk) in acc.iter_mut().zip(&w) {
+                *a += wk;
+            }
+        }
+    }
+    if avg {
+        // uniform (Polyak) average of all L iterates
+        let inv = 1.0 / idx.len() as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        acc
+    } else {
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_close;
+    use crate::engine::testutil::block;
+
+    #[test]
+    fn partial_z_matches_per_row_store_path() {
+        let (x, _) = block(10, 12, 1);
+        let w: Vec<f32> = (0..5).map(|i| 0.2 * i as f32 - 0.4).collect();
+        let rows: Vec<u32> = vec![0, 3, 7, 9];
+        let z = partial_z(&x, 4..9, &w, &rows);
+        let want: Vec<f32> = rows.iter().map(|&r| x.row_dot_range(r as usize, 4, 9, &w)).collect();
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn grad_slice_matches_per_row_store_path() {
+        let (x, _) = block(8, 6, 2);
+        let rows: Vec<u32> = (0..8).collect();
+        let u: Vec<f32> = (0..8).map(|v| if v % 2 == 0 { 0.0 } else { v as f32 * 0.1 }).collect();
+        let g = grad_slice(&x, 1..6, &rows, &u);
+        let mut want = vec![0.0f32; 5];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            x.add_row_scaled_range(r as usize, 1, 6, uk, &mut want);
+        }
+        assert_eq!(g, want);
+    }
+
+    #[test]
+    fn fused_partial_u_and_block_loss_match_composition() {
+        let (x, y) = block(12, 8, 3);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.33).sin()).collect();
+        let rows: Vec<u32> = vec![1, 4, 4, 11];
+        for loss in Loss::ALL {
+            let z = partial_z(&x, 0..8, &w, &rows);
+            let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
+            let want_u: Vec<f32> =
+                z.iter().zip(&y_rows).map(|(&zk, &yk)| loss.dloss(zk, yk)).collect();
+            assert_eq!(partial_u(loss, &x, 0..8, &w, &rows, &y), want_u, "{loss}");
+            let want_l: f64 =
+                z.iter().zip(&y_rows).map(|(&zk, &yk)| loss.value(zk, yk) as f64).sum();
+            assert_eq!(block_loss(loss, &x, 0..8, &w, &rows, &y), want_l, "{loss}");
+        }
+    }
+
+    #[test]
+    fn empty_row_set_yields_zeros() {
+        let (x, y) = block(5, 4, 4);
+        let w = vec![0.5f32; 4];
+        assert!(partial_z(&x, 0..4, &w, &[]).is_empty());
+        assert!(partial_u(Loss::Hinge, &x, 0..4, &w, &[], &y).is_empty());
+        assert_eq!(grad_slice(&x, 0..4, &[], &[]), vec![0.0f32; 4]);
+        assert_eq!(block_loss(Loss::Hinge, &x, 0..4, &w, &[], &y), 0.0);
+    }
+
+    #[test]
+    fn svrg_zero_gamma_is_identity() {
+        let (x, y) = block(6, 4, 5);
+        let w0 = vec![0.3f32; 4];
+        let out = svrg_inner(Loss::Hinge, &x, &y, 0..4, &w0, &w0, &[0.0; 4], &[0, 1, 2], 0.0);
+        assert_eq!(out, w0);
+    }
+
+    #[test]
+    fn svrg_avg_of_constant_trajectory_is_the_constant() {
+        let (x, y) = block(6, 4, 6);
+        let w0 = vec![0.25f32; 4];
+        // γ = 0 keeps every iterate at w0, so the average is w0
+        let out = svrg_inner_avg(Loss::Hinge, &x, &y, 0..4, &w0, &w0, &[0.0; 4], &[2, 5, 1], 0.0);
+        for v in out {
+            assert_close!(v, 0.25, 1e-6, 1e-7);
+        }
+    }
+}

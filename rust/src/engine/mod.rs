@@ -4,6 +4,8 @@
 //!
 //! * [`NativeEngine`] — pure-rust math, sparse-aware, zero staging cost.
 //!   Always available; the baseline the XLA path is validated against.
+//!   A thin adapter over the batched [`kernels`] layer (storage format
+//!   resolved once per call, not once per row).
 //! * [`XlaEngine`] — executes the AOT-compiled JAX/Pallas artifacts
 //!   through the PJRT CPU client ([`crate::runtime`]). This is the
 //!   "python never on the request path" production configuration.
@@ -11,6 +13,7 @@
 //! The coordinator is engine-generic; integration tests assert the two
 //! engines produce identical training trajectories (up to f32 rounding).
 
+pub mod kernels;
 mod native;
 #[cfg(feature = "xla")]
 mod xla;
@@ -57,6 +60,30 @@ pub trait ComputeEngine: Send + Sync {
 
     /// Elementwise derivative `u_k = f'(z_k, y_k)`.
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32>;
+
+    /// Fused batched margin + loss derivative over one block:
+    /// `u_k = f'(x_{rows[k]}[cols]·w, y[rows[k]])`, with `y` the block's
+    /// full local label vector. Only meaningful when the block holds the
+    /// complete margin (Q = 1 grids — the [`crate::cluster`] fast path).
+    /// The default composes [`Self::partial_z`] + [`Self::dloss_u`], so
+    /// engines without a fused kernel (the XLA engine, remote workers)
+    /// pick it up with identical behavior.
+    #[allow(clippy::too_many_arguments)]
+    fn partial_u(&self, key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
+        let z = self.partial_z(key, x, cols, w, rows);
+        let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
+        self.dloss_u(loss, &z, &y_rows)
+    }
+
+    /// Fused batched margin + loss value `Σ_k f(x_{rows[k]}[cols]·w, y[rows[k]])`
+    /// (objective evaluation). Same Q = 1 caveat and default composition
+    /// as [`Self::partial_u`].
+    #[allow(clippy::too_many_arguments)]
+    fn block_loss(&self, key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
+        let z = self.partial_z(key, x, cols, w, rows);
+        let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
+        self.loss_from_z(loss, &z, &y_rows)
+    }
 
     /// Gradient slice `g[cols] = Σ_k u_k · x_{rows[k]}[cols]`.
     fn grad_slice(&self, key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32>;

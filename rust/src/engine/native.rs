@@ -3,10 +3,17 @@
 //! Implements the identical math as the Pallas kernels (see
 //! `python/compile/kernels/ref.py`) directly over [`Store`] blocks, which
 //! makes it sparse-aware: §5.2's CSR datasets never densify on this path.
+//!
+//! Since the batched-kernel refactor this type is a thin adapter over
+//! [`super::kernels`]: every per-block operation resolves the storage
+//! format once per call and runs the monomorphized batched loops, and
+//! the fused entry points ([`ComputeEngine::partial_u`],
+//! [`ComputeEngine::block_loss`], the one-traversal SVRG step) are
+//! overridden with their fused implementations.
 
 use std::ops::Range;
 
-use super::{BlockKey, ComputeEngine};
+use super::{kernels, BlockKey, ComputeEngine};
 use crate::data::Store;
 use crate::loss::Loss;
 
@@ -20,10 +27,7 @@ impl ComputeEngine for NativeEngine {
     }
 
     fn partial_z(&self, _key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
-        debug_assert_eq!(w.len(), cols.len());
-        rows.iter()
-            .map(|&r| x.row_dot_range(r as usize, cols.start, cols.end, w))
-            .collect()
+        kernels::partial_z(x, cols, w, rows)
     }
 
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
@@ -31,13 +35,16 @@ impl ComputeEngine for NativeEngine {
         z.iter().zip(y).map(|(&z, &y)| loss.dloss(z, y)).collect()
     }
 
+    fn partial_u(&self, _key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
+        kernels::partial_u(loss, x, cols, w, rows, y)
+    }
+
+    fn block_loss(&self, _key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
+        kernels::block_loss(loss, x, cols, w, rows, y)
+    }
+
     fn grad_slice(&self, _key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(rows.len(), u.len());
-        let mut g = vec![0.0f32; cols.len()];
-        for (&r, &uk) in rows.iter().zip(u) {
-            x.add_row_scaled_range(r as usize, cols.start, cols.end, uk, &mut g);
-        }
-        g
+        kernels::grad_slice(x, cols, rows, u)
     }
 
     fn svrg_inner(
@@ -53,27 +60,7 @@ impl ComputeEngine for NativeEngine {
         idx: &[u32],
         gamma: f32,
     ) -> Vec<f32> {
-        let mt = cols.len();
-        debug_assert!(w0.len() == mt && wt.len() == mt && mu.len() == mt);
-        let mut w = w0.to_vec();
-        // Reusable buffer for −γ(u_cur − u_ref)·x_j − γµ updates: the axpy
-        // is applied in place, no per-step allocation.
-        for &j in idx {
-            let j = j as usize;
-            let z_cur = x.row_dot_range(j, cols.start, cols.end, &w);
-            let z_ref = x.row_dot_range(j, cols.start, cols.end, wt);
-            let u_cur = loss.dloss(z_cur, y[j]);
-            let u_ref = loss.dloss(z_ref, y[j]);
-            let du = u_cur - u_ref;
-            // w -= γ·(du·x_j + µ)
-            if du != 0.0 {
-                x.add_row_scaled_range(j, cols.start, cols.end, -gamma * du, &mut w);
-            }
-            for (wk, &mk) in w.iter_mut().zip(mu) {
-                *wk -= gamma * mk;
-            }
-        }
-        w
+        kernels::svrg_inner(loss, x, y, cols, w0, wt, mu, idx, gamma)
     }
 
     fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64 {
@@ -93,33 +80,7 @@ impl ComputeEngine for NativeEngine {
         idx: &[u32],
         gamma: f32,
     ) -> Vec<f32> {
-        let mt = cols.len();
-        let steps = idx.len();
-        let tail_start = 0; // uniform (Polyak) average of all L iterates
-        let mut w = w0.to_vec();
-        let mut acc = vec![0.0f32; mt];
-        for (i, &j) in idx.iter().enumerate() {
-            let j = j as usize;
-            let z_cur = x.row_dot_range(j, cols.start, cols.end, &w);
-            let z_ref = x.row_dot_range(j, cols.start, cols.end, wt);
-            let du = loss.dloss(z_cur, y[j]) - loss.dloss(z_ref, y[j]);
-            if du != 0.0 {
-                x.add_row_scaled_range(j, cols.start, cols.end, -gamma * du, &mut w);
-            }
-            for (wk, &mk) in w.iter_mut().zip(mu) {
-                *wk -= gamma * mk;
-            }
-            if i >= tail_start {
-                for (a, &wk) in acc.iter_mut().zip(&w) {
-                    *a += wk;
-                }
-            }
-        }
-        let inv = 1.0 / (steps - tail_start) as f32;
-        for a in acc.iter_mut() {
-            *a *= inv;
-        }
-        acc
+        kernels::svrg_inner_avg(loss, x, y, cols, w0, wt, mu, idx, gamma)
     }
 }
 
@@ -192,5 +153,29 @@ mod tests {
         let y = [1.0f32, 1.0];
         // hinge: 1 + 0
         assert_close!(NativeEngine.loss_from_z(Loss::Hinge, &z, &y) as f32, 1.0);
+    }
+
+    #[test]
+    fn fused_entry_points_match_default_composition() {
+        // the trait's default partial_u/block_loss compose partial_z +
+        // dloss_u / loss_from_z; the native overrides fuse the passes —
+        // results must be bit-identical
+        let (x, y) = block(9, 7, 8);
+        let w: Vec<f32> = (0..7).map(|i| (i as f32 * 0.21).cos() * 0.4).collect();
+        let rows: Vec<u32> = vec![0, 2, 5, 8];
+        for loss in Loss::ALL {
+            let z = NativeEngine.partial_z(K, &x, 0..7, &w, &rows);
+            let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
+            assert_eq!(
+                NativeEngine.partial_u(K, loss, &x, 0..7, &w, &rows, &y),
+                NativeEngine.dloss_u(loss, &z, &y_rows),
+                "{loss}"
+            );
+            assert_eq!(
+                NativeEngine.block_loss(K, loss, &x, 0..7, &w, &rows, &y),
+                NativeEngine.loss_from_z(loss, &z, &y_rows),
+                "{loss}"
+            );
+        }
     }
 }

@@ -59,7 +59,13 @@
 //!   a leader and `P×Q` workers exchanging messages over a simulated
 //!   cluster ([`cluster`]), the [`Trainer`] session driving the SODDA /
 //!   RADiSA / RADiSA-avg outer loops ([`train`], [`coordinator`]), data
-//!   partitioning ([`data`]), and metrics.
+//!   partitioning ([`data`]), and metrics. The native hot path is the
+//!   batched kernel layer ([`engine::kernels`]): storage format
+//!   resolved once per call, monomorphized dense/CSR loops, fused
+//!   margin+derivative and one-traversal SVRG steps — benchmarked by
+//!   the `harness = false` bench targets (`BENCH_QUICK`/`BENCH_OUT`
+//!   knobs, JSON reports gated in CI by `repro bench-gate`; see
+//!   README §Benchmarks).
 //! * **L2 (python/compile/model.py, build-time)** — JAX compute graphs
 //!   (stochastic full-gradient estimate, SVRG inner loop, loss eval),
 //!   AOT-lowered to HLO text under `artifacts/`.

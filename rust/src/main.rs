@@ -23,6 +23,7 @@ use sodda::config::{preset, AlgorithmKind, DataConfig, ExperimentConfig, Schedul
 use sodda::harness::{self, Opts};
 use sodda::loss::Loss;
 use sodda::util::cli::Args;
+use sodda::util::json;
 use sodda::Trainer;
 
 const HELP: &str = "\
@@ -38,7 +39,13 @@ SUBCOMMANDS
   fig2     (b,c,d) sweeps vs RADiSA-avg on `small` — panels a..g
   fig3     SODDA vs RADiSA-avg on medium+large, 3 seeds
   fig4     SODDA vs RADiSA-avg on the sparse datasets
-  perf     per-phase wall-clock breakdown (EXPERIMENTS.md §Perf)
+  perf     per-phase wall-clock breakdown (EXPERIMENTS.md §Perf);
+           also writes a machine-readable report (--json NAME, default
+           perf.json under --out)
+  bench-gate  compare bench JSON (--dir, default target/bench) against
+           a checked-in baseline (--baseline, default
+           benches/baseline.json); non-zero exit on any median slower
+           than max_ratio x baseline (--max-ratio overrides the file)
   theory   empirical checks of Theorems 2-4 (rates, error floors)
   gen-data materialize a dataset to LIBSVM text or SODDA binary
   baselines  mini-batch SGD + CentralVR vs SODDA on one dataset
@@ -138,6 +145,7 @@ fn run() -> Result<()> {
         Some("fig3") => harness::fig3(&o),
         Some("fig4") => harness::fig4(&o),
         Some("perf") => cmd_perf(&args, &o),
+        Some("bench-gate") => cmd_bench_gate(&args),
         Some("theory") => sodda::harness::theory::run(&o).map(drop),
         Some("gen-data") => cmd_gen_data(&args, &o),
         Some("baselines") => cmd_baselines(&args, &o),
@@ -315,5 +323,84 @@ fn cmd_perf(args: &Args, o: &Opts) -> Result<()> {
         1e3 * (wall - train_only) / cfg.outer_iters as f64,
     );
     println!("sim totals: {:.2} MB comm, {} msgs", out.comm_bytes as f64 / 1e6, out.comm_msgs);
+
+    // machine-readable report for the perf trajectory (BENCH_*.json)
+    let iters = cfg.outer_iters as f64;
+    let report = json::obj(vec![
+        ("schema", json::s("sodda-perf-v1")),
+        ("engine", json::s(trainer.engine().name())),
+        ("algo", json::s(cfg.algorithm.to_string())),
+        ("n", json::num(cfg.data.n() as f64)),
+        ("m", json::num(cfg.data.m() as f64)),
+        ("p", json::num(cfg.p as f64)),
+        ("q", json::num(cfg.q as f64)),
+        ("inner_steps", json::num(cfg.inner_steps as f64)),
+        ("outer_iters", json::num(iters)),
+        (
+            "phases",
+            json::obj(vec![
+                ("total_ms_per_iter", json::num(1e3 * wall / iters)),
+                ("train_ms_per_iter", json::num(1e3 * train_only / iters)),
+                ("eval_ms_per_iter", json::num(1e3 * (wall - train_only) / iters)),
+            ]),
+        ),
+        ("comm_mb", json::num(out.comm_bytes as f64 / 1e6)),
+        ("comm_msgs", json::num(out.comm_msgs as f64)),
+    ]);
+    std::fs::create_dir_all(&o.out_dir)?;
+    let json_path = o.out_dir.join(args.str_or("json", "perf.json"));
+    std::fs::write(&json_path, report.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
     Ok(())
+}
+
+/// CI regression gate: compare the bench JSON reports under `--dir`
+/// against the checked-in baseline (README §Benchmarks). Exits non-zero
+/// when a gated median regresses past the allowed ratio.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    use sodda::util::bench;
+
+    let baseline_path = args.str_or("baseline", "benches/baseline.json");
+    let dir = std::path::PathBuf::from(args.str_or("dir", "target/bench"));
+    let baseline = json::Value::parse(
+        &std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )
+    .with_context(|| format!("parsing {baseline_path}"))?;
+    let max_ratio = match args.get("max-ratio") {
+        Some(v) => v.parse::<f64>().map_err(|e| anyhow::anyhow!("--max-ratio {v:?}: {e}"))?,
+        None => baseline.opt("max_ratio").map(|v| v.as_f64()).transpose()?.unwrap_or(1.5),
+    };
+    let mut reports = Vec::new();
+    for entry in
+        std::fs::read_dir(&dir).with_context(|| format!("reading bench dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.extension().is_some_and(|e| e == "json") {
+            let text = std::fs::read_to_string(&path)?;
+            reports.push(
+                json::Value::parse(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?,
+            );
+        }
+    }
+    anyhow::ensure!(
+        !reports.is_empty(),
+        "no bench JSON under {} — run the bench targets first (BENCH_QUICK=1 cargo bench)",
+        dir.display()
+    );
+    println!(
+        "bench-gate: {} report file(s) vs {baseline_path} (max ratio {max_ratio})",
+        reports.len()
+    );
+    let problems = bench::regressions(&baseline, &reports, max_ratio)?;
+    if problems.is_empty() {
+        println!("bench-gate: OK");
+        Ok(())
+    } else {
+        for p in &problems {
+            eprintln!("REGRESSION: {p}");
+        }
+        bail!("{} benchmark regression(s)", problems.len())
+    }
 }

@@ -49,8 +49,9 @@ impl Trainer {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..q).map(|qi| Arc::new(w_masked[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
 
-        let z = self.cluster.partial_z(&w_blocks, &rows_arc);
         {
+            // phase-1 cost, identical for both paths below: the fused
+            // reply (`u`) is exactly as long as the unfused one (`z`)
             let mut bytes = 0u64;
             let mut max_flops = 0f64;
             for pi in 0..p {
@@ -65,13 +66,14 @@ impl Trainer {
             self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
         }
 
-        // u = f'(z, y) at the reduce site (leader)
-        let mut u_per_p: Vec<Arc<Vec<f32>>> = Vec::with_capacity(p);
-        for pi in 0..p {
-            let y_rows: Vec<f32> =
-                rows_arc[pi].iter().map(|&r| self.cluster.y[pi][r as usize]).collect();
-            u_per_p.push(Arc::new(self.leader_engine.dloss_u(cfg.loss, &z[pi], &y_rows)));
-        }
+        // u = f'(z, y): fused on-worker when the grid has one feature
+        // block, z-reduce + leader dloss otherwise (the cluster picks)
+        let u_per_p: Vec<Arc<Vec<f32>>> = self
+            .cluster
+            .partial_u(&w_blocks, &rows_arc, self.leader_engine.as_ref(), cfg.loss)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
         self.state.net.local(sets.d.len() as f64);
 
         let mut g = self.cluster.grad(&u_per_p, &rows_arc);
@@ -169,11 +171,8 @@ impl Trainer {
         let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
             .map(|_| Arc::new((0..self.cluster.n_per as u32).collect()))
             .collect();
-        let z = self.cluster.partial_z(&w_blocks, &rows);
-        let mut total = 0.0f64;
-        for pi in 0..self.cluster.p {
-            total += self.leader_engine.loss_from_z(self.cfg.loss, &z[pi], &self.cluster.y[pi]);
-        }
+        let total =
+            self.cluster.block_loss(&w_blocks, &rows, self.leader_engine.as_ref(), self.cfg.loss);
         total / self.cluster.n_total as f64
     }
 }

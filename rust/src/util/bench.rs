@@ -6,19 +6,39 @@
 //! b.bench("row_dot/1k", || { /* work */ });
 //! b.finish();
 //! ```
-//! Reports min/median/mean per iteration after a warmup phase, and writes
-//! a CSV next to the binary's working dir for EXPERIMENTS.md.
+//!
+//! Reports min/median/mean per iteration after a warmup phase, and
+//! writes the rows as machine-readable JSON so the perf trajectory can
+//! be tracked and CI can gate regressions (`repro bench-gate`). Knobs:
+//!
+//! * `BENCH_QUICK=1` — one-tenth measurement budget (CI smoke);
+//! * `BENCH_OUT=path.json` — report destination; defaults to
+//!   `target/bench/<group>.json`, creating directories as needed.
+//!
+//! JSON schema (`"schema": "sodda-bench-v1"`): top level `group`,
+//! `quick` and `rows`; each row `{group, name, iters, min_ns,
+//! median_ns, mean_ns}` plus `throughput_melem_s` when the benchmark
+//! declared its per-iteration element count ([`Bench::bench_elems`]).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Value};
 
 pub struct Bench {
     group: String,
     /// target measurement time per benchmark
     budget: Duration,
     warmup: Duration,
-    rows: Vec<(String, Stats)>,
+    rows: Vec<Row>,
     /// quick mode (`BENCH_QUICK=1`): one-tenth budget for CI smoke
     pub quick: bool,
+}
+
+struct Row {
+    name: String,
+    /// work items per iteration (0 = no throughput column)
+    elems: u64,
+    stats: Stats,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -42,11 +62,21 @@ impl Bench {
     }
 
     /// Time `f`, batching iterations adaptively.
-    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Stats {
-        // warmup + estimate cost
+    pub fn bench<R>(&mut self, name: &str, f: impl FnMut() -> R) -> Stats {
+        self.bench_elems(name, 0, f)
+    }
+
+    /// Like [`Self::bench`], but records `elems` work items per
+    /// iteration (rows × cols, nnz, …) so the JSON report carries a
+    /// throughput column in Melem/s.
+    pub fn bench_elems<R>(&mut self, name: &str, elems: u64, mut f: impl FnMut() -> R) -> Stats {
+        // warmup + estimate cost (quick mode keeps the floors low so CI
+        // smoke stays fast even for second-long end-to-end benchmarks)
+        let min_calls = if self.quick { 1 } else { 3 };
+        let min_samples = if self.quick { 2 } else { 5 };
         let warm_start = Instant::now();
         let mut calls = 0u64;
-        while warm_start.elapsed() < self.warmup || calls < 3 {
+        while warm_start.elapsed() < self.warmup || calls < min_calls {
             std::hint::black_box(f());
             calls += 1;
         }
@@ -56,7 +86,7 @@ impl Bench {
         let mut samples: Vec<f64> = Vec::new();
         let start = Instant::now();
         let mut total_iters = 0u64;
-        while start.elapsed() < self.budget || samples.len() < 5 {
+        while start.elapsed() < self.budget || samples.len() < min_samples {
             let t0 = Instant::now();
             for _ in 0..batch {
                 std::hint::black_box(f());
@@ -82,24 +112,95 @@ impl Bench {
             fmt_ns(stats.mean_ns),
             stats.iters
         );
-        self.rows.push((name.to_string(), stats));
+        self.rows.push(Row { name: name.to_string(), elems, stats });
         stats
     }
 
-    /// Print the summary table; returns CSV content for persistence.
-    pub fn finish(self) -> String {
-        let mut csv = String::from("group,name,min_ns,median_ns,mean_ns,iters\n");
-        for (name, s) in &self.rows {
-            csv.push_str(&format!(
-                "{},{},{:.1},{:.1},{:.1},{}\n",
-                self.group, name, s.min_ns, s.median_ns, s.mean_ns, s.iters
-            ));
-        }
-        let path = format!("target/bench-{}.csv", self.group);
-        let _ = std::fs::write(&path, &csv);
-        println!("(wrote {path})");
-        csv
+    /// Assemble the JSON report for the recorded rows.
+    fn report(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut pairs = vec![
+                    ("group", json::s(self.group.clone())),
+                    ("name", json::s(row.name.clone())),
+                    ("iters", json::num(row.stats.iters as f64)),
+                    ("min_ns", json::num(row.stats.min_ns)),
+                    ("median_ns", json::num(row.stats.median_ns)),
+                    ("mean_ns", json::num(row.stats.mean_ns)),
+                ];
+                if row.elems > 0 {
+                    // elems per ns × 1e3 = millions of elements per second
+                    pairs.push((
+                        "throughput_melem_s",
+                        json::num(row.elems as f64 / row.stats.median_ns * 1e3),
+                    ));
+                }
+                json::obj(pairs)
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s("sodda-bench-v1")),
+            ("group", json::s(self.group.clone())),
+            ("quick", Value::Bool(self.quick)),
+            ("rows", Value::Arr(rows)),
+        ])
     }
+
+    /// Print the summary, write the JSON report (`BENCH_OUT`, defaulting
+    /// to `target/bench/<group>.json`), and return the JSON text.
+    pub fn finish(self) -> String {
+        let text = self.report().to_string_pretty();
+        let path = std::env::var("BENCH_OUT")
+            .unwrap_or_else(|_| format!("target/bench/{}.json", self.group));
+        let path = std::path::PathBuf::from(path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        match std::fs::write(&path, &text) {
+            Ok(()) => println!("(wrote {})", path.display()),
+            Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+        }
+        text
+    }
+}
+
+/// Compare bench reports against a baseline
+/// (`{"max_ratio": 1.5, "entries": [{group, name, median_ns}, …]}`).
+/// Returns one line per problem: a median slower than
+/// `max_ratio × baseline`, or a baseline entry the current run never
+/// produced (a silently dropped benchmark should fail the gate too).
+/// Current rows without a baseline entry are ignored so new benchmarks
+/// can land before their baseline is recorded.
+pub fn regressions(baseline: &Value, current: &[Value], max_ratio: f64) -> anyhow::Result<Vec<String>> {
+    use std::collections::BTreeMap;
+    let mut medians: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for report in current {
+        for row in report.get("rows")?.as_arr()? {
+            medians.insert(
+                (row.get("group")?.as_str()?.to_string(), row.get("name")?.as_str()?.to_string()),
+                row.get("median_ns")?.as_f64()?,
+            );
+        }
+    }
+    let mut out = Vec::new();
+    for e in baseline.get("entries")?.as_arr()? {
+        let group = e.get("group")?.as_str()?.to_string();
+        let name = e.get("name")?.as_str()?.to_string();
+        let base = e.get("median_ns")?.as_f64()?;
+        match medians.get(&(group.clone(), name.clone())) {
+            None => out.push(format!("{group}/{name}: baseline entry missing from current run")),
+            Some(&cur) if cur > max_ratio * base => out.push(format!(
+                "{group}/{name}: median {cur:.0} ns > {max_ratio}x baseline {base:.0} ns ({:.2}x)",
+                cur / base
+            )),
+            Some(_) => {}
+        }
+    }
+    Ok(out)
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -119,13 +220,48 @@ mod tests {
     use super::*;
 
     #[test]
-    fn measures_something_sane() {
+    fn measures_something_sane_and_emits_json() {
         std::env::set_var("BENCH_QUICK", "1");
+        let out = std::env::temp_dir().join("sodda-bench-selftest/selftest.json");
+        std::env::set_var("BENCH_OUT", &out);
         let mut b = Bench::from_env("selftest");
-        let s = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        let s = b.bench_elems("noop-ish", 2, || std::hint::black_box(1 + 1));
         assert!(s.min_ns >= 0.0 && s.median_ns < 1e6, "{s:?}");
-        let csv = b.finish();
-        assert!(csv.contains("selftest,noop-ish"));
+        let text = b.finish();
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str().unwrap(), "selftest");
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "noop-ish");
+        assert!(rows[0].get("throughput_melem_s").unwrap().as_f64().unwrap() > 0.0);
+        // BENCH_OUT file round-trips
+        let on_disk = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(Value::parse(&on_disk).unwrap(), v);
+        std::env::remove_var("BENCH_OUT");
+    }
+
+    #[test]
+    fn gate_flags_regressions_and_missing_rows_only() {
+        let base = Value::parse(
+            r#"{"max_ratio": 1.5, "entries": [
+                {"group": "g", "name": "fast", "median_ns": 100.0},
+                {"group": "g", "name": "slow", "median_ns": 100.0},
+                {"group": "g", "name": "gone", "median_ns": 100.0}
+            ]}"#,
+        )
+        .unwrap();
+        let cur = Value::parse(
+            r#"{"schema": "sodda-bench-v1", "group": "g", "quick": true, "rows": [
+                {"group": "g", "name": "fast", "iters": 1, "min_ns": 1, "median_ns": 120.0, "mean_ns": 1},
+                {"group": "g", "name": "slow", "iters": 1, "min_ns": 1, "median_ns": 200.0, "mean_ns": 1},
+                {"group": "g", "name": "new-bench", "iters": 1, "min_ns": 1, "median_ns": 9.0, "mean_ns": 1}
+            ]}"#,
+        )
+        .unwrap();
+        let probs = regressions(&base, &[cur], 1.5).unwrap();
+        assert_eq!(probs.len(), 2, "{probs:?}");
+        assert!(probs.iter().any(|p| p.contains("g/slow")), "{probs:?}");
+        assert!(probs.iter().any(|p| p.contains("g/gone")), "{probs:?}");
     }
 
     #[test]

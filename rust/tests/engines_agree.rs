@@ -92,6 +92,35 @@ fn xla_engine_rejects_wrong_shapes() {
 }
 
 #[test]
+fn fused_partial_u_matches_across_engines() {
+    // the XLA engine inherits the trait's *default* partial_u/block_loss
+    // (partial_z + dloss_u / loss_from_z composition); the native engine
+    // overrides them with the fused batched kernels — both must agree,
+    // and the native fused path must equal its own composition exactly.
+    let Some(rt) = test_bucket() else { return };
+    let xla = XlaEngine::new(rt, 100, 30, 10, 16).unwrap();
+    let native = NativeEngine;
+    let ds = synth::dense_zhang(100, 30, 5);
+    let key = BlockKey { p: 0, q: 0 };
+    let w: Vec<f32> = (0..30).map(|i| (i as f32 * 0.21).cos() * 0.5).collect();
+    let rows: Vec<u32> = (0..100u32).step_by(4).collect();
+    for loss in [Loss::Hinge, Loss::Logistic, Loss::Squared] {
+        let un = native.partial_u(key, loss, &ds.x, 0..30, &w, &rows, &ds.y);
+        let ux = xla.partial_u(key, loss, &ds.x, 0..30, &w, &rows, &ds.y);
+        for (a, b) in ux.iter().zip(&un) {
+            assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "{loss}: partial_u {a} vs {b}");
+        }
+        let zn = native.partial_z(key, &ds.x, 0..30, &w, &rows);
+        let y_rows: Vec<f32> = rows.iter().map(|&r| ds.y[r as usize]).collect();
+        assert_eq!(un, native.dloss_u(loss, &zn, &y_rows), "{loss}: fused != composed");
+
+        let ln = native.block_loss(key, loss, &ds.x, 0..30, &w, &rows, &ds.y);
+        let lx = xla.block_loss(key, loss, &ds.x, 0..30, &w, &rows, &ds.y);
+        assert!((lx - ln).abs() < 1e-3 * (1.0 + ln.abs()), "{loss}: block_loss {lx} vs {ln}");
+    }
+}
+
+#[test]
 fn xla_primitives_match_native_on_one_block() {
     let Some(rt) = test_bucket() else { return };
     let xla = XlaEngine::new(rt, 100, 30, 10, 16).unwrap();

@@ -1,0 +1,228 @@
+//! Property tests for the batched kernel layer (`engine::kernels`).
+//!
+//! The batched dense/CSR kernels must match the per-row scalar path
+//! **bit-for-bit** — they share one per-row accumulation order with the
+//! `Store` scalar ops, so batching/fusion/blocking may change
+//! throughput but never bits. Cases sweep random shapes, random column
+//! sub-ranges (including empty), and row sets from empty through full,
+//! for both storage formats; `assert_eq!` on the raw f32/f64 values is
+//! the whole point (no tolerances).
+
+use sodda::data::{CsrMatrix, DenseMatrix, Store};
+use sodda::engine::kernels;
+use sodda::loss::Loss;
+use sodda::util::rng::Rng;
+use sodda::util::testing::forall;
+
+fn dense(rng: &mut Rng, n: usize, m: usize) -> Store {
+    let mut d = DenseMatrix::zeros(n, m);
+    for v in d.data.iter_mut() {
+        *v = rng.f32_range(-1.0, 1.0);
+    }
+    Store::Dense(d)
+}
+
+fn sparse(rng: &mut Rng, n: usize, m: usize) -> Store {
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nnz = rng.below(m + 1); // rows may be empty
+        let cols = rng.sample_without_replacement(m, nnz);
+        entries.push(cols.into_iter().map(|c| (c, rng.f32_range(-1.0, 1.0))).collect());
+    }
+    Store::Sparse(CsrMatrix::from_row_entries(n, m, entries))
+}
+
+struct Case {
+    x: Store,
+    y: Vec<f32>,
+    lo: usize,
+    hi: usize,
+    w: Vec<f32>,
+    rows: Vec<u32>,
+    u: Vec<f32>,
+}
+
+fn case(rng: &mut Rng, sparse_fmt: bool) -> Case {
+    let n = 1 + rng.below(40);
+    let m = 1 + rng.below(64);
+    let x = if sparse_fmt { sparse(rng, n, m) } else { dense(rng, n, m) };
+    let y: Vec<f32> = (0..n).map(|_| if rng.bool_with(0.5) { 1.0 } else { -1.0 }).collect();
+    let lo = rng.below(m + 1);
+    let hi = lo + rng.below(m - lo + 1); // may be empty (hi == lo)
+    let w: Vec<f32> = (0..hi - lo).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let k = rng.below(n + 1); // 0 => empty row set
+    let rows = rng.sample_without_replacement(n, k);
+    // exact zeros mixed in, like hinge derivatives (exercises the
+    // zero-skip in the blocked axpy)
+    let u: Vec<f32> = (0..rows.len())
+        .map(|i| if i % 3 == 0 { 0.0 } else { rng.f32_range(-1.0, 1.0) })
+        .collect();
+    Case { x, y, lo, hi, w, rows, u }
+}
+
+fn scalar_partial_z(c: &Case) -> Vec<f32> {
+    c.rows.iter().map(|&r| c.x.row_dot_range(r as usize, c.lo, c.hi, &c.w)).collect()
+}
+
+#[test]
+fn batched_partial_z_is_bit_for_bit_scalar() {
+    for sparse_fmt in [false, true] {
+        forall(150, 0xA1 + sparse_fmt as u64, |rng| {
+            let c = case(rng, sparse_fmt);
+            let z = kernels::partial_z(&c.x, c.lo..c.hi, &c.w, &c.rows);
+            assert_eq!(z, scalar_partial_z(&c), "sparse={sparse_fmt}");
+        });
+    }
+}
+
+#[test]
+fn batched_grad_slice_is_bit_for_bit_scalar() {
+    for sparse_fmt in [false, true] {
+        forall(150, 0xB1 + sparse_fmt as u64, |rng| {
+            let c = case(rng, sparse_fmt);
+            let g = kernels::grad_slice(&c.x, c.lo..c.hi, &c.rows, &c.u);
+            let mut want = vec![0.0f32; c.hi - c.lo];
+            for (&r, &uk) in c.rows.iter().zip(&c.u) {
+                c.x.add_row_scaled_range(r as usize, c.lo, c.hi, uk, &mut want);
+            }
+            assert_eq!(g, want, "sparse={sparse_fmt}");
+        });
+    }
+}
+
+#[test]
+fn fused_partial_u_is_bit_for_bit_composition() {
+    for sparse_fmt in [false, true] {
+        forall(100, 0xC1 + sparse_fmt as u64, |rng| {
+            let c = case(rng, sparse_fmt);
+            let z = scalar_partial_z(&c);
+            for loss in Loss::ALL {
+                let got = kernels::partial_u(loss, &c.x, c.lo..c.hi, &c.w, &c.rows, &c.y);
+                let want: Vec<f32> = z
+                    .iter()
+                    .zip(&c.rows)
+                    .map(|(&zk, &r)| loss.dloss(zk, c.y[r as usize]))
+                    .collect();
+                assert_eq!(got, want, "sparse={sparse_fmt} {loss}");
+            }
+        });
+    }
+}
+
+#[test]
+fn fused_block_loss_is_bit_for_bit_composition() {
+    for sparse_fmt in [false, true] {
+        forall(100, 0xD1 + sparse_fmt as u64, |rng| {
+            let c = case(rng, sparse_fmt);
+            let z = scalar_partial_z(&c);
+            for loss in Loss::ALL {
+                let got = kernels::block_loss(loss, &c.x, c.lo..c.hi, &c.w, &c.rows, &c.y);
+                let want: f64 = z
+                    .iter()
+                    .zip(&c.rows)
+                    .map(|(&zk, &r)| loss.value(zk, c.y[r as usize]) as f64)
+                    .sum();
+                assert_eq!(got, want, "sparse={sparse_fmt} {loss}");
+            }
+        });
+    }
+}
+
+/// The pre-fusion inner loop: two independent row-dots per step,
+/// straight over the `Store` scalar ops.
+#[allow(clippy::too_many_arguments)]
+fn scalar_svrg(
+    loss: Loss,
+    x: &Store,
+    y: &[f32],
+    lo: usize,
+    hi: usize,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+    avg: bool,
+) -> Vec<f32> {
+    let mut w = w0.to_vec();
+    let mut acc = vec![0.0f32; w.len()];
+    for &j in idx {
+        let j = j as usize;
+        let z_cur = x.row_dot_range(j, lo, hi, &w);
+        let z_ref = x.row_dot_range(j, lo, hi, wt);
+        let du = loss.dloss(z_cur, y[j]) - loss.dloss(z_ref, y[j]);
+        if du != 0.0 {
+            x.add_row_scaled_range(j, lo, hi, -gamma * du, &mut w);
+        }
+        for (wk, &mk) in w.iter_mut().zip(mu) {
+            *wk -= gamma * mk;
+        }
+        for (a, &wk) in acc.iter_mut().zip(&w) {
+            *a += wk;
+        }
+    }
+    if avg {
+        let inv = 1.0 / idx.len() as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        acc
+    } else {
+        w
+    }
+}
+
+#[test]
+fn fused_svrg_is_bit_for_bit_two_pass() {
+    for sparse_fmt in [false, true] {
+        forall(80, 0xE1 + sparse_fmt as u64, |rng| {
+            let c = case(rng, sparse_fmt);
+            let mt = c.hi - c.lo;
+            let n = c.x.rows();
+            let w0: Vec<f32> = (0..mt).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+            let wt: Vec<f32> = (0..mt).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+            let mu: Vec<f32> = (0..mt).map(|_| rng.f32_range(-0.1, 0.1)).collect();
+            let idx = rng.sample_with_replacement(n, 1 + rng.below(24));
+            let gamma = 0.07f32;
+            for loss in Loss::ALL {
+                let got =
+                    kernels::svrg_inner(loss, &c.x, &c.y, c.lo..c.hi, &w0, &wt, &mu, &idx, gamma);
+                let want =
+                    scalar_svrg(loss, &c.x, &c.y, c.lo, c.hi, &w0, &wt, &mu, &idx, gamma, false);
+                assert_eq!(got, want, "sparse={sparse_fmt} {loss} last-iterate");
+                let got = kernels::svrg_inner_avg(
+                    loss, &c.x, &c.y, c.lo..c.hi, &w0, &wt, &mu, &idx, gamma,
+                );
+                let want =
+                    scalar_svrg(loss, &c.x, &c.y, c.lo, c.hi, &w0, &wt, &mu, &idx, gamma, true);
+                assert_eq!(got, want, "sparse={sparse_fmt} {loss} averaged");
+            }
+        });
+    }
+}
+
+/// End-to-end: a Q = 1 grid routes the µ estimate and objective through
+/// the fused on-worker `partial_u`/`block_loss` cluster commands; the
+/// run must be deterministic and actually train.
+#[test]
+fn q1_training_drives_fused_worker_path() {
+    use sodda::{ExperimentConfig, Trainer};
+    let cfg = ExperimentConfig::builder()
+        .name("q1-fused")
+        .dense(300, 30)
+        .grid(3, 1)
+        .outer_iters(10)
+        .seed(9)
+        .build()
+        .unwrap();
+    let a = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    let b = Trainer::new(cfg).unwrap().run().unwrap();
+    let losses = a.history.losses();
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        losses.last().unwrap() < &(0.9 * losses[0]),
+        "no progress on q=1 grid: {losses:?}"
+    );
+    assert_eq!(losses, b.history.losses(), "fused q=1 path must be deterministic");
+    assert_eq!(a.w, b.w);
+}
