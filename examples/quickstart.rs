@@ -7,8 +7,8 @@
 //! `--engine xla` (after `make artifacts` and building with
 //! `--features xla`) to execute the AOT JAX/Pallas kernels through PJRT.
 //! `--n/--m/--iters` shrink the run — CI's example-smoke job drives
-//! `--n 600 --m 60 --iters 3` to exercise the session API end-to-end
-//! on every PR.
+//! `--n 600 --m 60 --iters 3` (even grid) and `--n 601 --m 61 --iters 3`
+//! (ragged grid) to exercise the session API end-to-end on every PR.
 
 use std::ops::ControlFlow;
 
@@ -23,8 +23,9 @@ fn main() -> anyhow::Result<()> {
 
     // The paper's default partitioning: P = 5 observation partitions,
     // Q = 3 feature partitions; (b, c, d) = (85%, 80%, 85%) — the
-    // builder's defaults. Validation (divisibility, fraction ranges,
-    // schedule sanity) happens at build time.
+    // builder's defaults. Validation (fraction ranges, schedule sanity)
+    // happens at build time; any N × M works — shapes that don't divide
+    // evenly into the grid get balanced ragged partitions.
     let cfg = ExperimentConfig::builder()
         .name("quickstart")
         .dense(args.parse_or("n", 5000usize)?, args.parse_or("m", 360usize)?)

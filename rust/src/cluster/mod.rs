@@ -17,7 +17,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::data::{Block, Grid};
+use crate::data::{Block, Grid, Layout};
 use crate::engine::{BlockKey, ComputeEngine};
 use crate::loss::Loss;
 
@@ -109,8 +109,9 @@ impl Worker {
 pub struct SvrgTask {
     pub p: usize,
     pub q: usize,
-    /// block-local column range (`sub_cols(k)` for SODDA/RADiSA, the full
-    /// block for RADiSA-avg)
+    /// block-local column range — `Layout::sub_cols(q, k)` for every
+    /// algorithm (widths are per-block ragged); RADiSA-avg differs only
+    /// in the `avg` combiner below, not in the columns it owns
     pub cols: Range<usize>,
     pub w0: Vec<f32>,
     pub wt: Vec<f32>,
@@ -125,11 +126,9 @@ pub struct SvrgTask {
 pub struct Cluster {
     pub p: usize,
     pub q: usize,
-    pub n_per: usize,
-    pub m_per: usize,
-    pub mtilde: usize,
-    pub n_total: usize,
-    pub m_total: usize,
+    /// the grid's partition geometry (ragged boundary vectors) — the
+    /// leader's only source of block dims after blocks move to workers
+    pub layout: Layout,
     /// labels per observation partition (leader copy, for dloss/loss)
     pub y: Vec<Vec<f32>>,
     /// density (nnz fraction) per worker `[p][q]`, for the cost model
@@ -142,9 +141,8 @@ pub struct Cluster {
 impl Cluster {
     /// Move the grid's blocks into worker threads.
     pub fn launch(grid: Grid, engine: Arc<dyn ComputeEngine>, loss: Loss) -> Cluster {
-        let (p, q) = (grid.p, grid.q);
-        let (n_per, m_per, mtilde) = (grid.n_per, grid.m_per, grid.mtilde);
-        let (n_total, m_total) = (grid.n_total, grid.m_total);
+        let layout = grid.layout.clone();
+        let (p, q) = (layout.p, layout.q);
         let y: Vec<Vec<f32>> = (0..p).map(|pi| grid.block(pi, 0).y.clone()).collect();
         let density: Vec<f64> = grid
             .blocks()
@@ -173,7 +171,7 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Cluster { p, q, n_per, m_per, mtilde, n_total, m_total, y, density, cmd_txs, reply_rx, handles }
+        Cluster { p, q, layout, y, density, cmd_txs, reply_rx, handles }
     }
 
     #[inline]
@@ -306,10 +304,10 @@ impl Cluster {
             let Reply::Grad(slice) = reply else { panic!("expected Grad reply") };
             parts[id] = Some(slice);
         }
-        let mut g = vec![0.0f32; self.m_total];
+        let mut g = vec![0.0f32; self.layout.m_total];
         for (id, slice) in parts.into_iter().enumerate() {
             let qi = id % self.q;
-            let base = qi * self.m_per;
+            let base = self.layout.block_cols(qi).start;
             for (k, v) in slice.expect("reply").into_iter().enumerate() {
                 g[base + k] += v;
             }
@@ -473,6 +471,45 @@ mod tests {
             })
             .sum();
         assert_eq!(total, want);
+    }
+
+    #[test]
+    fn ragged_partial_z_and_grad_match_serial() {
+        // 21 rows over P=2 (10/11), 9 cols over Q=2 (4/5): exercises the
+        // boundary-offset assembly paths with genuinely uneven blocks
+        let (c, ds) = cluster(21, 9, 2, 2, 9);
+        let w: Vec<f32> = (0..9).map(|i| 0.1 * i as f32 - 0.3).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[c.layout.block_cols(qi)].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2)
+            .map(|pi| Arc::new((0..c.layout.rows_in(pi) as u32).collect()))
+            .collect();
+        let z = c.partial_z(&w_blocks, &rows);
+        for pi in 0..2 {
+            assert_eq!(z[pi].len(), c.layout.rows_in(pi));
+            for k in 0..c.layout.rows_in(pi) {
+                let gr = c.layout.block_rows(pi).start + k;
+                let want = ds.x.row_dot_range(gr, 0, 9, &w);
+                crate::assert_close!(z[pi][k], want, 1e-4, 1e-4);
+            }
+        }
+        let u: Vec<Arc<Vec<f32>>> = (0..2)
+            .map(|pi| {
+                let base = c.layout.block_rows(pi).start;
+                Arc::new((0..c.layout.rows_in(pi)).map(|k| (base + k) as f32 * 0.1).collect())
+            })
+            .collect();
+        let g = c.grad(&u, &rows);
+        let mut want = vec![0.0f32; 9];
+        for gr in 0..21 {
+            let uv = gr as f32 * 0.1;
+            let mut row = vec![0.0f32; 9];
+            ds.x.copy_row_range(gr, 0, 9, &mut row);
+            for (cidx, &xv) in row.iter().enumerate() {
+                want[cidx] += uv * xv;
+            }
+        }
+        assert_close_slice(&g, &want, 1e-3, 1e-3, "ragged grad");
     }
 
     #[test]

@@ -2,9 +2,12 @@
 //! [`ExperimentConfig`] outside this module: defaults mirror the paper's
 //! experimental setup (P=5, Q=3, hinge loss, the tuned (b, c, d) of
 //! §5.3, `γ_t = 0.08/(1+√(t−1))`), and [`ExperimentConfigBuilder::build`]
-//! runs the full validation pass (partition divisibility, fraction
-//! ranges, schedule sanity) so an invalid configuration can never reach
-//! a [`crate::train::Trainer`].
+//! runs the full validation pass (non-empty partitions, fraction
+//! ranges, schedule sanity — plus strict divisibility when
+//! [`ExperimentConfigBuilder::require_even_grid`] is set) so an invalid
+//! configuration can never reach a [`crate::train::Trainer`].
+//! Arbitrary `N × M` shapes are accepted by default; the partitioner
+//! hands out balanced ragged blocks.
 
 use anyhow::{Context, Result};
 
@@ -43,6 +46,7 @@ pub struct ExperimentConfigBuilder {
     engine: EngineKind,
     network: Option<NetworkConfig>,
     eval_every: usize,
+    strict_even_grid: bool,
 }
 
 impl Default for ExperimentConfigBuilder {
@@ -62,6 +66,7 @@ impl Default for ExperimentConfigBuilder {
             engine: EngineKind::Native,
             network: None,
             eval_every: 1,
+            strict_even_grid: false,
         }
     }
 }
@@ -155,6 +160,16 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    /// Reject shapes that don't divide evenly into the grid at build
+    /// time (the paper's `n = N/P`, `m̃ = M/QP` assumption, and this
+    /// crate's historical behavior). Without this knob the partitioner
+    /// balances ragged blocks automatically; evenly divisible shapes
+    /// train identically either way.
+    pub fn require_even_grid(mut self) -> Self {
+        self.strict_even_grid = true;
+        self
+    }
+
     /// Assemble and validate. This is the only path that hands out an
     /// [`ExperimentConfig`], so every config reaching a trainer has
     /// passed divisibility, fraction-range and schedule checks.
@@ -177,6 +192,7 @@ impl ExperimentConfigBuilder {
             engine: self.engine,
             network: self.network,
             eval_every: self.eval_every,
+            strict_even_grid: self.strict_even_grid,
         };
         cfg.validate().with_context(|| format!("invalid config {:?}", cfg.name))?;
         Ok(cfg)
@@ -207,6 +223,7 @@ impl ExperimentConfig {
             engine: self.engine,
             network: self.network,
             eval_every: self.eval_every,
+            strict_even_grid: self.strict_even_grid,
         }
     }
 }
@@ -231,11 +248,25 @@ mod tests {
     }
 
     #[test]
-    fn divisibility_is_rejected_at_build_time() {
-        // N=100 not divisible by P=3
-        assert!(ExperimentConfig::builder().dense(100, 30).grid(3, 2).build().is_err());
-        // M=30 not divisible by Q·P=10? 30 % (5·3)=0 is fine; use m=32
-        assert!(ExperimentConfig::builder().dense(100, 32).grid(5, 3).build().is_err());
+    fn ragged_shapes_build_by_default() {
+        // N=100 not divisible by P=3 — fine, the grid goes ragged
+        assert!(ExperimentConfig::builder().dense(100, 30).grid(3, 2).build().is_ok());
+        assert!(ExperimentConfig::builder().dense(100, 32).grid(5, 3).build().is_ok());
+        // but empty partitions/sub-blocks can never work
+        assert!(ExperimentConfig::builder().dense(2, 30).grid(3, 2).build().is_err());
+        assert!(ExperimentConfig::builder().dense(100, 5).grid(3, 2).build().is_err());
+    }
+
+    #[test]
+    fn require_even_grid_restores_divisibility_errors() {
+        let b = |n, m| ExperimentConfig::builder().dense(n, m).grid(3, 2).require_even_grid();
+        assert!(b(100, 30).build().is_err(), "N=100 % P=3 != 0");
+        assert!(b(99, 32).build().is_err(), "M=32 % QP=6 != 0");
+        assert!(b(99, 30).build().is_ok());
+        // the knob survives to_builder round trips
+        let strict = b(99, 30).build().unwrap();
+        assert!(strict.strict_even_grid);
+        assert!(strict.to_builder().dense(100, 30).build().is_err());
     }
 
     #[test]

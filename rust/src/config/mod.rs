@@ -198,18 +198,37 @@ pub struct ExperimentConfig {
     pub network: Option<NetworkConfig>,
     /// evaluate F(w) every k outer iterations (1 = every iteration)
     pub eval_every: usize,
+    /// reject shapes that don't divide evenly into the grid (the paper's
+    /// `n = N/P`, `m̃ = M/QP` assumption). Off by default: the
+    /// partitioner balances ragged blocks automatically. Validation-only
+    /// — it never changes how an accepted config trains.
+    pub strict_even_grid: bool,
 }
 
 impl ExperimentConfig {
     pub fn validate(&self) -> Result<()> {
         ensure!(self.p > 0 && self.q > 0, "P, Q must be positive");
-        ensure!(self.data.n() % self.p == 0, "N={} % P={} != 0", self.data.n(), self.p);
         ensure!(
-            self.data.m() % (self.p * self.q) == 0,
-            "M={} % (Q·P)={} != 0",
+            self.data.n() >= self.p,
+            "N={} < P={} would leave empty observation partitions",
+            self.data.n(),
+            self.p
+        );
+        ensure!(
+            self.data.m() >= self.p * self.q,
+            "M={} < P·Q={} would leave empty sub-blocks",
             self.data.m(),
             self.p * self.q
         );
+        if self.strict_even_grid {
+            ensure!(self.data.n() % self.p == 0, "N={} % P={} != 0", self.data.n(), self.p);
+            ensure!(
+                self.data.m() % (self.p * self.q) == 0,
+                "M={} % (Q·P)={} != 0",
+                self.data.m(),
+                self.p * self.q
+            );
+        }
         ensure!(self.inner_steps > 0, "inner_steps must be positive");
         ensure!(self.outer_iters > 0, "outer_iters must be positive");
         ensure!(self.eval_every > 0, "eval_every must be positive");
@@ -281,6 +300,7 @@ impl ExperimentConfig {
                 }),
             ),
             ("eval_every", json::num(self.eval_every as f64)),
+            ("strict_even_grid", Value::Bool(self.strict_even_grid)),
         ];
         if let Some(net) = self.network {
             fields.push((
@@ -352,6 +372,11 @@ impl ExperimentConfig {
             },
             network,
             eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
+            strict_even_grid: v
+                .opt("strict_even_grid")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -378,6 +403,7 @@ mod tests {
             engine: EngineKind::Native,
             network: None,
             eval_every: 1,
+            strict_even_grid: false,
         }
     }
 
@@ -397,13 +423,39 @@ mod tests {
     }
 
     #[test]
-    fn validation_catches_divisibility() {
+    fn ragged_shapes_validate_unless_strict() {
         let mut cfg = sample();
-        cfg.data = DataConfig::Dense { n: 101, m: 30 };
+        cfg.data = DataConfig::Dense { n: 101, m: 31 };
+        assert!(cfg.validate().is_ok(), "ragged shapes are the normal case");
+        cfg.strict_even_grid = true;
+        assert!(cfg.validate().is_err(), "strict mode keeps the paper's divisibility");
+        cfg.data = DataConfig::Dense { n: 100, m: 30 };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_partitions_always_rejected() {
+        // P=5, Q=3: N < P and M < P·Q can't produce non-empty blocks
+        let mut cfg = sample();
+        cfg.data = DataConfig::Dense { n: 4, m: 30 };
         assert!(cfg.validate().is_err());
         let mut cfg = sample();
-        cfg.data = DataConfig::Dense { n: 100, m: 31 };
+        cfg.data = DataConfig::Dense { n: 100, m: 14 };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn strict_even_grid_round_trips_through_json() {
+        let mut cfg = sample();
+        cfg.strict_even_grid = true;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.strict_even_grid);
+        // absent key defaults to ragged (older config files)
+        let json = sample().to_json();
+        let legacy = json.replace(",\n  \"strict_even_grid\": false", "");
+        assert_ne!(legacy, json, "test must actually strip the key");
+        let back = ExperimentConfig::from_json(&legacy).unwrap();
+        assert!(!back.strict_even_grid);
     }
 
     #[test]

@@ -34,6 +34,10 @@ impl Schedule {
     }
 
     /// Learning rate for outer iteration `t` (1-based, like the paper).
+    /// `t < 1` is clamped to the first iteration for **every** variant —
+    /// without the clamp the √-schedules compute `(0 - 1).sqrt() = NaN`
+    /// and `InvT` divides by zero, which a stray `gamma(0)` call would
+    /// silently propagate through the whole weight vector.
     pub fn gamma(&self, t: usize) -> f64 {
         let t = t.max(1) as f64;
         match *self {
@@ -89,5 +93,22 @@ mod tests {
     #[test]
     fn t_zero_clamps() {
         assert_close!(Schedule::PaperSqrt.gamma(0), 1.0);
+    }
+
+    #[test]
+    fn gamma_zero_is_finite_positive_for_every_variant() {
+        // regression: ScaledSqrt used to be the paper-sqrt formula without
+        // PaperSqrt's t-clamp, so gamma(0) was sqrt(-1) = NaN
+        let variants = [
+            Schedule::PaperSqrt,
+            Schedule::ScaledSqrt { gamma0: 0.08 },
+            Schedule::InvT { gamma0: 0.5 },
+            Schedule::Constant { gamma: 0.01 },
+        ];
+        for s in variants {
+            let g0 = s.gamma(0);
+            assert!(g0.is_finite() && g0 > 0.0, "{s:?}: gamma(0) = {g0}");
+            assert_eq!(g0, s.gamma(1), "{s:?}: t = 0 must clamp to the first iteration");
+        }
     }
 }

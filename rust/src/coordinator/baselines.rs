@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::cluster::{Cluster, CostModel, SimNet};
 use crate::config::ExperimentConfig;
-use crate::data::{Dataset, Grid};
+use crate::data::{Dataset, Grid, Layout};
 use crate::engine::ComputeEngine;
 use crate::metrics::{History, IterRecord};
 use crate::util::rng::Rng;
@@ -61,11 +61,12 @@ impl Ctx {
     /// z-reduce → dloss broadcast → slice-gather, charged like the µ^t
     /// phases of the main algorithms.
     fn mean_gradient(&mut self, cfg: &ExperimentConfig, rows: &[Vec<u32>]) -> Vec<f32> {
-        let (p, q, m_per) = (cfg.p, cfg.q, self.cluster.m_per);
+        let (p, q) = (cfg.p, cfg.q);
         let rows_arc: Vec<Arc<Vec<u32>>> = rows.iter().cloned().map(Arc::new).collect();
         let total_rows: usize = rows.iter().map(|r| r.len()).sum();
-        let w_blocks: Vec<Arc<Vec<f32>>> =
-            (0..q).map(|qi| Arc::new(self.w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
+            .map(|qi| Arc::new(self.w[self.cluster.layout.block_cols(qi)].to_vec()))
+            .collect();
         // same fused-or-reduce derivative pass as the main algorithms
         let u_per_p: Vec<Arc<Vec<f32>>> = self
             .cluster
@@ -79,33 +80,36 @@ impl Ctx {
             *v *= inv;
         }
         // cost model: same two phases as the µ^t estimate, full features
+        // (charged at each block's actual column count)
         let mut bytes = 0u64;
         let mut max_flops = 0f64;
         for pi in 0..p {
             for qi in 0..q {
-                bytes += 4 * (2 * m_per as u64 + 2 * rows_arc[pi].len() as u64);
-                let fl = 4.0 * rows_arc[pi].len() as f64 * m_per as f64 * self.cluster.density_at(pi, qi);
+                let mq = self.cluster.layout.cols_in(qi);
+                bytes += 4 * (2 * mq as u64 + 2 * rows_arc[pi].len() as u64);
+                let fl =
+                    4.0 * rows_arc[pi].len() as f64 * mq as f64 * self.cluster.density_at(pi, qi);
                 max_flops = max_flops.max(fl);
             }
         }
         self.net.phase(max_flops, bytes, 4 * (p * q) as u64, 2);
-        self.grad_coord_evals += (total_rows * self.cluster.m_total) as u64;
+        self.grad_coord_evals += (total_rows * self.cluster.layout.m_total) as u64;
         g
     }
 
     fn record(&mut self, cfg: &ExperimentConfig, t: usize) {
         if t % cfg.eval_every == 0 || t == cfg.outer_iters {
             let q = self.cluster.q;
-            let m_per = self.cluster.m_per;
-            let w_blocks: Vec<Arc<Vec<f32>>> =
-                (0..q).map(|qi| Arc::new(self.w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+            let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
+                .map(|qi| Arc::new(self.w[self.cluster.layout.block_cols(qi)].to_vec()))
+                .collect();
             let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
-                .map(|_| Arc::new((0..self.cluster.n_per as u32).collect()))
+                .map(|pi| Arc::new((0..self.cluster.layout.rows_in(pi) as u32).collect()))
                 .collect();
             let total = self.cluster.block_loss(&w_blocks, &rows, self.engine.as_ref(), cfg.loss);
             self.history.push(IterRecord {
                 iter: t,
-                loss: total / self.cluster.n_total as f64,
+                loss: total / self.cluster.layout.n_total as f64,
                 wall_s: self.t_start.elapsed().as_secs_f64(),
                 sim_s: self.net.sim_s(),
                 comm_bytes: self.net.total_bytes(),
@@ -115,9 +119,15 @@ impl Ctx {
     }
 }
 
-/// Per-partition mini-batch of `batch` local rows.
-fn draw_batches(rng: &mut Rng, p: usize, n_per: usize, batch: usize) -> Vec<Vec<u32>> {
-    (0..p).map(|_| rng.sample_without_replacement(n_per, batch.min(n_per))).collect()
+/// Per-partition mini-batch of `batch` local rows (capped at each
+/// partition's actual row count — partitions may be ragged).
+fn draw_batches(rng: &mut Rng, layout: &Layout, batch: usize) -> Vec<Vec<u32>> {
+    (0..layout.p)
+        .map(|pi| {
+            let n_p = layout.rows_in(pi);
+            rng.sample_without_replacement(n_p, batch.min(n_p))
+        })
+        .collect()
 }
 
 /// Synchronous distributed mini-batch SGD (parameter-server style).
@@ -133,7 +143,7 @@ pub fn minibatch_sgd(
     ctx.record(cfg, 0);
     for t in 1..=cfg.outer_iters {
         let gamma = cfg.schedule.gamma(t) as f32;
-        let rows = draw_batches(&mut rng, cfg.p, ctx.cluster.n_per, batch);
+        let rows = draw_batches(&mut rng, &ctx.cluster.layout, batch);
         let g = ctx.mean_gradient(cfg, &rows);
         for (wi, gi) in ctx.w.iter_mut().zip(&g) {
             *wi -= gamma * gi;
@@ -156,8 +166,9 @@ pub fn central_vr(
     anyhow::ensure!(epoch_len > 0, "epoch_len must be positive");
     let mut ctx = Ctx::new(cfg, ds, engine)?;
     let mut rng = Rng::seed_from_u64(cfg.seed).fork(0xE1);
-    let n_per = ctx.cluster.n_per;
-    let full_rows: Vec<Vec<u32>> = (0..cfg.p).map(|_| (0..n_per as u32).collect()).collect();
+    let full_rows: Vec<Vec<u32>> = (0..cfg.p)
+        .map(|pi| (0..ctx.cluster.layout.rows_in(pi) as u32).collect())
+        .collect();
     let mut w_snap = ctx.w.clone();
     let mut mu = ctx.mean_gradient(cfg, &full_rows);
     ctx.record(cfg, 0);
@@ -167,7 +178,7 @@ pub fn central_vr(
             w_snap = ctx.w.clone();
             mu = ctx.mean_gradient(cfg, &full_rows);
         }
-        let rows = draw_batches(&mut rng, cfg.p, n_per, batch);
+        let rows = draw_batches(&mut rng, &ctx.cluster.layout, batch);
         let g_cur = ctx.mean_gradient(cfg, &rows);
         // gradient at the snapshot on the same mini-batch
         let w_live = std::mem::replace(&mut ctx.w, w_snap.clone());

@@ -57,12 +57,32 @@ fn size_of(frac: f64, dim: usize) -> usize {
     ((frac * dim as f64).round() as usize).clamp(1, dim)
 }
 
-/// Split sorted global row ids into per-partition local ids.
-pub fn rows_per_partition(d: &[u32], p: usize, n_per: usize) -> Vec<Vec<u32>> {
+/// Split sorted global row ids into per-partition local ids, driven by
+/// the layout's row boundaries (`row_bounds[p]..row_bounds[p+1]` is
+/// partition `p` — see [`crate::data::Layout::row_bounds`]).
+///
+/// The uniform-grid predecessor computed `r / n_per` and clamped with
+/// `.min(p - 1)`, which silently mapped out-of-range rows onto the last
+/// partition with wrong local ids whenever `N % P != 0`; boundary
+/// bisection has no such failure mode, and the debug assertions make
+/// any out-of-range id loud instead of silent.
+pub fn rows_per_partition(d: &[u32], row_bounds: &[usize]) -> Vec<Vec<u32>> {
+    let p = row_bounds.len() - 1;
     let mut out = vec![Vec::new(); p];
+    let mut pi = 0usize;
     for &r in d {
-        let pi = (r as usize / n_per).min(p - 1);
-        out[pi].push(r - (pi * n_per) as u32);
+        let r = r as usize;
+        // `d` is sorted, so the owning partition only ever advances
+        while pi + 1 < p && r >= row_bounds[pi + 1] {
+            pi += 1;
+        }
+        debug_assert!(
+            r >= row_bounds[pi] && r < row_bounds[pi + 1],
+            "row id {r} outside partition {pi} [{}, {}) — ids must be sorted and < N",
+            row_bounds[pi],
+            row_bounds[pi + 1]
+        );
+        out[pi].push((r - row_bounds[pi]) as u32);
     }
     out
 }
@@ -137,23 +157,44 @@ mod tests {
 
     #[test]
     fn rows_split_preserves_everything() {
+        use crate::data::partition::split_points;
         forall(30, 7, |rng| {
             let p = 1 + rng.below(5);
-            let n_per = 1 + rng.below(50);
-            let n = p * n_per;
+            // both evenly divisible and ragged totals
+            let n = p * (1 + rng.below(50)) + rng.below(p);
+            let bounds = split_points(n, p);
             let k = 1 + rng.below(n);
             let d = rng.sample_without_replacement(n, k);
-            let split = rows_per_partition(&d, p, n_per);
+            let split = rows_per_partition(&d, &bounds);
             let total: usize = split.iter().map(|v| v.len()).sum();
             assert_eq!(total, d.len());
             for (pi, rows) in split.iter().enumerate() {
                 for &r in rows {
-                    assert!((r as usize) < n_per);
-                    let global = pi * n_per + r as usize;
+                    assert!((r as usize) < bounds[pi + 1] - bounds[pi], "local id in-bounds");
+                    let global = bounds[pi] + r as usize;
                     assert!(d.binary_search(&(global as u32)).is_ok());
                 }
             }
         });
+    }
+
+    #[test]
+    fn ragged_split_regression_indivisible_n() {
+        // N = 10 over P = 3 → bounds [0, 3, 6, 10]. The old uniform
+        // arithmetic (n_per = 3, clamp to p-1) sent rows 9 to partition 2
+        // with local id 9 - 2·3 = 3 — out of a 3-row uniform partition
+        // and, worse, silently wrong for any ragged layout.
+        let bounds = [0usize, 3, 6, 10];
+        let d: Vec<u32> = (0..10).collect();
+        let split = rows_per_partition(&d, &bounds);
+        assert_eq!(split[0], vec![0, 1, 2]);
+        assert_eq!(split[1], vec![0, 1, 2]);
+        assert_eq!(split[2], vec![0, 1, 2, 3]);
+        for (pi, rows) in split.iter().enumerate() {
+            for &r in rows {
+                assert!((r as usize) < bounds[pi + 1] - bounds[pi]);
+            }
+        }
     }
 
     #[test]

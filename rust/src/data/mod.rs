@@ -3,7 +3,9 @@
 //! The paper assumes the `N × M` design matrix is stored as `P × Q`
 //! partitions `x^{p,q}` (observation partition p, feature partition q),
 //! each of which is further column-split into `P` sub-blocks
-//! `x^{p,q,k}` of width `m̃ = M/QP` (Figure 1). This module provides:
+//! `x^{p,q,k}` (Figure 1; width `m̃ = M/QP` in the paper's evenly
+//! divisible setting, balanced ragged widths otherwise). This module
+//! provides:
 //!
 //! * [`dense::DenseMatrix`] / [`sparse::CsrMatrix`] storage,
 //! * [`Store`] — the runtime-polymorphic block (both §5.1 dense and
@@ -18,7 +20,7 @@ pub mod sparse;
 pub mod synth;
 
 pub use dense::DenseMatrix;
-pub use partition::{Block, Grid};
+pub use partition::{Block, Grid, Layout};
 pub use sparse::CsrMatrix;
 
 /// A data block in either storage format. All coordinator/engine code is

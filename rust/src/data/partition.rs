@@ -1,18 +1,25 @@
-//! The doubly distributed partitioner (paper Figure 1).
+//! The doubly distributed partitioner (paper Figure 1), generalized to
+//! ragged grids.
 //!
 //! Splits a [`Dataset`] into `P` observation partitions × `Q` feature
 //! partitions; each block's columns are further divided into `P`
-//! sub-blocks of width `m̃ = M/(Q·P)`. Workers address their sub-block
-//! through [`Grid::sub_cols`] (block-local column range) and the global
-//! parameter vector through [`Grid::global_cols`].
+//! sub-blocks. The paper's uniform `n = N/P`, `m̃ = M/QP` shapes are the
+//! special case of an evenly divisible dataset; for arbitrary `N × M`
+//! the [`Layout`] balances blocks with a ceil/floor split (sizes differ
+//! by at most one), exactly like a Spark range partitioner hands
+//! executors whatever slab the boundaries produce. All geometry lives in
+//! explicit boundary vectors — consumers address sub-blocks through
+//! [`Layout::sub_cols`] (block-local) and the global parameter vector
+//! through [`Layout::global_cols`]; nothing downstream may assume
+//! uniform widths.
 
 use anyhow::{ensure, Result};
 
 use super::{Dataset, Store};
 
-/// One worker's local shard: the `n × m` slab `x^{p,q}` plus the labels
-/// of its observation rows (replicated across the Q feature partitions,
-/// exactly like a Spark copartitioning would).
+/// One worker's local shard: the `n_p × m_q` slab `x^{p,q}` plus the
+/// labels of its observation rows (replicated across the Q feature
+/// partitions, exactly like a Spark copartitioning would).
 #[derive(Debug, Clone)]
 pub struct Block {
     pub p: usize,
@@ -21,80 +28,162 @@ pub struct Block {
     pub y: Vec<f32>,
 }
 
-/// The full P×Q grid plus all derived dimensions.
-#[derive(Debug, Clone)]
-pub struct Grid {
-    pub p: usize,
-    pub q: usize,
-    /// rows per observation partition (`n = N/P`)
-    pub n_per: usize,
-    /// features per feature block (`m = M/Q`)
-    pub m_per: usize,
-    /// features per sub-block (`m̃ = M/QP`)
-    pub mtilde: usize,
-    pub n_total: usize,
-    pub m_total: usize,
-    /// row-major `[p][q]` blocks
-    blocks: Vec<Block>,
+/// Balanced boundaries splitting `0..total` into `parts` ranges whose
+/// sizes differ by at most one (`bounds[i] = ⌊i·total/parts⌋`). On
+/// divisible inputs this reproduces the uniform `i · total/parts` grid
+/// exactly, which is what keeps ragged and legacy-uniform layouts
+/// bit-for-bit identical on evenly divisible shapes.
+pub fn split_points(total: usize, parts: usize) -> Vec<usize> {
+    debug_assert!(parts > 0, "split into zero parts");
+    (0..=parts).map(|i| i * total / parts).collect()
 }
 
-impl Grid {
-    /// Partition `ds` into a `p × q` grid. Requires `N % P == 0` and
-    /// `M % (Q·P) == 0` (the paper's `n = N/P`, `m̃ = M/QP` assumption —
-    /// generators and presets always satisfy it).
-    pub fn partition(ds: &Dataset, p: usize, q: usize) -> Result<Grid> {
-        let (n_total, m_total) = (ds.n(), ds.m());
+/// The partition geometry of a `P × Q` grid over an `N × M` dataset:
+/// explicit per-partition row boundaries, per-block column boundaries,
+/// and per-block sub-block boundaries. Shared verbatim between
+/// [`Grid`] (which owns the data blocks) and the
+/// [`crate::cluster::Cluster`] (whose leader needs the same geometry
+/// after the blocks have moved into worker threads).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    /// observation partitions
+    pub p: usize,
+    /// feature partitions
+    pub q: usize,
+    pub n_total: usize,
+    pub m_total: usize,
+    /// global row boundaries, length `P + 1`
+    row_bounds: Vec<usize>,
+    /// global column boundaries of the feature blocks, length `Q + 1`
+    col_bounds: Vec<usize>,
+    /// block-local sub-block boundaries, `[q][0..=P]`
+    sub_bounds: Vec<Vec<usize>>,
+}
+
+impl Layout {
+    /// Balanced ragged layout for an `n_total × m_total` dataset on a
+    /// `p × q` grid. Requires every partition and sub-block to be
+    /// non-empty (`N ≥ P`, `M ≥ P·Q`).
+    pub fn new(n_total: usize, m_total: usize, p: usize, q: usize) -> Result<Layout> {
         ensure!(p > 0 && q > 0, "P and Q must be positive");
-        ensure!(n_total % p == 0, "N={n_total} not divisible by P={p}");
-        ensure!(m_total % (q * p) == 0, "M={m_total} not divisible by Q·P={}", q * p);
-        let n_per = n_total / p;
-        let m_per = m_total / q;
-        let mtilde = m_per / p;
-
-        let mut blocks = Vec::with_capacity(p * q);
-        for pi in 0..p {
-            let rows = ds.x.slice_rows(pi * n_per, (pi + 1) * n_per);
-            let y = ds.y[pi * n_per..(pi + 1) * n_per].to_vec();
-            for qi in 0..q {
-                let x = rows.slice_cols(qi * m_per, (qi + 1) * m_per);
-                blocks.push(Block { p: pi, q: qi, x, y: y.clone() });
-            }
-        }
-        Ok(Grid { p, q, n_per, m_per, mtilde, n_total, m_total, blocks })
+        ensure!(n_total >= p, "N={n_total} < P={p} would leave empty observation partitions");
+        ensure!(
+            m_total >= p * q,
+            "M={m_total} < P·Q={} would leave empty sub-blocks",
+            p * q
+        );
+        let row_bounds = split_points(n_total, p);
+        let col_bounds = split_points(m_total, q);
+        let sub_bounds =
+            (0..q).map(|qi| split_points(col_bounds[qi + 1] - col_bounds[qi], p)).collect();
+        Ok(Layout { p, q, n_total, m_total, row_bounds, col_bounds, sub_bounds })
     }
 
-    #[inline]
-    pub fn block(&self, p: usize, q: usize) -> &Block {
-        &self.blocks[p * self.q + q]
+    /// Is this the paper's uniform special case (`N % P == 0` and
+    /// `M % (Q·P) == 0`)? Shape-specialized engines (the AOT XLA
+    /// kernels) only support uniform layouts.
+    pub fn is_uniform(&self) -> bool {
+        Self::shape_is_uniform(self.n_total, self.m_total, self.p, self.q)
     }
 
-    pub fn blocks(&self) -> impl Iterator<Item = &Block> {
-        self.blocks.iter()
+    /// The uniformity predicate behind [`Layout::is_uniform`], usable
+    /// before a layout exists — the single source of truth for shape
+    /// gates like the XLA engine build (strict-mode config validation
+    /// keeps its own per-dimension checks only for granular error
+    /// messages).
+    pub fn shape_is_uniform(n_total: usize, m_total: usize, p: usize, q: usize) -> bool {
+        n_total % p == 0 && m_total % (p * q) == 0
     }
 
-    /// Block-local column range of sub-block `k` (`k ∈ 0..P`).
-    #[inline]
-    pub fn sub_cols(&self, k: usize) -> std::ops::Range<usize> {
-        k * self.mtilde..(k + 1) * self.mtilde
-    }
-
-    /// Global column range of sub-block `k` of feature block `q`.
-    #[inline]
-    pub fn global_cols(&self, q: usize, k: usize) -> std::ops::Range<usize> {
-        let base = q * self.m_per;
-        base + k * self.mtilde..base + (k + 1) * self.mtilde
-    }
-
-    /// Global column range of feature block `q`.
-    #[inline]
-    pub fn block_cols(&self, q: usize) -> std::ops::Range<usize> {
-        q * self.m_per..(q + 1) * self.m_per
+    /// Global row boundaries (length `P + 1`) — partition `p` owns rows
+    /// `row_bounds()[p]..row_bounds()[p + 1]`.
+    pub fn row_bounds(&self) -> &[usize] {
+        &self.row_bounds
     }
 
     /// Global row range of observation partition `p`.
     #[inline]
     pub fn block_rows(&self, p: usize) -> std::ops::Range<usize> {
-        p * self.n_per..(p + 1) * self.n_per
+        self.row_bounds[p]..self.row_bounds[p + 1]
+    }
+
+    /// Rows owned by observation partition `p`.
+    #[inline]
+    pub fn rows_in(&self, p: usize) -> usize {
+        self.row_bounds[p + 1] - self.row_bounds[p]
+    }
+
+    /// Global column range of feature block `q`.
+    #[inline]
+    pub fn block_cols(&self, q: usize) -> std::ops::Range<usize> {
+        self.col_bounds[q]..self.col_bounds[q + 1]
+    }
+
+    /// Columns owned by feature block `q`.
+    #[inline]
+    pub fn cols_in(&self, q: usize) -> usize {
+        self.col_bounds[q + 1] - self.col_bounds[q]
+    }
+
+    /// Block-local column range of sub-block `k` of feature block `q`
+    /// (`k ∈ 0..P`). Widths are ragged: query per `(q, k)`, never assume
+    /// a uniform `m̃`.
+    #[inline]
+    pub fn sub_cols(&self, q: usize, k: usize) -> std::ops::Range<usize> {
+        self.sub_bounds[q][k]..self.sub_bounds[q][k + 1]
+    }
+
+    /// Global column range of sub-block `k` of feature block `q`.
+    #[inline]
+    pub fn global_cols(&self, q: usize, k: usize) -> std::ops::Range<usize> {
+        let base = self.col_bounds[q];
+        base + self.sub_bounds[q][k]..base + self.sub_bounds[q][k + 1]
+    }
+
+    /// Which observation partition owns global row `r` (boundary
+    /// bisection — no uniform-width arithmetic).
+    #[inline]
+    pub fn partition_of_row(&self, r: usize) -> usize {
+        debug_assert!(r < self.n_total, "row {r} outside dataset of {} rows", self.n_total);
+        self.row_bounds.partition_point(|&b| b <= r) - 1
+    }
+}
+
+/// The full P×Q grid: the shared [`Layout`] plus the data blocks.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub layout: Layout,
+    /// row-major `[p][q]` blocks
+    blocks: Vec<Block>,
+}
+
+impl Grid {
+    /// Partition `ds` into a ragged `p × q` grid (balanced ceil/floor
+    /// boundaries; see [`Layout`]). Evenly divisible shapes produce the
+    /// paper's uniform `n = N/P`, `m̃ = M/QP` blocks exactly.
+    pub fn partition(ds: &Dataset, p: usize, q: usize) -> Result<Grid> {
+        let layout = Layout::new(ds.n(), ds.m(), p, q)?;
+        let mut blocks = Vec::with_capacity(p * q);
+        for pi in 0..p {
+            let rr = layout.block_rows(pi);
+            let rows = ds.x.slice_rows(rr.start, rr.end);
+            let y = ds.y[rr].to_vec();
+            for qi in 0..q {
+                let cr = layout.block_cols(qi);
+                let x = rows.slice_cols(cr.start, cr.end);
+                blocks.push(Block { p: pi, q: qi, x, y: y.clone() });
+            }
+        }
+        Ok(Grid { layout, blocks })
+    }
+
+    #[inline]
+    pub fn block(&self, p: usize, q: usize) -> &Block {
+        &self.blocks[p * self.layout.q + q]
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = &Block> {
+        self.blocks.iter()
     }
 }
 
@@ -104,10 +193,19 @@ mod tests {
     use crate::data::synth;
 
     #[test]
-    fn partition_shapes() {
+    fn partition_shapes_uniform() {
         let ds = synth::dense_zhang(60, 24, 0);
         let g = Grid::partition(&ds, 3, 2).unwrap();
-        assert_eq!((g.n_per, g.m_per, g.mtilde), (20, 12, 4));
+        assert!(g.layout.is_uniform());
+        for pi in 0..3 {
+            assert_eq!(g.layout.rows_in(pi), 20);
+        }
+        for qi in 0..2 {
+            assert_eq!(g.layout.cols_in(qi), 12);
+            for k in 0..3 {
+                assert_eq!(g.layout.sub_cols(qi, k).len(), 4);
+            }
+        }
         assert_eq!(g.blocks().count(), 6);
         for b in g.blocks() {
             assert_eq!(b.x.rows(), 20);
@@ -117,60 +215,110 @@ mod tests {
     }
 
     #[test]
-    fn rejects_indivisible() {
-        let ds = synth::dense_zhang(61, 24, 0);
-        assert!(Grid::partition(&ds, 3, 2).is_err());
-        let ds = synth::dense_zhang(60, 26, 0);
-        assert!(Grid::partition(&ds, 3, 2).is_err());
+    fn ragged_shapes_are_balanced() {
+        // N=61 over P=3 → 20/20/21; M=26 over Q=2 → 13/13, each split
+        // into 3 sub-blocks of 4/4/5
+        let ds = synth::dense_zhang(61, 26, 0);
+        let g = Grid::partition(&ds, 3, 2).unwrap();
+        assert!(!g.layout.is_uniform());
+        let row_sizes: Vec<usize> = (0..3).map(|p| g.layout.rows_in(p)).collect();
+        assert_eq!(row_sizes.iter().sum::<usize>(), 61);
+        assert!(row_sizes.iter().all(|&s| s == 20 || s == 21));
+        for qi in 0..2 {
+            assert_eq!(g.layout.cols_in(qi), 13);
+            let widths: Vec<usize> = (0..3).map(|k| g.layout.sub_cols(qi, k).len()).collect();
+            assert_eq!(widths.iter().sum::<usize>(), 13);
+            assert!(widths.iter().all(|&w| w == 4 || w == 5));
+        }
+        for b in g.blocks() {
+            assert_eq!(b.x.rows(), g.layout.rows_in(b.p));
+            assert_eq!(b.x.cols(), g.layout.cols_in(b.q));
+            assert_eq!(b.y.len(), g.layout.rows_in(b.p));
+        }
+    }
+
+    #[test]
+    fn rejects_empty_partitions() {
+        let ds = synth::dense_zhang(2, 24, 0);
+        assert!(Grid::partition(&ds, 3, 2).is_err(), "N < P");
+        let ds = synth::dense_zhang(60, 5, 0);
+        assert!(Grid::partition(&ds, 3, 2).is_err(), "M < P·Q");
+        let ds = synth::dense_zhang(60, 24, 0);
+        assert!(Grid::partition(&ds, 0, 2).is_err(), "P = 0");
+    }
+
+    #[test]
+    fn split_points_divisible_matches_uniform_arithmetic() {
+        assert_eq!(split_points(60, 3), vec![0, 20, 40, 60]);
+        assert_eq!(split_points(7, 3), vec![0, 2, 4, 7]);
+        assert_eq!(split_points(3, 3), vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn blocks_tile_the_matrix_exactly() {
-        let ds = synth::dense_zhang(30, 12, 2);
-        let g = Grid::partition(&ds, 3, 2).unwrap();
-        // reconstruct every entry through the block view
-        for gr in 0..30 {
-            for gc in 0..12 {
-                let p = gr / g.n_per;
-                let q = gc / g.m_per;
-                let b = g.block(p, q);
-                let mut w = vec![0.0f32; 1];
-                let lc = gc - q * g.m_per;
-                b.x.copy_row_range(gr - p * g.n_per, lc, lc + 1, &mut w);
-                let mut orig = vec![0.0f32; 1];
-                ds.x.copy_row_range(gr, gc, gc + 1, &mut orig);
-                assert_eq!(w, orig, "mismatch at ({gr},{gc})");
+        for (n, m) in [(30usize, 12usize), (31, 13), (29, 17)] {
+            let ds = synth::dense_zhang(n, m, 2);
+            let g = Grid::partition(&ds, 3, 2).unwrap();
+            // reconstruct every entry through the block view
+            for gr in 0..n {
+                for gc in 0..m {
+                    let p = g.layout.partition_of_row(gr);
+                    let q = (0..2).find(|&qi| g.layout.block_cols(qi).contains(&gc)).unwrap();
+                    let b = g.block(p, q);
+                    let mut w = vec![0.0f32; 1];
+                    let lc = gc - g.layout.block_cols(q).start;
+                    let lr = gr - g.layout.block_rows(p).start;
+                    b.x.copy_row_range(lr, lc, lc + 1, &mut w);
+                    let mut orig = vec![0.0f32; 1];
+                    ds.x.copy_row_range(gr, gc, gc + 1, &mut orig);
+                    assert_eq!(w, orig, "mismatch at ({gr},{gc}) in {n}x{m}");
+                }
             }
         }
     }
 
     #[test]
     fn sub_and_global_cols_cover_disjointly() {
-        let ds = synth::dense_zhang(20, 40, 1);
-        let g = Grid::partition(&ds, 2, 2).unwrap();
-        let mut seen = vec![false; 40];
-        for q in 0..2 {
-            for k in 0..2 {
-                for c in g.global_cols(q, k) {
-                    assert!(!seen[c], "overlap at {c}");
-                    seen[c] = true;
+        for m in [40usize, 41, 43] {
+            let ds = synth::dense_zhang(20, m, 1);
+            let g = Grid::partition(&ds, 2, 2).unwrap();
+            let mut seen = vec![false; m];
+            for q in 0..2 {
+                for k in 0..2 {
+                    for c in g.layout.global_cols(q, k) {
+                        assert!(!seen[c], "overlap at {c} (m={m})");
+                        seen[c] = true;
+                    }
                 }
             }
+            assert!(seen.iter().all(|&s| s), "gap in cover (m={m})");
         }
-        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn partition_of_row_matches_boundaries() {
+        let l = Layout::new(61, 26, 3, 2).unwrap();
+        for r in 0..61 {
+            let p = l.partition_of_row(r);
+            assert!(l.block_rows(p).contains(&r), "row {r} → partition {p}");
+        }
+        assert_eq!(l.partition_of_row(0), 0);
+        assert_eq!(l.partition_of_row(60), 2);
     }
 
     #[test]
     fn sparse_partition_roundtrip() {
-        let ds = synth::sparse_pra(40, 80, 6, 3);
-        let g = Grid::partition(&ds, 2, 2).unwrap();
-        let total_nnz: usize = g.blocks().map(|b| b.x.nnz()).sum();
-        assert_eq!(total_nnz, ds.x.nnz());
+        for (n, m) in [(40usize, 80usize), (41, 83)] {
+            let ds = synth::sparse_pra(n, m, 6, 3);
+            let g = Grid::partition(&ds, 2, 2).unwrap();
+            let total_nnz: usize = g.blocks().map(|b| b.x.nnz()).sum();
+            assert_eq!(total_nnz, ds.x.nnz());
+        }
     }
 
     #[test]
     fn labels_replicated_across_feature_partitions() {
-        let ds = synth::dense_zhang(20, 8, 4);
+        let ds = synth::dense_zhang(21, 8, 4);
         let g = Grid::partition(&ds, 2, 2).unwrap();
         for p in 0..2 {
             assert_eq!(g.block(p, 0).y, g.block(p, 1).y);

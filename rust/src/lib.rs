@@ -22,7 +22,7 @@
 //!         .dense(5000, 360) // §5.1 synthetic SVM data
 //!         .grid(5, 3)       // the paper's P×Q partitioning
 //!         .outer_iters(25)
-//!         .build()?;        // validated: divisibility, fractions, schedule
+//!         .build()?;        // validated: shape, fractions, schedule
 //!
 //!     let mut trainer = Trainer::new(cfg)?;
 //!     let outcome = trainer.run_with_observer(|rec| {

@@ -93,6 +93,17 @@ pub fn build_engine(cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
         EngineKind::Native => Ok(Arc::new(NativeEngine)),
         #[cfg(feature = "xla")]
         EngineKind::Xla => {
+            // the AOT kernels are compiled at one uniform block shape;
+            // ragged layouts would need per-(p,q,k) artifacts
+            anyhow::ensure!(
+                crate::data::Layout::shape_is_uniform(cfg.data.n(), cfg.data.m(), cfg.p, cfg.q),
+                "engine `xla` requires an evenly divisible grid: N={} M={} on {}x{} \
+                 is ragged (use the native engine or an evenly divisible shape)",
+                cfg.data.n(),
+                cfg.data.m(),
+                cfg.p,
+                cfg.q
+            );
             let dir = std::env::var("SODDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
             let rt = Arc::new(
                 crate::runtime::XlaRuntime::load(&dir).context(
@@ -168,7 +179,7 @@ impl Trainer {
         let grid = Grid::partition(ds.as_ref(), cfg.p, cfg.q)?;
         let cluster = Cluster::launch(grid, Arc::clone(&engine), cfg.loss);
         Ok(Trainer {
-            state: fresh_state(&cfg, cluster.m_total),
+            state: fresh_state(&cfg, cluster.layout.m_total),
             cfg,
             ds,
             engine,
@@ -291,19 +302,19 @@ impl Trainer {
     /// streams, fresh cost model. The staged dataset/cluster/engine are
     /// untouched.
     pub fn reset(&mut self) {
-        self.state = fresh_state(&self.cfg, self.cluster.m_total);
+        self.state = fresh_state(&self.cfg, self.cluster.layout.m_total);
     }
 
     /// Start a fresh run from a caller-provided initial iterate ω^0
     /// (resumed/chained runs; warm-started baseline comparisons).
     pub fn warm_start(&mut self, w0: &[f32]) -> Result<()> {
         ensure!(
-            w0.len() == self.cluster.m_total,
+            w0.len() == self.cluster.layout.m_total,
             "warm_start: w0 has {} coordinates, model has {}",
             w0.len(),
-            self.cluster.m_total
+            self.cluster.layout.m_total
         );
-        self.state = fresh_state(&self.cfg, self.cluster.m_total);
+        self.state = fresh_state(&self.cfg, self.cluster.layout.m_total);
         self.state.w.copy_from_slice(w0);
         Ok(())
     }

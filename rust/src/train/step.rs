@@ -27,8 +27,7 @@ impl Trainer {
     pub(super) fn iterate(&mut self) -> Option<IterRecord> {
         let cfg = &self.cfg;
         let (p, q) = (cfg.p, cfg.q);
-        let (n_per, m_per, mtilde) = (self.cluster.n_per, self.cluster.m_per, self.cluster.mtilde);
-        let (n_total, m_total) = (self.cluster.n_total, self.cluster.m_total);
+        let (n_total, m_total) = (self.cluster.layout.n_total, self.cluster.layout.m_total);
         let t = self.state.t;
         let gamma = cfg.schedule.gamma(t) as f32;
 
@@ -39,15 +38,17 @@ impl Trainer {
             }
             AlgorithmKind::Radisa | AlgorithmKind::RadisaAvg => SampleSets::full(n_total, m_total),
         };
-        let rows_arc: Vec<Arc<Vec<u32>>> = sampling::rows_per_partition(&sets.d, p, n_per)
-            .into_iter()
-            .map(Arc::new)
-            .collect();
+        let rows_arc: Vec<Arc<Vec<u32>>> =
+            sampling::rows_per_partition(&sets.d, self.cluster.layout.row_bounds())
+                .into_iter()
+                .map(Arc::new)
+                .collect();
 
         // ---- µ^t estimate (step 8) ------------------------------------------
         let w_masked = sampling::mask_keep(&self.state.w, &sets.b);
-        let w_blocks: Vec<Arc<Vec<f32>>> =
-            (0..q).map(|qi| Arc::new(w_masked[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
+            .map(|qi| Arc::new(w_masked[self.cluster.layout.block_cols(qi)].to_vec()))
+            .collect();
 
         {
             // phase-1 cost, identical for both paths below: the fused
@@ -56,7 +57,8 @@ impl Trainer {
             let mut max_flops = 0f64;
             for pi in 0..p {
                 for qi in 0..q {
-                    let bq = SampleSets::count_in_range(&sets.b, qi * m_per, (qi + 1) * m_per);
+                    let cols = self.cluster.layout.block_cols(qi);
+                    let bq = SampleSets::count_in_range(&sets.b, cols.start, cols.end);
                     bytes += 4 * (bq as u64 + rows_arc[pi].len() as u64);
                     let fl =
                         2.0 * rows_arc[pi].len() as f64 * bq as f64 * self.cluster.density_at(pi, qi);
@@ -82,7 +84,8 @@ impl Trainer {
             let mut max_flops = 0f64;
             for pi in 0..p {
                 for qi in 0..q {
-                    let cq = SampleSets::count_in_range(&sets.c, qi * m_per, (qi + 1) * m_per);
+                    let cols = self.cluster.layout.block_cols(qi);
+                    let cq = SampleSets::count_in_range(&sets.c, cols.start, cols.end);
                     bytes += 4 * (rows_arc[pi].len() as u64 + cq as u64);
                     let fl =
                         2.0 * rows_arc[pi].len() as f64 * cq as f64 * self.cluster.density_at(pi, qi);
@@ -110,36 +113,48 @@ impl Trainer {
         let avg = cfg.algorithm == AlgorithmKind::RadisaAvg;
         let mut tasks: Vec<SvrgTask> = Vec::with_capacity(p * q);
         let mut task_cols: Vec<std::ops::Range<usize>> = Vec::with_capacity(p * q);
+        let mut task_density: Vec<f64> = Vec::with_capacity(p * q);
         for qi in 0..q {
             let perm = self.state.rng_perm.permutation(p);
             for pi in 0..p {
                 let k = perm[pi] as usize;
-                let gcols = qi * m_per + k * mtilde..qi * m_per + (k + 1) * mtilde;
+                let gcols = self.cluster.layout.global_cols(qi, k);
                 tasks.push(SvrgTask {
                     p: pi,
                     q: qi,
-                    cols: k * mtilde..(k + 1) * mtilde,
+                    cols: self.cluster.layout.sub_cols(qi, k),
                     w0: self.state.w[gcols.clone()].to_vec(),
                     wt: self.state.w[gcols.clone()].to_vec(),
                     mu: mu[gcols.clone()].to_vec(),
-                    idx: self.state.rng_rows.sample_with_replacement(n_per, cfg.inner_steps),
+                    idx: self
+                        .state
+                        .rng_rows
+                        .sample_with_replacement(self.cluster.layout.rows_in(pi), cfg.inner_steps),
                     gamma,
                     avg,
                 });
                 task_cols.push(gcols);
+                task_density.push(self.cluster.density_at(pi, qi));
             }
         }
         for (ti, w_l) in self.cluster.svrg(tasks) {
             self.state.w[task_cols[ti].clone()].copy_from_slice(&w_l);
         }
-        let max_density = (0..p)
-            .flat_map(|pi| (0..q).map(move |qi| (pi, qi)))
-            .fold(0.0f64, |acc, (pi, qi)| acc.max(self.cluster.density_at(pi, qi)));
-        let flops = 6.0 * cfg.inner_steps as f64 * mtilde as f64 * max_density;
-        let bytes =
-            ((p * q) as u64) * 4 * (3 * mtilde as u64 + cfg.inner_steps as u64 + mtilde as u64);
-        self.state.net.phase(flops, bytes, 2 * (p * q) as u64, 1);
-        self.state.grad_coord_evals += (p * q * cfg.inner_steps * mtilde) as u64;
+        // cost from the actual (ragged) sub-block dims: the phase waits
+        // on the slowest worker — the max (width × density) task — while
+        // traffic and coordinate evals sum the true widths
+        let mut max_flops = 0f64;
+        let mut bytes = 0u64;
+        let mut inner_evals = 0u64;
+        for (ti, gcols) in task_cols.iter().enumerate() {
+            let width = gcols.len();
+            let fl = 6.0 * cfg.inner_steps as f64 * width as f64 * task_density[ti];
+            max_flops = max_flops.max(fl);
+            bytes += 4 * (3 * width as u64 + cfg.inner_steps as u64 + width as u64);
+            inner_evals += (cfg.inner_steps * width) as u64;
+        }
+        self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+        self.state.grad_coord_evals += inner_evals;
 
         // ---- reporting -------------------------------------------------------
         if t % cfg.eval_every == 0 || t == cfg.outer_iters {
@@ -164,15 +179,15 @@ impl Trainer {
     /// offline).
     pub(super) fn objective_now(&self) -> f64 {
         let q = self.cluster.q;
-        let m_per = self.cluster.m_per;
         let w = &self.state.w;
-        let w_blocks: Vec<Arc<Vec<f32>>> =
-            (0..q).map(|qi| Arc::new(w[qi * m_per..(qi + 1) * m_per].to_vec())).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
+            .map(|qi| Arc::new(w[self.cluster.layout.block_cols(qi)].to_vec()))
+            .collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
-            .map(|_| Arc::new((0..self.cluster.n_per as u32).collect()))
+            .map(|pi| Arc::new((0..self.cluster.layout.rows_in(pi) as u32).collect()))
             .collect();
         let total =
             self.cluster.block_loss(&w_blocks, &rows, self.leader_engine.as_ref(), self.cfg.loss);
-        total / self.cluster.n_total as f64
+        total / self.cluster.layout.n_total as f64
     }
 }

@@ -64,10 +64,10 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform f32 in [lo, hi).
+    /// Uniform f32 in the half-open `[lo, hi)`.
     #[inline]
     pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
-        lo + (hi - lo) * self.unit_f64() as f32
+        f32_in_range(self.unit_f64(), lo, hi)
     }
 
     /// Bernoulli(p).
@@ -107,6 +107,34 @@ impl Rng {
     /// step 15's `randomly pick j ∈ {1..n}`).
     pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<u32> {
         (0..k).map(|_| self.below(n) as u32).collect()
+    }
+}
+
+/// Map a unit draw onto `[lo, hi)`. Although `unit_f64()` is strictly
+/// below 1, `u as f32` rounds up to exactly 1.0 for any `u ≥ 1 − 2⁻²⁵`,
+/// and the affine map itself can round onto `hi` even for `u < 1` —
+/// both would leak `hi` out of the half-open interval, so the result is
+/// clamped to the largest representable value below `hi`.
+#[inline]
+fn f32_in_range(u: f64, lo: f32, hi: f32) -> f32 {
+    let v = lo + (hi - lo) * u as f32;
+    if v >= hi && lo < hi {
+        next_below(hi)
+    } else {
+        v
+    }
+}
+
+/// Largest f32 strictly below `x` (finite, non-NaN `x` only — callers
+/// pass literal interval bounds).
+fn next_below(x: f32) -> f32 {
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() - 1)
+    } else if x < 0.0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else {
+        // below ±0.0 sits the smallest-magnitude negative subnormal
+        -f32::from_bits(1)
     }
 }
 
@@ -206,6 +234,35 @@ mod tests {
         }
         for &c in &counts {
             assert!((9_000..11_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn f32_range_is_half_open_at_the_boundary() {
+        // a unit draw this close to 1 rounds to exactly 1.0f32 — the old
+        // `lo + (hi-lo) * u as f32` returned exactly `hi`
+        let u = 1.0 - 2f64.powi(-60);
+        assert_eq!(u as f32, 1.0, "test premise: u rounds up to 1.0f32");
+        let v = f32_in_range(u, -1.0, 1.0);
+        assert!((-1.0..1.0).contains(&v), "clamped into [lo, hi): {v}");
+        // affine rounding onto hi with u strictly below 1 clamps too
+        let v = f32_in_range(1.0 - f64::EPSILON, 0.0, 0.1);
+        assert!((0.0..0.1).contains(&v), "{v}");
+        // zero and negative hi endpoints
+        assert!(f32_in_range(1.0, -1.0, 0.0) < 0.0);
+        assert!(f32_in_range(1.0, -2.0, -1.0) < -1.0);
+        // degenerate interval stays put
+        assert_eq!(f32_in_range(0.999_999, 2.0, 2.0), 2.0);
+        // interior draws are untouched
+        assert_eq!(f32_in_range(0.5, 0.0, 2.0), 1.0);
+    }
+
+    #[test]
+    fn f32_range_bulk_bounds() {
+        let mut rng = Rng::seed_from_u64(21);
+        for _ in 0..100_000 {
+            let v = rng.f32_range(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&v), "{v}");
         }
     }
 

@@ -13,8 +13,10 @@ use sodda::util::testing::forall;
 fn cfg_for(rng: &mut sodda::util::rng::Rng) -> ExperimentConfig {
     let p = 1 + rng.below(4);
     let q = 1 + rng.below(3);
-    let n = (1 + rng.below(6)) * p * 50;
-    let m = (1 + rng.below(4)) * p * q * 4;
+    // evenly divisible and ragged shapes alike — the partitioner must
+    // handle whatever N × M lands on the grid
+    let n = (1 + rng.below(6)) * p * 50 + rng.below(7);
+    let m = (1 + rng.below(4)) * p * q * 4 + rng.below(5);
     ExperimentConfig::builder()
         .name("prop")
         .dense(n, m)
@@ -82,24 +84,28 @@ fn partition_blocks_cover_matrix_disjointly() {
     forall(15, 404, |rng| {
         let p = 1 + rng.below(4);
         let q = 1 + rng.below(4);
-        let n = p * (1 + rng.below(20));
-        let m = p * q * (1 + rng.below(6));
+        // arbitrary shapes with non-empty partitions (ragged included)
+        let n = p + rng.below(80);
+        let m = p * q + rng.below(24);
         let ds = synth::dense_zhang(n, m, rng.next_u64());
         let g = Grid::partition(&ds, p, q).unwrap();
         // total entries across blocks == N×M and every sub-block col range
-        // is within its block
+        // is within its block, balanced to within one column
         let total: usize = g.blocks().map(|b| b.x.rows() * b.x.cols()).sum();
         assert_eq!(total, n * m);
-        for k in 0..p {
-            let r = g.sub_cols(k);
-            assert!(r.end <= g.m_per);
-            assert_eq!(r.len(), g.mtilde);
+        for qi in 0..q {
+            let mq = g.layout.cols_in(qi);
+            for k in 0..p {
+                let r = g.layout.sub_cols(qi, k);
+                assert!(r.end <= mq);
+                assert!(r.len() == mq / p || r.len() == mq / p + 1, "balanced widths");
+            }
         }
         // global_cols tile [0, M) disjointly
         let mut seen = vec![false; m];
         for qi in 0..q {
             for k in 0..p {
-                for c in g.global_cols(qi, k) {
+                for c in g.layout.global_cols(qi, k) {
                     assert!(!seen[c]);
                     seen[c] = true;
                 }

@@ -1,0 +1,223 @@
+//! Ragged partition grids end-to-end: arbitrary `N × M` shapes train on
+//! any `P × Q` grid, evenly divisible shapes behave exactly as the
+//! legacy uniform layout did (bit-for-bit trajectories, identical cost
+//! accounting), and the strict-mode knob only validates — it never
+//! changes numbers.
+
+use std::sync::Arc;
+
+use sodda::config::{AlgorithmKind, ExperimentConfig, SamplingFractions, Schedule};
+use sodda::coordinator::{train, train_with_engine};
+use sodda::engine::NativeEngine;
+use sodda::metrics::History;
+use sodda::util::testing::forall;
+
+/// Compare everything a History records except wall-clock time (the only
+/// nondeterministic field).
+fn assert_history_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record counts");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.iter, rb.iter, "{ctx}");
+        assert_eq!(ra.loss, rb.loss, "{ctx}: loss at iter {}", ra.iter);
+        assert_eq!(ra.sim_s, rb.sim_s, "{ctx}: sim_s at iter {}", ra.iter);
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{ctx}: comm_bytes at iter {}", ra.iter);
+        assert_eq!(
+            ra.grad_coord_evals, rb.grad_coord_evals,
+            "{ctx}: grad_coord_evals at iter {}",
+            ra.iter
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the acceptance shape: prime N and M
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prime_shape_trains_to_finite_decreasing_loss() {
+    // 601 and 61 are prime — nothing about this shape divides into the
+    // grid; the exact acceptance criterion of the ragged-grid issue
+    let cfg = ExperimentConfig::builder()
+        .name("ragged-prime")
+        .dense(601, 61)
+        .grid(3, 2)
+        .build()
+        .unwrap();
+    let out = train(&cfg).unwrap();
+    assert!(out.w.iter().all(|v| v.is_finite()));
+    let losses = out.history.losses();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        out.history.final_loss().unwrap() < losses[0]
+            && out.history.min_loss().unwrap() < 0.85 * losses[0],
+        "loss must decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn all_algorithms_run_on_ragged_grids() {
+    for algo in [AlgorithmKind::Sodda, AlgorithmKind::Radisa, AlgorithmKind::RadisaAvg] {
+        let cfg = ExperimentConfig::builder()
+            .name(format!("ragged-{algo}"))
+            .dense(211, 23)
+            .grid(3, 2)
+            .inner_steps(8)
+            .outer_iters(10)
+            .seed(11)
+            .build()
+            .unwrap();
+        let out = train(&cfg).unwrap();
+        assert!(out.w.iter().all(|v| v.is_finite()), "{algo}");
+        assert!(
+            out.history.min_loss().unwrap() < out.history.losses()[0],
+            "{algo} must make progress on a ragged grid"
+        );
+    }
+}
+
+#[test]
+fn ragged_sparse_dataset_trains() {
+    let cfg = ExperimentConfig::builder()
+        .name("ragged-sparse")
+        .sparse(607, 53, 8)
+        .grid(3, 2)
+        .inner_steps(8)
+        .outer_iters(10)
+        .seed(3)
+        .build()
+        .unwrap();
+    let out = train(&cfg).unwrap();
+    assert!(out.w.iter().all(|v| v.is_finite()));
+    assert!(out.history.min_loss().unwrap() < out.history.losses()[0]);
+}
+
+// ---------------------------------------------------------------------------
+// ragged indexing correctness: distributed == serial
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ragged_distributed_objective_matches_serial() {
+    for (n, m, p, q) in [(601usize, 61usize, 3usize, 2usize), (97, 13, 4, 2), (123, 31, 5, 3)] {
+        let cfg = ExperimentConfig::builder()
+            .name("ragged-serial")
+            .dense(n, m)
+            .grid(p, q)
+            .inner_steps(6)
+            .outer_iters(4)
+            .seed(17)
+            .build()
+            .unwrap();
+        let ds = cfg.data.try_materialize(cfg.seed).unwrap();
+        let out = train_with_engine(&cfg, &ds, Arc::new(NativeEngine)).unwrap();
+        let serial = ds.objective(&out.w, cfg.loss);
+        let reported = out.history.final_loss().unwrap();
+        assert!(
+            (serial - reported).abs() <= 1e-4 * (1.0 + serial.abs()),
+            "{n}x{m} on {p}x{q}: serial {serial} vs distributed {reported}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// evenly divisible shapes: ragged layout == legacy uniform layout
+// ---------------------------------------------------------------------------
+
+#[test]
+fn even_shapes_identical_under_strict_and_ragged_validation() {
+    // the strict knob is validation-only: same seed, same trajectory,
+    // same cost accounting, bit for bit
+    forall(6, 505, |rng| {
+        let p = 1 + rng.below(3);
+        let q = 1 + rng.below(2);
+        let n = (1 + rng.below(4)) * p * 40;
+        let m = (1 + rng.below(3)) * p * q * 4;
+        let seed = rng.next_u64();
+        let base = ExperimentConfig::builder()
+            .name("even")
+            .dense(n, m)
+            .grid(p, q)
+            .inner_steps(4)
+            .outer_iters(3)
+            .seed(seed);
+        let ragged = base.clone().build().unwrap();
+        let strict = base.require_even_grid().build().unwrap();
+        assert!(strict.strict_even_grid && !ragged.strict_even_grid);
+        let a = train(&ragged).unwrap();
+        let b = train(&strict).unwrap();
+        assert_eq!(a.w, b.w, "{n}x{m} on {p}x{q}");
+        assert_history_identical(&a.history, &b.history, "strict vs ragged");
+    });
+}
+
+#[test]
+fn even_shape_cost_accounting_matches_uniform_closed_form() {
+    // RADiSA uses the full (B, C, D) sets, so the per-iteration traffic
+    // and gradient-coordinate counts of the legacy uniform accounting
+    // have closed forms. The ragged bookkeeping must reproduce them
+    // exactly on evenly divisible shapes.
+    let (n, m, p, q, l, t) = (120usize, 24usize, 3usize, 2usize, 5usize, 4usize);
+    let cfg = ExperimentConfig::builder()
+        .name("uniform-cost")
+        .dense(n, m)
+        .grid(p, q)
+        .algorithm(AlgorithmKind::Radisa)
+        .inner_steps(l)
+        .outer_iters(t)
+        .seed(2)
+        .build()
+        .unwrap();
+    let out = train(&cfg).unwrap();
+    let (n_per, m_per) = (n / p, m / q);
+    let mtilde = m_per / p;
+    let phase_bytes = (m_per + n_per) as u64 + (n_per + m_per) as u64 + (4 * mtilde + l) as u64;
+    let per_iter_bytes = (p * q) as u64 * 4 * phase_bytes;
+    let per_iter_evals = (m * n) as u64 + (p * q * l * mtilde) as u64;
+    let last = out.history.records.last().unwrap();
+    assert_eq!(last.comm_bytes, t as u64 * per_iter_bytes, "legacy uniform byte accounting");
+    assert_eq!(last.grad_coord_evals, t as u64 * per_iter_evals, "legacy uniform eval counts");
+}
+
+// ---------------------------------------------------------------------------
+// ragged-specific invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ragged_full_fraction_sodda_equals_radisa() {
+    // Corollary 1 must survive ragged layouts: SODDA at (b,c,d) = full is
+    // RADiSA, including the per-partition row splits
+    let mk = |algo| {
+        ExperimentConfig::builder()
+            .name("ragged-c1")
+            .dense(203, 26)
+            .grid(3, 2)
+            .algorithm(algo)
+            .fractions(SamplingFractions::FULL)
+            .inner_steps(6)
+            .outer_iters(5)
+            .schedule(Schedule::ScaledSqrt { gamma0: 0.05 })
+            .seed(23)
+            .build()
+            .unwrap()
+    };
+    let a = train(&mk(AlgorithmKind::Sodda)).unwrap();
+    let b = train(&mk(AlgorithmKind::Radisa)).unwrap();
+    assert_eq!(a.w, b.w);
+    assert_history_identical(&a.history, &b.history, "sodda vs radisa ragged");
+}
+
+#[test]
+fn ragged_runs_reproduce_per_seed() {
+    let cfg = ExperimentConfig::builder()
+        .name("ragged-repro")
+        .dense(601, 61)
+        .grid(3, 2)
+        .inner_steps(8)
+        .outer_iters(6)
+        .seed(31)
+        .build()
+        .unwrap();
+    let a = train(&cfg).unwrap();
+    let b = train(&cfg).unwrap();
+    assert_eq!(a.w, b.w);
+    assert_history_identical(&a.history, &b.history, "same-seed ragged runs");
+}

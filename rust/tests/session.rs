@@ -23,12 +23,16 @@ fn base() -> ExperimentConfigBuilder {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn builder_rejects_pq_non_divisibility() {
-    // N = 300 not divisible by P = 7
-    assert!(base().grid(7, 2).build().is_err());
-    // M = 60 not divisible by Q·P = 3·3 = 9
-    assert!(base().grid(3, 3).build().is_err());
+fn builder_accepts_ragged_grids_unless_strict() {
+    // N = 300 not divisible by P = 7, M = 60 not divisible by Q·P = 9:
+    // both are fine by default — the partitioner goes ragged
+    assert!(base().grid(7, 2).build().is_ok());
+    assert!(base().grid(3, 3).build().is_ok());
     assert!(base().grid(3, 2).build().is_ok());
+    // the historical strict mode lives behind require_even_grid()
+    assert!(base().grid(7, 2).require_even_grid().build().is_err());
+    assert!(base().grid(3, 3).require_even_grid().build().is_err());
+    assert!(base().grid(3, 2).require_even_grid().build().is_ok());
 }
 
 #[test]
