@@ -2,17 +2,31 @@
 //! algorithm on the `small` preset at laptop scale (the meso-benchmark
 //! behind the Figure 2/3 time axes). Also contrasts the per-run session
 //! staging cost (legacy shim) against a reused `Trainer` session.
+//!
+//! The binary installs the counting allocator, so every row carries
+//! `allocs_per_iter` in the JSON report; the steady-state row's count is
+//! gated absolutely by `benches/baseline.json` (`max_allocs_per_iter`) —
+//! the pooled-buffer regression tripwire.
 
 use std::sync::Arc;
 
 use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions};
 use sodda::coordinator::train_with_engine;
 use sodda::engine::NativeEngine;
+use sodda::util::alloc::CountingAlloc;
 use sodda::util::bench::Bench;
 use sodda::Trainer;
 
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn alloc_events() -> u64 {
+    ALLOC.allocations()
+}
+
 fn main() {
     let mut b = Bench::from_env("full_iteration");
+    b.set_alloc_counter(alloc_events);
     let pr = preset("small").unwrap();
     let dc = pr.data_config(pr.default_scale, 5, 3);
     let ds = dc.try_materialize(1).expect("materializing small preset");
@@ -49,6 +63,28 @@ fn main() {
     b.bench("sodda/2 iters (reused session)", || {
         session.reset();
         session.run().unwrap()
+    });
+
+    // steady state proper: one outer iteration (eval included) on a warm
+    // session — the allocs_per_iter of this row is the pooled-buffer
+    // budget gated by benches/baseline.json
+    let steady_cfg = base
+        .to_builder()
+        .name("bench_steady")
+        .outer_iters(1_000_000)
+        .eval_every(1)
+        .build()
+        .expect("bench config");
+    let mut steady =
+        Trainer::with_parts(steady_cfg, ds.clone(), Arc::new(NativeEngine)).expect("session");
+    for _ in 0..3 {
+        steady.step().unwrap(); // warm the pools before measurement
+    }
+    b.bench("sodda/1 outer iter (steady state)", || {
+        if steady.is_done() {
+            steady.reset();
+        }
+        steady.step().unwrap()
     });
 
     b.finish();

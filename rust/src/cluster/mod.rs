@@ -6,12 +6,36 @@
 //! where partitions live on executors) plus a shared [`ComputeEngine`].
 //! The leader orchestrates the three phases of Algorithm 1 through typed
 //! commands and collects replies over a single mpsc channel; the
-//! [`simnet::SimNet`] cost model charges each phase (see DESIGN.md).
+//! [`simnet::SimNet`] cost model charges each phase (see
+//! [`simnet::CostModel`] and the README's "Steady-state memory"
+//! section).
+//!
+//! ## Steady-state memory
+//!
+//! After warm-up the message protocol allocates nothing per phase:
+//!
+//! * every command that produces a vector reply carries a **recycled
+//!   buffer** popped from the leader-side pool; the worker fills it via
+//!   the engine's `_into` entry point and ships it back, and the leader
+//!   returns it to the pool once the reduce has consumed it — buffers
+//!   endlessly circulate leader → worker → leader;
+//! * each worker holds **persistent scratch** (the margin buffer for
+//!   fused objective evaluations, the working iterate of the averaged
+//!   SVRG combiner) that lives as long as the thread;
+//! * the leader keeps its own reduce workspaces (reply staging slots,
+//!   the `z` accumulator and `y`-gather buffers of the `Q > 1` paths,
+//!   the SVRG task-routing table) in a [`RefCell`], so every phase
+//!   method stays `&self`.
+//!
+//! Pooling only recycles allocations — reduce orders are unchanged, so
+//! trajectories are bit-for-bit identical to the fresh-allocation path
+//! (`tests/alloc_regression.rs` pins both properties).
 
 pub mod simnet;
 
 pub use simnet::{CostModel, SimNet};
 
+use std::cell::RefCell;
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -20,23 +44,39 @@ use std::thread::JoinHandle;
 use crate::data::{Block, Grid, Layout};
 use crate::engine::{BlockKey, ComputeEngine};
 use crate::loss::Loss;
+use crate::util::arc_mut;
 
-/// Commands the leader sends to a worker.
+/// Commands the leader sends to a worker. `buf` fields are recycled
+/// reply buffers from the leader pool (arbitrary stale contents; the
+/// worker clears and refills them).
 enum Cmd {
     /// z_part = X[rows, :] · w  (w pre-masked by B^t, full block width)
-    PartialZ { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    PartialZ { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
     /// u = f'(X[rows, :]·w, y[rows]) — fused margin + loss derivative
     /// (batched `partial_u` engine entry point); only dispatched on
     /// Q = 1 grids, where the block holds the complete margin
-    PartialU { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    PartialU { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
     /// Σ_rows f(X[rows, :]·w, y[rows]) — fused objective term
     /// (batched `block_loss` engine entry point); Q = 1 grids only
     BlockLoss { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
     /// g = Σ_rows u·x_row over the full block width
-    GradSlice { u: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
-    /// L SVRG steps on the sub-block `cols` (block-local range); `avg`
-    /// selects RADiSA-avg's suffix-averaged combiner
-    Svrg { cols: Range<usize>, w0: Vec<f32>, wt: Vec<f32>, mu: Vec<f32>, idx: Vec<u32>, gamma: f32, avg: bool },
+    GradSlice { u: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// L SVRG steps on the sub-block `cols` (block-local range). The
+    /// worker slices its `gcols` window out of the shared full-model
+    /// `w`/`mu` snapshots (one allocation-free Arc clone per task
+    /// instead of three owned copies); `avg` selects RADiSA-avg's
+    /// suffix-averaged combiner. `idx` rides back with the reply so its
+    /// buffer recycles too.
+    Svrg {
+        cols: Range<usize>,
+        gcols: Range<usize>,
+        w: Arc<Vec<f32>>,
+        mu: Arc<Vec<f32>>,
+        idx: Vec<u32>,
+        gamma: f32,
+        avg: bool,
+        buf: Vec<f32>,
+    },
     Shutdown,
 }
 
@@ -46,7 +86,7 @@ enum Reply {
     U(Vec<f32>),
     Loss(f64),
     Grad(Vec<f32>),
-    W(Vec<f32>),
+    W { w: Vec<f32>, idx: Vec<u32> },
 }
 
 struct Worker {
@@ -55,18 +95,35 @@ struct Worker {
     block: Block,
     engine: Arc<dyn ComputeEngine>,
     loss: Loss,
+    /// persistent per-thread scratch: the fused objective evaluation's
+    /// margin buffer and the averaged SVRG combiner's working iterate
+    scratch: Vec<f32>,
 }
 
 impl Worker {
-    fn run(self, rx: Receiver<Cmd>, tx: Sender<(usize, Reply)>, id: usize) {
+    fn run(mut self, rx: Receiver<Cmd>, tx: Sender<(usize, Reply)>, id: usize) {
         let key = BlockKey { p: self.p, q: self.q };
         let m = self.block.x.cols();
         while let Ok(cmd) = rx.recv() {
             let reply = match cmd {
-                Cmd::PartialZ { w, rows } => {
-                    Reply::Z(self.engine.partial_z(key, &self.block.x, 0..m, &w, &rows))
+                Cmd::PartialZ { w, rows, mut buf } => {
+                    self.engine.partial_z_into(key, &self.block.x, 0..m, &w, &rows, &mut buf);
+                    Reply::Z(buf)
                 }
-                Cmd::PartialU { w, rows } => Reply::U(self.engine.partial_u(
+                Cmd::PartialU { w, rows, mut buf } => {
+                    self.engine.partial_u_into(
+                        key,
+                        self.loss,
+                        &self.block.x,
+                        0..m,
+                        &w,
+                        &rows,
+                        &self.block.y,
+                        &mut buf,
+                    );
+                    Reply::U(buf)
+                }
+                Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss_scratch(
                     key,
                     self.loss,
                     &self.block.x,
@@ -74,27 +131,42 @@ impl Worker {
                     &w,
                     &rows,
                     &self.block.y,
+                    &mut self.scratch,
                 )),
-                Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss(
-                    key,
-                    self.loss,
-                    &self.block.x,
-                    0..m,
-                    &w,
-                    &rows,
-                    &self.block.y,
-                )),
-                Cmd::GradSlice { u, rows } => {
-                    Reply::Grad(self.engine.grad_slice(key, &self.block.x, 0..m, &rows, &u))
+                Cmd::GradSlice { u, rows, mut buf } => {
+                    self.engine.grad_slice_into(key, &self.block.x, 0..m, &rows, &u, &mut buf);
+                    Reply::Grad(buf)
                 }
-                Cmd::Svrg { cols, w0, wt, mu, idx, gamma, avg } => {
+                Cmd::Svrg { cols, gcols, w, mu, idx, gamma, avg, mut buf } => {
+                    debug_assert_eq!(gcols.len(), cols.len(), "snapshot window ≠ sub-block");
                     let e = &self.engine;
                     let (x, y) = (&self.block.x, &self.block.y);
-                    Reply::W(if avg {
-                        e.svrg_inner_avg(key, self.loss, x, y, cols, &w0, &wt, &mu, &idx, gamma)
+                    // w^t is both the starting iterate w⁰ and the SVRG
+                    // reference w̃ (each sub-epoch starts at the
+                    // reference point)
+                    let w0 = &w[gcols.clone()];
+                    let mu_s = &mu[gcols];
+                    if avg {
+                        e.svrg_inner_avg_into(
+                            key,
+                            self.loss,
+                            x,
+                            y,
+                            cols,
+                            w0,
+                            w0,
+                            mu_s,
+                            &idx,
+                            gamma,
+                            &mut buf,
+                            &mut self.scratch,
+                        );
                     } else {
-                        e.svrg_inner(key, self.loss, x, y, cols, &w0, &wt, &mu, &idx, gamma)
-                    })
+                        e.svrg_inner_into(
+                            key, self.loss, x, y, cols, w0, w0, mu_s, &idx, gamma, &mut buf,
+                        );
+                    }
+                    Reply::W { w: buf, idx }
                 }
                 Cmd::Shutdown => break,
             };
@@ -113,13 +185,45 @@ pub struct SvrgTask {
     /// algorithm (widths are per-block ragged); RADiSA-avg differs only
     /// in the `avg` combiner below, not in the columns it owns
     pub cols: Range<usize>,
-    pub w0: Vec<f32>,
-    pub wt: Vec<f32>,
-    pub mu: Vec<f32>,
+    /// global column range of the same sub-block — the window the worker
+    /// slices out of the snapshots below
+    pub gcols: Range<usize>,
+    /// full-model snapshot of ω^t, shared by every task of the phase
+    /// (serves as both w⁰ and the SVRG reference w̃)
+    pub w: Arc<Vec<f32>>,
+    /// full-model µ^t snapshot, shared by every task of the phase
+    pub mu: Arc<Vec<f32>>,
+    /// pre-sampled local row per inner step (per-task; the buffer is
+    /// recycled through the leader pool — see
+    /// [`Cluster::recycled_idx_buf`])
     pub idx: Vec<u32>,
     pub gamma: f32,
     /// use the suffix-averaged combiner (RADiSA-avg)
     pub avg: bool,
+}
+
+/// Leader-side recycled state: the reply-buffer pools plus the reduce
+/// workspaces of the `&self` phase methods. Behind a [`RefCell`] — the
+/// leader is single-threaded (the mpsc `Receiver` already pins
+/// [`Cluster`] to one thread) and no phase method re-enters another
+/// while holding a borrow.
+struct LeaderScratch {
+    /// drained f32 reply buffers, handed back out with the next commands
+    f32_pool: Vec<Vec<f32>>,
+    /// drained SVRG `idx` payload buffers (see [`Cluster::recycled_idx_buf`])
+    idx_pool: Vec<Vec<u32>>,
+    /// per-worker reply staging slots (fixed `P·Q` length) for reduces
+    /// that must run in worker-id order
+    slots: Vec<Option<Vec<f32>>>,
+    /// worker id → task index routing of the in-flight SVRG phase
+    /// (fixed `P·Q` length, `usize::MAX` = free)
+    id_to_task: Vec<usize>,
+    /// per-partition objective terms of the fused `Q == 1` loss phase
+    loss_parts: Vec<f64>,
+    /// per-partition reduced margins of the `Q > 1` paths
+    z: Vec<Vec<f32>>,
+    /// label gather buffer of the `Q > 1` dloss/loss passes
+    y_rows: Vec<f32>,
 }
 
 /// Handle to the launched cluster (leader side).
@@ -136,6 +240,7 @@ pub struct Cluster {
     cmd_txs: Vec<Sender<Cmd>>,
     reply_rx: Receiver<(usize, Reply)>,
     handles: Vec<JoinHandle<()>>,
+    scratch: RefCell<LeaderScratch>,
 }
 
 impl Cluster {
@@ -162,7 +267,14 @@ impl Cluster {
         for (id, block) in blocks.into_iter().enumerate() {
             let (tx, rx) = channel();
             cmd_txs.push(tx);
-            let worker = Worker { p: block.p, q: block.q, block, engine: Arc::clone(&engine), loss };
+            let worker = Worker {
+                p: block.p,
+                q: block.q,
+                block,
+                engine: Arc::clone(&engine),
+                loss,
+                scratch: Vec::new(),
+            };
             let reply = reply_tx.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -171,7 +283,16 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Cluster { p, q, layout, y, density, cmd_txs, reply_rx, handles }
+        let scratch = RefCell::new(LeaderScratch {
+            f32_pool: Vec::new(),
+            idx_pool: Vec::new(),
+            slots: (0..p * q).map(|_| None).collect(),
+            id_to_task: vec![usize::MAX; p * q],
+            loss_parts: Vec::new(),
+            z: Vec::new(),
+            y_rows: Vec::new(),
+        });
+        Cluster { p, q, layout, y, density, cmd_txs, reply_rx, handles, scratch }
     }
 
     #[inline]
@@ -183,34 +304,81 @@ impl Cluster {
         self.density[self.wid(p, q)]
     }
 
+    /// Pop a recycled SVRG `idx` buffer (returned to the pool by
+    /// [`Cluster::svrg_run`] after each phase); fresh when the pool is
+    /// dry. Callers fill it and hand it back through [`SvrgTask::idx`].
+    pub fn recycled_idx_buf(&self) -> Vec<u32> {
+        self.scratch.borrow_mut().idx_pool.pop().unwrap_or_default()
+    }
+
+    /// Drop every pooled buffer and leader workspace, forcing the next
+    /// phases back onto the cold (fresh-allocation) path. Numbers are
+    /// unaffected — pooling only recycles allocations; the
+    /// alloc-regression harness uses this to measure pooled vs fresh on
+    /// the very same session.
+    pub fn drop_scratch(&self) {
+        let mut s = self.scratch.borrow_mut();
+        s.f32_pool = Vec::new();
+        s.idx_pool = Vec::new();
+        s.loss_parts = Vec::new();
+        s.z = Vec::new();
+        s.y_rows = Vec::new();
+        // slots / id_to_task keep their fixed P·Q length (allocated at
+        // launch, content-free between phases)
+    }
+
     /// Phase 1 of the µ^t estimate: partial margins, reduced over feature
     /// partitions. `w_blocks[q]` is the (masked) parameter slice of block
     /// q; `rows[p]` the sampled local row ids of partition p. Returns
     /// `z[p][k] = x_{rows[p][k]}^{B} · w_B`.
     pub fn partial_z(&self, w_blocks: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<Vec<f32>> {
+        let mut z = Vec::new();
+        self.partial_z_into(w_blocks, rows, &mut z);
+        z
+    }
+
+    /// In-place [`Cluster::partial_z`]: refills the caller's per-partition
+    /// buffers (allocation-free once warm). Replies are staged by worker
+    /// id and reduced in a fixed order — f32 addition is non-associative
+    /// and runs must be reproducible — exactly like the allocating path.
+    pub fn partial_z_into(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+        z: &mut Vec<Vec<f32>>,
+    ) {
+        let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
+                let buf = s.f32_pool.pop().unwrap_or_default();
                 self.cmd_txs[self.wid(pi, qi)]
-                    .send(Cmd::PartialZ { w: Arc::clone(&w_blocks[qi]), rows: Arc::clone(&rows[pi]) })
+                    .send(Cmd::PartialZ {
+                        w: Arc::clone(&w_blocks[qi]),
+                        rows: Arc::clone(&rows[pi]),
+                        buf,
+                    })
                     .expect("worker alive");
             }
         }
-        // buffer replies by worker id, then reduce in a fixed order —
-        // f32 addition is non-associative and runs must be reproducible
-        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p * self.q).map(|_| None).collect();
         for _ in 0..self.p * self.q {
             let (id, reply) = self.reply_rx.recv().expect("worker alive");
             let Reply::Z(part) = reply else { panic!("expected Z reply") };
-            parts[id] = Some(part);
+            debug_assert!(s.slots[id].is_none(), "duplicate Z reply from worker {id}");
+            s.slots[id] = Some(part);
         }
-        let mut z: Vec<Vec<f32>> = rows.iter().map(|r| vec![0.0f32; r.len()]).collect();
-        for (id, part) in parts.into_iter().enumerate() {
+        z.resize_with(self.p, Vec::new);
+        for (pi, zp) in z.iter_mut().enumerate() {
+            zp.clear();
+            zp.resize(rows[pi].len(), 0.0);
+        }
+        for id in 0..self.p * self.q {
+            let part = s.slots[id].take().expect("reply staged");
             let pi = id / self.q;
-            for (acc, v) in z[pi].iter_mut().zip(part.expect("reply")) {
+            for (acc, &v) in z[pi].iter_mut().zip(&part) {
                 *acc += v;
             }
+            s.f32_pool.push(part);
         }
-        z
     }
 
     /// Phase-1 derivative `u[p][k] = f'(z_k, y_k)`. On single-feature-
@@ -227,35 +395,71 @@ impl Cluster {
         leader: &dyn ComputeEngine,
         loss: Loss,
     ) -> Vec<Vec<f32>> {
+        let mut u = Vec::new();
+        self.partial_u_into(w_blocks, rows, leader, loss, &mut u);
+        // the Arcs are uniquely owned here (fresh vector, phase barrier
+        // passed), so this unwraps without copying
+        u.into_iter()
+            .map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
+            .collect()
+    }
+
+    /// In-place [`Cluster::partial_u`]: refills the caller's recycled
+    /// per-partition `Arc` buffers (the consumers — the gradient phase,
+    /// the trainer workspace — hand these out by `Arc::clone`, and by
+    /// the next iteration the clones are back to one owner; see
+    /// [`crate::util::arc_mut`]). The `Q > 1` path reuses the leader's
+    /// `z`/`y_rows` workspaces, with the dloss gather hoisted out of any
+    /// per-partition closure.
+    pub fn partial_u_into(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+        u: &mut Vec<Arc<Vec<f32>>>,
+    ) {
+        u.resize_with(self.p, Default::default);
         if self.q > 1 {
-            let z = self.partial_z(w_blocks, rows);
-            return (0..self.p)
-                .map(|pi| {
-                    let y_rows: Vec<f32> =
-                        rows[pi].iter().map(|&r| self.y[pi][r as usize]).collect();
-                    leader.dloss_u(loss, &z[pi], &y_rows)
-                })
-                .collect();
+            let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
+            self.partial_z_into(w_blocks, rows, &mut z);
+            let mut s = self.scratch.borrow_mut();
+            let s = &mut *s;
+            for (pi, up) in u.iter_mut().enumerate() {
+                s.y_rows.clear();
+                s.y_rows.extend(rows[pi].iter().map(|&r| self.y[pi][r as usize]));
+                leader.dloss_u_into(loss, &z[pi], &s.y_rows, arc_mut(up));
+            }
+            s.z = z;
+        } else {
+            let mut s = self.scratch.borrow_mut();
+            for pi in 0..self.p {
+                let buf = s.f32_pool.pop().unwrap_or_default();
+                self.cmd_txs[self.wid(pi, 0)]
+                    .send(Cmd::PartialU {
+                        w: Arc::clone(&w_blocks[0]),
+                        rows: Arc::clone(&rows[pi]),
+                        buf,
+                    })
+                    .expect("worker alive");
+            }
+            for _ in 0..self.p {
+                // worker id == p index when q == 1; assignment (not
+                // reduction), so arrival order cannot change results
+                let (id, reply) = self.reply_rx.recv().expect("worker alive");
+                let Reply::U(mut ub) = reply else { panic!("expected U reply") };
+                std::mem::swap(arc_mut(&mut u[id]), &mut ub);
+                s.f32_pool.push(ub);
+            }
         }
-        for pi in 0..self.p {
-            self.cmd_txs[self.wid(pi, 0)]
-                .send(Cmd::PartialU { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) })
-                .expect("worker alive");
-        }
-        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p).map(|_| None).collect();
-        for _ in 0..self.p {
-            let (id, reply) = self.reply_rx.recv().expect("worker alive");
-            let Reply::U(u) = reply else { panic!("expected U reply") };
-            parts[id] = Some(u); // worker id == p index when q == 1
-        }
-        parts.into_iter().map(|u| u.expect("reply")).collect()
     }
 
     /// Distributed objective term `Σ_k f(z_k, y_k)` over the given rows.
     /// `Q == 1` grids use the workers' fused `block_loss` entry point;
-    /// `Q > 1` grids reduce z here and `leader` sums the loss values.
-    /// Either way the reduce runs in worker order, so the f64 total is
-    /// deterministic.
+    /// `Q > 1` grids reduce z into the leader workspace and `leader` sums
+    /// the loss values (gather buffer reused, loop hoisted). Either way
+    /// the reduce runs in worker order, so the f64 total is
+    /// deterministic — and the steady state allocates nothing.
     pub fn block_loss(
         &self,
         w_blocks: &[Arc<Vec<f32>>],
@@ -264,85 +468,134 @@ impl Cluster {
         loss: Loss,
     ) -> f64 {
         if self.q > 1 {
-            let z = self.partial_z(w_blocks, rows);
-            return (0..self.p)
-                .map(|pi| {
-                    let y_rows: Vec<f32> =
-                        rows[pi].iter().map(|&r| self.y[pi][r as usize]).collect();
-                    leader.loss_from_z(loss, &z[pi], &y_rows)
-                })
-                .sum();
+            let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
+            self.partial_z_into(w_blocks, rows, &mut z);
+            let mut s = self.scratch.borrow_mut();
+            let s = &mut *s;
+            let mut total = 0.0f64;
+            for (pi, zp) in z.iter().enumerate() {
+                s.y_rows.clear();
+                s.y_rows.extend(rows[pi].iter().map(|&r| self.y[pi][r as usize]));
+                total += leader.loss_from_z(loss, zp, &s.y_rows);
+            }
+            s.z = z;
+            return total;
         }
+        let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             self.cmd_txs[self.wid(pi, 0)]
                 .send(Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) })
                 .expect("worker alive");
         }
-        let mut parts = vec![0.0f64; self.p];
+        s.loss_parts.clear();
+        s.loss_parts.resize(self.p, 0.0);
         for _ in 0..self.p {
             let (id, reply) = self.reply_rx.recv().expect("worker alive");
             let Reply::Loss(v) = reply else { panic!("expected Loss reply") };
-            parts[id] = v;
+            s.loss_parts[id] = v;
         }
-        parts.iter().sum()
+        s.loss_parts.iter().sum()
     }
 
     /// Phase 2: gradient slices. `u[p]` aligned with `rows[p]`. Returns
     /// the global gradient-sum vector (length `m_total`), summed over
     /// observation partitions per feature block.
     pub fn grad(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<f32> {
+        let mut g = Vec::new();
+        self.grad_into(u, rows, &mut g);
+        g
+    }
+
+    /// In-place [`Cluster::grad`]: zeroes and refills the caller's
+    /// buffer, assembling slices in worker-id order exactly like the
+    /// allocating path (bit-for-bit).
+    pub fn grad_into(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>], g: &mut Vec<f32>) {
+        let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
+                let buf = s.f32_pool.pop().unwrap_or_default();
                 self.cmd_txs[self.wid(pi, qi)]
-                    .send(Cmd::GradSlice { u: Arc::clone(&u[pi]), rows: Arc::clone(&rows[pi]) })
+                    .send(Cmd::GradSlice {
+                        u: Arc::clone(&u[pi]),
+                        rows: Arc::clone(&rows[pi]),
+                        buf,
+                    })
                     .expect("worker alive");
             }
         }
-        let mut parts: Vec<Option<Vec<f32>>> = (0..self.p * self.q).map(|_| None).collect();
         for _ in 0..self.p * self.q {
             let (id, reply) = self.reply_rx.recv().expect("worker alive");
             let Reply::Grad(slice) = reply else { panic!("expected Grad reply") };
-            parts[id] = Some(slice);
+            debug_assert!(s.slots[id].is_none(), "duplicate Grad reply from worker {id}");
+            s.slots[id] = Some(slice);
         }
-        let mut g = vec![0.0f32; self.layout.m_total];
-        for (id, slice) in parts.into_iter().enumerate() {
+        g.clear();
+        g.resize(self.layout.m_total, 0.0);
+        for id in 0..self.p * self.q {
+            let slice = s.slots[id].take().expect("reply staged");
             let qi = id % self.q;
             let base = self.layout.block_cols(qi).start;
-            for (k, v) in slice.expect("reply").into_iter().enumerate() {
+            for (k, &v) in slice.iter().enumerate() {
                 g[base + k] += v;
             }
+            s.f32_pool.push(slice);
         }
-        g
     }
 
     /// Phase 3: the parallel inner loops. Returns `(task_index, w_L)` in
     /// completion order.
-    pub fn svrg(&self, tasks: Vec<SvrgTask>) -> Vec<(usize, Vec<f32>)> {
+    pub fn svrg(&self, mut tasks: Vec<SvrgTask>) -> Vec<(usize, Vec<f32>)> {
+        let mut out = Vec::with_capacity(tasks.len());
+        self.svrg_run(&mut tasks, |ti, w| out.push((ti, w.to_vec())));
+        out
+    }
+
+    /// Pooled [`Cluster::svrg`]: drains `tasks` (the vector keeps its
+    /// capacity for the next iteration) and streams each finished
+    /// sub-block through `apply(task_index, w_L)` in completion order.
+    /// Reply and `idx` buffers go back to the pools, so a steady-state
+    /// phase allocates nothing. Completion order is non-deterministic,
+    /// but tasks own disjoint column ranges, so any write-back through
+    /// `apply` lands bit-identically.
+    pub fn svrg_run(&self, tasks: &mut Vec<SvrgTask>, mut apply: impl FnMut(usize, &[f32])) {
         let n = tasks.len();
-        let mut id_to_task: Vec<usize> = vec![usize::MAX; self.p * self.q];
-        for (ti, t) in tasks.into_iter().enumerate() {
-            let wid = self.wid(t.p, t.q);
-            assert_eq!(id_to_task[wid], usize::MAX, "one task per worker per phase");
-            id_to_task[wid] = ti;
-            self.cmd_txs[wid]
-                .send(Cmd::Svrg {
-                    cols: t.cols,
-                    w0: t.w0,
-                    wt: t.wt,
-                    mu: t.mu,
-                    idx: t.idx,
-                    gamma: t.gamma,
-                    avg: t.avg,
-                })
-                .expect("worker alive");
+        {
+            let mut s = self.scratch.borrow_mut();
+            for (ti, t) in tasks.drain(..).enumerate() {
+                let wid = self.wid(t.p, t.q);
+                assert_eq!(s.id_to_task[wid], usize::MAX, "one task per worker per phase");
+                s.id_to_task[wid] = ti;
+                let buf = s.f32_pool.pop().unwrap_or_default();
+                self.cmd_txs[wid]
+                    .send(Cmd::Svrg {
+                        cols: t.cols,
+                        gcols: t.gcols,
+                        w: t.w,
+                        mu: t.mu,
+                        idx: t.idx,
+                        gamma: t.gamma,
+                        avg: t.avg,
+                        buf,
+                    })
+                    .expect("worker alive");
+            }
         }
-        let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let (id, reply) = self.reply_rx.recv().expect("worker alive");
-            let Reply::W(w) = reply else { panic!("expected W reply") };
-            out.push((id_to_task[id], w));
+            let Reply::W { w, idx } = reply else { panic!("expected W reply") };
+            // release the scratch borrow before the callback runs —
+            // `apply` is caller code and may legitimately re-enter the
+            // cluster (e.g. `recycled_idx_buf` to prep the next phase)
+            let ti = {
+                let mut s = self.scratch.borrow_mut();
+                let ti = s.id_to_task[id];
+                s.id_to_task[id] = usize::MAX;
+                s.idx_pool.push(idx);
+                ti
+            };
+            apply(ti, &w);
+            self.scratch.borrow_mut().f32_pool.push(w);
         }
-        out
     }
 }
 
@@ -389,6 +642,43 @@ mod tests {
     }
 
     #[test]
+    fn pooled_phases_are_bit_identical_across_reuse() {
+        // the same phase run again on a warm pool (recycled buffers) and
+        // again after dropping every pooled buffer must not change bits
+        let (c, _ds) = cluster(30, 12, 3, 2, 10);
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 6..(qi + 1) * 6].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new(vec![0u32, 2, 5, 9])).collect();
+        let cold_z = c.partial_z(&w_blocks, &rows);
+        let warm_z = c.partial_z(&w_blocks, &rows);
+        assert_eq!(cold_z, warm_z);
+        let cold_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let warm_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        assert_eq!(cold_u, warm_u);
+        let cold_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let warm_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        assert_eq!(cold_l, warm_l);
+        c.drop_scratch();
+        assert_eq!(c.partial_z(&w_blocks, &rows), cold_z);
+        assert_eq!(c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge), cold_u);
+        assert_eq!(c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge), cold_l);
+    }
+
+    #[test]
+    fn reply_buffers_return_to_the_pool() {
+        let (c, _ds) = cluster(20, 8, 2, 2, 11);
+        let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+        let _ = c.partial_z(&w_blocks, &rows);
+        assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
+        let _ = c.partial_z(&w_blocks, &rows);
+        assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
+    }
+
+    #[test]
     fn grad_matches_serial_rmatvec() {
         let (c, ds) = cluster(20, 8, 2, 2, 2);
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new((0..10u32).collect())).collect();
@@ -410,10 +700,34 @@ mod tests {
     #[test]
     fn svrg_tasks_route_to_correct_workers() {
         let (c, _ds) = cluster(20, 8, 2, 2, 3);
-        // zero gamma => w_L == w0, so routing shows through the payloads
+        // zero gamma => w_L == w0, so routing shows through the snapshot
+        // windows: block q=0 sub-block 0 is global cols 0..2, block q=1
+        // sub-block 1 is global cols 6..8
+        let w = Arc::new(vec![1.0f32, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+        let mu = Arc::new(vec![0.0f32; 8]);
         let tasks = vec![
-            SvrgTask { p: 0, q: 0, cols: 0..2, w0: vec![1.0, 2.0], wt: vec![1.0, 2.0], mu: vec![0.0; 2], idx: vec![0; 4], gamma: 0.0, avg: false },
-            SvrgTask { p: 1, q: 1, cols: 2..4, w0: vec![3.0, 4.0], wt: vec![3.0, 4.0], mu: vec![0.0; 2], idx: vec![0; 4], gamma: 0.0, avg: true },
+            SvrgTask {
+                p: 0,
+                q: 0,
+                cols: 0..2,
+                gcols: 0..2,
+                w: Arc::clone(&w),
+                mu: Arc::clone(&mu),
+                idx: vec![0; 4],
+                gamma: 0.0,
+                avg: false,
+            },
+            SvrgTask {
+                p: 1,
+                q: 1,
+                cols: 2..4,
+                gcols: 6..8,
+                w,
+                mu,
+                idx: vec![0; 4],
+                gamma: 0.0,
+                avg: true,
+            },
         ];
         let mut out = c.svrg(tasks);
         out.sort_by_key(|(ti, _)| *ti);

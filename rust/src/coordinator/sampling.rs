@@ -6,7 +6,7 @@ use crate::config::SamplingFractions;
 use crate::util::rng::Rng;
 
 /// One iteration's sampled index sets (global ids, sorted).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SampleSets {
     /// B^t — features used in inner products (`x_j^{B^t} w_{B^t}`)
     pub b: Vec<u32>,
@@ -20,28 +20,52 @@ impl SampleSets {
     /// Draw per the paper: `b^t` features, `c^t ⊆ B^t`, `d^t` rows, all
     /// without replacement. Sizes are `round(frac · dim)`, min 1.
     pub fn draw(rng: &mut Rng, n: usize, m: usize, fr: &SamplingFractions) -> SampleSets {
+        let mut sets = SampleSets::default();
+        let mut scratch = Vec::new();
+        Self::draw_into(rng, n, m, fr, &mut sets, &mut scratch);
+        sets
+    }
+
+    /// In-place [`SampleSets::draw`]: identical RNG draws and values,
+    /// refilling recycled buffers (`scratch` holds the without-
+    /// replacement index array). Set sizes are constant across
+    /// iterations, so after warm-up this allocates nothing.
+    pub fn draw_into(
+        rng: &mut Rng,
+        n: usize,
+        m: usize,
+        fr: &SamplingFractions,
+        sets: &mut SampleSets,
+        scratch: &mut Vec<u32>,
+    ) {
         let bsz = size_of(fr.b, m);
         let csz = size_of(fr.c, m).min(bsz);
         let dsz = size_of(fr.d, n);
-        let b = rng.sample_without_replacement(m, bsz);
-        // sample C from within B
-        let mut c: Vec<u32> = rng
-            .sample_without_replacement(bsz, csz)
-            .into_iter()
-            .map(|i| b[i as usize])
-            .collect();
-        c.sort_unstable();
-        let d = rng.sample_without_replacement(n, dsz);
-        SampleSets { b, c, d }
+        rng.sample_without_replacement_into(m, bsz, &mut sets.b, scratch);
+        // sample C from within B: indices into B first, then map + sort
+        rng.sample_without_replacement_into(bsz, csz, &mut sets.c, scratch);
+        for ci in sets.c.iter_mut() {
+            *ci = sets.b[*ci as usize];
+        }
+        sets.c.sort_unstable();
+        rng.sample_without_replacement_into(n, dsz, &mut sets.d, scratch);
     }
 
     /// RADiSA's exact sets: `B = C = [M]`, `D = [N]`.
     pub fn full(n: usize, m: usize) -> SampleSets {
-        SampleSets {
-            b: (0..m as u32).collect(),
-            c: (0..m as u32).collect(),
-            d: (0..n as u32).collect(),
-        }
+        let mut sets = SampleSets::default();
+        Self::full_into(n, m, &mut sets);
+        sets
+    }
+
+    /// In-place [`SampleSets::full`].
+    pub fn full_into(n: usize, m: usize, sets: &mut SampleSets) {
+        sets.b.clear();
+        sets.b.extend(0..m as u32);
+        sets.c.clear();
+        sets.c.extend(0..m as u32);
+        sets.d.clear();
+        sets.d.extend(0..n as u32);
     }
 
     /// |B ∩ [lo, hi)| for a sorted id list (block intersection sizes for
@@ -67,14 +91,34 @@ fn size_of(frac: f64, dim: usize) -> usize {
 /// bisection has no such failure mode, and the debug assertions make
 /// any out-of-range id loud instead of silent.
 pub fn rows_per_partition(d: &[u32], row_bounds: &[usize]) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); row_bounds.len() - 1];
+    rows_per_partition_into(d, row_bounds, out.iter_mut());
+    out
+}
+
+/// In-place [`rows_per_partition`]: clears and refills one caller-
+/// provided buffer per partition. `out` must yield at least `P` buffers
+/// (`row_bounds.len() - 1`); extras are cleared. Accepts an iterator so
+/// callers can hand out `&mut Vec<u32>` views into recycled `Arc`
+/// buffers ([`crate::util::arc_mut`]) without an intermediate
+/// collection.
+pub fn rows_per_partition_into<'a>(
+    d: &[u32],
+    row_bounds: &[usize],
+    out: impl IntoIterator<Item = &'a mut Vec<u32>>,
+) {
     let p = row_bounds.len() - 1;
-    let mut out = vec![Vec::new(); p];
+    let mut it = out.into_iter();
+    let mut cur = it.next().expect("at least P row buffers");
+    cur.clear();
     let mut pi = 0usize;
     for &r in d {
         let r = r as usize;
         // `d` is sorted, so the owning partition only ever advances
         while pi + 1 < p && r >= row_bounds[pi + 1] {
             pi += 1;
+            cur = it.next().expect("at least P row buffers");
+            cur.clear();
         }
         debug_assert!(
             r >= row_bounds[pi] && r < row_bounds[pi + 1],
@@ -82,18 +126,28 @@ pub fn rows_per_partition(d: &[u32], row_bounds: &[usize]) -> Vec<Vec<u32>> {
             row_bounds[pi],
             row_bounds[pi + 1]
         );
-        out[pi].push((r - row_bounds[pi]) as u32);
+        cur.push((r - row_bounds[pi]) as u32);
     }
-    out
+    // partitions past the last sampled row (and any extra buffers)
+    for rest in it {
+        rest.clear();
+    }
 }
 
 /// `w ∘ 1_B`: copy of `w` with non-B coordinates zeroed.
 pub fn mask_keep(w: &[f32], keep_sorted: &[u32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; w.len()];
+    let mut out = Vec::new();
+    mask_keep_into(w, keep_sorted, &mut out);
+    out
+}
+
+/// In-place [`mask_keep`] (recycled buffer, identical values).
+pub fn mask_keep_into(w: &[f32], keep_sorted: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(w.len(), 0.0);
     for &i in keep_sorted {
         out[i as usize] = w[i as usize];
     }
-    out
 }
 
 /// Zero every coordinate of `g` outside the sorted keep-set (the paper's
@@ -195,6 +249,43 @@ mod tests {
                 assert!((r as usize) < bounds[pi + 1] - bounds[pi]);
             }
         }
+    }
+
+    #[test]
+    fn draw_into_matches_draw_exactly() {
+        // same seed, recycled (dirty) buffers: identical draws and sets
+        forall(20, 77, |rng| {
+            let n = 1 + rng.below(120);
+            let m = 1 + rng.below(60);
+            let fr = SamplingFractions { b: 0.6, c: 0.4, d: 0.7 };
+            let mut a = rng.clone();
+            let mut b = rng.clone();
+            let want = SampleSets::draw(&mut a, n, m, &fr);
+            let mut sets = SampleSets { b: vec![9; 3], c: vec![7; 9], d: vec![1; 1] };
+            let mut scratch = vec![4u32; 2];
+            SampleSets::draw_into(&mut b, n, m, &fr, &mut sets, &mut scratch);
+            assert_eq!(sets.b, want.b);
+            assert_eq!(sets.c, want.c);
+            assert_eq!(sets.d, want.d);
+            assert_eq!(a.next_u64(), b.next_u64(), "identical draw consumption");
+        });
+    }
+
+    #[test]
+    fn rows_into_matches_allocating_with_dirty_and_extra_buffers() {
+        let bounds = [0usize, 3, 6, 10];
+        let d: Vec<u32> = vec![0, 2, 7, 9];
+        let want = rows_per_partition(&d, &bounds);
+        // dirty contents, one extra buffer: refilled/cleared in place
+        let mut bufs: Vec<Vec<u32>> = vec![vec![42; 5], vec![42], vec![], vec![42; 2]];
+        rows_per_partition_into(&d, &bounds, bufs.iter_mut());
+        assert_eq!(&bufs[..3], &want[..]);
+        assert!(bufs[3].is_empty(), "extra buffers are cleared");
+        // empty middle partition
+        let d2: Vec<u32> = vec![1, 8];
+        let want2 = rows_per_partition(&d2, &bounds);
+        rows_per_partition_into(&d2, &bounds, bufs.iter_mut().take(3));
+        assert_eq!(&bufs[..3], &want2[..]);
     }
 
     #[test]

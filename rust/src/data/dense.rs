@@ -7,6 +7,12 @@
 //! pairwise, remainder handled sequentially. Batched variants
 //! ([`DenseMatrix::rows_dot_range_into`], [`DenseMatrix::add_rows_scaled_range`])
 //! reuse that order per row, so batching changes throughput, never bits.
+//!
+//! All batched accessors write into caller-provided slices and allocate
+//! nothing — they are the storage layer beneath the `_into` kernels of
+//! the zero-allocation steady state (README "Steady-state memory"); the
+//! kernels own the clear/resize of the recycled buffers, the accessors
+//! only ever fill exactly `out.len()` elements.
 
 /// 8-lane multiply-accumulate into `acc` (one unrolled chunk).
 #[inline]

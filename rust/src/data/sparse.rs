@@ -1,5 +1,11 @@
 //! CSR sparse matrix — storage for the §5.2 SemMed-style experiments
 //! ("all the datasets considered are in the sparse format").
+//!
+//! Like the dense storage, every batched accessor here
+//! ([`CsrMatrix::rows_dot_range_into`], [`CsrMatrix::add_rows_scaled_range`])
+//! writes into caller-provided slices and allocates nothing — the
+//! storage layer beneath the `_into` kernels of the zero-allocation
+//! steady state (README "Steady-state memory").
 
 /// Compressed sparse row matrix, f32 values, u32 column indices.
 #[derive(Debug, Clone, PartialEq)]

@@ -19,6 +19,13 @@
 //! shapes, column sub-ranges and empty row sets): the per-row
 //! accumulation order is shared with `Store`'s scalar ops, so only
 //! dispatch, fusion and blocking differ — never the arithmetic.
+//!
+//! Each kernel comes in two forms: an `_into` entry point that clears
+//! and refills a caller-provided buffer (the zero-allocation steady
+//! state — cluster workers recycle their reply buffers through these),
+//! and the original allocating signature, now a thin wrapper over the
+//! `_into` form. Same order, same bits, only the buffer's origin
+//! differs.
 
 use std::ops::Range;
 
@@ -60,24 +67,41 @@ impl RowOps for CsrMatrix {
 /// Batched margins `z_k = x_{rows[k]}[cols] · w` (steps 5-8 of
 /// Algorithm 1: the feature-block contribution to `x_j^{B^t} w_{B^t}`).
 pub fn partial_z(x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32> {
-    debug_assert_eq!(w.len(), cols.len());
-    let mut z = vec![0.0f32; rows.len()];
-    match x {
-        Store::Dense(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, &mut z),
-        Store::Sparse(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, &mut z),
-    }
+    let mut z = Vec::new();
+    partial_z_into(x, cols, w, rows, &mut z);
     z
+}
+
+/// In-place [`partial_z`]: clears and refills a caller-provided buffer
+/// (zero allocations once the buffer's capacity covers the row set).
+/// Identical accumulation order, so identical bits.
+pub fn partial_z_into(x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], z: &mut Vec<f32>) {
+    debug_assert_eq!(w.len(), cols.len());
+    z.clear();
+    z.resize(rows.len(), 0.0);
+    match x {
+        Store::Dense(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, z),
+        Store::Sparse(m) => m.rows_dot_range_into(rows, cols.start, cols.end, w, z),
+    }
 }
 
 /// Batched gradient slice `g[cols] = Σ_k u_k · x_{rows[k]}[cols]`.
 pub fn grad_slice(x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(rows.len(), u.len());
-    let mut g = vec![0.0f32; cols.len()];
-    match x {
-        Store::Dense(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, &mut g),
-        Store::Sparse(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, &mut g),
-    }
+    let mut g = Vec::new();
+    grad_slice_into(x, cols, rows, u, &mut g);
     g
+}
+
+/// In-place [`grad_slice`] (zeroes the buffer, then accumulates in row
+/// order — bit-for-bit the allocating path).
+pub fn grad_slice_into(x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32], g: &mut Vec<f32>) {
+    debug_assert_eq!(rows.len(), u.len());
+    g.clear();
+    g.resize(cols.len(), 0.0);
+    match x {
+        Store::Dense(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, g),
+        Store::Sparse(m) => m.add_rows_scaled_range(rows, u, cols.start, cols.end, g),
+    }
 }
 
 /// Fused `partial_z` + `dloss_u`: `u_k = f'(x_{rows[k]}[cols]·w, y[rows[k]])`.
@@ -85,17 +109,47 @@ pub fn grad_slice(x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec
 /// margin buffer is computed with the batched paired dots and turned
 /// into `u` in place — one allocation, no label gather.
 pub fn partial_u(loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
-    let mut u = partial_z(x, cols, w, rows);
+    let mut u = Vec::new();
+    partial_u_into(loss, x, cols, w, rows, y, &mut u);
+    u
+}
+
+/// In-place [`partial_u`] — margin + derivative into a recycled buffer.
+pub fn partial_u_into(
+    loss: Loss,
+    x: &Store,
+    cols: Range<usize>,
+    w: &[f32],
+    rows: &[u32],
+    y: &[f32],
+    u: &mut Vec<f32>,
+) {
+    partial_z_into(x, cols, w, rows, u);
     for (uk, &r) in u.iter_mut().zip(rows) {
         *uk = loss.dloss(*uk, y[r as usize]);
     }
-    u
 }
 
 /// Fused `partial_z` + `loss_from_z`: `Σ_k f(x_{rows[k]}[cols]·w, y[rows[k]])`
 /// (objective evaluation, reduced in row order like the unfused path).
 pub fn block_loss(loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
-    let z = partial_z(x, cols, w, rows);
+    let mut z = Vec::new();
+    block_loss_with(loss, x, cols, w, rows, y, &mut z)
+}
+
+/// [`block_loss`] with a caller-provided margin scratch buffer (the
+/// cluster workers hold one per thread, so steady-state objective
+/// evaluations allocate nothing).
+pub fn block_loss_with(
+    loss: Loss,
+    x: &Store,
+    cols: Range<usize>,
+    w: &[f32],
+    rows: &[u32],
+    y: &[f32],
+    z: &mut Vec<f32>,
+) -> f64 {
+    partial_z_into(x, cols, w, rows, z);
     z.iter().zip(rows).map(|(&zk, &r)| loss.value(zk, y[r as usize]) as f64).sum()
 }
 
@@ -115,9 +169,35 @@ pub fn svrg_inner(
     idx: &[u32],
     gamma: f32,
 ) -> Vec<f32> {
+    let mut w = Vec::new();
+    svrg_inner_into(loss, x, y, cols, w0, wt, mu, idx, gamma, &mut w);
+    w
+}
+
+/// In-place [`svrg_inner`]: `out` becomes `w^{(L)}` (recycled buffer,
+/// zero steady-state allocations, identical arithmetic).
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_inner_into(
+    loss: Loss,
+    x: &Store,
+    y: &[f32],
+    cols: Range<usize>,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+    out: &mut Vec<f32>,
+) {
+    // the accumulator is untouched when avg = false (resized to 0)
+    let mut acc = Vec::new();
     match x {
-        Store::Dense(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, false),
-        Store::Sparse(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, false),
+        Store::Dense(m) => {
+            svrg_impl_into(loss, m, y, cols, w0, wt, mu, idx, gamma, false, out, &mut acc)
+        }
+        Store::Sparse(m) => {
+            svrg_impl_into(loss, m, y, cols, w0, wt, mu, idx, gamma, false, out, &mut acc)
+        }
     }
 }
 
@@ -135,14 +215,39 @@ pub fn svrg_inner_avg(
     idx: &[u32],
     gamma: f32,
 ) -> Vec<f32> {
+    let (mut acc, mut w) = (Vec::new(), Vec::new());
+    svrg_inner_avg_into(loss, x, y, cols, w0, wt, mu, idx, gamma, &mut acc, &mut w);
+    acc
+}
+
+/// In-place [`svrg_inner_avg`]: `out` becomes the iterate average,
+/// `w_scratch` holds the working iterate (both recycled).
+#[allow(clippy::too_many_arguments)]
+pub fn svrg_inner_avg_into(
+    loss: Loss,
+    x: &Store,
+    y: &[f32],
+    cols: Range<usize>,
+    w0: &[f32],
+    wt: &[f32],
+    mu: &[f32],
+    idx: &[u32],
+    gamma: f32,
+    out: &mut Vec<f32>,
+    w_scratch: &mut Vec<f32>,
+) {
     match x {
-        Store::Dense(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, true),
-        Store::Sparse(m) => svrg_impl(loss, m, y, cols, w0, wt, mu, idx, gamma, true),
+        Store::Dense(m) => {
+            svrg_impl_into(loss, m, y, cols, w0, wt, mu, idx, gamma, true, w_scratch, out)
+        }
+        Store::Sparse(m) => {
+            svrg_impl_into(loss, m, y, cols, w0, wt, mu, idx, gamma, true, w_scratch, out)
+        }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn svrg_impl<M: RowOps>(
+fn svrg_impl_into<M: RowOps>(
     loss: Loss,
     m: &M,
     y: &[f32],
@@ -153,26 +258,30 @@ fn svrg_impl<M: RowOps>(
     idx: &[u32],
     gamma: f32,
     avg: bool,
-) -> Vec<f32> {
+    w: &mut Vec<f32>,
+    acc: &mut Vec<f32>,
+) {
     let mt = cols.len();
     debug_assert!(w0.len() == mt && wt.len() == mt && mu.len() == mt);
     let (lo, hi) = (cols.start, cols.end);
-    let mut w = w0.to_vec();
-    let mut acc = vec![0.0f32; if avg { mt } else { 0 }];
+    w.clear();
+    w.extend_from_slice(w0);
+    acc.clear();
+    acc.resize(if avg { mt } else { 0 }, 0.0);
     for &j in idx {
         let j = j as usize;
         // fused: current + reference margins in one traversal of row j
-        let (z_cur, z_ref) = m.dot2(j, lo, hi, &w, wt);
+        let (z_cur, z_ref) = m.dot2(j, lo, hi, w, wt);
         let du = loss.dloss(z_cur, y[j]) - loss.dloss(z_ref, y[j]);
         // w -= γ·(du·x_j + µ)
         if du != 0.0 {
-            m.axpy(j, lo, hi, -gamma * du, &mut w);
+            m.axpy(j, lo, hi, -gamma * du, w);
         }
         for (wk, &mk) in w.iter_mut().zip(mu) {
             *wk -= gamma * mk;
         }
         if avg {
-            for (a, &wk) in acc.iter_mut().zip(&w) {
+            for (a, &wk) in acc.iter_mut().zip(w.iter()) {
                 *a += wk;
             }
         }
@@ -183,9 +292,6 @@ fn svrg_impl<M: RowOps>(
         for a in acc.iter_mut() {
             *a *= inv;
         }
-        acc
-    } else {
-        w
     }
 }
 
@@ -243,6 +349,42 @@ mod tests {
         assert!(partial_u(Loss::Hinge, &x, 0..4, &w, &[], &y).is_empty());
         assert_eq!(grad_slice(&x, 0..4, &[], &[]), vec![0.0f32; 4]);
         assert_eq!(block_loss(Loss::Hinge, &x, 0..4, &w, &[], &y), 0.0);
+    }
+
+    #[test]
+    fn into_variants_on_dirty_buffers_match_allocating_path() {
+        // recycled buffers arrive with stale contents and excess length;
+        // every _into kernel must clear/resize before writing
+        let (x, y) = block(11, 9, 7);
+        let w: Vec<f32> = (0..6).map(|i| (i as f32 * 0.27).sin()).collect();
+        let rows: Vec<u32> = vec![2, 9, 0, 5, 5];
+        let u_in: Vec<f32> = (0..5).map(|v| v as f32 * 0.2 - 0.3).collect();
+        let mut dirty = vec![9.0f32; 17];
+        partial_z_into(&x, 1..7, &w, &rows, &mut dirty);
+        assert_eq!(dirty, partial_z(&x, 1..7, &w, &rows));
+        dirty.resize(13, -3.0);
+        grad_slice_into(&x, 1..7, &rows, &u_in, &mut dirty);
+        assert_eq!(dirty, grad_slice(&x, 1..7, &rows, &u_in));
+        dirty.push(42.0);
+        partial_u_into(Loss::Logistic, &x, 1..7, &w, &rows, &y, &mut dirty);
+        assert_eq!(dirty, partial_u(Loss::Logistic, &x, 1..7, &w, &rows, &y));
+        dirty.push(7.0);
+        let got = block_loss_with(Loss::Hinge, &x, 1..7, &w, &rows, &y, &mut dirty);
+        assert_eq!(got, block_loss(Loss::Hinge, &x, 1..7, &w, &rows, &y));
+
+        let w0: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+        let wt: Vec<f32> = (0..6).map(|i| (i as f32 * 0.4).cos() * 0.3).collect();
+        let mu: Vec<f32> = (0..6).map(|i| 0.05 * i as f32).collect();
+        let idx: Vec<u32> = vec![3, 0, 10, 7, 3];
+        let mut out = vec![1.0f32; 2];
+        svrg_inner_into(Loss::Hinge, &x, &y, 1..7, &w0, &wt, &mu, &idx, 0.07, &mut out);
+        assert_eq!(out, svrg_inner(Loss::Hinge, &x, &y, 1..7, &w0, &wt, &mu, &idx, 0.07));
+        let mut scratch = vec![5.0f32; 40];
+        out.push(0.5);
+        svrg_inner_avg_into(
+            Loss::Hinge, &x, &y, 1..7, &w0, &wt, &mu, &idx, 0.07, &mut out, &mut scratch,
+        );
+        assert_eq!(out, svrg_inner_avg(Loss::Hinge, &x, &y, 1..7, &w0, &wt, &mu, &idx, 0.07));
     }
 
     #[test]

@@ -58,8 +58,35 @@ pub trait ComputeEngine: Send + Sync {
     /// pre-masked by B^t).
     fn partial_z(&self, key: BlockKey, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32]) -> Vec<f32>;
 
+    /// In-place [`Self::partial_z`]: clears and refills a caller-provided
+    /// (recycled) buffer. The default delegates to the allocating method
+    /// and copies, so every engine keeps working unchanged; engines with
+    /// true in-place kernels (the native one) override it to make the
+    /// steady state allocation-free. Same contract for every `_into`
+    /// method below: identical bits, only the buffer's origin differs.
+    fn partial_z_into(
+        &self,
+        key: BlockKey,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        let z = self.partial_z(key, x, cols, w, rows);
+        out.clear();
+        out.extend_from_slice(&z);
+    }
+
     /// Elementwise derivative `u_k = f'(z_k, y_k)`.
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32>;
+
+    /// In-place [`Self::dloss_u`] (see [`Self::partial_z_into`]).
+    fn dloss_u_into(&self, loss: Loss, z: &[f32], y: &[f32], out: &mut Vec<f32>) {
+        let u = self.dloss_u(loss, z, y);
+        out.clear();
+        out.extend_from_slice(&u);
+    }
 
     /// Fused batched margin + loss derivative over one block:
     /// `u_k = f'(x_{rows[k]}[cols]·w, y[rows[k]])`, with `y` the block's
@@ -75,6 +102,24 @@ pub trait ComputeEngine: Send + Sync {
         self.dloss_u(loss, &z, &y_rows)
     }
 
+    /// In-place [`Self::partial_u`] (see [`Self::partial_z_into`]).
+    #[allow(clippy::too_many_arguments)]
+    fn partial_u_into(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let u = self.partial_u(key, loss, x, cols, w, rows, y);
+        out.clear();
+        out.extend_from_slice(&u);
+    }
+
     /// Fused batched margin + loss value `Σ_k f(x_{rows[k]}[cols]·w, y[rows[k]])`
     /// (objective evaluation). Same Q = 1 caveat and default composition
     /// as [`Self::partial_u`].
@@ -85,8 +130,42 @@ pub trait ComputeEngine: Send + Sync {
         self.loss_from_z(loss, &z, &y_rows)
     }
 
+    /// [`Self::block_loss`] with a caller-provided margin scratch buffer
+    /// (cluster workers hold one per thread). The default ignores the
+    /// scratch and delegates; the native engine overrides.
+    #[allow(clippy::too_many_arguments)]
+    fn block_loss_scratch(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        z_scratch: &mut Vec<f32>,
+    ) -> f64 {
+        let _ = z_scratch;
+        self.block_loss(key, loss, x, cols, w, rows, y)
+    }
+
     /// Gradient slice `g[cols] = Σ_k u_k · x_{rows[k]}[cols]`.
     fn grad_slice(&self, key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32>;
+
+    /// In-place [`Self::grad_slice`] (see [`Self::partial_z_into`]).
+    fn grad_slice_into(
+        &self,
+        key: BlockKey,
+        x: &Store,
+        cols: Range<usize>,
+        rows: &[u32],
+        u: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let g = self.grad_slice(key, x, cols, rows, u);
+        out.clear();
+        out.extend_from_slice(&g);
+    }
 
     /// L SVRG steps on one sub-block (Algorithm 1 step 16). `idx` holds
     /// the pre-sampled local row per step; returns `w^{(L)}`.
@@ -105,13 +184,34 @@ pub trait ComputeEngine: Send + Sync {
         gamma: f32,
     ) -> Vec<f32>;
 
+    /// In-place [`Self::svrg_inner`] (see [`Self::partial_z_into`]).
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner_into(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+        out: &mut Vec<f32>,
+    ) {
+        let w = self.svrg_inner(key, loss, x, y, cols, w0, wt, mu, idx, gamma);
+        out.clear();
+        out.extend_from_slice(&w);
+    }
+
     /// `Σ_k f(z_k, y_k)` from pre-reduced margins (objective reporting).
     fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64;
 
     /// RADiSA-avg's combiner: same L steps as [`Self::svrg_inner`] but
     /// returns the **uniform iterate average** `mean(w^(1) … w^(L))`
     /// instead of the last iterate (Polyak averaging — the "-avg" in the
-    /// benchmark's name; see DESIGN.md on the [13] reconstruction).
+    /// benchmark's name; see PAPERS.md on the [13] reconstruction).
     #[allow(clippy::too_many_arguments)]
     fn svrg_inner_avg(
         &self,
@@ -126,6 +226,31 @@ pub trait ComputeEngine: Send + Sync {
         idx: &[u32],
         gamma: f32,
     ) -> Vec<f32>;
+
+    /// In-place [`Self::svrg_inner_avg`]: `out` receives the iterate
+    /// average, `w_scratch` may be used for the working iterate (the
+    /// default ignores it; cluster workers pass per-thread scratch).
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner_avg_into(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+        out: &mut Vec<f32>,
+        w_scratch: &mut Vec<f32>,
+    ) {
+        let _ = w_scratch;
+        let w = self.svrg_inner_avg(key, loss, x, y, cols, w0, wt, mu, idx, gamma);
+        out.clear();
+        out.extend_from_slice(&w);
+    }
 }
 
 #[cfg(test)]

@@ -9,7 +9,11 @@
 //! format once per call and runs the monomorphized batched loops, and
 //! the fused entry points ([`ComputeEngine::partial_u`],
 //! [`ComputeEngine::block_loss`], the one-traversal SVRG step) are
-//! overridden with their fused implementations.
+//! overridden with their fused implementations. The `_into` entry
+//! points are overridden too, forwarding to the true in-place kernels —
+//! this is what makes the cluster's recycled reply buffers
+//! allocation-free on the native path (engines relying on the trait
+//! defaults still work, they just allocate internally).
 
 use std::ops::Range;
 
@@ -30,21 +34,79 @@ impl ComputeEngine for NativeEngine {
         kernels::partial_z(x, cols, w, rows)
     }
 
+    fn partial_z_into(
+        &self,
+        _key: BlockKey,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::partial_z_into(x, cols, w, rows, out)
+    }
+
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
         debug_assert_eq!(z.len(), y.len());
         z.iter().zip(y).map(|(&z, &y)| loss.dloss(z, y)).collect()
+    }
+
+    fn dloss_u_into(&self, loss: Loss, z: &[f32], y: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(z.len(), y.len());
+        out.clear();
+        out.extend(z.iter().zip(y).map(|(&z, &y)| loss.dloss(z, y)));
     }
 
     fn partial_u(&self, _key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
         kernels::partial_u(loss, x, cols, w, rows, y)
     }
 
+    fn partial_u_into(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::partial_u_into(loss, x, cols, w, rows, y, out)
+    }
+
     fn block_loss(&self, _key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
         kernels::block_loss(loss, x, cols, w, rows, y)
     }
 
+    fn block_loss_scratch(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        cols: Range<usize>,
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        z_scratch: &mut Vec<f32>,
+    ) -> f64 {
+        kernels::block_loss_with(loss, x, cols, w, rows, y, z_scratch)
+    }
+
     fn grad_slice(&self, _key: BlockKey, x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32]) -> Vec<f32> {
         kernels::grad_slice(x, cols, rows, u)
+    }
+
+    fn grad_slice_into(
+        &self,
+        _key: BlockKey,
+        x: &Store,
+        cols: Range<usize>,
+        rows: &[u32],
+        u: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::grad_slice_into(x, cols, rows, u, out)
     }
 
     fn svrg_inner(
@@ -61,6 +123,23 @@ impl ComputeEngine for NativeEngine {
         gamma: f32,
     ) -> Vec<f32> {
         kernels::svrg_inner(loss, x, y, cols, w0, wt, mu, idx, gamma)
+    }
+
+    fn svrg_inner_into(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+        out: &mut Vec<f32>,
+    ) {
+        kernels::svrg_inner_into(loss, x, y, cols, w0, wt, mu, idx, gamma, out)
     }
 
     fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64 {
@@ -81,6 +160,24 @@ impl ComputeEngine for NativeEngine {
         gamma: f32,
     ) -> Vec<f32> {
         kernels::svrg_inner_avg(loss, x, y, cols, w0, wt, mu, idx, gamma)
+    }
+
+    fn svrg_inner_avg_into(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        y: &[f32],
+        cols: Range<usize>,
+        w0: &[f32],
+        wt: &[f32],
+        mu: &[f32],
+        idx: &[u32],
+        gamma: f32,
+        out: &mut Vec<f32>,
+        w_scratch: &mut Vec<f32>,
+    ) {
+        kernels::svrg_inner_avg_into(loss, x, y, cols, w0, wt, mu, idx, gamma, out, w_scratch)
     }
 }
 
@@ -153,6 +250,29 @@ mod tests {
         let y = [1.0f32, 1.0];
         // hinge: 1 + 0
         assert_close!(NativeEngine.loss_from_z(Loss::Hinge, &z, &y) as f32, 1.0);
+    }
+
+    #[test]
+    fn into_overrides_match_allocating_methods() {
+        let (x, y) = block(10, 8, 9);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.19).sin() * 0.5).collect();
+        let rows: Vec<u32> = vec![1, 6, 6, 9, 0];
+        let mut buf = vec![7.0f32; 3];
+        NativeEngine.partial_z_into(K, &x, 0..8, &w, &rows, &mut buf);
+        assert_eq!(buf, NativeEngine.partial_z(K, &x, 0..8, &w, &rows));
+        NativeEngine.partial_u_into(K, Loss::Hinge, &x, 0..8, &w, &rows, &y, &mut buf);
+        assert_eq!(buf, NativeEngine.partial_u(K, Loss::Hinge, &x, 0..8, &w, &rows, &y));
+        let u: Vec<f32> = (0..5).map(|v| v as f32 * 0.3 - 0.6).collect();
+        NativeEngine.grad_slice_into(K, &x, 0..8, &rows, &u, &mut buf);
+        assert_eq!(buf, NativeEngine.grad_slice(K, &x, 0..8, &rows, &u));
+        let mut scratch = Vec::new();
+        let got =
+            NativeEngine.block_loss_scratch(K, Loss::Hinge, &x, 0..8, &w, &rows, &y, &mut scratch);
+        assert_eq!(got, NativeEngine.block_loss(K, Loss::Hinge, &x, 0..8, &w, &rows, &y));
+        let z = NativeEngine.partial_z(K, &x, 0..8, &w, &rows);
+        let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
+        NativeEngine.dloss_u_into(Loss::Logistic, &z, &y_rows, &mut buf);
+        assert_eq!(buf, NativeEngine.dloss_u(Loss::Logistic, &z, &y_rows));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! §5 evaluation (see DESIGN.md §3 for the experiment index).
+//! §5 evaluation (the `repro` subcommand help is the experiment index).
 //!
 //! Each `figN`/`tableN` function runs the right set of configurations,
 //! writes one CSV per curve under the output directory, and prints a

@@ -45,7 +45,8 @@ SUBCOMMANDS
   bench-gate  compare bench JSON (--dir, default target/bench) against
            a checked-in baseline (--baseline, default
            benches/baseline.json); non-zero exit on any median slower
-           than max_ratio x baseline (--max-ratio overrides the file)
+           than max_ratio x baseline or any allocs_per_iter above its
+           absolute max_allocs_per_iter budget (--max-ratio overrides the file)
   theory   empirical checks of Theorems 2-4 (rates, error floors)
   gen-data materialize a dataset to LIBSVM text or SODDA binary
   baselines  mini-batch SGD + CentralVR vs SODDA on one dataset
@@ -57,7 +58,7 @@ COMMON FLAGS
   --engine E       native | xla (default native; xla needs --features xla)
   --p P --q Q      partition grid (default 5 x 3, the paper's)
   --steps L        inner-loop length (default 32)
-  --gamma0 G       learning-rate scale (default 0.08, see DESIGN.md)
+  --gamma0 G       learning-rate scale (default 0.08, see README)
   --seed S         RNG seed (default 1)
 
 TRAIN FLAGS

@@ -83,6 +83,12 @@ pub struct Trainer {
     leader_engine: Arc<dyn ComputeEngine>,
     cluster: Cluster,
     state: RunState,
+    /// Recycled per-iteration buffers (see the `step` module docs and
+    /// the README "Steady-state memory" section). Deliberately
+    /// **outside** `RunState`: `reset`/`reconfigure`/`warm_start` swap
+    /// the run state but keep the warm buffers — pooling never changes
+    /// numbers, only where they are written.
+    ws: step::Workspace,
 }
 
 /// Build the engine named by the config. The XLA engine loads the AOT
@@ -185,6 +191,7 @@ impl Trainer {
             engine,
             leader_engine: Arc::new(NativeEngine),
             cluster,
+            ws: step::Workspace::default(),
         })
     }
 
@@ -471,6 +478,22 @@ mod tests {
         let a = t.run().unwrap();
         t.reset();
         let b = t.run().unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.history.losses(), b.history.losses());
+    }
+
+    #[test]
+    fn pooled_workspace_never_changes_numbers() {
+        // dropping every recycled buffer between steps forces the cold
+        // fresh-allocation path; the trajectory must be bit-identical
+        let mut warm = Trainer::new(cfg(4)).unwrap();
+        let a = warm.run().unwrap();
+        let mut cold = Trainer::new(cfg(4)).unwrap();
+        while !cold.is_done() {
+            cold.drop_scratch();
+            cold.step().unwrap();
+        }
+        let b = cold.outcome();
         assert_eq!(a.w, b.w);
         assert_eq!(a.history.losses(), b.history.losses());
     }

@@ -12,7 +12,14 @@
 //! 3. draw permutations `π_q` and run the `P×Q` parallel SVRG inner
 //!    loops on disjoint sub-blocks (steps 10-18);
 //! 4. concatenate sub-blocks into `ω^{t+1}` (step 19).
+//!
+//! Every per-iteration buffer lives in the session's [`Workspace`] and
+//! is refilled in place, so a steady-state iteration performs O(1) heap
+//! allocations instead of O(P·Q) per phase (see README "Steady-state
+//! memory"; `tests/alloc_regression.rs` gates the budget and pins
+//! bit-for-bit equality against the fresh-allocation path).
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use super::Trainer;
@@ -20,35 +27,99 @@ use crate::cluster::SvrgTask;
 use crate::config::AlgorithmKind;
 use crate::coordinator::sampling::{self, SampleSets};
 use crate::metrics::IterRecord;
+use crate::util::arc_mut;
+
+/// The session's reusable iteration state: masked/sliced parameter
+/// buffers, per-partition row and `u` vectors, the gradient/µ vector,
+/// the SVRG task payloads, and `objective_now`'s cached full-row index
+/// vectors and w-block slices. Buffers shared with worker threads are
+/// `Arc`s recycled through [`arc_mut`] — each phase is a strict barrier,
+/// so the leader is the sole owner again by refill time. Survives
+/// `reset`/`reconfigure`/`warm_start` (the staged layout never changes),
+/// which also keeps warm-session sweeps allocation-free.
+#[derive(Default)]
+pub(super) struct Workspace {
+    /// `(B^t, C^t, D^t)` of the current iteration
+    sets: SampleSets,
+    /// without-replacement sampling's index-array scratch
+    sets_scratch: Vec<u32>,
+    /// per-partition local row ids of D^t (phase payloads)
+    rows: Vec<Arc<Vec<u32>>>,
+    /// `w ∘ 1_B` (full model width)
+    w_masked: Vec<f32>,
+    /// per-feature-block slices of `w_masked` (phase payloads)
+    w_blocks: Vec<Arc<Vec<f32>>>,
+    /// per-partition loss derivatives `u` (phase payloads)
+    u: Vec<Arc<Vec<f32>>>,
+    /// full-model ω^t snapshot shared by every SVRG task of a phase
+    w_snap: Arc<Vec<f32>>,
+    /// gradient accumulator, projected + scaled into µ^t in place, then
+    /// shared by every SVRG task of the phase
+    mu: Arc<Vec<f32>>,
+    /// π_q permutation buffer
+    perm: Vec<u32>,
+    /// SVRG task assembly (drained by `svrg_run`, capacity retained)
+    tasks: Vec<SvrgTask>,
+    /// global column range per task (write-back targets + cost model)
+    task_cols: Vec<Range<usize>>,
+    /// block density per task (cost model)
+    task_density: Vec<f64>,
+    /// `objective_now`: full-row id vectors per partition — computed once
+    /// per session (the layout is fixed at staging)
+    eval_rows: Vec<Arc<Vec<u32>>>,
+    /// `objective_now`: per-feature-block slices of the current iterate
+    eval_w_blocks: Vec<Arc<Vec<f32>>>,
+}
 
 impl Trainer {
+    /// Drop every pooled buffer — the session [`Workspace`] and the
+    /// cluster's reply pools — forcing the next iteration back onto the
+    /// cold, fresh-allocation path. Trajectories are unaffected (pooling
+    /// only recycles allocations); the alloc-regression harness uses
+    /// this to measure pooled vs fresh on the very same session.
+    pub fn drop_scratch(&mut self) {
+        self.ws = Workspace::default();
+        self.cluster.drop_scratch();
+    }
+
     /// Run outer iteration `self.state.t` (already advanced by `step`).
     /// Returns the record when this iteration hits the eval cadence.
     pub(super) fn iterate(&mut self) -> Option<IterRecord> {
-        let cfg = &self.cfg;
+        let Trainer { cfg, cluster, leader_engine, state, ws, .. } = self;
         let (p, q) = (cfg.p, cfg.q);
-        let (n_total, m_total) = (self.cluster.layout.n_total, self.cluster.layout.m_total);
-        let t = self.state.t;
+        let (n_total, m_total) = (cluster.layout.n_total, cluster.layout.m_total);
+        let t = state.t;
         let gamma = cfg.schedule.gamma(t) as f32;
 
         // ---- sets (steps 5-7) -----------------------------------------------
-        let sets = match cfg.algorithm {
-            AlgorithmKind::Sodda => {
-                SampleSets::draw(&mut self.state.rng_sets, n_total, m_total, &cfg.fractions)
+        match cfg.algorithm {
+            AlgorithmKind::Sodda => SampleSets::draw_into(
+                &mut state.rng_sets,
+                n_total,
+                m_total,
+                &cfg.fractions,
+                &mut ws.sets,
+                &mut ws.sets_scratch,
+            ),
+            AlgorithmKind::Radisa | AlgorithmKind::RadisaAvg => {
+                SampleSets::full_into(n_total, m_total, &mut ws.sets)
             }
-            AlgorithmKind::Radisa | AlgorithmKind::RadisaAvg => SampleSets::full(n_total, m_total),
-        };
-        let rows_arc: Vec<Arc<Vec<u32>>> =
-            sampling::rows_per_partition(&sets.d, self.cluster.layout.row_bounds())
-                .into_iter()
-                .map(Arc::new)
-                .collect();
+        }
+        ws.rows.resize_with(p, Default::default);
+        sampling::rows_per_partition_into(
+            &ws.sets.d,
+            cluster.layout.row_bounds(),
+            ws.rows.iter_mut().map(arc_mut),
+        );
 
         // ---- µ^t estimate (step 8) ------------------------------------------
-        let w_masked = sampling::mask_keep(&self.state.w, &sets.b);
-        let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
-            .map(|qi| Arc::new(w_masked[self.cluster.layout.block_cols(qi)].to_vec()))
-            .collect();
+        sampling::mask_keep_into(&state.w, &ws.sets.b, &mut ws.w_masked);
+        ws.w_blocks.resize_with(q, Default::default);
+        for (qi, wb) in ws.w_blocks.iter_mut().enumerate() {
+            let dst = arc_mut(wb);
+            dst.clear();
+            dst.extend_from_slice(&ws.w_masked[cluster.layout.block_cols(qi)]);
+        }
 
         {
             // phase-1 cost, identical for both paths below: the fused
@@ -57,88 +128,98 @@ impl Trainer {
             let mut max_flops = 0f64;
             for pi in 0..p {
                 for qi in 0..q {
-                    let cols = self.cluster.layout.block_cols(qi);
-                    let bq = SampleSets::count_in_range(&sets.b, cols.start, cols.end);
-                    bytes += 4 * (bq as u64 + rows_arc[pi].len() as u64);
+                    let cols = cluster.layout.block_cols(qi);
+                    let bq = SampleSets::count_in_range(&ws.sets.b, cols.start, cols.end);
+                    bytes += 4 * (bq as u64 + ws.rows[pi].len() as u64);
                     let fl =
-                        2.0 * rows_arc[pi].len() as f64 * bq as f64 * self.cluster.density_at(pi, qi);
+                        2.0 * ws.rows[pi].len() as f64 * bq as f64 * cluster.density_at(pi, qi);
                     max_flops = max_flops.max(fl);
                 }
             }
-            self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+            state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
         }
 
         // u = f'(z, y): fused on-worker when the grid has one feature
         // block, z-reduce + leader dloss otherwise (the cluster picks)
-        let u_per_p: Vec<Arc<Vec<f32>>> = self
-            .cluster
-            .partial_u(&w_blocks, &rows_arc, self.leader_engine.as_ref(), cfg.loss)
-            .into_iter()
-            .map(Arc::new)
-            .collect();
-        self.state.net.local(sets.d.len() as f64);
+        let leader = leader_engine.as_ref();
+        cluster.partial_u_into(&ws.w_blocks, &ws.rows, leader, cfg.loss, &mut ws.u);
+        state.net.local(ws.sets.d.len() as f64);
 
-        let mut g = self.cluster.grad(&u_per_p, &rows_arc);
+        let g = arc_mut(&mut ws.mu);
+        cluster.grad_into(&ws.u, &ws.rows, g);
         {
             let mut bytes = 0u64;
             let mut max_flops = 0f64;
             for pi in 0..p {
                 for qi in 0..q {
-                    let cols = self.cluster.layout.block_cols(qi);
-                    let cq = SampleSets::count_in_range(&sets.c, cols.start, cols.end);
-                    bytes += 4 * (rows_arc[pi].len() as u64 + cq as u64);
+                    let cols = cluster.layout.block_cols(qi);
+                    let cq = SampleSets::count_in_range(&ws.sets.c, cols.start, cols.end);
+                    bytes += 4 * (ws.rows[pi].len() as u64 + cq as u64);
                     let fl =
-                        2.0 * rows_arc[pi].len() as f64 * cq as f64 * self.cluster.density_at(pi, qi);
+                        2.0 * ws.rows[pi].len() as f64 * cq as f64 * cluster.density_at(pi, qi);
                     max_flops = max_flops.max(fl);
                 }
             }
-            self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+            state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
         }
 
-        // µ = (g ∘ C) / d^t
-        sampling::project_inplace(&mut g, &sets.c);
-        let inv_d = 1.0 / sets.d.len() as f32;
+        // µ = (g ∘ C) / d^t — in place; `ws.mu` then ships to every task
+        sampling::project_inplace(g, &ws.sets.c);
+        let inv_d = 1.0 / ws.sets.d.len() as f32;
         for v in g.iter_mut() {
             *v *= inv_d;
         }
-        let mu = g;
-        self.state.net.local(sets.c.len() as f64);
-        self.state.grad_coord_evals += (sets.c.len() * sets.d.len()) as u64;
+        state.net.local(ws.sets.c.len() as f64);
+        state.grad_coord_evals += (ws.sets.c.len() * ws.sets.d.len()) as u64;
 
         // ---- inner loops (steps 9-18) + assembly (step 19) ------------------
         // All three algorithms run one parallel sub-epoch: π_q assigns each
         // worker a disjoint sub-block (bijection ⇒ disjoint cover of ω_[q]).
         // SODDA/RADiSA write back the last iterate; RADiSA-avg writes back
-        // the suffix-averaged iterate (its "-avg" combiner).
+        // the suffix-averaged iterate (its "-avg" combiner). One snapshot
+        // of ω^t serves every task as both w⁰ and the SVRG reference
+        // (they are the same vector at the start of the sub-epoch).
+        {
+            let wsnap = arc_mut(&mut ws.w_snap);
+            wsnap.clear();
+            wsnap.extend_from_slice(&state.w);
+        }
         let avg = cfg.algorithm == AlgorithmKind::RadisaAvg;
-        let mut tasks: Vec<SvrgTask> = Vec::with_capacity(p * q);
-        let mut task_cols: Vec<std::ops::Range<usize>> = Vec::with_capacity(p * q);
-        let mut task_density: Vec<f64> = Vec::with_capacity(p * q);
+        ws.tasks.clear();
+        ws.task_cols.clear();
+        ws.task_density.clear();
         for qi in 0..q {
-            let perm = self.state.rng_perm.permutation(p);
+            state.rng_perm.permutation_into(p, &mut ws.perm);
             for pi in 0..p {
-                let k = perm[pi] as usize;
-                let gcols = self.cluster.layout.global_cols(qi, k);
-                tasks.push(SvrgTask {
+                let k = ws.perm[pi] as usize;
+                let gcols = cluster.layout.global_cols(qi, k);
+                let mut idx = cluster.recycled_idx_buf();
+                state.rng_rows.sample_with_replacement_into(
+                    cluster.layout.rows_in(pi),
+                    cfg.inner_steps,
+                    &mut idx,
+                );
+                ws.tasks.push(SvrgTask {
                     p: pi,
                     q: qi,
-                    cols: self.cluster.layout.sub_cols(qi, k),
-                    w0: self.state.w[gcols.clone()].to_vec(),
-                    wt: self.state.w[gcols.clone()].to_vec(),
-                    mu: mu[gcols.clone()].to_vec(),
-                    idx: self
-                        .state
-                        .rng_rows
-                        .sample_with_replacement(self.cluster.layout.rows_in(pi), cfg.inner_steps),
+                    cols: cluster.layout.sub_cols(qi, k),
+                    gcols: gcols.clone(),
+                    w: Arc::clone(&ws.w_snap),
+                    mu: Arc::clone(&ws.mu),
+                    idx,
                     gamma,
                     avg,
                 });
-                task_cols.push(gcols);
-                task_density.push(self.cluster.density_at(pi, qi));
+                ws.task_cols.push(gcols);
+                ws.task_density.push(cluster.density_at(pi, qi));
             }
         }
-        for (ti, w_l) in self.cluster.svrg(tasks) {
-            self.state.w[task_cols[ti].clone()].copy_from_slice(&w_l);
+        {
+            let w = &mut state.w;
+            let task_cols = &ws.task_cols;
+            cluster.svrg_run(&mut ws.tasks, |ti, w_l| {
+                w[task_cols[ti].clone()].copy_from_slice(w_l);
+            });
         }
         // cost from the actual (ragged) sub-block dims: the phase waits
         // on the slowest worker — the max (width × density) task — while
@@ -146,18 +227,18 @@ impl Trainer {
         let mut max_flops = 0f64;
         let mut bytes = 0u64;
         let mut inner_evals = 0u64;
-        for (ti, gcols) in task_cols.iter().enumerate() {
+        for (ti, gcols) in ws.task_cols.iter().enumerate() {
             let width = gcols.len();
-            let fl = 6.0 * cfg.inner_steps as f64 * width as f64 * task_density[ti];
+            let fl = 6.0 * cfg.inner_steps as f64 * width as f64 * ws.task_density[ti];
             max_flops = max_flops.max(fl);
             bytes += 4 * (3 * width as u64 + cfg.inner_steps as u64 + width as u64);
             inner_evals += (cfg.inner_steps * width) as u64;
         }
-        self.state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
-        self.state.grad_coord_evals += inner_evals;
+        state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+        state.grad_coord_evals += inner_evals;
 
         // ---- reporting -------------------------------------------------------
-        if t % cfg.eval_every == 0 || t == cfg.outer_iters {
+        if t % self.cfg.eval_every == 0 || t == self.cfg.outer_iters {
             let rec = IterRecord {
                 iter: t,
                 loss: self.objective_now(),
@@ -176,18 +257,24 @@ impl Trainer {
     /// Distributed objective F(ω^t) = (1/N) Σ f(x_i·ω, y_i): partial-z
     /// reduce across feature blocks, loss sum per observation partition.
     /// Not charged to the cost model (the paper evaluates loss curves
-    /// offline).
-    pub(super) fn objective_now(&self) -> f64 {
-        let q = self.cluster.q;
-        let w = &self.state.w;
-        let w_blocks: Vec<Arc<Vec<f32>>> = (0..q)
-            .map(|qi| Arc::new(w[self.cluster.layout.block_cols(qi)].to_vec()))
-            .collect();
-        let rows: Vec<Arc<Vec<u32>>> = (0..self.cluster.p)
-            .map(|pi| Arc::new((0..self.cluster.layout.rows_in(pi) as u32).collect()))
-            .collect();
+    /// offline). The full-row index vectors are computed once per
+    /// session and the w-block slices are refilled in place, so repeat
+    /// evaluations allocate nothing.
+    pub(super) fn objective_now(&mut self) -> f64 {
+        let Trainer { cfg, cluster, leader_engine, state, ws, .. } = self;
+        if ws.eval_rows.len() != cluster.p {
+            ws.eval_rows = (0..cluster.p)
+                .map(|pi| Arc::new((0..cluster.layout.rows_in(pi) as u32).collect()))
+                .collect();
+        }
+        ws.eval_w_blocks.resize_with(cluster.q, Default::default);
+        for (qi, wb) in ws.eval_w_blocks.iter_mut().enumerate() {
+            let dst = arc_mut(wb);
+            dst.clear();
+            dst.extend_from_slice(&state.w[cluster.layout.block_cols(qi)]);
+        }
         let total =
-            self.cluster.block_loss(&w_blocks, &rows, self.leader_engine.as_ref(), self.cfg.loss);
-        total / self.cluster.layout.n_total as f64
+            cluster.block_loss(&ws.eval_w_blocks, &ws.eval_rows, leader_engine.as_ref(), cfg.loss);
+        total / cluster.layout.n_total as f64
     }
 }

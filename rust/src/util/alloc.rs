@@ -1,0 +1,72 @@
+//! Counting global allocator — the measurement side of the
+//! zero-allocation steady state.
+//!
+//! [`CountingAlloc`] wraps [`System`] and counts allocation *events*
+//! (`alloc`, `alloc_zeroed`, `realloc`; frees are not events) in a
+//! relaxed atomic. The crate never installs it; test and bench binaries
+//! that want to measure opt in:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: sodda::util::alloc::CountingAlloc = sodda::util::alloc::CountingAlloc::new();
+//!
+//! let before = ALLOC.allocations();
+//! run_steady_state_work();
+//! let allocs = ALLOC.allocations() - before;
+//! ```
+//!
+//! The counter is process-global, so it sees worker-thread allocations
+//! too — exactly what the steady-state budget wants to bound. Consumers:
+//! `tests/alloc_regression.rs` (per-outer-iteration budget + 10×
+//! pooled-vs-fresh assertion) and `benches/full_iteration.rs` (the
+//! `allocs_per_iter` column gated by `repro bench-gate`; see
+//! [`crate::util::bench::Bench::set_alloc_counter`]).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A [`System`]-backed allocator that counts allocation events.
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc { allocs: AtomicU64::new(0) }
+    }
+
+    /// Allocation events since process start (relaxed; exact once the
+    /// threads of interest have quiesced or are the only ones running).
+    pub fn allocations(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // growing (or shrinking) a buffer is an allocation event: the
+        // pooled paths must not be doing it in steady state either
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

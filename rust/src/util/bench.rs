@@ -18,7 +18,13 @@
 //! JSON schema (`"schema": "sodda-bench-v1"`): top level `group`,
 //! `quick` and `rows`; each row `{group, name, iters, min_ns,
 //! median_ns, mean_ns}` plus `throughput_melem_s` when the benchmark
-//! declared its per-iteration element count ([`Bench::bench_elems`]).
+//! declared its per-iteration element count ([`Bench::bench_elems`])
+//! and `allocs_per_iter` when the binary registered an allocation
+//! counter ([`Bench::set_alloc_counter`] + a
+//! [`crate::util::alloc::CountingAlloc`] global allocator) — heap
+//! allocation events per benchmark iteration over the measurement
+//! phase, gated absolutely (not by ratio) via `max_allocs_per_iter`
+//! baseline entries.
 
 use std::time::{Duration, Instant};
 
@@ -32,6 +38,8 @@ pub struct Bench {
     rows: Vec<Row>,
     /// quick mode (`BENCH_QUICK=1`): one-tenth budget for CI smoke
     pub quick: bool,
+    /// global allocation-event counter (see [`Bench::set_alloc_counter`])
+    alloc_counter: Option<fn() -> u64>,
 }
 
 struct Row {
@@ -39,6 +47,8 @@ struct Row {
     /// work items per iteration (0 = no throughput column)
     elems: u64,
     stats: Stats,
+    /// allocation events per iteration during measurement (counter set)
+    allocs_per_iter: Option<f64>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -58,7 +68,19 @@ impl Bench {
             (Duration::from_secs(2), Duration::from_millis(300))
         };
         println!("== bench group: {group} (quick={quick}) ==");
-        Bench { group: group.to_string(), budget, warmup, rows: Vec::new(), quick }
+        let group = group.to_string();
+        Bench { group, budget, warmup, rows: Vec::new(), quick, alloc_counter: None }
+    }
+
+    /// Register a process-global allocation-event counter (typically
+    /// `|| ALLOC.allocations()` over a
+    /// [`crate::util::alloc::CountingAlloc`] installed as the binary's
+    /// `#[global_allocator]`). Every subsequent row records
+    /// `allocs_per_iter` — allocation events per benchmark iteration
+    /// during the measurement phase (warmup excluded, so one-time
+    /// warm-up allocations don't count against steady-state budgets).
+    pub fn set_alloc_counter(&mut self, counter: fn() -> u64) {
+        self.alloc_counter = Some(counter);
     }
 
     /// Time `f`, batching iterations adaptively.
@@ -83,7 +105,10 @@ impl Bench {
         let est_ns = (warm_start.elapsed().as_nanos() as f64 / calls as f64).max(1.0);
         // sample in batches so Instant overhead stays < ~1%
         let batch = ((100_000.0 / est_ns).ceil() as u64).clamp(1, 10_000);
-        let mut samples: Vec<f64> = Vec::new();
+        // pre-reserve so the harness's own sample vector never grows
+        // inside the measured window (max 200 samples, see below)
+        let mut samples: Vec<f64> = Vec::with_capacity(200);
+        let allocs_before = self.alloc_counter.map(|c| c());
         let start = Instant::now();
         let mut total_iters = 0u64;
         while start.elapsed() < self.budget || samples.len() < min_samples {
@@ -97,6 +122,12 @@ impl Bench {
                 break;
             }
         }
+        let allocs_per_iter = match (self.alloc_counter, allocs_before) {
+            (Some(c), Some(before)) => {
+                Some(c().saturating_sub(before) as f64 / total_iters as f64)
+            }
+            _ => None,
+        };
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let stats = Stats {
             iters: total_iters,
@@ -104,15 +135,17 @@ impl Bench {
             median_ns: samples[samples.len() / 2],
             mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
         };
+        let alloc_note =
+            allocs_per_iter.map(|a| format!("   {a:.1} allocs/iter")).unwrap_or_default();
         println!(
-            "{:<40} {:>12} {:>12} {:>12}   ({} iters)",
+            "{:<40} {:>12} {:>12} {:>12}   ({} iters){alloc_note}",
             format!("{}/{}", self.group, name),
             fmt_ns(stats.min_ns),
             fmt_ns(stats.median_ns),
             fmt_ns(stats.mean_ns),
             stats.iters
         );
-        self.rows.push(Row { name: name.to_string(), elems, stats });
+        self.rows.push(Row { name: name.to_string(), elems, stats, allocs_per_iter });
         stats
     }
 
@@ -136,6 +169,9 @@ impl Bench {
                         "throughput_melem_s",
                         json::num(row.elems as f64 / row.stats.median_ns * 1e3),
                     ));
+                }
+                if let Some(a) = row.allocs_per_iter {
+                    pairs.push(("allocs_per_iter", json::num(a)));
                 }
                 json::obj(pairs)
             })
@@ -169,35 +205,66 @@ impl Bench {
 }
 
 /// Compare bench reports against a baseline
-/// (`{"max_ratio": 1.5, "entries": [{group, name, median_ns}, …]}`).
-/// Returns one line per problem: a median slower than
-/// `max_ratio × baseline`, or a baseline entry the current run never
-/// produced (a silently dropped benchmark should fail the gate too).
+/// (`{"max_ratio": 1.5, "entries": [{group, name, median_ns?,
+/// max_allocs_per_iter?}, …]}`). Returns one line per problem:
+///
+/// * a median slower than `max_ratio × median_ns` (when the entry gates
+///   time);
+/// * an `allocs_per_iter` above `max_allocs_per_iter` — an **absolute**
+///   budget, not a ratio: allocation counts are deterministic, so a
+///   pooled path that starts allocating again should fail loudly — or a
+///   gated row whose report carries no alloc count at all (the bench
+///   binary stopped counting);
+/// * a baseline entry the current run never produced (a silently
+///   dropped benchmark should fail the gate too).
+///
 /// Current rows without a baseline entry are ignored so new benchmarks
 /// can land before their baseline is recorded.
 pub fn regressions(baseline: &Value, current: &[Value], max_ratio: f64) -> anyhow::Result<Vec<String>> {
     use std::collections::BTreeMap;
     let mut medians: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut allocs: BTreeMap<(String, String), f64> = BTreeMap::new();
     for report in current {
         for row in report.get("rows")?.as_arr()? {
-            medians.insert(
-                (row.get("group")?.as_str()?.to_string(), row.get("name")?.as_str()?.to_string()),
-                row.get("median_ns")?.as_f64()?,
-            );
+            let key =
+                (row.get("group")?.as_str()?.to_string(), row.get("name")?.as_str()?.to_string());
+            medians.insert(key.clone(), row.get("median_ns")?.as_f64()?);
+            if let Some(a) = row.opt("allocs_per_iter") {
+                allocs.insert(key, a.as_f64()?);
+            }
         }
     }
     let mut out = Vec::new();
     for e in baseline.get("entries")?.as_arr()? {
         let group = e.get("group")?.as_str()?.to_string();
         let name = e.get("name")?.as_str()?.to_string();
-        let base = e.get("median_ns")?.as_f64()?;
-        match medians.get(&(group.clone(), name.clone())) {
-            None => out.push(format!("{group}/{name}: baseline entry missing from current run")),
-            Some(&cur) if cur > max_ratio * base => out.push(format!(
-                "{group}/{name}: median {cur:.0} ns > {max_ratio}x baseline {base:.0} ns ({:.2}x)",
-                cur / base
-            )),
-            Some(_) => {}
+        let key = (group.clone(), name.clone());
+        if !medians.contains_key(&key) {
+            out.push(format!("{group}/{name}: baseline entry missing from current run"));
+            continue;
+        }
+        if let Some(base) = e.opt("median_ns") {
+            let base = base.as_f64()?;
+            let cur = medians[&key];
+            if cur > max_ratio * base {
+                out.push(format!(
+                    "{group}/{name}: median {cur:.0} ns > {max_ratio}x baseline {base:.0} ns ({:.2}x)",
+                    cur / base
+                ));
+            }
+        }
+        if let Some(budget) = e.opt("max_allocs_per_iter") {
+            let budget = budget.as_f64()?;
+            match allocs.get(&key) {
+                None => out.push(format!(
+                    "{group}/{name}: baseline gates allocs_per_iter but the current row \
+                     reports none (bench binary not counting allocations?)"
+                )),
+                Some(&cur) if cur > budget => out.push(format!(
+                    "{group}/{name}: {cur:.1} allocs/iter > budget {budget}"
+                )),
+                Some(_) => {}
+            }
         }
     }
     Ok(out)
@@ -262,6 +329,55 @@ mod tests {
         assert_eq!(probs.len(), 2, "{probs:?}");
         assert!(probs.iter().any(|p| p.contains("g/slow")), "{probs:?}");
         assert!(probs.iter().any(|p| p.contains("g/gone")), "{probs:?}");
+    }
+
+    #[test]
+    fn alloc_counter_adds_column() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static FAKE: AtomicU64 = AtomicU64::new(0);
+        fn fake_counter() -> u64 {
+            FAKE.fetch_add(500, Ordering::Relaxed)
+        }
+        std::env::set_var("BENCH_QUICK", "1");
+        // no finish()/BENCH_OUT here — inspect the report directly so
+        // this test cannot race the env-var round-trip test above
+        let mut b = Bench::from_env("alloc-selftest");
+        b.set_alloc_counter(fake_counter);
+        b.bench("counted", || std::hint::black_box(2 + 2));
+        let v = b.report();
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        let a = rows[0].get("allocs_per_iter").unwrap().as_f64().unwrap();
+        assert!(a > 0.0, "fake counter advances between reads: {a}");
+    }
+
+    #[test]
+    fn gate_enforces_absolute_alloc_budgets() {
+        let base = Value::parse(
+            r#"{"max_ratio": 1.5, "entries": [
+                {"group": "g", "name": "lean", "max_allocs_per_iter": 10},
+                {"group": "g", "name": "fat", "max_allocs_per_iter": 10},
+                {"group": "g", "name": "blind", "max_allocs_per_iter": 10},
+                {"group": "g", "name": "timed", "median_ns": 100.0, "max_allocs_per_iter": 10}
+            ]}"#,
+        )
+        .unwrap();
+        let cur = Value::parse(
+            r#"{"schema": "sodda-bench-v1", "group": "g", "quick": true, "rows": [
+                {"group": "g", "name": "lean", "iters": 1, "min_ns": 1, "median_ns": 900.0, "mean_ns": 1, "allocs_per_iter": 3.5},
+                {"group": "g", "name": "fat", "iters": 1, "min_ns": 1, "median_ns": 1.0, "mean_ns": 1, "allocs_per_iter": 250.0},
+                {"group": "g", "name": "blind", "iters": 1, "min_ns": 1, "median_ns": 1.0, "mean_ns": 1},
+                {"group": "g", "name": "timed", "iters": 1, "min_ns": 1, "median_ns": 200.0, "mean_ns": 1, "allocs_per_iter": 2.0}
+            ]}"#,
+        )
+        .unwrap();
+        let probs = regressions(&base, &[cur], 1.5).unwrap();
+        // lean passes (no median gate on its entry, allocs under budget);
+        // fat busts the budget; blind is gated but uncounted; timed
+        // regresses on time only
+        assert_eq!(probs.len(), 3, "{probs:?}");
+        assert!(probs.iter().any(|p| p.contains("g/fat") && p.contains("budget")), "{probs:?}");
+        assert!(probs.iter().any(|p| p.contains("g/blind")), "{probs:?}");
+        assert!(probs.iter().any(|p| p.contains("g/timed") && p.contains("median")), "{probs:?}");
     }
 
     #[test]

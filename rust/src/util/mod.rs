@@ -8,10 +8,50 @@
 //! * [`json`] — minimal JSON parser/emitter (manifest, metrics, configs)
 //! * [`cli`] — flag parser for the `repro` binary and examples
 //! * [`bench`] — micro-benchmark harness (criterion-style reporting)
+//! * [`alloc`] — counting global allocator for alloc-regression gates
 //! * [`testing`] — assert helpers + a tiny property-test driver
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod testing;
+
+use std::sync::Arc;
+
+/// Mutable access to a recycled [`Arc`] buffer: reuses the allocation
+/// when the caller holds the only strong reference, swaps in a fresh
+/// default otherwise (never blocks, never clones the payload).
+///
+/// The pooled training paths share per-iteration buffers with worker
+/// threads via `Arc`; each phase is a strict send-all/receive-all
+/// barrier, so by the time the leader refills a buffer for the next
+/// iteration every worker clone has been dropped and `Arc::get_mut`
+/// succeeds — the `Arc::new` arm is a cold-start/safety fallback, not a
+/// steady-state path.
+pub fn arc_mut<T: Default>(slot: &mut Arc<T>) -> &mut T {
+    if Arc::get_mut(slot).is_none() {
+        *slot = Arc::new(T::default());
+    }
+    Arc::get_mut(slot).expect("freshly created Arc is unique")
+}
+
+#[cfg(test)]
+mod arc_tests {
+    use super::*;
+
+    #[test]
+    fn arc_mut_reuses_unique_and_replaces_shared() {
+        let mut slot: Arc<Vec<u32>> = Arc::new(vec![1, 2, 3]);
+        let ptr = Arc::as_ptr(&slot);
+        arc_mut(&mut slot).push(4);
+        assert_eq!(*slot, vec![1, 2, 3, 4]);
+        assert_eq!(Arc::as_ptr(&slot), ptr, "unique Arc must be reused in place");
+
+        let held = Arc::clone(&slot);
+        arc_mut(&mut slot).clear();
+        assert!(slot.is_empty(), "shared slot must be replaced, not mutated");
+        assert_eq!(*held, vec![1, 2, 3, 4], "the old clone is untouched");
+    }
+}

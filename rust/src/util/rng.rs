@@ -78,35 +78,69 @@ impl Rng {
 
     /// Random permutation of `0..n` (Fisher-Yates) — the paper's `π_q`.
     pub fn permutation(&mut self, n: usize) -> Vec<u32> {
-        let mut v: Vec<u32> = (0..n as u32).collect();
+        let mut v = Vec::new();
+        self.permutation_into(n, &mut v);
+        v
+    }
+
+    /// In-place [`Self::permutation`]: identical draws, identical result,
+    /// written into a caller-provided (recycled) buffer.
+    pub fn permutation_into(&mut self, n: usize, v: &mut Vec<u32>) {
+        v.clear();
+        v.extend(0..n as u32);
         for i in (1..n).rev() {
             v.swap(i, self.below(i + 1));
         }
-        v
     }
 
     /// `k` distinct values from `0..n`, sorted — the paper's
     /// "elements randomly sampled without replacement" (steps 5-7).
     pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        self.sample_without_replacement_into(n, k, &mut out, &mut scratch);
+        out
+    }
+
+    /// In-place [`Self::sample_without_replacement`]: identical draws and
+    /// result; `scratch` holds the partial-Fisher-Yates index array so
+    /// the steady state allocates nothing.
+    pub fn sample_without_replacement_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        out: &mut Vec<u32>,
+        scratch: &mut Vec<u32>,
+    ) {
         assert!(k <= n, "sample {k} from {n}");
         if k == n {
-            return (0..n as u32).collect();
+            out.clear();
+            out.extend(0..n as u32);
+            return;
         }
         // partial Fisher-Yates over an index array
-        let mut v: Vec<u32> = (0..n as u32).collect();
+        scratch.clear();
+        scratch.extend(0..n as u32);
         for i in 0..k {
             let j = i + self.below(n - i);
-            v.swap(i, j);
+            scratch.swap(i, j);
         }
-        let mut out = v[..k].to_vec();
+        out.clear();
+        out.extend_from_slice(&scratch[..k]);
         out.sort_unstable();
-        out
     }
 
     /// `k` values from `0..n` **with** replacement (inner-loop row picks,
     /// step 15's `randomly pick j ∈ {1..n}`).
     pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<u32> {
-        (0..k).map(|_| self.below(n) as u32).collect()
+        let mut out = Vec::new();
+        self.sample_with_replacement_into(n, k, &mut out);
+        out
+    }
+
+    /// In-place [`Self::sample_with_replacement`] (identical draws).
+    pub fn sample_with_replacement_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend((0..k).map(|_| self.below(n) as u32));
     }
 }
 
@@ -263,6 +297,24 @@ mod tests {
         for _ in 0..100_000 {
             let v = rng.f32_range(-1.0, 1.0);
             assert!((-1.0..1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_draws() {
+        // same seed, interleaved calls: the _into variants must consume
+        // the identical draw sequence and produce identical values
+        let mut a = Rng::seed_from_u64(29);
+        let mut b = Rng::seed_from_u64(29);
+        let (mut out, mut scratch) = (Vec::new(), Vec::new());
+        let (mut perm, mut wr) = (Vec::new(), Vec::new());
+        for (n, k) in [(10usize, 3usize), (50, 50), (40, 39), (7, 1)] {
+            b.sample_without_replacement_into(n, k, &mut out, &mut scratch);
+            assert_eq!(a.sample_without_replacement(n, k), out);
+            b.permutation_into(n, &mut perm);
+            assert_eq!(a.permutation(n), perm);
+            b.sample_with_replacement_into(n, k, &mut wr);
+            assert_eq!(a.sample_with_replacement(n, k), wr);
         }
     }
 

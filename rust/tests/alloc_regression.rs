@@ -1,0 +1,175 @@
+//! Steady-state allocation regression harness.
+//!
+//! Installs the counting global allocator and drives warm `Trainer`
+//! sessions to pin two properties of the pooled-buffer subsystem:
+//!
+//! 1. **budget** — after warm-up, one outer iteration (objective eval
+//!    included) performs at most [`ALLOC_BUDGET`] allocation events,
+//!    on dense and sparse data, even and ragged grids, and the fused
+//!    `Q == 1` path. The expected steady-state count is single-digit
+//!    (mpsc block churn amortizes to a few events per iteration); the
+//!    budget leaves headroom for channel-block lumpiness and rare
+//!    capacity growth without letting any per-phase O(P·Q) allocation
+//!    pattern back in (that costs hundreds per iteration);
+//! 2. **bit-for-bit** — pooling changes no numbers: stepping a session
+//!    with every pooled buffer dropped between steps (the cold,
+//!    fresh-allocation path via `Trainer::drop_scratch`) produces the
+//!    identical `History` and final iterate across random shapes,
+//!    algorithms and storage formats — and allocates ≥ 10× more,
+//!    which is the measured win recorded in BENCH_4.json.
+//!
+//! The counter is process-global, so every test here serializes on one
+//! mutex — a concurrently running sibling test would otherwise bleed
+//! its allocations into the measurement window.
+
+use std::sync::Mutex;
+
+use sodda::config::AlgorithmKind;
+use sodda::util::alloc::CountingAlloc;
+use sodda::util::testing::forall;
+use sodda::{ExperimentConfig, ExperimentConfigBuilder, Trainer};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Absolute per-outer-iteration allocation budget after warm-up. The
+/// fresh path costs a couple hundred events per iteration on these
+/// shapes; the pooled steady state measures single digits.
+const ALLOC_BUDGET: f64 = 48.0;
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn base(n: usize, m: usize, p: usize, q: usize, iters: usize) -> ExperimentConfigBuilder {
+    ExperimentConfig::builder()
+        .name("alloc-regression")
+        .dense(n, m)
+        .grid(p, q)
+        .inner_steps(8)
+        .outer_iters(iters)
+        .eval_every(1)
+        .seed(5)
+}
+
+/// Average allocation events per `step()` over `iters` iterations,
+/// after `warmup` unmeasured steps. `fresh` drops every pooled buffer
+/// before each measured step, forcing the cold path.
+fn measure(trainer: &mut Trainer, warmup: usize, iters: usize, fresh: bool) -> f64 {
+    for _ in 0..warmup {
+        trainer.step().unwrap();
+    }
+    let before = ALLOC.allocations();
+    for _ in 0..iters {
+        if fresh {
+            trainer.drop_scratch();
+        }
+        trainer.step().unwrap();
+    }
+    (ALLOC.allocations() - before) as f64 / iters as f64
+}
+
+fn assert_budget(cfg: ExperimentConfig, label: &str) {
+    let mut t = Trainer::new(cfg).unwrap();
+    let per_iter = measure(&mut t, 4, 24, false);
+    assert!(
+        per_iter <= ALLOC_BUDGET,
+        "{label}: {per_iter:.1} allocs per steady-state iteration exceeds the budget {ALLOC_BUDGET}"
+    );
+}
+
+#[test]
+fn steady_state_budget_dense_even() {
+    let _g = lock();
+    assert_budget(base(240, 48, 3, 2, 40).build().unwrap(), "dense 240x48 on 3x2");
+}
+
+#[test]
+fn steady_state_budget_dense_ragged() {
+    let _g = lock();
+    assert_budget(base(241, 49, 3, 2, 40).build().unwrap(), "dense 241x49 on 3x2 (ragged)");
+}
+
+#[test]
+fn steady_state_budget_sparse_even() {
+    let _g = lock();
+    let cfg = base(240, 48, 3, 2, 40).sparse(240, 48, 8).build().unwrap();
+    assert_budget(cfg, "sparse 240x48 on 3x2");
+}
+
+#[test]
+fn steady_state_budget_sparse_ragged() {
+    let _g = lock();
+    let cfg = base(241, 49, 3, 2, 40).sparse(241, 49, 8).build().unwrap();
+    assert_budget(cfg, "sparse 241x49 on 3x2 (ragged)");
+}
+
+#[test]
+fn steady_state_budget_fused_q1_path() {
+    let _g = lock();
+    assert_budget(base(240, 24, 4, 1, 40).build().unwrap(), "dense 240x24 on 4x1 (fused)");
+}
+
+#[test]
+fn steady_state_budget_radisa_avg() {
+    let _g = lock();
+    let cfg = base(240, 48, 3, 2, 40).algorithm(AlgorithmKind::RadisaAvg).build().unwrap();
+    assert_budget(cfg, "radisa-avg 240x48 on 3x2");
+}
+
+#[test]
+fn pooled_allocates_at_least_10x_less_than_fresh() {
+    let _g = lock();
+    for (cfg, label) in [
+        (base(300, 60, 5, 3, 40).build().unwrap(), "dense 300x60 on 5x3"),
+        (base(301, 61, 5, 3, 40).sparse(301, 61, 8).build().unwrap(), "sparse 301x61 on 5x3"),
+    ] {
+        let mut pooled = Trainer::new(cfg.clone()).unwrap();
+        let pooled_per_iter = measure(&mut pooled, 4, 24, false);
+        let mut fresh = Trainer::new(cfg).unwrap();
+        let fresh_per_iter = measure(&mut fresh, 4, 24, true);
+        assert!(
+            fresh_per_iter >= 10.0 * pooled_per_iter,
+            "{label}: fresh path {fresh_per_iter:.1} allocs/iter is less than 10x the pooled \
+             {pooled_per_iter:.1} — either pooling regressed or the cold path got pooled"
+        );
+        // the two trainers ran the same config — trajectories must agree
+        assert_eq!(pooled.weights(), fresh.weights(), "{label}: pooling changed the iterate");
+    }
+}
+
+#[test]
+fn pooled_and_fresh_histories_are_bit_identical_across_shapes() {
+    let _g = lock();
+    // property test: random shapes/grids/algorithms/formats, pooled run
+    // vs drop-scratch-every-step run — History and final w must match
+    // bit-for-bit (pooling recycles allocations, never changes numbers)
+    forall(6, 4242, |rng| {
+        let p = 1 + rng.below(3);
+        let q = 1 + rng.below(3);
+        let n = p * (4 + rng.below(40)) + rng.below(p);
+        let m = (p * q) * (2 + rng.below(6)) + rng.below(3);
+        let algo = match rng.below(3) {
+            0 => AlgorithmKind::Sodda,
+            1 => AlgorithmKind::Radisa,
+            _ => AlgorithmKind::RadisaAvg,
+        };
+        let mut b = base(n, m, p, q, 3).algorithm(algo).seed(rng.below(1000) as u64);
+        if rng.bool_with(0.5) {
+            b = b.sparse(n, m, 4);
+        }
+        let cfg = b.build().unwrap();
+        let mut warm = Trainer::new(cfg.clone()).unwrap();
+        let a = warm.run().unwrap();
+        let mut cold = Trainer::new(cfg).unwrap();
+        while !cold.is_done() {
+            cold.drop_scratch();
+            cold.step().unwrap();
+        }
+        let o = cold.outcome();
+        assert_eq!(a.w, o.w, "{n}x{m} on {p}x{q} {algo:?}");
+        assert_eq!(a.history.losses(), o.history.losses(), "{n}x{m} on {p}x{q} {algo:?}");
+    });
+}
