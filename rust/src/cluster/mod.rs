@@ -30,6 +30,17 @@
 //! Pooling only recycles allocations — reduce orders are unchanged, so
 //! trajectories are bit-for-bit identical to the fresh-allocation path
 //! (`tests/alloc_regression.rs` pins both properties).
+//!
+//! ## Sampled-width phases
+//!
+//! The µ^t-estimate phases come in two flavors: the frozen full-width
+//! commands (`cols: None` — RADiSA, `|B| == M`) and the sampled-width
+//! ones ([`Cluster::partial_u_cols_into`], [`Cluster::grad_cols_into`]),
+//! whose commands carry sorted block-local id lists of `B^t ∩ block` /
+//! `C^t ∩ block` plus **compact** payloads — the `w` slice and the
+//! gradient reply are exactly as long as the intersection, so wire
+//! bytes and worker FLOPs scale with the sampled widths the SimNet
+//! cost model charges (README "Sampled-width execution").
 
 pub mod simnet;
 
@@ -48,19 +59,25 @@ use crate::util::arc_mut;
 
 /// Commands the leader sends to a worker. `buf` fields are recycled
 /// reply buffers from the leader pool (arbitrary stale contents; the
-/// worker clears and refills them).
+/// worker clears and refills them). `cols` fields carry the sampled
+/// sets as **sorted block-local column id lists**: `Some(ids)` selects
+/// the sampled-width engine entry points with a **compact** `w`/reply
+/// payload (length `|ids|`, not the zero-padded block width); `None` is
+/// the frozen full-width path (RADiSA, `|B| == M`).
 enum Cmd {
-    /// z_part = X[rows, :] · w  (w pre-masked by B^t, full block width)
-    PartialZ { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
-    /// u = f'(X[rows, :]·w, y[rows]) — fused margin + loss derivative
+    /// z_part = X[rows, cols] · w — `cols: None`: w pre-masked by B^t,
+    /// full block width; `cols: Some`: compact w over B^t ∩ block
+    PartialZ { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// u = f'(X[rows, cols]·w, y[rows]) — fused margin + loss derivative
     /// (batched `partial_u` engine entry point); only dispatched on
     /// Q = 1 grids, where the block holds the complete margin
-    PartialU { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    PartialU { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
     /// Σ_rows f(X[rows, :]·w, y[rows]) — fused objective term
     /// (batched `block_loss` engine entry point); Q = 1 grids only
     BlockLoss { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
-    /// g = Σ_rows u·x_row over the full block width
-    GradSlice { u: Arc<Vec<f32>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// g = Σ_rows u·x_row — full block width (`cols: None`) or the
+    /// compact C^t ∩ block slice (`cols: Some`, reply length `|ids|`)
+    GradSlice { u: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
     /// L SVRG steps on the sub-block `cols` (block-local range). The
     /// worker slices its `gcols` window out of the shared full-model
     /// `w`/`mu` snapshots (one allocation-free Arc clone per task
@@ -106,21 +123,40 @@ impl Worker {
         let m = self.block.x.cols();
         while let Ok(cmd) = rx.recv() {
             let reply = match cmd {
-                Cmd::PartialZ { w, rows, mut buf } => {
-                    self.engine.partial_z_into(key, &self.block.x, 0..m, &w, &rows, &mut buf);
+                Cmd::PartialZ { w, cols, rows, mut buf } => {
+                    match &cols {
+                        Some(ids) => self
+                            .engine
+                            .partial_z_cols_into(key, &self.block.x, ids, &w, &rows, &mut buf),
+                        None => {
+                            self.engine.partial_z_into(key, &self.block.x, 0..m, &w, &rows, &mut buf)
+                        }
+                    }
                     Reply::Z(buf)
                 }
-                Cmd::PartialU { w, rows, mut buf } => {
-                    self.engine.partial_u_into(
-                        key,
-                        self.loss,
-                        &self.block.x,
-                        0..m,
-                        &w,
-                        &rows,
-                        &self.block.y,
-                        &mut buf,
-                    );
+                Cmd::PartialU { w, cols, rows, mut buf } => {
+                    match &cols {
+                        Some(ids) => self.engine.partial_u_cols_into(
+                            key,
+                            self.loss,
+                            &self.block.x,
+                            ids,
+                            &w,
+                            &rows,
+                            &self.block.y,
+                            &mut buf,
+                        ),
+                        None => self.engine.partial_u_into(
+                            key,
+                            self.loss,
+                            &self.block.x,
+                            0..m,
+                            &w,
+                            &rows,
+                            &self.block.y,
+                            &mut buf,
+                        ),
+                    }
                     Reply::U(buf)
                 }
                 Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss_scratch(
@@ -133,8 +169,15 @@ impl Worker {
                     &self.block.y,
                     &mut self.scratch,
                 )),
-                Cmd::GradSlice { u, rows, mut buf } => {
-                    self.engine.grad_slice_into(key, &self.block.x, 0..m, &rows, &u, &mut buf);
+                Cmd::GradSlice { u, cols, rows, mut buf } => {
+                    match &cols {
+                        Some(ids) => {
+                            self.engine.grad_cols_into(key, &self.block.x, ids, &rows, &u, &mut buf)
+                        }
+                        None => {
+                            self.engine.grad_slice_into(key, &self.block.x, 0..m, &rows, &u, &mut buf)
+                        }
+                    }
                     Reply::Grad(buf)
                 }
                 Cmd::Svrg { cols, gcols, w, mu, idx, gamma, avg, mut buf } => {
@@ -347,13 +390,48 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
     ) {
+        self.partial_z_impl(w_blocks, None, rows, z)
+    }
+
+    /// Sampled-width [`Cluster::partial_z_into`]: `bcols[q]` is the
+    /// sorted block-local id list of `B^t ∩ block q` and `w_blocks[q]`
+    /// the matching **compact** parameter slice
+    /// (`w_blocks[q].len() == bcols[q].len()`), so the wire carries
+    /// O(|B∩block|) floats per worker and the workers do
+    /// O(rows·|B∩block|) work. Reduce order is identical to the
+    /// full-width path, so the sampled path is deterministic.
+    pub fn partial_z_cols_into(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        bcols: &[Arc<Vec<u32>>],
+        rows: &[Arc<Vec<u32>>],
+        z: &mut Vec<Vec<f32>>,
+    ) {
+        self.partial_z_impl(w_blocks, Some(bcols), rows, z)
+    }
+
+    fn partial_z_impl(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        bcols: Option<&[Arc<Vec<u32>>]>,
+        rows: &[Arc<Vec<u32>>],
+        z: &mut Vec<Vec<f32>>,
+    ) {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
+                if let Some(bc) = bcols {
+                    debug_assert_eq!(
+                        w_blocks[qi].len(),
+                        bc[qi].len(),
+                        "compact w payload must match its id list"
+                    );
+                }
                 let buf = s.f32_pool.pop().unwrap_or_default();
                 self.cmd_txs[self.wid(pi, qi)]
                     .send(Cmd::PartialZ {
                         w: Arc::clone(&w_blocks[qi]),
+                        cols: bcols.map(|bc| Arc::clone(&bc[qi])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
                     })
@@ -419,10 +497,39 @@ impl Cluster {
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
     ) {
+        self.partial_u_impl(w_blocks, None, rows, leader, loss, u)
+    }
+
+    /// Sampled-width [`Cluster::partial_u_into`]: compact `w_blocks`
+    /// over the `bcols` id lists (see
+    /// [`Cluster::partial_z_cols_into`]); both the `Q == 1` fused
+    /// worker path and the `Q > 1` z-reduce path ship only the sampled
+    /// widths.
+    pub fn partial_u_cols_into(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        bcols: &[Arc<Vec<u32>>],
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+        u: &mut Vec<Arc<Vec<f32>>>,
+    ) {
+        self.partial_u_impl(w_blocks, Some(bcols), rows, leader, loss, u)
+    }
+
+    fn partial_u_impl(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        bcols: Option<&[Arc<Vec<u32>>]>,
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+        u: &mut Vec<Arc<Vec<f32>>>,
+    ) {
         u.resize_with(self.p, Default::default);
         if self.q > 1 {
             let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
-            self.partial_z_into(w_blocks, rows, &mut z);
+            self.partial_z_impl(w_blocks, bcols, rows, &mut z);
             let mut s = self.scratch.borrow_mut();
             let s = &mut *s;
             for (pi, up) in u.iter_mut().enumerate() {
@@ -438,6 +545,7 @@ impl Cluster {
                 self.cmd_txs[self.wid(pi, 0)]
                     .send(Cmd::PartialU {
                         w: Arc::clone(&w_blocks[0]),
+                        cols: bcols.map(|bc| Arc::clone(&bc[0])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
                     })
@@ -510,6 +618,34 @@ impl Cluster {
     /// buffer, assembling slices in worker-id order exactly like the
     /// allocating path (bit-for-bit).
     pub fn grad_into(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>], g: &mut Vec<f32>) {
+        self.grad_impl(u, None, rows, g)
+    }
+
+    /// Sampled-width [`Cluster::grad_into`]: workers return **compact**
+    /// gradient slices over `ccols[q]` (the sorted block-local ids of
+    /// `C^t ∩ block q`, reply length `|C∩block|` instead of the block
+    /// width) and the leader scatters them into the full-length `g` at
+    /// the global C^t offsets. `g` is zero outside C^t on return, i.e.
+    /// already projected — callers skip the separate
+    /// `project_inplace` pass. Assembly stays in worker-id order, so
+    /// the sampled path is deterministic.
+    pub fn grad_cols_into(
+        &self,
+        u: &[Arc<Vec<f32>>],
+        ccols: &[Arc<Vec<u32>>],
+        rows: &[Arc<Vec<u32>>],
+        g: &mut Vec<f32>,
+    ) {
+        self.grad_impl(u, Some(ccols), rows, g)
+    }
+
+    fn grad_impl(
+        &self,
+        u: &[Arc<Vec<f32>>],
+        ccols: Option<&[Arc<Vec<u32>>]>,
+        rows: &[Arc<Vec<u32>>],
+        g: &mut Vec<f32>,
+    ) {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
@@ -517,6 +653,7 @@ impl Cluster {
                 self.cmd_txs[self.wid(pi, qi)]
                     .send(Cmd::GradSlice {
                         u: Arc::clone(&u[pi]),
+                        cols: ccols.map(|cc| Arc::clone(&cc[qi])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
                     })
@@ -535,8 +672,22 @@ impl Cluster {
             let slice = s.slots[id].take().expect("reply staged");
             let qi = id % self.q;
             let base = self.layout.block_cols(qi).start;
-            for (k, &v) in slice.iter().enumerate() {
-                g[base + k] += v;
+            match ccols {
+                Some(cc) => {
+                    debug_assert_eq!(
+                        slice.len(),
+                        cc[qi].len(),
+                        "compact grad reply must match its id list"
+                    );
+                    for (&ci, &v) in cc[qi].iter().zip(&slice) {
+                        g[base + ci as usize] += v;
+                    }
+                }
+                None => {
+                    for (k, &v) in slice.iter().enumerate() {
+                        g[base + k] += v;
+                    }
+                }
             }
             s.f32_pool.push(slice);
         }
@@ -676,6 +827,129 @@ mod tests {
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
         let _ = c.partial_z(&w_blocks, &rows);
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
+    }
+
+    /// Split sorted global column ids into per-block (local ids, compact
+    /// w) pairs — the leader-side prep the trainer does before a sampled
+    /// phase.
+    fn split_cols(
+        c: &Cluster,
+        ids: &[u32],
+        w: &[f32],
+    ) -> (Vec<Arc<Vec<u32>>>, Vec<Arc<Vec<f32>>>) {
+        let mut cols = Vec::new();
+        let mut ws = Vec::new();
+        for qi in 0..c.q {
+            let r = c.layout.block_cols(qi);
+            let local: Vec<u32> = ids
+                .iter()
+                .filter(|&&i| (i as usize) >= r.start && (i as usize) < r.end)
+                .map(|&i| i - r.start as u32)
+                .collect();
+            ws.push(Arc::new(local.iter().map(|&l| w[r.start + l as usize]).collect::<Vec<f32>>()));
+            cols.push(Arc::new(local));
+        }
+        (cols, ws)
+    }
+
+    #[test]
+    fn sampled_phases_match_masked_full_width() {
+        let (c, _ds) = cluster(30, 12, 3, 2, 12);
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.29).sin() * 0.5).collect();
+        // B = {1, 3, 6, 7, 11} spans both blocks; C = {3, 7} ⊂ B
+        let b_ids = [1u32, 3, 6, 7, 11];
+        let c_ids = [3u32, 7];
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new(vec![0u32, 2, 5, 9])).collect();
+        let (bcols, w_compact) = split_cols(&c, &b_ids, &w);
+        // masked reference: full-width blocks of w ∘ 1_B
+        let mut w_masked = vec![0.0f32; 12];
+        for &i in &b_ids {
+            w_masked[i as usize] = w[i as usize];
+        }
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w_masked[c.layout.block_cols(qi)].to_vec())).collect();
+
+        let mut z_sampled = Vec::new();
+        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z_sampled);
+        let z_full = c.partial_z(&w_blocks, &rows);
+        for (zs, zf) in z_sampled.iter().zip(&z_full) {
+            assert_close_slice(zs, zf, 1e-5, 1e-6, "sampled z vs masked z");
+        }
+
+        let mut u_sampled = Vec::new();
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u_sampled);
+        let u_full = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        for (us, uf) in u_sampled.iter().zip(&u_full) {
+            assert_close_slice(us, uf, 1e-5, 1e-6, "sampled u vs masked u");
+        }
+
+        let (ccols, _) = split_cols(&c, &c_ids, &w);
+        let u_arcs: Vec<Arc<Vec<f32>>> =
+            u_full.iter().map(|up| Arc::new(up.clone())).collect();
+        let mut g_sampled = Vec::new();
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_sampled);
+        let g_full = c.grad(&u_arcs, &rows);
+        assert_eq!(g_sampled.len(), 12, "sampled g is full-length, projected");
+        for i in 0..12u32 {
+            if c_ids.contains(&i) {
+                crate::assert_close!(g_sampled[i as usize], g_full[i as usize], 1e-5, 1e-6);
+            } else {
+                assert_eq!(g_sampled[i as usize], 0.0, "coordinate {i} outside C must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_phases_are_deterministic_and_pool_friendly() {
+        // rerun on warm pools and after dropping scratch: identical bits
+        let (c, _ds) = cluster(21, 9, 2, 2, 13);
+        let w: Vec<f32> = (0..9).map(|i| 0.07 * i as f32 - 0.3).collect();
+        // C ⊄ block 0: every sampled id lands in block 1 — block 0's
+        // intersection is empty (zero-length payloads must be fine)
+        let b_ids = [5u32, 6, 8];
+        let rows: Vec<Arc<Vec<u32>>> =
+            (0..2).map(|pi| Arc::new((0..c.layout.rows_in(pi) as u32).collect())).collect();
+        let (bcols, w_compact) = split_cols(&c, &b_ids, &w);
+        assert!(bcols[0].is_empty(), "test premise: empty intersection in block 0");
+        let mut cold = Vec::new();
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut cold);
+        let mut warm = Vec::new();
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut warm);
+        let cold_v: Vec<Vec<f32>> = cold.iter().map(|a| a.as_ref().clone()).collect();
+        let warm_v: Vec<Vec<f32>> = warm.iter().map(|a| a.as_ref().clone()).collect();
+        assert_eq!(cold_v, warm_v);
+        let u_arcs = cold;
+        let (ccols, _) = split_cols(&c, &b_ids, &w);
+        let mut g1 = Vec::new();
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g1);
+        let mut g2 = Vec::new();
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g2);
+        assert_eq!(g1, g2);
+        c.drop_scratch();
+        let mut g3 = Vec::new();
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g3);
+        assert_eq!(g1, g3, "pooled vs fresh sampled grad must not change bits");
+    }
+
+    #[test]
+    fn sampled_fused_q1_matches_reduce_path() {
+        // Q = 1: the fused on-worker subset partial_u vs manual subset
+        // z + leader dloss
+        let (c, _ds) = cluster(30, 12, 3, 1, 14);
+        let w: Vec<f32> = (0..12).map(|i| 0.04 * i as f32 - 0.2).collect();
+        let b_ids = [0u32, 2, 3, 9];
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
+        let (bcols, w_compact) = split_cols(&c, &b_ids, &w);
+        let mut u = Vec::new();
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u);
+        let mut z = Vec::new();
+        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z);
+        for pi in 0..3 {
+            for k in 0..10 {
+                let want = Loss::Hinge.dloss(z[pi][k], c.y[pi][k]);
+                assert_eq!(u[pi][k], want, "p={pi} k={k}");
+            }
+        }
     }
 
     #[test]

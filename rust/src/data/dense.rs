@@ -212,6 +212,66 @@ impl DenseMatrix {
         }
     }
 
+    /// Gather-dot `Σ_k x_r[idx[k]] · w[k]` over a sorted column-subset
+    /// list (`idx` holds block-local column ids, `w` is compact —
+    /// `w.len() == idx.len()`). Same accumulator structure as [`dot8`]:
+    /// 8 lanes filled in subset order, pairwise horizontal reduction,
+    /// sequential remainder — so the sum order depends only on the
+    /// subset, never on how the caller batches rows.
+    #[inline]
+    pub fn row_dot_cols(&self, r: usize, idx: &[u32], w: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), idx.len());
+        let row = self.row(r);
+        let mut acc = [0.0f32; 8];
+        let mut ci = idx.chunks_exact(8);
+        let mut cw = w.chunks_exact(8);
+        for (is, ws) in (&mut ci).zip(&mut cw) {
+            for (acc_k, (&i, &wv)) in acc.iter_mut().zip(is.iter().zip(ws)) {
+                *acc_k += row[i as usize] * wv;
+            }
+        }
+        let mut s = hsum8(&acc);
+        for (&i, &wv) in ci.remainder().iter().zip(cw.remainder()) {
+            s += row[i as usize] * wv;
+        }
+        s
+    }
+
+    /// Batched `out[k] = x_{rows[k]}[idx] · w` over a column subset —
+    /// the dense sampled-width phase-1 kernel (see
+    /// [`crate::engine::kernels::partial_z_cols_into`]).
+    pub fn rows_dot_cols_into(&self, rows: &[u32], idx: &[u32], w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows.len());
+        for (o, &r) in out.iter_mut().zip(rows) {
+            *o = self.row_dot_cols(r as usize, idx, w);
+        }
+    }
+
+    /// Scatter-free compact axpy over a column subset:
+    /// `out[k] += scale · x_r[idx[k]]` (`out.len() == idx.len()`).
+    #[inline]
+    pub fn add_row_scaled_cols(&self, r: usize, idx: &[u32], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), idx.len());
+        if scale == 0.0 {
+            return; // hinge gradients are frequently exactly zero
+        }
+        let row = self.row(r);
+        for (o, &i) in out.iter_mut().zip(idx) {
+            *o += scale * row[i as usize];
+        }
+    }
+
+    /// Batched `out[k] += Σ_j u[j] · x_{rows[j]}[idx[k]]` — the compact
+    /// gradient slice of the sampled-width phase 2. Zero-`u` rows are
+    /// skipped and per-element adds stay in row order, like
+    /// [`Self::add_rows_scaled_range`].
+    pub fn add_rows_scaled_cols(&self, rows: &[u32], u: &[f32], idx: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(rows.len(), u.len());
+        for (&r, &uk) in rows.iter().zip(u) {
+            self.add_row_scaled_cols(r as usize, idx, uk, out);
+        }
+    }
+
     /// Copy a column range of a row into `out` (XLA buffer staging).
     pub fn copy_row_range(&self, r: usize, lo: usize, hi: usize, out: &mut [f32]) {
         out.copy_from_slice(&self.row(r)[lo..hi]);
@@ -315,6 +375,68 @@ mod tests {
             m.add_row_scaled_range(r as usize, 1, 5, uk, &mut want);
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gather_dot_matches_masked_full_width() {
+        // subset dot == full-width dot against w zeroed outside the
+        // subset, up to accumulation-order rounding
+        for cols in [1usize, 7, 8, 9, 16, 23] {
+            let data: Vec<f32> = (0..2 * cols).map(|v| (v as f32 * 0.31).sin()).collect();
+            let m = DenseMatrix::from_rows(2, cols, data);
+            let idx: Vec<u32> = (0..cols as u32).step_by(2).collect();
+            let w: Vec<f32> = (0..idx.len()).map(|v| 0.4 - v as f32 * 0.13).collect();
+            let mut w_full = vec![0.0f32; cols];
+            for (k, &i) in idx.iter().enumerate() {
+                w_full[i as usize] = w[k];
+            }
+            for r in 0..2 {
+                let got = m.row_dot_cols(r, &idx, &w);
+                let want = m.row_dot_range(r, 0, cols, &w_full);
+                assert_close!(got, want, 1e-5, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_dot_full_and_empty_subsets() {
+        let m = DenseMatrix::from_rows(1, 11, (0..11).map(|v| v as f32 - 4.0).collect());
+        let all: Vec<u32> = (0..11).collect();
+        let w: Vec<f32> = (0..11).map(|v| (v as f32 * 0.7).cos()).collect();
+        // contiguous full subset shares dot8's chunking exactly
+        assert_eq!(m.row_dot_cols(0, &all, &w), m.row_dot_range(0, 0, 11, &w));
+        assert_eq!(m.row_dot_cols(0, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn batched_gather_accessors_match_per_row() {
+        let m = DenseMatrix::from_rows(6, 10, (0..60).map(|v| (v as f32 * 0.9).sin()).collect());
+        let idx: Vec<u32> = vec![0, 3, 4, 8, 9];
+        let w: Vec<f32> = (0..5).map(|v| 0.2 * v as f32 - 0.5).collect();
+        let rows: Vec<u32> = vec![5, 0, 2, 2];
+        let mut out = vec![7.0f32; 4];
+        m.rows_dot_cols_into(&rows, &idx, &w, &mut out);
+        let want: Vec<f32> = rows.iter().map(|&r| m.row_dot_cols(r as usize, &idx, &w)).collect();
+        assert_eq!(out, want);
+
+        let u = [0.5f32, 0.0, -1.0, 2.0];
+        let mut got = vec![0.25f32; 5];
+        m.add_rows_scaled_cols(&rows, &u, &idx, &mut got);
+        let mut want = vec![0.25f32; 5];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            m.add_row_scaled_cols(r as usize, &idx, uk, &mut want);
+        }
+        assert_eq!(got, want);
+        // compact axpy against the masked-range reference
+        let mut full = vec![0.0f32; 10];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            m.add_row_scaled_range(r as usize, 0, 10, uk, &mut full);
+        }
+        let mut compact = vec![0.0f32; 5];
+        m.add_rows_scaled_cols(&rows, &u, &idx, &mut compact);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_close!(compact[k], full[i as usize], 1e-5, 1e-6);
+        }
     }
 
     #[test]

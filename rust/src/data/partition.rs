@@ -113,6 +113,16 @@ impl Layout {
         self.row_bounds[p + 1] - self.row_bounds[p]
     }
 
+    /// Global column boundaries (length `Q + 1`) — feature block `q`
+    /// owns columns `col_bounds()[q]..col_bounds()[q + 1]`. The sampled
+    /// sets are split into per-block local id lists by one boundary
+    /// walk over these (see
+    /// [`crate::coordinator::sampling::rows_per_partition_into`], which
+    /// works for any sorted-ids-vs-boundaries split, columns included).
+    pub fn col_bounds(&self) -> &[usize] {
+        &self.col_bounds
+    }
+
     /// Global column range of feature block `q`.
     #[inline]
     pub fn block_cols(&self, q: usize) -> std::ops::Range<usize> {

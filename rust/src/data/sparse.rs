@@ -132,6 +132,86 @@ impl CsrMatrix {
         }
     }
 
+    /// The shared sorted-intersection state machine beneath
+    /// [`Self::row_dot_cols`] and [`Self::add_row_scaled_cols`]: calls
+    /// `hit(k, j)` — `k` an index into `self.values`, `j` into `idx` —
+    /// for every stored entry of row `r` whose column is in the sorted
+    /// subset, in column order. Two-pointer walk, galloping (binary
+    /// search over the remaining tail) whenever one side falls behind —
+    /// O(nnz_r + |idx|) worst case, much less when one list is far
+    /// shorter.
+    #[inline]
+    fn for_each_intersection(&self, r: usize, idx: &[u32], mut hit: impl FnMut(usize, usize)) {
+        let rng = self.row_range(r);
+        let cols = &self.indices[rng.clone()];
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < cols.len() && j < idx.len() {
+            let (c, t) = (cols[i], idx[j]);
+            match c.cmp(&t) {
+                std::cmp::Ordering::Equal => {
+                    hit(rng.start + i, j);
+                    i += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    i += 1;
+                    if i < cols.len() && cols[i] < t {
+                        i += cols[i..].partition_point(|&v| v < t);
+                    }
+                }
+                std::cmp::Ordering::Greater => {
+                    j += 1;
+                    if j < idx.len() && idx[j] < c {
+                        j += idx[j..].partition_point(|&v| v < c);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Subset dot `Σ x_r[idx[k]] · w[k]` over a **sorted** block-local
+    /// column list (`w` compact, `w.len() == idx.len()`). Terms
+    /// accumulate in column order, the same order the masked
+    /// [`Self::row_dot_range`] visits the surviving entries.
+    #[inline]
+    pub fn row_dot_cols(&self, r: usize, idx: &[u32], w: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), idx.len());
+        let mut s = 0.0f32;
+        self.for_each_intersection(r, idx, |k, j| s += self.values[k] * w[j]);
+        s
+    }
+
+    /// Batched `out[k] = x_{rows[k]}[idx] · w` over a column subset —
+    /// the CSR sampled-width phase-1 kernel.
+    pub fn rows_dot_cols_into(&self, rows: &[u32], idx: &[u32], w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows.len());
+        for (o, &r) in out.iter_mut().zip(rows) {
+            *o = self.row_dot_cols(r as usize, idx, w);
+        }
+    }
+
+    /// Compact axpy over a sorted column subset:
+    /// `out[k] += scale · x_r[idx[k]]` (same intersection walk as
+    /// [`Self::row_dot_cols`], `out.len() == idx.len()`).
+    #[inline]
+    pub fn add_row_scaled_cols(&self, r: usize, idx: &[u32], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), idx.len());
+        if scale == 0.0 {
+            return;
+        }
+        self.for_each_intersection(r, idx, |k, j| out[j] += scale * self.values[k]);
+    }
+
+    /// Batched compact gradient slice
+    /// `out[k] += Σ_j u[j] · x_{rows[j]}[idx[k]]` (zero-`u` rows skipped,
+    /// row order preserved).
+    pub fn add_rows_scaled_cols(&self, rows: &[u32], u: &[f32], idx: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(rows.len(), u.len());
+        for (&r, &uk) in rows.iter().zip(u) {
+            self.add_row_scaled_cols(r as usize, idx, uk, out);
+        }
+    }
+
     /// Densify a row range into `out` (XLA buffer staging).
     pub fn copy_row_range(&self, r: usize, lo: usize, hi: usize, out: &mut [f32]) {
         out.fill(0.0);
@@ -249,6 +329,64 @@ mod tests {
             m.add_row_scaled_range(r as usize, 1, 4, uk, &mut want);
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn subset_dot_intersects_correctly() {
+        let m = sample();
+        // row 2 = [4 5 0 6]; subset {0, 2, 3} → 4·w0 + 0·w1 + 6·w2
+        let idx = [0u32, 2, 3];
+        let w = [2.0f32, 10.0, 0.5];
+        assert_close!(m.row_dot_cols(2, &idx, &w), 8.0 + 3.0);
+        // row 1 = [0 0 0 3]; subset {0, 1} misses every entry
+        assert_close!(m.row_dot_cols(1, &[0, 1], &[1.0, 1.0]), 0.0);
+        // empty subset, empty w
+        assert_eq!(m.row_dot_cols(0, &[], &[]), 0.0);
+        // full subset equals the full-range dot bit-for-bit (same
+        // entry visit order, same accumulator)
+        let all = [0u32, 1, 2, 3];
+        let w4 = [0.3f32, -1.2, 2.0, 0.7];
+        for r in 0..3 {
+            assert_eq!(m.row_dot_cols(r, &all, &w4), m.row_dot_range(r, 0, 4, &w4));
+        }
+    }
+
+    #[test]
+    fn subset_axpy_matches_masked_reference() {
+        let m = sample();
+        let idx = [1u32, 3];
+        let rows = [2u32, 0, 1];
+        let u = [0.5f32, -1.0, 2.0];
+        let mut compact = vec![0.0f32; 2];
+        m.add_rows_scaled_cols(&rows, &u, &idx, &mut compact);
+        let mut full = vec![0.0f32; 4];
+        for (&r, &uk) in rows.iter().zip(&u) {
+            m.add_row_scaled_range(r as usize, 0, 4, uk, &mut full);
+        }
+        for (k, &i) in idx.iter().enumerate() {
+            assert_close!(compact[k], full[i as usize], 1e-6, 1e-7);
+        }
+        let mut z = vec![9.0f32; 3];
+        m.rows_dot_cols_into(&rows, &idx, &[1.0, 1.0], &mut z);
+        let want: Vec<f32> =
+            rows.iter().map(|&r| m.row_dot_cols(r as usize, &idx, &[1.0, 1.0])).collect();
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn subset_walk_gallops_over_long_runs() {
+        // one row with a long stretch of entries far below/above the
+        // subset, plus a sparse subset with ids far apart — exercises
+        // both gallop branches
+        let entries: Vec<(u32, f32)> = (0..50u32).map(|c| (c, 1.0 + c as f32)).collect();
+        let m = CsrMatrix::from_row_entries(1, 200, vec![entries]);
+        let idx = [45u32, 120, 199];
+        let w = [1.0f32, 1.0, 1.0];
+        // only col 45 intersects → value 46
+        assert_close!(m.row_dot_cols(0, &idx, &w), 46.0);
+        let mut out = vec![0.0f32; 3];
+        m.add_row_scaled_cols(0, &idx, 2.0, &mut out);
+        assert_eq!(out, vec![92.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -104,6 +104,77 @@ pub fn grad_slice_into(x: &Store, cols: Range<usize>, rows: &[u32], u: &[f32], g
     }
 }
 
+/// Sampled-width [`partial_z`]: margins over an explicit **sorted
+/// block-local column subset** with a compact `w`
+/// (`w.len() == idx.len()`), so FLOPs scale with `|B ∩ block|` instead
+/// of the block width. Dense blocks gather-dot over the compacted
+/// columns ([`DenseMatrix::rows_dot_cols_into`]); CSR blocks intersect
+/// each row's stored entries with the subset
+/// ([`CsrMatrix::rows_dot_cols_into`]). Matches the masked full-width
+/// path to accumulation-order rounding (`tests/sampled.rs`), and is
+/// itself deterministic — the sum order depends only on the subset.
+pub fn partial_z_cols(x: &Store, idx: &[u32], w: &[f32], rows: &[u32]) -> Vec<f32> {
+    let mut z = Vec::new();
+    partial_z_cols_into(x, idx, w, rows, &mut z);
+    z
+}
+
+/// In-place [`partial_z_cols`] (recycled buffer, identical values).
+pub fn partial_z_cols_into(x: &Store, idx: &[u32], w: &[f32], rows: &[u32], z: &mut Vec<f32>) {
+    debug_assert_eq!(w.len(), idx.len());
+    z.clear();
+    z.resize(rows.len(), 0.0);
+    match x {
+        Store::Dense(m) => m.rows_dot_cols_into(rows, idx, w, z),
+        Store::Sparse(m) => m.rows_dot_cols_into(rows, idx, w, z),
+    }
+}
+
+/// Sampled-width [`grad_slice`]: emits the **compact** gradient slice
+/// `g[k] = Σ_j u_j · x_{rows[j]}[idx[k]]` (`g.len() == idx.len()`), so
+/// both the work and the reply payload scale with `|C ∩ block|`.
+pub fn grad_cols(x: &Store, idx: &[u32], rows: &[u32], u: &[f32]) -> Vec<f32> {
+    let mut g = Vec::new();
+    grad_cols_into(x, idx, rows, u, &mut g);
+    g
+}
+
+/// In-place [`grad_cols`] (zeroes the buffer, then accumulates in row
+/// order like the full-width path).
+pub fn grad_cols_into(x: &Store, idx: &[u32], rows: &[u32], u: &[f32], g: &mut Vec<f32>) {
+    debug_assert_eq!(rows.len(), u.len());
+    g.clear();
+    g.resize(idx.len(), 0.0);
+    match x {
+        Store::Dense(m) => m.add_rows_scaled_cols(rows, u, idx, g),
+        Store::Sparse(m) => m.add_rows_scaled_cols(rows, u, idx, g),
+    }
+}
+
+/// Sampled-width [`partial_u`]: fused subset margin + loss derivative
+/// (the `Q == 1` worker fast path under sampling).
+pub fn partial_u_cols(loss: Loss, x: &Store, idx: &[u32], w: &[f32], rows: &[u32], y: &[f32]) -> Vec<f32> {
+    let mut u = Vec::new();
+    partial_u_cols_into(loss, x, idx, w, rows, y, &mut u);
+    u
+}
+
+/// In-place [`partial_u_cols`].
+pub fn partial_u_cols_into(
+    loss: Loss,
+    x: &Store,
+    idx: &[u32],
+    w: &[f32],
+    rows: &[u32],
+    y: &[f32],
+    u: &mut Vec<f32>,
+) {
+    partial_z_cols_into(x, idx, w, rows, u);
+    for (uk, &r) in u.iter_mut().zip(rows) {
+        *uk = loss.dloss(*uk, y[r as usize]);
+    }
+}
+
 /// Fused `partial_z` + `dloss_u`: `u_k = f'(x_{rows[k]}[cols]·w, y[rows[k]])`.
 /// `y` is the block's full local label vector (length = block rows). The
 /// margin buffer is computed with the batched paired dots and turned
@@ -339,6 +410,66 @@ mod tests {
                 z.iter().zip(&y_rows).map(|(&zk, &yk)| loss.value(zk, yk) as f64).sum();
             assert_eq!(block_loss(loss, &x, 0..8, &w, &rows, &y), want_l, "{loss}");
         }
+    }
+
+    #[test]
+    fn subset_kernels_match_masked_full_width() {
+        let (x, y) = block(10, 12, 11);
+        let idx: Vec<u32> = vec![1, 4, 5, 9, 11];
+        let w: Vec<f32> = (0..5).map(|i| 0.3 - 0.1 * i as f32).collect();
+        let mut w_full = vec![0.0f32; 12];
+        for (k, &i) in idx.iter().enumerate() {
+            w_full[i as usize] = w[k];
+        }
+        let rows: Vec<u32> = vec![0, 2, 7, 7, 9];
+        let z = partial_z_cols(&x, &idx, &w, &rows);
+        let z_ref = partial_z(&x, 0..12, &w_full, &rows);
+        for (a, b) in z.iter().zip(&z_ref) {
+            assert_close!(*a, *b, 1e-5, 1e-6);
+        }
+        let u: Vec<f32> = (0..5).map(|i| if i == 2 { 0.0 } else { i as f32 * 0.2 - 0.3 }).collect();
+        let g = grad_cols(&x, &idx, &rows, &u);
+        let g_ref = grad_slice(&x, 0..12, &rows, &u);
+        assert_eq!(g.len(), idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            assert_close!(g[k], g_ref[i as usize], 1e-5, 1e-6);
+        }
+        for loss in Loss::ALL {
+            let uc = partial_u_cols(loss, &x, &idx, &w, &rows, &y);
+            let want: Vec<f32> =
+                z.iter().zip(&rows).map(|(&zk, &r)| loss.dloss(zk, y[r as usize])).collect();
+            assert_eq!(uc, want, "{loss}");
+        }
+    }
+
+    #[test]
+    fn subset_kernels_handle_empty_sets() {
+        let (x, y) = block(5, 4, 12);
+        // empty subset: zero-length margins contribution, empty grad
+        assert_eq!(partial_z_cols(&x, &[], &[], &[0, 1]), vec![0.0f32; 2]);
+        assert!(grad_cols(&x, &[], &[0, 1], &[0.5, 0.5]).is_empty());
+        // empty row set
+        assert!(partial_z_cols(&x, &[1, 3], &[0.5, 0.5], &[]).is_empty());
+        assert_eq!(grad_cols(&x, &[1, 3], &[], &[]), vec![0.0f32; 2]);
+        assert!(partial_u_cols(Loss::Hinge, &x, &[0], &[0.5], &[], &y).is_empty());
+    }
+
+    #[test]
+    fn subset_into_variants_on_dirty_buffers_match_allocating() {
+        let (x, y) = block(9, 8, 13);
+        let idx: Vec<u32> = vec![0, 2, 6];
+        let w: Vec<f32> = vec![0.4, -0.2, 0.9];
+        let rows: Vec<u32> = vec![3, 8, 1];
+        let u: Vec<f32> = vec![0.1, -0.5, 0.7];
+        let mut dirty = vec![5.0f32; 11];
+        partial_z_cols_into(&x, &idx, &w, &rows, &mut dirty);
+        assert_eq!(dirty, partial_z_cols(&x, &idx, &w, &rows));
+        dirty.push(-2.0);
+        grad_cols_into(&x, &idx, &rows, &u, &mut dirty);
+        assert_eq!(dirty, grad_cols(&x, &idx, &rows, &u));
+        dirty.push(3.0);
+        partial_u_cols_into(Loss::Logistic, &x, &idx, &w, &rows, &y, &mut dirty);
+        assert_eq!(dirty, partial_u_cols(Loss::Logistic, &x, &idx, &w, &rows, &y));
     }
 
     #[test]

@@ -12,6 +12,21 @@
 //!
 //! The coordinator is engine-generic; integration tests assert the two
 //! engines produce identical training trajectories (up to f32 rounding).
+//!
+//! ## Sampled-width entry points
+//!
+//! SODDA's sampled sets travel as explicit sorted **block-local column
+//! subsets** with compact parameter/gradient payloads:
+//! [`ComputeEngine::partial_z_cols_into`],
+//! [`ComputeEngine::partial_u_cols_into`] and
+//! [`ComputeEngine::grad_cols_into`] do O(|subset|)-width work per row
+//! instead of O(block width). The trait defaults densify (scatter the
+//! compact `w` / gather from the full-width slice) and delegate to the
+//! full-width methods, so the XLA engine and external engines keep
+//! working unchanged; the native engine overrides them with true
+//! gather-dot (dense) and sorted-intersection (CSR) kernels. The
+//! sampled path is deterministic and matches the masked full-width path
+//! to accumulation-order rounding (README "Sampled-width execution").
 
 pub mod kernels;
 mod native;
@@ -33,6 +48,17 @@ use crate::loss::Loss;
 pub struct BlockKey {
     pub p: usize,
     pub q: usize,
+}
+
+/// Scatter a compact subset `w` onto a zero-filled full block width —
+/// the densify step shared by the default (non-subset-aware) `_cols`
+/// engine paths.
+fn densify_w(idx: &[u32], w: &[f32], m: usize) -> Vec<f32> {
+    let mut w_full = vec![0.0f32; m];
+    for (&i, &wv) in idx.iter().zip(w) {
+        w_full[i as usize] = wv;
+    }
+    w_full
 }
 
 /// Numeric backend for the per-block operations of Algorithm 1.
@@ -78,6 +104,28 @@ pub trait ComputeEngine: Send + Sync {
         out.extend_from_slice(&z);
     }
 
+    /// Sampled-width [`Self::partial_z`]: margins over an explicit
+    /// **sorted block-local column subset** `idx` with a compact `w`
+    /// (`w.len() == idx.len()`), so a low-fraction SODDA iteration does
+    /// O(rows·|B∩block|) work instead of O(rows·block width). The
+    /// default scatters the compact `w` onto the full block width and
+    /// delegates to [`Self::partial_z_into`] — numerically the masked
+    /// full-width path — so shape-specialized engines (the AOT XLA
+    /// artifacts) keep working unchanged; engines with true subset
+    /// kernels (the native one) override it.
+    fn partial_z_cols_into(
+        &self,
+        key: BlockKey,
+        x: &Store,
+        idx: &[u32],
+        w: &[f32],
+        rows: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        let m = x.cols();
+        self.partial_z_into(key, x, 0..m, &densify_w(idx, w, m), rows, out)
+    }
+
     /// Elementwise derivative `u_k = f'(z_k, y_k)`.
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32>;
 
@@ -118,6 +166,25 @@ pub trait ComputeEngine: Send + Sync {
         let u = self.partial_u(key, loss, x, cols, w, rows, y);
         out.clear();
         out.extend_from_slice(&u);
+    }
+
+    /// Sampled-width [`Self::partial_u_into`]: the fused subset margin +
+    /// derivative (`Q = 1` grids). Default: scatter-and-delegate, like
+    /// [`Self::partial_z_cols_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn partial_u_cols_into(
+        &self,
+        key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        idx: &[u32],
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let m = x.cols();
+        self.partial_u_into(key, loss, x, 0..m, &densify_w(idx, w, m), rows, y, out)
     }
 
     /// Fused batched margin + loss value `Σ_k f(x_{rows[k]}[cols]·w, y[rows[k]])`
@@ -165,6 +232,28 @@ pub trait ComputeEngine: Send + Sync {
         let g = self.grad_slice(key, x, cols, rows, u);
         out.clear();
         out.extend_from_slice(&g);
+    }
+
+    /// Sampled-width [`Self::grad_slice_into`]: emits the **compact**
+    /// gradient slice over the sorted block-local subset `idx`
+    /// (`out.len() == idx.len()`), so phase-2 work and reply payloads
+    /// scale with `|C∩block|`, not the block width. The default computes
+    /// the full-width slice and gathers the subset out of it (the XLA
+    /// engine inherits this densify-then-gather composition); the
+    /// native engine overrides with the true intersection kernels.
+    fn grad_cols_into(
+        &self,
+        key: BlockKey,
+        x: &Store,
+        idx: &[u32],
+        rows: &[u32],
+        u: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let m = x.cols();
+        let g = self.grad_slice(key, x, 0..m, rows, u);
+        out.clear();
+        out.extend(idx.iter().map(|&i| g[i as usize]));
     }
 
     /// L SVRG steps on one sub-block (Algorithm 1 step 16). `idx` holds

@@ -46,6 +46,18 @@ impl ComputeEngine for NativeEngine {
         kernels::partial_z_into(x, cols, w, rows, out)
     }
 
+    fn partial_z_cols_into(
+        &self,
+        _key: BlockKey,
+        x: &Store,
+        idx: &[u32],
+        w: &[f32],
+        rows: &[u32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::partial_z_cols_into(x, idx, w, rows, out)
+    }
+
     fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
         debug_assert_eq!(z.len(), y.len());
         z.iter().zip(y).map(|(&z, &y)| loss.dloss(z, y)).collect()
@@ -73,6 +85,20 @@ impl ComputeEngine for NativeEngine {
         out: &mut Vec<f32>,
     ) {
         kernels::partial_u_into(loss, x, cols, w, rows, y, out)
+    }
+
+    fn partial_u_cols_into(
+        &self,
+        _key: BlockKey,
+        loss: Loss,
+        x: &Store,
+        idx: &[u32],
+        w: &[f32],
+        rows: &[u32],
+        y: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::partial_u_cols_into(loss, x, idx, w, rows, y, out)
     }
 
     fn block_loss(&self, _key: BlockKey, loss: Loss, x: &Store, cols: Range<usize>, w: &[f32], rows: &[u32], y: &[f32]) -> f64 {
@@ -107,6 +133,18 @@ impl ComputeEngine for NativeEngine {
         out: &mut Vec<f32>,
     ) {
         kernels::grad_slice_into(x, cols, rows, u, out)
+    }
+
+    fn grad_cols_into(
+        &self,
+        _key: BlockKey,
+        x: &Store,
+        idx: &[u32],
+        rows: &[u32],
+        u: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        kernels::grad_cols_into(x, idx, rows, u, out)
     }
 
     fn svrg_inner(
@@ -273,6 +311,102 @@ mod tests {
         let y_rows: Vec<f32> = rows.iter().map(|&r| y[r as usize]).collect();
         NativeEngine.dloss_u_into(Loss::Logistic, &z, &y_rows, &mut buf);
         assert_eq!(buf, NativeEngine.dloss_u(Loss::Logistic, &z, &y_rows));
+    }
+
+    /// An engine that deliberately relies on every trait default — the
+    /// stand-in for the XLA engine (and any external backend) in tests
+    /// that must run without the `xla` feature.
+    struct DefaultEngine;
+
+    impl ComputeEngine for DefaultEngine {
+        fn name(&self) -> &'static str {
+            "default"
+        }
+
+        fn partial_z(
+            &self,
+            k: BlockKey,
+            x: &Store,
+            cols: std::ops::Range<usize>,
+            w: &[f32],
+            rows: &[u32],
+        ) -> Vec<f32> {
+            NativeEngine.partial_z(k, x, cols, w, rows)
+        }
+
+        fn dloss_u(&self, loss: Loss, z: &[f32], y: &[f32]) -> Vec<f32> {
+            NativeEngine.dloss_u(loss, z, y)
+        }
+
+        fn grad_slice(
+            &self,
+            k: BlockKey,
+            x: &Store,
+            cols: std::ops::Range<usize>,
+            rows: &[u32],
+            u: &[f32],
+        ) -> Vec<f32> {
+            NativeEngine.grad_slice(k, x, cols, rows, u)
+        }
+
+        fn svrg_inner(
+            &self,
+            k: BlockKey,
+            loss: Loss,
+            x: &Store,
+            y: &[f32],
+            cols: std::ops::Range<usize>,
+            w0: &[f32],
+            wt: &[f32],
+            mu: &[f32],
+            idx: &[u32],
+            gamma: f32,
+        ) -> Vec<f32> {
+            NativeEngine.svrg_inner(k, loss, x, y, cols, w0, wt, mu, idx, gamma)
+        }
+
+        fn loss_from_z(&self, loss: Loss, z: &[f32], y: &[f32]) -> f64 {
+            NativeEngine.loss_from_z(loss, z, y)
+        }
+
+        fn svrg_inner_avg(
+            &self,
+            k: BlockKey,
+            loss: Loss,
+            x: &Store,
+            y: &[f32],
+            cols: std::ops::Range<usize>,
+            w0: &[f32],
+            wt: &[f32],
+            mu: &[f32],
+            idx: &[u32],
+            gamma: f32,
+        ) -> Vec<f32> {
+            NativeEngine.svrg_inner_avg(k, loss, x, y, cols, w0, wt, mu, idx, gamma)
+        }
+    }
+
+    #[test]
+    fn subset_overrides_match_densify_defaults_to_tolerance() {
+        // the native subset kernels vs the trait's scatter/gather
+        // defaults (what a default-relying engine like XLA executes):
+        // same numbers up to accumulation-order rounding
+        let (x, y) = block(12, 10, 21);
+        let idx: Vec<u32> = vec![0, 3, 4, 8];
+        let w: Vec<f32> = vec![0.5, -0.25, 0.8, -0.6];
+        let rows: Vec<u32> = vec![1, 5, 5, 11, 0];
+        let u: Vec<f32> = vec![0.2, 0.0, -0.7, 0.4, 1.1];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        NativeEngine.partial_z_cols_into(K, &x, &idx, &w, &rows, &mut a);
+        DefaultEngine.partial_z_cols_into(K, &x, &idx, &w, &rows, &mut b);
+        crate::util::testing::assert_close_slice(&a, &b, 1e-5, 1e-6, "partial_z_cols");
+        NativeEngine.partial_u_cols_into(K, Loss::Logistic, &x, &idx, &w, &rows, &y, &mut a);
+        DefaultEngine.partial_u_cols_into(K, Loss::Logistic, &x, &idx, &w, &rows, &y, &mut b);
+        crate::util::testing::assert_close_slice(&a, &b, 1e-5, 1e-6, "partial_u_cols");
+        NativeEngine.grad_cols_into(K, &x, &idx, &rows, &u, &mut a);
+        DefaultEngine.grad_cols_into(K, &x, &idx, &rows, &u, &mut b);
+        crate::util::testing::assert_close_slice(&a, &b, 1e-5, 1e-6, "grad_cols");
+        assert_eq!(a.len(), idx.len(), "compact slice length");
     }
 
     #[test]

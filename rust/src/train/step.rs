@@ -6,9 +6,15 @@
 //!
 //! 1. draw `(B^t, C^t, D^t)` (steps 5-7);
 //! 2. **µ^t estimate** (step 8) — distributed: workers compute partial
-//!    margins over B^t-masked parameters, the leader reduces z across
+//!    margins over the sampled parameters, the leader reduces z across
 //!    feature blocks, broadcasts `u = f'(z, y)`, workers return gradient
-//!    slices, the leader projects onto C^t and divides by `d^t`;
+//!    slices, the leader projects onto C^t and divides by `d^t`. When
+//!    `|B^t| < M` (resp. `|C^t| < M`) the phase runs **sampled-width**:
+//!    per-block sorted local id lists with compact `w`/gradient payloads
+//!    (`Cluster::partial_u_cols_into` / `Cluster::grad_cols_into`), so
+//!    real FLOPs and wire bytes match what the cost model charges; the
+//!    `|B| == M` full sets (RADiSA) keep the frozen full-width path
+//!    bit-for-bit (see README "Sampled-width execution");
 //! 3. draw permutations `π_q` and run the `P×Q` parallel SVRG inner
 //!    loops on disjoint sub-blocks (steps 10-18);
 //! 4. concatenate sub-blocks into `ω^{t+1}` (step 19).
@@ -45,9 +51,17 @@ pub(super) struct Workspace {
     sets_scratch: Vec<u32>,
     /// per-partition local row ids of D^t (phase payloads)
     rows: Vec<Arc<Vec<u32>>>,
-    /// `w ∘ 1_B` (full model width)
+    /// per-feature-block sorted local ids of `B^t ∩ block` (sampled-path
+    /// phase-1 payloads; unused when `|B| == M`)
+    bcols: Vec<Arc<Vec<u32>>>,
+    /// per-feature-block sorted local ids of `C^t ∩ block` (sampled-path
+    /// phase-2 payloads; unused when `|C| == M`)
+    ccols: Vec<Arc<Vec<u32>>>,
+    /// `w ∘ 1_B` (full model width; full-width path only)
     w_masked: Vec<f32>,
-    /// per-feature-block slices of `w_masked` (phase payloads)
+    /// per-feature-block phase-1 parameter payloads: compact `w[B∩block]`
+    /// slices on the sampled path (length `|B∩block|`), full-block
+    /// slices of `w_masked` on the `|B| == M` path
     w_blocks: Vec<Arc<Vec<f32>>>,
     /// per-partition loss derivatives `u` (phase payloads)
     u: Vec<Arc<Vec<f32>>>,
@@ -113,23 +127,57 @@ impl Trainer {
         );
 
         // ---- µ^t estimate (step 8) ------------------------------------------
-        sampling::mask_keep_into(&state.w, &ws.sets.b, &mut ws.w_masked);
+        // Sampled-width execution: when B^t (resp. C^t) is a strict
+        // subset of the columns, the phase ships sorted block-local id
+        // lists plus **compact** payloads, so worker FLOPs and wire
+        // bytes scale with |B∩block| / |C∩block| — exactly what the
+        // cost loops below charge. |B| == M (RADiSA, full-fraction
+        // SODDA) keeps the frozen full-width path bit-for-bit.
+        let b_sampled = ws.sets.b.len() < m_total;
         ws.w_blocks.resize_with(q, Default::default);
-        for (qi, wb) in ws.w_blocks.iter_mut().enumerate() {
-            let dst = arc_mut(wb);
-            dst.clear();
-            dst.extend_from_slice(&ws.w_masked[cluster.layout.block_cols(qi)]);
+        if b_sampled {
+            // one boundary walk splits the sorted B^t into per-block
+            // local ids (the same walk that splits D^t into rows)
+            ws.bcols.resize_with(q, Default::default);
+            sampling::rows_per_partition_into(
+                &ws.sets.b,
+                cluster.layout.col_bounds(),
+                ws.bcols.iter_mut().map(arc_mut),
+            );
+            for (qi, wb) in ws.w_blocks.iter_mut().enumerate() {
+                let base = cluster.layout.block_cols(qi).start;
+                let dst = arc_mut(wb);
+                dst.clear();
+                dst.extend(ws.bcols[qi].iter().map(|&ci| state.w[base + ci as usize]));
+            }
+        } else {
+            sampling::mask_keep_into(&state.w, &ws.sets.b, &mut ws.w_masked);
+            for (qi, wb) in ws.w_blocks.iter_mut().enumerate() {
+                let dst = arc_mut(wb);
+                dst.clear();
+                dst.extend_from_slice(&ws.w_masked[cluster.layout.block_cols(qi)]);
+            }
         }
 
         {
-            // phase-1 cost, identical for both paths below: the fused
-            // reply (`u`) is exactly as long as the unfused one (`z`)
+            // phase-1 cost, identical for the fused/unfused paths below:
+            // the fused reply (`u`) is exactly as long as the unfused
+            // one (`z`). Per-block sampled widths come straight from the
+            // intersection lists (the full path covers every column) —
+            // no per-(p,q) binary searches.
             let mut bytes = 0u64;
             let mut max_flops = 0f64;
-            for pi in 0..p {
-                for qi in 0..q {
-                    let cols = cluster.layout.block_cols(qi);
-                    let bq = SampleSets::count_in_range(&ws.sets.b, cols.start, cols.end);
+            for qi in 0..q {
+                let bq =
+                    if b_sampled { ws.bcols[qi].len() } else { cluster.layout.cols_in(qi) };
+                // cost-model honesty: the `w` payload this phase puts on
+                // the channel is exactly as long as the width it charges
+                debug_assert_eq!(
+                    bq,
+                    ws.w_blocks[qi].len(),
+                    "phase-1 charged width != shipped w payload"
+                );
+                for pi in 0..p {
                     bytes += 4 * (bq as u64 + ws.rows[pi].len() as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * bq as f64 * cluster.density_at(pi, qi);
@@ -142,18 +190,38 @@ impl Trainer {
         // u = f'(z, y): fused on-worker when the grid has one feature
         // block, z-reduce + leader dloss otherwise (the cluster picks)
         let leader = leader_engine.as_ref();
-        cluster.partial_u_into(&ws.w_blocks, &ws.rows, leader, cfg.loss, &mut ws.u);
+        if b_sampled {
+            cluster
+                .partial_u_cols_into(&ws.w_blocks, &ws.bcols, &ws.rows, leader, cfg.loss, &mut ws.u);
+        } else {
+            cluster.partial_u_into(&ws.w_blocks, &ws.rows, leader, cfg.loss, &mut ws.u);
+        }
         state.net.local(ws.sets.d.len() as f64);
 
+        let c_sampled = ws.sets.c.len() < m_total;
         let g = arc_mut(&mut ws.mu);
-        cluster.grad_into(&ws.u, &ws.rows, g);
+        if c_sampled {
+            ws.ccols.resize_with(q, Default::default);
+            sampling::rows_per_partition_into(
+                &ws.sets.c,
+                cluster.layout.col_bounds(),
+                ws.ccols.iter_mut().map(arc_mut),
+            );
+            // compact |C∩block| replies, scattered into g at the C^t
+            // offsets (g returns already projected onto C^t); the
+            // cluster debug-asserts each reply length against its id
+            // list, so the cq charge below is the actual reply size
+            cluster.grad_cols_into(&ws.u, &ws.ccols, &ws.rows, g);
+        } else {
+            cluster.grad_into(&ws.u, &ws.rows, g);
+        }
         {
             let mut bytes = 0u64;
             let mut max_flops = 0f64;
-            for pi in 0..p {
-                for qi in 0..q {
-                    let cols = cluster.layout.block_cols(qi);
-                    let cq = SampleSets::count_in_range(&ws.sets.c, cols.start, cols.end);
+            for qi in 0..q {
+                let cq =
+                    if c_sampled { ws.ccols[qi].len() } else { cluster.layout.cols_in(qi) };
+                for pi in 0..p {
                     bytes += 4 * (ws.rows[pi].len() as u64 + cq as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * cq as f64 * cluster.density_at(pi, qi);
@@ -164,10 +232,18 @@ impl Trainer {
         }
 
         // µ = (g ∘ C) / d^t — in place; `ws.mu` then ships to every task
-        sampling::project_inplace(g, &ws.sets.c);
         let inv_d = 1.0 / ws.sets.d.len() as f32;
-        for v in g.iter_mut() {
-            *v *= inv_d;
+        if c_sampled {
+            // already projected by the compact scatter; scale the C^t
+            // coordinates only — O(|C|), not O(M)
+            for &ci in ws.sets.c.iter() {
+                g[ci as usize] *= inv_d;
+            }
+        } else {
+            sampling::project_inplace(g, &ws.sets.c);
+            for v in g.iter_mut() {
+                *v *= inv_d;
+            }
         }
         state.net.local(ws.sets.c.len() as f64);
         state.grad_coord_evals += (ws.sets.c.len() * ws.sets.d.len()) as u64;

@@ -107,6 +107,21 @@ fn steady_state_budget_sparse_ragged() {
 }
 
 #[test]
+fn steady_state_budget_sampled_low_fraction() {
+    // the sampled-width path (compact per-block id lists + w slices)
+    // must stay inside the same pooled budget as the full-width path
+    let _g = lock();
+    let cfg = base(240, 48, 3, 2, 40).fractions_bcd(0.1, 0.05, 0.5).build().unwrap();
+    assert_budget(cfg, "sodda b=0.1 c=0.05 dense 240x48 on 3x2");
+    let cfg = base(241, 49, 3, 2, 40)
+        .sparse(241, 49, 8)
+        .fractions_bcd(0.1, 0.05, 0.5)
+        .build()
+        .unwrap();
+    assert_budget(cfg, "sodda b=0.1 c=0.05 sparse 241x49 on 3x2 (ragged)");
+}
+
+#[test]
 fn steady_state_budget_fused_q1_path() {
     let _g = lock();
     assert_budget(base(240, 24, 4, 1, 40).build().unwrap(), "dense 240x24 on 4x1 (fused)");
