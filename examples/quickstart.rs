@@ -6,13 +6,16 @@
 //! Uses the native engine so it runs without `make artifacts`; pass
 //! `--engine xla` (after `make artifacts` and building with
 //! `--features xla`) to execute the AOT JAX/Pallas kernels through PJRT.
+//! `--threads` (or `--executor threaded`) runs the P×Q grid on real
+//! worker threads instead of the sequential in-process oracle — same
+//! bits, real parallelism (README "Execution modes").
 //! `--n/--m/--iters` shrink the run — CI's example-smoke job drives
 //! `--n 600 --m 60 --iters 3` (even grid) and `--n 601 --m 61 --iters 3`
 //! (ragged grid) to exercise the session API end-to-end on every PR.
 
 use std::ops::ControlFlow;
 
-use sodda::config::EngineKind;
+use sodda::config::{EngineKind, ExecutorKind};
 use sodda::util::cli::Args;
 use sodda::{ExperimentConfig, Trainer};
 
@@ -26,21 +29,30 @@ fn main() -> anyhow::Result<()> {
     // builder's defaults. Validation (fraction ranges, schedule sanity)
     // happens at build time; any N × M works — shapes that don't divide
     // evenly into the grid get balanced ragged partitions.
-    let cfg = ExperimentConfig::builder()
+    let mut builder = ExperimentConfig::builder()
         .name("quickstart")
         .dense(args.parse_or("n", 5000usize)?, args.parse_or("m", 360usize)?)
         .grid(5, 3)
         .outer_iters(args.parse_or("iters", 25usize)?)
         .seed(42)
-        .engine(engine_kind)
-        .build()?;
+        .engine(engine_kind);
+    // --threads / --executor pin the runtime; otherwise SODDA_EXECUTOR
+    // decides, defaulting to the deterministic in-process oracle
+    if args.has("threads") {
+        builder = builder.executor(ExecutorKind::Threaded);
+    }
+    if let Some(e) = args.get("executor") {
+        builder = builder.executor(e.parse().map_err(anyhow::Error::msg)?);
+    }
+    let cfg = builder.build()?;
 
     // The Trainer stages everything once — dataset, partition grid,
     // engine, worker cluster — and streams records as they land.
     let mut trainer = Trainer::new(cfg)?;
     let ds = trainer.dataset();
     println!("dataset: {} ({} observations × {} features)", ds.name, ds.n(), ds.m());
-    println!("engine:  {}\n", trainer.engine().name());
+    println!("engine:  {}", trainer.engine().name());
+    println!("executor: {}\n", trainer.executor());
 
     println!("iter   F(w)      sim_s");
     let out = trainer.run_with_observer(|r| {

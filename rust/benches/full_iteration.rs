@@ -7,10 +7,17 @@
 //! `allocs_per_iter` in the JSON report; the steady-state row's count is
 //! gated absolutely by `benches/baseline.json` (`max_allocs_per_iter`) —
 //! the pooled-buffer regression tripwire.
+//!
+//! The executor-comparison section runs the same warm session once per
+//! executor (in-process oracle vs thread-per-worker) on a 3×2 grid,
+//! annotates each row with `wall_ns_per_iter` and the SimNet
+//! `sim_ns_per_iter`, and — outside `BENCH_QUICK`, on ≥ 4 cores —
+//! fails the binary unless the threaded mode shows a ≥ 1.2× wall-clock
+//! speedup (ISSUE 6's acceptance gate, recorded in BENCH_6.json).
 
 use std::sync::Arc;
 
-use sodda::config::{preset, AlgorithmKind, ExperimentConfig, SamplingFractions};
+use sodda::config::{preset, AlgorithmKind, ExecutorKind, ExperimentConfig, SamplingFractions};
 use sodda::coordinator::train_with_engine;
 use sodda::engine::NativeEngine;
 use sodda::util::alloc::CountingAlloc;
@@ -25,6 +32,9 @@ fn alloc_events() -> u64 {
 }
 
 fn main() {
+    // the rows here compare executors explicitly (config pins); the
+    // lane-wide env knob must not skew the pinned-default rows below
+    std::env::remove_var(ExecutorKind::ENV);
     let mut b = Bench::from_env("full_iteration");
     b.set_alloc_counter(alloc_events);
     let pr = preset("small").unwrap();
@@ -86,6 +96,69 @@ fn main() {
         }
         steady.step().unwrap()
     });
+
+    // ---- executor comparison: oracle vs real threads on a 3x2 grid ----
+    // One shared dataset, one warm session per executor, objective eval
+    // off the measured path (eval_every = outer_iters; the iteration-0
+    // record is evaluated once during warmup). Blocks are large enough
+    // (~1330x960) that per-worker compute dominates mailbox overhead.
+    let exec_dc = sodda::config::DataConfig::Dense { n: 4000, m: 1920 };
+    let exec_ds = Arc::new(exec_dc.try_materialize(7).expect("materializing executor bench data"));
+    let mut medians = Vec::new();
+    for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+        let cfg = ExperimentConfig::builder()
+            .name(format!("bench_exec_{kind}"))
+            .data(exec_dc.clone())
+            .grid(3, 2)
+            .inner_steps(32)
+            .outer_iters(1_000_000)
+            .eval_every(1_000_000)
+            .seed(7)
+            .executor(kind)
+            .build()
+            .expect("bench config");
+        let mut s = Trainer::with_parts(cfg, Arc::clone(&exec_ds), Arc::new(NativeEngine))
+            .expect("session");
+        for _ in 0..2 {
+            s.step().unwrap(); // warm pools + per-worker scratch
+        }
+        // SimNet charge for one steady-state iteration (identical across
+        // executors — the cost model sees the protocol, not the substrate)
+        let sim0 = s.sim_seconds();
+        s.step().unwrap();
+        let sim_ns_per_iter = (s.sim_seconds() - sim0) * 1e9;
+        let stats = b.bench(&format!("sodda/1 outer iter ({kind} 3x2)"), || {
+            if s.is_done() {
+                s.reset();
+            }
+            s.step().unwrap()
+        });
+        b.annotate("wall_ns_per_iter", stats.median_ns);
+        b.annotate("sim_ns_per_iter", sim_ns_per_iter);
+        medians.push(stats.median_ns);
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let speedup = medians[0] / medians[1];
+    println!("executor speedup (in-process / threaded medians): {speedup:.2}x on {cores} cores");
+    if !b.quick && cores >= 4 {
+        // the acceptance gate: real threads must beat the sequential
+        // oracle by 1.2x wall-clock on a 3x2 grid when cores are there
+        if speedup < 1.2 {
+            eprintln!(
+                "FAIL: threaded executor speedup {speedup:.2}x < 1.2x on {cores} cores \
+                 (in-process {:.0} ns/iter vs threaded {:.0} ns/iter)",
+                medians[0],
+                medians[1]
+            );
+            b.finish();
+            std::process::exit(1);
+        }
+    } else {
+        println!(
+            "(speedup gate skipped: quick={} cores={cores} — needs !quick and >= 4 cores)",
+            b.quick
+        );
+    }
 
     b.finish();
 }

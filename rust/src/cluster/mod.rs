@@ -1,14 +1,21 @@
-//! Simulated doubly distributed cluster: one leader (the caller) and
-//! `P×Q` persistent worker threads, message-passing only.
+//! Doubly distributed cluster: one leader (the caller) and `P×Q`
+//! workers, message-passing only.
 //!
 //! Each worker owns its shard `x^{p,q}` outright (the leader never
 //! touches block data after launch — exactly the paper's Spark layout
 //! where partitions live on executors) plus a shared [`ComputeEngine`].
 //! The leader orchestrates the three phases of Algorithm 1 through typed
-//! commands and collects replies over a single mpsc channel; the
-//! [`simnet::SimNet`] cost model charges each phase (see
-//! [`simnet::CostModel`] and the README's "Steady-state memory"
-//! section).
+//! commands and collects tagged replies; the [`simnet::SimNet`] cost
+//! model charges each phase (see [`simnet::CostModel`] and the README's
+//! "Steady-state memory" section).
+//!
+//! *How* the workers execute is pluggable: the [`transport`] submodule
+//! provides the sequential in-process oracle and the persistent
+//! thread-per-worker runtime behind one [`transport::Transport`] trait,
+//! selected at [`Cluster::launch_with`] (or via `SODDA_EXECUTOR` /
+//! [`ExecutorKind::resolve`] for [`Cluster::launch`]). The two modes are
+//! bit-for-bit identical — see the determinism contract in the
+//! `transport` module docs and the README's "Execution modes" section.
 //!
 //! ## Steady-state memory
 //!
@@ -43,182 +50,21 @@
 //! cost model charges (README "Sampled-width execution").
 
 pub mod simnet;
+pub mod transport;
 
 pub use simnet::{CostModel, SimNet};
 
 use std::cell::RefCell;
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
-use crate::data::{Block, Grid, Layout};
-use crate::engine::{BlockKey, ComputeEngine};
+use transport::{Cmd, Reply, Transport, WorkerCore};
+
+use crate::config::ExecutorKind;
+use crate::data::{Grid, Layout};
+use crate::engine::ComputeEngine;
 use crate::loss::Loss;
 use crate::util::arc_mut;
-
-/// Commands the leader sends to a worker. `buf` fields are recycled
-/// reply buffers from the leader pool (arbitrary stale contents; the
-/// worker clears and refills them). `cols` fields carry the sampled
-/// sets as **sorted block-local column id lists**: `Some(ids)` selects
-/// the sampled-width engine entry points with a **compact** `w`/reply
-/// payload (length `|ids|`, not the zero-padded block width); `None` is
-/// the frozen full-width path (RADiSA, `|B| == M`).
-enum Cmd {
-    /// z_part = X[rows, cols] · w — `cols: None`: w pre-masked by B^t,
-    /// full block width; `cols: Some`: compact w over B^t ∩ block
-    PartialZ { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
-    /// u = f'(X[rows, cols]·w, y[rows]) — fused margin + loss derivative
-    /// (batched `partial_u` engine entry point); only dispatched on
-    /// Q = 1 grids, where the block holds the complete margin
-    PartialU { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
-    /// Σ_rows f(X[rows, :]·w, y[rows]) — fused objective term
-    /// (batched `block_loss` engine entry point); Q = 1 grids only
-    BlockLoss { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
-    /// g = Σ_rows u·x_row — full block width (`cols: None`) or the
-    /// compact C^t ∩ block slice (`cols: Some`, reply length `|ids|`)
-    GradSlice { u: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
-    /// L SVRG steps on the sub-block `cols` (block-local range). The
-    /// worker slices its `gcols` window out of the shared full-model
-    /// `w`/`mu` snapshots (one allocation-free Arc clone per task
-    /// instead of three owned copies); `avg` selects RADiSA-avg's
-    /// suffix-averaged combiner. `idx` rides back with the reply so its
-    /// buffer recycles too.
-    Svrg {
-        cols: Range<usize>,
-        gcols: Range<usize>,
-        w: Arc<Vec<f32>>,
-        mu: Arc<Vec<f32>>,
-        idx: Vec<u32>,
-        gamma: f32,
-        avg: bool,
-        buf: Vec<f32>,
-    },
-    Shutdown,
-}
-
-/// Worker replies (tagged with the worker's linear id by the channel).
-enum Reply {
-    Z(Vec<f32>),
-    U(Vec<f32>),
-    Loss(f64),
-    Grad(Vec<f32>),
-    W { w: Vec<f32>, idx: Vec<u32> },
-}
-
-struct Worker {
-    p: usize,
-    q: usize,
-    block: Block,
-    engine: Arc<dyn ComputeEngine>,
-    loss: Loss,
-    /// persistent per-thread scratch: the fused objective evaluation's
-    /// margin buffer and the averaged SVRG combiner's working iterate
-    scratch: Vec<f32>,
-}
-
-impl Worker {
-    fn run(mut self, rx: Receiver<Cmd>, tx: Sender<(usize, Reply)>, id: usize) {
-        let key = BlockKey { p: self.p, q: self.q };
-        let m = self.block.x.cols();
-        while let Ok(cmd) = rx.recv() {
-            let reply = match cmd {
-                Cmd::PartialZ { w, cols, rows, mut buf } => {
-                    match &cols {
-                        Some(ids) => self
-                            .engine
-                            .partial_z_cols_into(key, &self.block.x, ids, &w, &rows, &mut buf),
-                        None => {
-                            self.engine.partial_z_into(key, &self.block.x, 0..m, &w, &rows, &mut buf)
-                        }
-                    }
-                    Reply::Z(buf)
-                }
-                Cmd::PartialU { w, cols, rows, mut buf } => {
-                    match &cols {
-                        Some(ids) => self.engine.partial_u_cols_into(
-                            key,
-                            self.loss,
-                            &self.block.x,
-                            ids,
-                            &w,
-                            &rows,
-                            &self.block.y,
-                            &mut buf,
-                        ),
-                        None => self.engine.partial_u_into(
-                            key,
-                            self.loss,
-                            &self.block.x,
-                            0..m,
-                            &w,
-                            &rows,
-                            &self.block.y,
-                            &mut buf,
-                        ),
-                    }
-                    Reply::U(buf)
-                }
-                Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss_scratch(
-                    key,
-                    self.loss,
-                    &self.block.x,
-                    0..m,
-                    &w,
-                    &rows,
-                    &self.block.y,
-                    &mut self.scratch,
-                )),
-                Cmd::GradSlice { u, cols, rows, mut buf } => {
-                    match &cols {
-                        Some(ids) => {
-                            self.engine.grad_cols_into(key, &self.block.x, ids, &rows, &u, &mut buf)
-                        }
-                        None => {
-                            self.engine.grad_slice_into(key, &self.block.x, 0..m, &rows, &u, &mut buf)
-                        }
-                    }
-                    Reply::Grad(buf)
-                }
-                Cmd::Svrg { cols, gcols, w, mu, idx, gamma, avg, mut buf } => {
-                    debug_assert_eq!(gcols.len(), cols.len(), "snapshot window ≠ sub-block");
-                    let e = &self.engine;
-                    let (x, y) = (&self.block.x, &self.block.y);
-                    // w^t is both the starting iterate w⁰ and the SVRG
-                    // reference w̃ (each sub-epoch starts at the
-                    // reference point)
-                    let w0 = &w[gcols.clone()];
-                    let mu_s = &mu[gcols];
-                    if avg {
-                        e.svrg_inner_avg_into(
-                            key,
-                            self.loss,
-                            x,
-                            y,
-                            cols,
-                            w0,
-                            w0,
-                            mu_s,
-                            &idx,
-                            gamma,
-                            &mut buf,
-                            &mut self.scratch,
-                        );
-                    } else {
-                        e.svrg_inner_into(
-                            key, self.loss, x, y, cols, w0, w0, mu_s, &idx, gamma, &mut buf,
-                        );
-                    }
-                    Reply::W { w: buf, idx }
-                }
-                Cmd::Shutdown => break,
-            };
-            if tx.send((id, reply)).is_err() {
-                break;
-            }
-        }
-    }
-}
 
 /// One SVRG assignment for the inner-loop phase.
 pub struct SvrgTask {
@@ -247,9 +93,9 @@ pub struct SvrgTask {
 
 /// Leader-side recycled state: the reply-buffer pools plus the reduce
 /// workspaces of the `&self` phase methods. Behind a [`RefCell`] — the
-/// leader is single-threaded (the mpsc `Receiver` already pins
-/// [`Cluster`] to one thread) and no phase method re-enters another
-/// while holding a borrow.
+/// leader is single-threaded (the [`Transport`] is `Send` but not
+/// `Sync`, pinning [`Cluster`] use to one thread at a time) and no
+/// phase method re-enters another while holding a borrow.
 struct LeaderScratch {
     /// drained f32 reply buffers, handed back out with the next commands
     f32_pool: Vec<Vec<f32>>,
@@ -280,15 +126,28 @@ pub struct Cluster {
     pub y: Vec<Vec<f32>>,
     /// density (nnz fraction) per worker `[p][q]`, for the cost model
     pub density: Vec<f64>,
-    cmd_txs: Vec<Sender<Cmd>>,
-    reply_rx: Receiver<(usize, Reply)>,
-    handles: Vec<JoinHandle<()>>,
+    transport: Box<dyn Transport>,
     scratch: RefCell<LeaderScratch>,
 }
 
 impl Cluster {
-    /// Move the grid's blocks into worker threads.
+    /// Move the grid's blocks into workers, picking the executor from
+    /// the environment ([`ExecutorKind::resolve`] with no preference:
+    /// `SODDA_EXECUTOR` if set, else the in-process oracle). Panics on
+    /// an unparseable env value — config-driven callers go through
+    /// [`crate::Trainer`], which surfaces that as an error instead.
     pub fn launch(grid: Grid, engine: Arc<dyn ComputeEngine>, loss: Loss) -> Cluster {
+        let kind = ExecutorKind::resolve(None).expect("SODDA_EXECUTOR");
+        Self::launch_with(grid, engine, loss, kind)
+    }
+
+    /// Move the grid's blocks into workers run by the given executor.
+    pub fn launch_with(
+        grid: Grid,
+        engine: Arc<dyn ComputeEngine>,
+        loss: Loss,
+        kind: ExecutorKind,
+    ) -> Cluster {
         let layout = grid.layout.clone();
         let (p, q) = (layout.p, layout.q);
         let y: Vec<Vec<f32>> = (0..p).map(|pi| grid.block(pi, 0).y.clone()).collect();
@@ -297,35 +156,14 @@ impl Cluster {
             .map(|b| b.x.nnz() as f64 / (b.x.rows() as f64 * b.x.cols() as f64).max(1.0))
             .collect();
 
-        let (reply_tx, reply_rx) = channel();
-        let mut cmd_txs = Vec::with_capacity(p * q);
-        let mut handles = Vec::with_capacity(p * q);
-        // Grid stores blocks row-major [p][q]; consume it in that order.
-        let mut blocks: Vec<Block> = Vec::with_capacity(p * q);
+        // Grid stores blocks row-major [p][q]; worker ids follow it.
+        let mut cores = Vec::with_capacity(p * q);
         for pi in 0..p {
             for qi in 0..q {
-                blocks.push(grid.block(pi, qi).clone());
+                cores.push(WorkerCore::new(grid.block(pi, qi).clone(), Arc::clone(&engine), loss));
             }
         }
-        for (id, block) in blocks.into_iter().enumerate() {
-            let (tx, rx) = channel();
-            cmd_txs.push(tx);
-            let worker = Worker {
-                p: block.p,
-                q: block.q,
-                block,
-                engine: Arc::clone(&engine),
-                loss,
-                scratch: Vec::new(),
-            };
-            let reply = reply_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{id}"))
-                    .spawn(move || worker.run(rx, reply, id))
-                    .expect("spawn worker"),
-            );
-        }
+        let transport = transport::launch(kind, cores);
         let scratch = RefCell::new(LeaderScratch {
             f32_pool: Vec::new(),
             idx_pool: Vec::new(),
@@ -335,7 +173,12 @@ impl Cluster {
             z: Vec::new(),
             y_rows: Vec::new(),
         });
-        Cluster { p, q, layout, y, density, cmd_txs, reply_rx, handles, scratch }
+        Cluster { p, q, layout, y, density, transport, scratch }
+    }
+
+    /// The executor running this cluster's workers.
+    pub fn executor(&self) -> ExecutorKind {
+        self.transport.kind()
     }
 
     #[inline]
@@ -428,18 +271,19 @@ impl Cluster {
                     );
                 }
                 let buf = s.f32_pool.pop().unwrap_or_default();
-                self.cmd_txs[self.wid(pi, qi)]
-                    .send(Cmd::PartialZ {
+                self.transport.send(
+                    self.wid(pi, qi),
+                    Cmd::PartialZ {
                         w: Arc::clone(&w_blocks[qi]),
                         cols: bcols.map(|bc| Arc::clone(&bc[qi])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
-                    })
-                    .expect("worker alive");
+                    },
+                );
             }
         }
         for _ in 0..self.p * self.q {
-            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let (id, reply) = self.transport.recv();
             let Reply::Z(part) = reply else { panic!("expected Z reply") };
             debug_assert!(s.slots[id].is_none(), "duplicate Z reply from worker {id}");
             s.slots[id] = Some(part);
@@ -542,19 +386,20 @@ impl Cluster {
             let mut s = self.scratch.borrow_mut();
             for pi in 0..self.p {
                 let buf = s.f32_pool.pop().unwrap_or_default();
-                self.cmd_txs[self.wid(pi, 0)]
-                    .send(Cmd::PartialU {
+                self.transport.send(
+                    self.wid(pi, 0),
+                    Cmd::PartialU {
                         w: Arc::clone(&w_blocks[0]),
                         cols: bcols.map(|bc| Arc::clone(&bc[0])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
-                    })
-                    .expect("worker alive");
+                    },
+                );
             }
             for _ in 0..self.p {
                 // worker id == p index when q == 1; assignment (not
                 // reduction), so arrival order cannot change results
-                let (id, reply) = self.reply_rx.recv().expect("worker alive");
+                let (id, reply) = self.transport.recv();
                 let Reply::U(mut ub) = reply else { panic!("expected U reply") };
                 std::mem::swap(arc_mut(&mut u[id]), &mut ub);
                 s.f32_pool.push(ub);
@@ -591,14 +436,15 @@ impl Cluster {
         }
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
-            self.cmd_txs[self.wid(pi, 0)]
-                .send(Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) })
-                .expect("worker alive");
+            self.transport.send(
+                self.wid(pi, 0),
+                Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[pi]) },
+            );
         }
         s.loss_parts.clear();
         s.loss_parts.resize(self.p, 0.0);
         for _ in 0..self.p {
-            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let (id, reply) = self.transport.recv();
             let Reply::Loss(v) = reply else { panic!("expected Loss reply") };
             s.loss_parts[id] = v;
         }
@@ -650,18 +496,19 @@ impl Cluster {
         for pi in 0..self.p {
             for qi in 0..self.q {
                 let buf = s.f32_pool.pop().unwrap_or_default();
-                self.cmd_txs[self.wid(pi, qi)]
-                    .send(Cmd::GradSlice {
+                self.transport.send(
+                    self.wid(pi, qi),
+                    Cmd::GradSlice {
                         u: Arc::clone(&u[pi]),
                         cols: ccols.map(|cc| Arc::clone(&cc[qi])),
                         rows: Arc::clone(&rows[pi]),
                         buf,
-                    })
-                    .expect("worker alive");
+                    },
+                );
             }
         }
         for _ in 0..self.p * self.q {
-            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let (id, reply) = self.transport.recv();
             let Reply::Grad(slice) = reply else { panic!("expected Grad reply") };
             debug_assert!(s.slots[id].is_none(), "duplicate Grad reply from worker {id}");
             s.slots[id] = Some(slice);
@@ -717,8 +564,9 @@ impl Cluster {
                 assert_eq!(s.id_to_task[wid], usize::MAX, "one task per worker per phase");
                 s.id_to_task[wid] = ti;
                 let buf = s.f32_pool.pop().unwrap_or_default();
-                self.cmd_txs[wid]
-                    .send(Cmd::Svrg {
+                self.transport.send(
+                    wid,
+                    Cmd::Svrg {
                         cols: t.cols,
                         gcols: t.gcols,
                         w: t.w,
@@ -727,12 +575,12 @@ impl Cluster {
                         gamma: t.gamma,
                         avg: t.avg,
                         buf,
-                    })
-                    .expect("worker alive");
+                    },
+                );
             }
         }
         for _ in 0..n {
-            let (id, reply) = self.reply_rx.recv().expect("worker alive");
+            let (id, reply) = self.transport.recv();
             let Reply::W { w, idx } = reply else { panic!("expected W reply") };
             // release the scratch borrow before the callback runs —
             // `apply` is caller code and may legitimately re-enter the
@@ -746,17 +594,6 @@ impl Cluster {
             };
             apply(ti, &w);
             self.scratch.borrow_mut().f32_pool.push(w);
-        }
-    }
-}
-
-impl Drop for Cluster {
-    fn drop(&mut self) {
-        for tx in &self.cmd_txs {
-            let _ = tx.send(Cmd::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
         }
     }
 }
@@ -1108,7 +945,125 @@ mod tests {
 
     #[test]
     fn shutdown_is_clean() {
-        let (c, _) = cluster(10, 4, 2, 2, 5);
-        drop(c); // Drop joins all workers; hang = test timeout
+        // threaded explicitly: its Drop sends Shutdown and joins every
+        // worker thread; a hang here = test timeout
+        let (c, _) = cluster_with(10, 4, 2, 2, 5, ExecutorKind::Threaded);
+        drop(c);
+    }
+
+    fn cluster_with(
+        n: usize,
+        m: usize,
+        p: usize,
+        q: usize,
+        seed: u64,
+        kind: ExecutorKind,
+    ) -> (Cluster, crate::data::Dataset) {
+        let ds = synth::dense_zhang(n, m, seed);
+        let grid = Grid::partition(&ds, p, q).unwrap();
+        let c = Cluster::launch_with(grid, Arc::new(NativeEngine), Loss::Hinge, kind);
+        (c, ds)
+    }
+
+    #[test]
+    fn executor_kind_is_reported() {
+        let (a, _) = cluster_with(10, 4, 1, 2, 15, ExecutorKind::InProcess);
+        assert_eq!(a.executor(), ExecutorKind::InProcess);
+        let (b, _) = cluster_with(10, 4, 1, 2, 15, ExecutorKind::Threaded);
+        assert_eq!(b.executor(), ExecutorKind::Threaded);
+    }
+
+    #[test]
+    fn executors_are_bit_identical_across_all_phases() {
+        // the determinism contract at phase granularity: every protocol
+        // phase — full-width, sampled-width, and SVRG with a live step
+        // size — produces the same bits on the sequential oracle and on
+        // real threads (ragged 21x9 grid so boundary paths run too)
+        let (a, _) = cluster_with(21, 9, 2, 2, 16, ExecutorKind::InProcess);
+        let (b, _) = cluster_with(21, 9, 2, 2, 16, ExecutorKind::Threaded);
+        let w: Vec<f32> = (0..9).map(|i| (i as f32 * 0.31).sin() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[a.layout.block_cols(qi)].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2)
+            .map(|pi| Arc::new((0..a.layout.rows_in(pi) as u32).collect()))
+            .collect();
+
+        assert_eq!(a.partial_z(&w_blocks, &rows), b.partial_z(&w_blocks, &rows));
+        let ua = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let ub = b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        assert_eq!(ua, ub);
+        assert_eq!(
+            a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits(),
+            b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits()
+        );
+        let u_arcs: Vec<Arc<Vec<f32>>> = ua.into_iter().map(Arc::new).collect();
+        assert_eq!(a.grad(&u_arcs, &rows), b.grad(&u_arcs, &rows));
+
+        // sampled-width phases: B spans both blocks, C ⊂ B
+        let b_ids = [1u32, 3, 5, 7, 8];
+        let (bcols, w_compact) = split_cols(&a, &b_ids, &w);
+        let mut us_a = Vec::new();
+        a.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_a);
+        let mut us_b = Vec::new();
+        b.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_b);
+        assert_eq!(us_a, us_b);
+        let (ccols, _) = split_cols(&a, &[3u32, 7], &w);
+        let mut g_a = Vec::new();
+        a.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_a);
+        let mut g_b = Vec::new();
+        b.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_b);
+        assert_eq!(g_a, g_b);
+
+        // SVRG with a nonzero step: real inner loops, plain and averaged
+        // combiners, both sub-blocks (SvrgTask is not Clone — build the
+        // identical task list once per cluster)
+        let svrg = |c: &Cluster| {
+            let w_snap = Arc::new(w.clone());
+            let mu = Arc::new((0..9).map(|i| 0.01 * i as f32).collect::<Vec<f32>>());
+            let tasks = vec![
+                SvrgTask {
+                    p: 0,
+                    q: 0,
+                    cols: 0..2,
+                    gcols: 0..2,
+                    w: Arc::clone(&w_snap),
+                    mu: Arc::clone(&mu),
+                    idx: vec![0, 3, 1, 2],
+                    gamma: 0.05,
+                    avg: false,
+                },
+                SvrgTask {
+                    p: 1,
+                    q: 1,
+                    cols: 0..2,
+                    gcols: c.layout.block_cols(1).start..c.layout.block_cols(1).start + 2,
+                    w: w_snap,
+                    mu,
+                    idx: vec![2, 0, 4, 1],
+                    gamma: 0.05,
+                    avg: true,
+                },
+            ];
+            let mut out = c.svrg(tasks);
+            out.sort_by_key(|(ti, _)| *ti);
+            out
+        };
+        assert_eq!(svrg(&a), svrg(&b));
+    }
+
+    #[test]
+    fn threaded_reply_buffers_return_to_the_pool() {
+        // PR 4's pooling contract must survive the threaded transport:
+        // buffers ride commands down and replies back, whatever the
+        // substrate
+        let (c, _ds) = cluster_with(20, 8, 2, 2, 11, ExecutorKind::Threaded);
+        let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+        let _ = c.partial_z(&w_blocks, &rows);
+        assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
+        let _ = c.partial_z(&w_blocks, &rows);
+        assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
     }
 }

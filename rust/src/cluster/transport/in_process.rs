@@ -1,0 +1,54 @@
+//! The sequential oracle: every command executes inline on the leader
+//! thread, in send order, with replies queued FIFO.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use crate::config::ExecutorKind;
+
+use super::{Cmd, Reply, Transport, WorkerCore};
+
+/// Deterministic single-threaded executor. `send(id, cmd)` runs
+/// [`WorkerCore::execute`] immediately and parks the reply; `recv`
+/// hands finished replies back in completion (= send) order, which is
+/// exactly the arrival-order distribution the threaded mode can
+/// produce — the leader's id-staged reduces make the order invisible
+/// either way, but keeping the FIFO shape means both transports
+/// exercise identical leader code paths.
+pub(crate) struct InProcess {
+    // RefCell, not Mutex: the Transport trait is `Send` but not `Sync`,
+    // and the leader drives phases from a single thread — `send`/`recv`
+    // take `&self` only because the threaded transport's channel
+    // endpoints do. The borrows here are strictly scoped to one call,
+    // so the dynamic checks can never trip.
+    workers: Vec<RefCell<WorkerCore>>,
+    ready: RefCell<VecDeque<(usize, Reply)>>,
+}
+
+impl InProcess {
+    pub(crate) fn new(cores: Vec<WorkerCore>) -> InProcess {
+        let n = cores.len();
+        InProcess {
+            workers: cores.into_iter().map(RefCell::new).collect(),
+            // pre-size to the grid: a phase has at most one outstanding
+            // reply per worker, so the deque never reallocates
+            ready: RefCell::new(VecDeque::with_capacity(n)),
+        }
+    }
+}
+
+impl Transport for InProcess {
+    fn send(&self, id: usize, cmd: Cmd) {
+        if let Some(reply) = self.workers[id].borrow_mut().execute(cmd) {
+            self.ready.borrow_mut().push_back((id, reply));
+        }
+    }
+
+    fn recv(&self) -> (usize, Reply) {
+        self.ready.borrow_mut().pop_front().expect("recv() with no command in flight")
+    }
+
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::InProcess
+    }
+}

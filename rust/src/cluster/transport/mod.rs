@@ -1,0 +1,253 @@
+//! Executor transports: *how* the P×Q workers execute the phase
+//! protocol, decoupled from *what* they execute.
+//!
+//! The leader-side [`crate::cluster::Cluster`] speaks one message
+//! protocol — typed [`Cmd`]s down, `(worker id, `[`Reply`]`)` pairs
+//! back — and every command is executed by the same
+//! [`WorkerCore::execute`] body regardless of the substrate. A
+//! [`Transport`] owns the substrate:
+//!
+//! * [`InProcess`] — the deterministic sequential oracle. `send`
+//!   executes the command inline on the leader thread; `recv` drains a
+//!   FIFO of finished replies. No threads, no channels: the whole
+//!   cluster is one core's worth of work in a fixed order, which makes
+//!   it the bit-frozen reference the equivalence suite and the
+//!   alloc-regression harness pin everything against.
+//! * [`Threaded`] — the real runtime. One persistent thread per worker,
+//!   each owning its shard and scratch outright ([`WorkerCore`] is
+//!   `Send`; the shared [`ComputeEngine`] is `Send + Sync`), with an
+//!   mpsc mailbox per worker and one shared reply channel back to the
+//!   leader. Phases genuinely overlap across cores.
+//!
+//! ## The determinism contract
+//!
+//! `Threaded` reproduces `InProcess` **bit-for-bit** (enforced by
+//! `tests/executor.rs`), by construction rather than by luck:
+//!
+//! 1. both transports run the identical [`WorkerCore::execute`] body,
+//!    so per-block numbers cannot differ;
+//! 2. every leader-side reduce stages replies into per-worker slots and
+//!    folds them in worker-id order — f32 addition is non-associative,
+//!    so arrival order must never reach an accumulator;
+//! 3. the SVRG phase applies results in completion order, but tasks own
+//!    disjoint column ranges, so any apply order writes the same bits.
+//!
+//! The only observable difference between the two modes is wall-clock
+//! (and thread identity). Reply buffers recycle through the leader pool
+//! identically in both — commands carry the recycled buffer down and
+//! the reply carries it back, whatever the substrate.
+
+mod in_process;
+mod threaded;
+
+pub(crate) use in_process::InProcess;
+pub(crate) use threaded::Threaded;
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::config::ExecutorKind;
+use crate::data::Block;
+use crate::engine::{BlockKey, ComputeEngine};
+use crate::loss::Loss;
+
+/// Commands the leader sends to a worker. `buf` fields are recycled
+/// reply buffers from the leader pool (arbitrary stale contents; the
+/// worker clears and refills them). `cols` fields carry the sampled
+/// sets as **sorted block-local column id lists**: `Some(ids)` selects
+/// the sampled-width engine entry points with a **compact** `w`/reply
+/// payload (length `|ids|`, not the zero-padded block width); `None` is
+/// the frozen full-width path (RADiSA, `|B| == M`).
+pub(crate) enum Cmd {
+    /// z_part = X[rows, cols] · w — `cols: None`: w pre-masked by B^t,
+    /// full block width; `cols: Some`: compact w over B^t ∩ block
+    PartialZ { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// u = f'(X[rows, cols]·w, y[rows]) — fused margin + loss derivative
+    /// (batched `partial_u` engine entry point); only dispatched on
+    /// Q = 1 grids, where the block holds the complete margin
+    PartialU { w: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// Σ_rows f(X[rows, :]·w, y[rows]) — fused objective term
+    /// (batched `block_loss` engine entry point); Q = 1 grids only
+    BlockLoss { w: Arc<Vec<f32>>, rows: Arc<Vec<u32>> },
+    /// g = Σ_rows u·x_row — full block width (`cols: None`) or the
+    /// compact C^t ∩ block slice (`cols: Some`, reply length `|ids|`)
+    GradSlice { u: Arc<Vec<f32>>, cols: Option<Arc<Vec<u32>>>, rows: Arc<Vec<u32>>, buf: Vec<f32> },
+    /// L SVRG steps on the sub-block `cols` (block-local range). The
+    /// worker slices its `gcols` window out of the shared full-model
+    /// `w`/`mu` snapshots (one allocation-free Arc clone per task
+    /// instead of three owned copies); `avg` selects RADiSA-avg's
+    /// suffix-averaged combiner. `idx` rides back with the reply so its
+    /// buffer recycles too.
+    Svrg {
+        cols: Range<usize>,
+        gcols: Range<usize>,
+        w: Arc<Vec<f32>>,
+        mu: Arc<Vec<f32>>,
+        idx: Vec<u32>,
+        gamma: f32,
+        avg: bool,
+        buf: Vec<f32>,
+    },
+    /// Terminate the worker loop ([`Threaded`] only; [`InProcess`] has
+    /// no loop to terminate and simply drops its cores).
+    Shutdown,
+}
+
+/// Worker replies (tagged with the worker's linear id by the transport).
+pub(crate) enum Reply {
+    Z(Vec<f32>),
+    U(Vec<f32>),
+    Loss(f64),
+    Grad(Vec<f32>),
+    W { w: Vec<f32>, idx: Vec<u32> },
+}
+
+/// One worker's entire state: its shard, the shared engine, and the
+/// persistent per-worker scratch. Owned by a thread under [`Threaded`],
+/// by a `RefCell` slot under [`InProcess`] — either way there is exactly
+/// one `&mut` executor of a core at any time, and the execution body is
+/// the same function, so the two transports cannot diverge numerically.
+pub(crate) struct WorkerCore {
+    pub(crate) block: Block,
+    pub(crate) engine: Arc<dyn ComputeEngine>,
+    pub(crate) loss: Loss,
+    /// persistent scratch: the fused objective evaluation's margin
+    /// buffer and the averaged SVRG combiner's working iterate
+    pub(crate) scratch: Vec<f32>,
+}
+
+impl WorkerCore {
+    pub(crate) fn new(block: Block, engine: Arc<dyn ComputeEngine>, loss: Loss) -> WorkerCore {
+        WorkerCore { block, engine, loss, scratch: Vec::new() }
+    }
+
+    /// Execute one command against this worker's shard. Returns `None`
+    /// on [`Cmd::Shutdown`] (no reply; the caller's loop ends).
+    pub(crate) fn execute(&mut self, cmd: Cmd) -> Option<Reply> {
+        let key = BlockKey { p: self.block.p, q: self.block.q };
+        let m = self.block.x.cols();
+        let reply = match cmd {
+            Cmd::PartialZ { w, cols, rows, mut buf } => {
+                match &cols {
+                    Some(ids) => self
+                        .engine
+                        .partial_z_cols_into(key, &self.block.x, ids, &w, &rows, &mut buf),
+                    None => {
+                        self.engine.partial_z_into(key, &self.block.x, 0..m, &w, &rows, &mut buf)
+                    }
+                }
+                Reply::Z(buf)
+            }
+            Cmd::PartialU { w, cols, rows, mut buf } => {
+                match &cols {
+                    Some(ids) => self.engine.partial_u_cols_into(
+                        key,
+                        self.loss,
+                        &self.block.x,
+                        ids,
+                        &w,
+                        &rows,
+                        &self.block.y,
+                        &mut buf,
+                    ),
+                    None => self.engine.partial_u_into(
+                        key,
+                        self.loss,
+                        &self.block.x,
+                        0..m,
+                        &w,
+                        &rows,
+                        &self.block.y,
+                        &mut buf,
+                    ),
+                }
+                Reply::U(buf)
+            }
+            Cmd::BlockLoss { w, rows } => Reply::Loss(self.engine.block_loss_scratch(
+                key,
+                self.loss,
+                &self.block.x,
+                0..m,
+                &w,
+                &rows,
+                &self.block.y,
+                &mut self.scratch,
+            )),
+            Cmd::GradSlice { u, cols, rows, mut buf } => {
+                match &cols {
+                    Some(ids) => {
+                        self.engine.grad_cols_into(key, &self.block.x, ids, &rows, &u, &mut buf)
+                    }
+                    None => {
+                        self.engine.grad_slice_into(key, &self.block.x, 0..m, &rows, &u, &mut buf)
+                    }
+                }
+                Reply::Grad(buf)
+            }
+            Cmd::Svrg { cols, gcols, w, mu, idx, gamma, avg, mut buf } => {
+                debug_assert_eq!(gcols.len(), cols.len(), "snapshot window ≠ sub-block");
+                let e = &self.engine;
+                let (x, y) = (&self.block.x, &self.block.y);
+                // w^t is both the starting iterate w⁰ and the SVRG
+                // reference w̃ (each sub-epoch starts at the
+                // reference point)
+                let w0 = &w[gcols.clone()];
+                let mu_s = &mu[gcols];
+                if avg {
+                    e.svrg_inner_avg_into(
+                        key,
+                        self.loss,
+                        x,
+                        y,
+                        cols,
+                        w0,
+                        w0,
+                        mu_s,
+                        &idx,
+                        gamma,
+                        &mut buf,
+                        &mut self.scratch,
+                    );
+                } else {
+                    e.svrg_inner_into(
+                        key, self.loss, x, y, cols, w0, w0, mu_s, &idx, gamma, &mut buf,
+                    );
+                }
+                Reply::W { w: buf, idx }
+            }
+            Cmd::Shutdown => return None,
+        };
+        Some(reply)
+    }
+}
+
+/// Phase dispatch: deliver a command to worker `id`, collect the next
+/// finished `(id, reply)` pair. The leader is the sole caller and every
+/// phase is a strict send-all/receive-all barrier, so a transport never
+/// sees interleaved phases. `Send` (not `Sync`): a [`Cluster`] can move
+/// between threads wholesale but is driven from one thread at a time —
+/// exactly the `Receiver`/`RefCell` contract the leader already had.
+///
+/// [`Cluster`]: crate::cluster::Cluster
+pub(crate) trait Transport: Send {
+    /// Deliver `cmd` to worker `id`. [`InProcess`] executes it inline
+    /// before returning; [`Threaded`] enqueues it on the worker's
+    /// mailbox. Either way the reply is eventually observable through
+    /// [`Transport::recv`].
+    fn send(&self, id: usize, cmd: Cmd);
+
+    /// Next finished `(worker id, reply)` pair. Panics if called with no
+    /// command in flight (a protocol bug, not a runtime condition).
+    fn recv(&self) -> (usize, Reply);
+
+    /// Which executor this transport implements (selection reporting).
+    fn kind(&self) -> ExecutorKind;
+}
+
+/// Build the transport for `kind` over the given worker cores.
+pub(crate) fn launch(kind: ExecutorKind, cores: Vec<WorkerCore>) -> Box<dyn Transport> {
+    match kind {
+        ExecutorKind::InProcess => Box::new(InProcess::new(cores)),
+        ExecutorKind::Threaded => Box::new(Threaded::spawn(cores)),
+    }
+}

@@ -1,0 +1,81 @@
+//! The real runtime: one persistent OS thread per worker, mailboxes
+//! down, a shared reply channel up.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::config::ExecutorKind;
+
+use super::{Cmd, Reply, Transport, WorkerCore};
+
+/// Thread-per-worker executor. Each of the P×Q threads owns its
+/// [`WorkerCore`] (shard + scratch) outright and loops on its private
+/// mailbox; all threads share one `Sender` back to the leader. Phases
+/// overlap across cores for real — the leader's send-all/recv-all
+/// barriers plus id-staged reduces keep the numbers bit-identical to
+/// the in-process oracle (see the module docs in `transport/mod.rs`).
+pub(crate) struct Threaded {
+    cmd_txs: Vec<Sender<Cmd>>,
+    reply_rx: Receiver<(usize, Reply)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Threaded {
+    pub(crate) fn spawn(cores: Vec<WorkerCore>) -> Threaded {
+        let (reply_tx, reply_rx) = channel::<(usize, Reply)>();
+        let mut cmd_txs = Vec::with_capacity(cores.len());
+        let mut handles = Vec::with_capacity(cores.len());
+        for (id, mut core) in cores.into_iter().enumerate() {
+            let (tx, rx) = channel::<Cmd>();
+            let reply_tx = reply_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{id}"))
+                .spawn(move || {
+                    while let Ok(cmd) = rx.recv() {
+                        match core.execute(cmd) {
+                            // a dead leader (dropped receiver) is a
+                            // normal shutdown race, not an error
+                            Some(reply) => {
+                                if reply_tx.send((id, reply)).is_err() {
+                                    break;
+                                }
+                            }
+                            None => break,
+                        }
+                    }
+                })
+                .expect("spawn worker thread");
+            cmd_txs.push(tx);
+            handles.push(handle);
+        }
+        Threaded { cmd_txs, reply_rx, handles }
+    }
+}
+
+impl Transport for Threaded {
+    fn send(&self, id: usize, cmd: Cmd) {
+        self.cmd_txs[id].send(cmd).expect("worker thread hung up");
+    }
+
+    fn recv(&self) -> (usize, Reply) {
+        self.reply_rx.recv().expect("all worker threads hung up")
+    }
+
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Threaded
+    }
+}
+
+impl Drop for Threaded {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            // a worker that already exited (panicked) has dropped its
+            // receiver; ignore the send error and still join below so
+            // its panic propagates nowhere silently
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}

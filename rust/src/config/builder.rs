@@ -12,8 +12,8 @@
 use anyhow::{Context, Result};
 
 use super::{
-    AlgorithmKind, DataConfig, EngineKind, ExperimentConfig, NetworkConfig, SamplingFractions,
-    Schedule,
+    AlgorithmKind, DataConfig, EngineKind, ExecutorKind, ExperimentConfig, NetworkConfig,
+    SamplingFractions, Schedule,
 };
 use crate::loss::Loss;
 
@@ -44,6 +44,7 @@ pub struct ExperimentConfigBuilder {
     schedule: Schedule,
     seed: u64,
     engine: EngineKind,
+    executor: Option<ExecutorKind>,
     network: Option<NetworkConfig>,
     eval_every: usize,
     strict_even_grid: bool,
@@ -64,6 +65,7 @@ impl Default for ExperimentConfigBuilder {
             schedule: Schedule::ScaledSqrt { gamma0: 0.08 },
             seed: 1,
             engine: EngineKind::Native,
+            executor: None,
             network: None,
             eval_every: 1,
             strict_even_grid: false,
@@ -148,6 +150,15 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    /// Pin the executor running the P×Q workers (in-process oracle or
+    /// thread-per-worker). Unset = auto: the `SODDA_EXECUTOR` env knob
+    /// if present, else in-process — see
+    /// [`ExecutorKind::resolve`](super::ExecutorKind::resolve).
+    pub fn executor(mut self, executor: ExecutorKind) -> Self {
+        self.executor = Some(executor);
+        self
+    }
+
     /// Enable the SimNet cost model with explicit link parameters.
     pub fn network(mut self, network: NetworkConfig) -> Self {
         self.network = Some(network);
@@ -190,6 +201,7 @@ impl ExperimentConfigBuilder {
             schedule: self.schedule,
             seed: self.seed,
             engine: self.engine,
+            executor: self.executor,
             network: self.network,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
@@ -221,6 +233,7 @@ impl ExperimentConfig {
             schedule: self.schedule,
             seed: self.seed,
             engine: self.engine,
+            executor: self.executor,
             network: self.network,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
@@ -309,5 +322,14 @@ mod tests {
         assert_eq!(v.name, "variant");
         assert_eq!(v.fractions.b, 0.9);
         assert_eq!(base.to_builder().build().unwrap().name, base.name);
+    }
+
+    #[test]
+    fn executor_pin_defaults_to_auto_and_survives_to_builder() {
+        let auto = ExperimentConfig::builder().dense(300, 60).grid(3, 2).build().unwrap();
+        assert_eq!(auto.executor, None, "unset = auto-resolve");
+        let pinned = auto.to_builder().executor(ExecutorKind::Threaded).build().unwrap();
+        assert_eq!(pinned.executor, Some(ExecutorKind::Threaded));
+        assert_eq!(pinned.to_builder().build().unwrap().executor, Some(ExecutorKind::Threaded));
     }
 }

@@ -76,6 +76,63 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
+/// Which executor runs the P×Q workers (see `cluster/transport/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorKind {
+    /// Sequential in-process oracle: every worker command executes
+    /// inline on the leader thread, in a fixed order. Deterministic,
+    /// thread-free, and the bit-frozen reference for the threaded mode.
+    #[default]
+    InProcess,
+    /// Persistent thread-per-worker runtime: each of the P×Q workers
+    /// owns its shard on its own OS thread; phases overlap across
+    /// cores. Bit-identical trajectories to [`ExecutorKind::InProcess`]
+    /// (see the determinism contract in `cluster/transport/`).
+    Threaded,
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecutorKind::InProcess => "in-process",
+            ExecutorKind::Threaded => "threaded",
+        })
+    }
+}
+
+impl std::str::FromStr for ExecutorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "in-process" | "inprocess" | "in_process" | "sequential" => Ok(Self::InProcess),
+            "threaded" | "threads" | "thread" => Ok(Self::Threaded),
+            other => Err(format!("unknown executor {other:?} (in-process|threaded)")),
+        }
+    }
+}
+
+impl ExecutorKind {
+    /// The env override knob read by [`ExecutorKind::resolve`].
+    pub const ENV: &'static str = "SODDA_EXECUTOR";
+
+    /// Resolve the executor to run: an explicit preference (the config's
+    /// `executor` field) wins; otherwise a non-empty `SODDA_EXECUTOR`
+    /// env value is parsed (errors on garbage rather than silently
+    /// falling back — CI lanes rely on the knob actually engaging); with
+    /// neither, the in-process oracle.
+    pub fn resolve(pref: Option<ExecutorKind>) -> Result<ExecutorKind> {
+        if let Some(kind) = pref {
+            return Ok(kind);
+        }
+        match std::env::var(Self::ENV) {
+            Ok(v) if !v.is_empty() => {
+                v.parse().map_err(|e: String| anyhow::anyhow!("{}: {e}", Self::ENV))
+            }
+            _ => Ok(ExecutorKind::InProcess),
+        }
+    }
+}
+
 /// Dataset specification.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataConfig {
@@ -195,6 +252,10 @@ pub struct ExperimentConfig {
     pub schedule: Schedule,
     pub seed: u64,
     pub engine: EngineKind,
+    /// which executor runs the workers; `None` = auto (the
+    /// `SODDA_EXECUTOR` env knob if set, else the in-process oracle —
+    /// see [`ExecutorKind::resolve`])
+    pub executor: Option<ExecutorKind>,
     pub network: Option<NetworkConfig>,
     /// evaluate F(w) every k outer iterations (1 = every iteration)
     pub eval_every: usize,
@@ -302,6 +363,9 @@ impl ExperimentConfig {
             ("eval_every", json::num(self.eval_every as f64)),
             ("strict_even_grid", Value::Bool(self.strict_even_grid)),
         ];
+        if let Some(exec) = self.executor {
+            fields.push(("executor", json::s(exec.to_string())));
+        }
         if let Some(net) = self.network {
             fields.push((
                 "network",
@@ -370,6 +434,11 @@ impl ExperimentConfig {
                 Some("xla") => EngineKind::Xla,
                 _ => EngineKind::Native,
             },
+            // absent = auto-resolve (legacy config files predate the knob)
+            executor: match v.opt("executor").map(|e| e.as_str()).transpose()? {
+                Some(s) => Some(s.parse().map_err(|e: String| anyhow::anyhow!(e))?),
+                None => None,
+            },
             network,
             eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
             strict_even_grid: v
@@ -401,6 +470,7 @@ mod tests {
             schedule: Schedule::PaperSqrt,
             seed: 0,
             engine: EngineKind::Native,
+            executor: None,
             network: None,
             eval_every: 1,
             strict_even_grid: false,
@@ -471,5 +541,30 @@ mod tests {
     fn algorithm_parse() {
         assert_eq!("radisa-avg".parse::<AlgorithmKind>().unwrap(), AlgorithmKind::RadisaAvg);
         assert_eq!("SODDA".parse::<AlgorithmKind>().unwrap(), AlgorithmKind::Sodda);
+    }
+
+    #[test]
+    fn executor_parse_and_display() {
+        assert_eq!("threaded".parse::<ExecutorKind>().unwrap(), ExecutorKind::Threaded);
+        assert_eq!("THREADS".parse::<ExecutorKind>().unwrap(), ExecutorKind::Threaded);
+        assert_eq!("in-process".parse::<ExecutorKind>().unwrap(), ExecutorKind::InProcess);
+        assert_eq!("sequential".parse::<ExecutorKind>().unwrap(), ExecutorKind::InProcess);
+        assert!("remote".parse::<ExecutorKind>().is_err());
+        assert_eq!(ExecutorKind::Threaded.to_string(), "threaded");
+        assert_eq!(ExecutorKind::InProcess.to_string(), "in-process");
+    }
+
+    #[test]
+    fn executor_round_trips_through_json() {
+        let mut cfg = sample();
+        cfg.executor = Some(ExecutorKind::Threaded);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.executor, Some(ExecutorKind::Threaded));
+        // absent key = auto (None), and the pin is not emitted unset —
+        // legacy configs stay byte-identical
+        let json = sample().to_json();
+        assert!(!json.contains("executor"), "unset knob must not serialize");
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back.executor, None);
     }
 }

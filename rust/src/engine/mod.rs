@@ -67,6 +67,13 @@ fn densify_w(idx: &[u32], w: &[f32], m: usize) -> Vec<f32> {
 /// block-local. Parameter slices (`w`, `mu`, …) are local to the column
 /// range passed. All reductions are **sums** (normalization happens in
 /// the coordinator), matching the AOT artifact conventions.
+///
+/// `Send + Sync` is load-bearing, not a formality: the threaded executor
+/// shares one engine `Arc` across all P×Q worker threads calling these
+/// methods concurrently, so every implementation must be safe to invoke
+/// in parallel from multiple threads (engines keep per-call state on the
+/// stack or in caller-provided buffers; per-block caches must be
+/// internally synchronized).
 pub trait ComputeEngine: Send + Sync {
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use sodda::config::{preset, AlgorithmKind, DataConfig, ExperimentConfig, Schedule};
+use sodda::config::{preset, AlgorithmKind, DataConfig, ExecutorKind, ExperimentConfig, Schedule};
 use sodda::harness::{self, Opts};
 use sodda::loss::Loss;
 use sodda::util::cli::Args;
@@ -60,6 +60,9 @@ COMMON FLAGS
   --steps L        inner-loop length (default 32)
   --gamma0 G       learning-rate scale (default 0.08, see README)
   --seed S         RNG seed (default 1)
+  --executor X     in-process | threaded (default: SODDA_EXECUTOR env,
+                   else in-process; see README \"Execution modes\")
+  --threads        shorthand for --executor threaded
 
 TRAIN FLAGS
   --preset NAME    small | medium | large | diag-neg10 | loc-neg5
@@ -165,7 +168,7 @@ fn cfg_from(
     algo: AlgorithmKind,
 ) -> Result<ExperimentConfig> {
     let loss: Loss = args.str_or("loss", "hinge").parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    ExperimentConfig::builder()
+    let mut b = ExperimentConfig::builder()
         .name(args.str_or("name", name))
         .data(data)
         .grid(o.p, o.q)
@@ -181,8 +184,17 @@ fn cfg_from(
         .schedule(Schedule::ScaledSqrt { gamma0: o.gamma0 })
         .seed(o.seed)
         .engine(o.engine)
-        .eval_every(args.parse_or("eval-every", 1usize)?)
-        .build()
+        .eval_every(args.parse_or("eval-every", 1usize)?);
+    // executor knobs: bare --threads is shorthand, an explicit
+    // --executor wins, otherwise the builder leaves the choice to
+    // SODDA_EXECUTOR / the in-process default (ExecutorKind::resolve)
+    if args.has("threads") {
+        b = b.executor(ExecutorKind::Threaded);
+    }
+    if let Some(e) = args.get("executor") {
+        b = b.executor(e.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
+    b.build()
 }
 
 fn parse_algo(args: &Args) -> Result<AlgorithmKind> {
@@ -197,7 +209,12 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
     let ds = cfg.data.try_materialize(cfg.seed)?;
     println!("dataset {} ({} x {})", ds.name, ds.n(), ds.m());
     let mut trainer = Trainer::with_dataset(cfg.clone(), ds)?;
-    println!("engine {}, algorithm {}\n", trainer.engine().name(), cfg.algorithm);
+    println!(
+        "engine {}, algorithm {}, executor {}\n",
+        trainer.engine().name(),
+        cfg.algorithm,
+        trainer.executor()
+    );
 
     let target = args.parse_or("target-loss", f64::NEG_INFINITY)?;
     let t0 = Instant::now();
@@ -325,11 +342,15 @@ fn cmd_perf(args: &Args, o: &Opts) -> Result<()> {
     );
     println!("sim totals: {:.2} MB comm, {} msgs", out.comm_bytes as f64 / 1e6, out.comm_msgs);
 
-    // machine-readable report for the perf trajectory (BENCH_*.json)
+    // machine-readable report for the perf trajectory (BENCH_*.json);
+    // wall_ns_per_iter is the eval-off training path, sim_ns_per_iter
+    // the SimNet charge for the same run — the pair lets the trajectory
+    // track real executor time next to modeled network time
     let iters = cfg.outer_iters as f64;
     let report = json::obj(vec![
         ("schema", json::s("sodda-perf-v1")),
         ("engine", json::s(trainer.engine().name())),
+        ("executor", json::s(trainer.executor().to_string())),
         ("algo", json::s(cfg.algorithm.to_string())),
         ("n", json::num(cfg.data.n() as f64)),
         ("m", json::num(cfg.data.m() as f64)),
@@ -345,6 +366,8 @@ fn cmd_perf(args: &Args, o: &Opts) -> Result<()> {
                 ("eval_ms_per_iter", json::num(1e3 * (wall - train_only) / iters)),
             ]),
         ),
+        ("wall_ns_per_iter", json::num(1e9 * train_only / iters)),
+        ("sim_ns_per_iter", json::num(1e9 * trainer.sim_seconds() / iters)),
         ("comm_mb", json::num(out.comm_bytes as f64 / 1e6)),
         ("comm_msgs", json::num(out.comm_msgs as f64)),
     ]);

@@ -38,7 +38,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::cluster::{Cluster, CostModel, SimNet};
-use crate::config::{EngineKind, ExperimentConfig};
+use crate::config::{EngineKind, ExecutorKind, ExperimentConfig};
 use crate::data::{Dataset, Grid};
 use crate::engine::ComputeEngine;
 use crate::engine::NativeEngine;
@@ -183,7 +183,9 @@ impl Trainer {
             cfg.data.m()
         );
         let grid = Grid::partition(ds.as_ref(), cfg.p, cfg.q)?;
-        let cluster = Cluster::launch(grid, Arc::clone(&engine), cfg.loss);
+        let kind = ExecutorKind::resolve(cfg.executor)
+            .with_context(|| format!("resolving executor for {:?}", cfg.name))?;
+        let cluster = Cluster::launch_with(grid, Arc::clone(&engine), cfg.loss, kind);
         Ok(Trainer {
             state: fresh_state(&cfg, cluster.layout.m_total),
             cfg,
@@ -207,6 +209,19 @@ impl Trainer {
 
     pub fn engine(&self) -> &Arc<dyn ComputeEngine> {
         &self.engine
+    }
+
+    /// The executor running this session's workers (resolved at staging
+    /// from the config pin, the `SODDA_EXECUTOR` env knob, or the
+    /// in-process default — see [`ExecutorKind::resolve`]).
+    pub fn executor(&self) -> ExecutorKind {
+        self.cluster.executor()
+    }
+
+    /// Simulated cluster seconds accumulated by the current run's cost
+    /// model (benches report this next to measured `wall_ns_per_iter`).
+    pub fn sim_seconds(&self) -> f64 {
+        self.state.net.sim_s()
     }
 
     /// Completed outer iterations of the current run.
@@ -365,6 +380,15 @@ impl Trainer {
             "reconfigure: session engine kind {:?} != requested {:?} (stage a new Trainer)",
             self.cfg.engine,
             cfg.engine
+        );
+        // the transport was launched at staging; a config that resolves
+        // to the other executor needs a new session
+        let kind = ExecutorKind::resolve(cfg.executor)?;
+        ensure!(
+            kind == self.cluster.executor(),
+            "reconfigure: session executor is {}, new config resolves to {kind} \
+             (stage a new Trainer)",
+            self.cluster.executor()
         );
         // ask the engine the session actually holds, not the config kind —
         // with_parts sessions can hold a shape-specialized engine under a

@@ -24,7 +24,9 @@
 //! [`crate::util::alloc::CountingAlloc`] global allocator) — heap
 //! allocation events per benchmark iteration over the measurement
 //! phase, gated absolutely (not by ratio) via `max_allocs_per_iter`
-//! baseline entries.
+//! baseline entries. Benchmarks can attach further numeric columns to
+//! their latest row with [`Bench::annotate`] (the end-to-end rows
+//! record `wall_ns_per_iter` next to the SimNet `sim_ns_per_iter`).
 
 use std::time::{Duration, Instant};
 
@@ -49,6 +51,9 @@ struct Row {
     stats: Stats,
     /// allocation events per iteration during measurement (counter set)
     allocs_per_iter: Option<f64>,
+    /// caller-annotated extra numeric columns ([`Bench::annotate`]),
+    /// e.g. `wall_ns_per_iter` / `sim_ns_per_iter`
+    extra: Vec<(String, f64)>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -145,8 +150,24 @@ impl Bench {
             fmt_ns(stats.mean_ns),
             stats.iters
         );
-        self.rows.push(Row { name: name.to_string(), elems, stats, allocs_per_iter });
+        self.rows.push(Row {
+            name: name.to_string(),
+            elems,
+            stats,
+            allocs_per_iter,
+            extra: Vec::new(),
+        });
         stats
+    }
+
+    /// Attach an extra numeric column to the most recently recorded row
+    /// (it lands in the row's JSON object verbatim). The convention for
+    /// end-to-end rows is `wall_ns_per_iter` (measured wall-clock, =
+    /// the row's median) next to `sim_ns_per_iter` (the SimNet charge),
+    /// so the cost model can be validated against real time.
+    pub fn annotate(&mut self, key: &str, value: f64) {
+        let row = self.rows.last_mut().expect("annotate() needs a recorded row");
+        row.extra.push((key.to_string(), value));
     }
 
     /// Assemble the JSON report for the recorded rows.
@@ -172,6 +193,9 @@ impl Bench {
                 }
                 if let Some(a) = row.allocs_per_iter {
                     pairs.push(("allocs_per_iter", json::num(a)));
+                }
+                for (k, v) in &row.extra {
+                    pairs.push((k.as_str(), json::num(*v)));
                 }
                 json::obj(pairs)
             })
@@ -378,6 +402,22 @@ mod tests {
         assert!(probs.iter().any(|p| p.contains("g/fat") && p.contains("budget")), "{probs:?}");
         assert!(probs.iter().any(|p| p.contains("g/blind")), "{probs:?}");
         assert!(probs.iter().any(|p| p.contains("g/timed") && p.contains("median")), "{probs:?}");
+    }
+
+    #[test]
+    fn annotate_attaches_columns_to_the_latest_row() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::from_env("annotate-selftest");
+        b.bench("first", || std::hint::black_box(1 + 1));
+        let s = b.bench("second", || std::hint::black_box(2 + 2));
+        b.annotate("wall_ns_per_iter", s.median_ns);
+        b.annotate("sim_ns_per_iter", 123.5);
+        let v = b.report();
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert!(rows[0].opt("wall_ns_per_iter").is_none(), "only the latest row is annotated");
+        let wall = rows[1].get("wall_ns_per_iter").unwrap().as_f64().unwrap();
+        assert_eq!(wall, s.median_ns);
+        assert_eq!(rows[1].get("sim_ns_per_iter").unwrap().as_f64().unwrap(), 123.5);
     }
 
     #[test]

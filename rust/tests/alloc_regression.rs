@@ -4,13 +4,16 @@
 //! sessions to pin two properties of the pooled-buffer subsystem:
 //!
 //! 1. **budget** — after warm-up, one outer iteration (objective eval
-//!    included) performs at most [`ALLOC_BUDGET`] allocation events,
+//!    included) performs at most [`alloc_budget`] allocation events,
 //!    on dense and sparse data, even and ragged grids, and the fused
-//!    `Q == 1` path. The expected steady-state count is single-digit
-//!    (mpsc block churn amortizes to a few events per iteration); the
-//!    budget leaves headroom for channel-block lumpiness and rare
-//!    capacity growth without letting any per-phase O(P·Q) allocation
-//!    pattern back in (that costs hundreds per iteration);
+//!    `Q == 1` path. The budget is executor-aware (the CI threaded lane
+//!    runs this suite under `SODDA_EXECUTOR=threaded`): the in-process
+//!    oracle expects single digits, the threaded transport adds mpsc
+//!    channel-block churn that amortizes to a few more events per
+//!    iteration. Both budgets leave headroom for channel-block
+//!    lumpiness and rare capacity growth without letting any per-phase
+//!    O(P·Q) allocation pattern back in (that costs hundreds per
+//!    iteration);
 //! 2. **bit-for-bit** — pooling changes no numbers: stepping a session
 //!    with every pooled buffer dropped between steps (the cold,
 //!    fresh-allocation path via `Trainer::drop_scratch`) produces the
@@ -24,7 +27,7 @@
 
 use std::sync::Mutex;
 
-use sodda::config::AlgorithmKind;
+use sodda::config::{AlgorithmKind, ExecutorKind};
 use sodda::util::alloc::CountingAlloc;
 use sodda::util::testing::forall;
 use sodda::{ExperimentConfig, ExperimentConfigBuilder, Trainer};
@@ -36,8 +39,16 @@ static SERIAL: Mutex<()> = Mutex::new(());
 
 /// Absolute per-outer-iteration allocation budget after warm-up. The
 /// fresh path costs a couple hundred events per iteration on these
-/// shapes; the pooled steady state measures single digits.
-const ALLOC_BUDGET: f64 = 48.0;
+/// shapes; the pooled in-process steady state measures single digits,
+/// and the threaded transport's mpsc channels add bounded block churn
+/// on top (PR 4's original 48 budget). Resolved per-lane so the CI
+/// threaded lane gates its own documented budget.
+fn alloc_budget() -> f64 {
+    match ExecutorKind::resolve(None).expect("SODDA_EXECUTOR") {
+        ExecutorKind::InProcess => 32.0,
+        ExecutorKind::Threaded => 48.0,
+    }
+}
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|e| e.into_inner())
@@ -72,11 +83,12 @@ fn measure(trainer: &mut Trainer, warmup: usize, iters: usize, fresh: bool) -> f
 }
 
 fn assert_budget(cfg: ExperimentConfig, label: &str) {
+    let budget = alloc_budget();
     let mut t = Trainer::new(cfg).unwrap();
     let per_iter = measure(&mut t, 4, 24, false);
     assert!(
-        per_iter <= ALLOC_BUDGET,
-        "{label}: {per_iter:.1} allocs per steady-state iteration exceeds the budget {ALLOC_BUDGET}"
+        per_iter <= budget,
+        "{label}: {per_iter:.1} allocs per steady-state iteration exceeds the budget {budget}"
     );
 }
 

@@ -1,0 +1,183 @@
+//! Executor equivalence suite: the in-process oracle and the threaded
+//! runtime must be interchangeable down to the last bit.
+//!
+//! The transport layer's determinism contract (see
+//! `cluster/transport/`) says the execution substrate is invisible to
+//! the numbers: same shared worker body, id-ordered reduces, disjoint
+//! SVRG write ranges. These tests pin that contract at the session
+//! level — full seeded `History` + final-iterate equality across
+//! dense/CSR storage, even/ragged grids, `Q > 1`, sampled widths and
+//! every algorithm — plus the executor-selection plumbing (config pin
+//! beats the `SODDA_EXECUTOR` env knob beats the in-process default).
+//!
+//! Selection tests mutate the process environment, so they serialize on
+//! a local mutex and restore the prior value (the CI threaded lane sets
+//! `SODDA_EXECUTOR` globally); every other test pins its executor
+//! through the config and never reads the environment.
+
+use std::sync::Mutex;
+
+use sodda::config::{AlgorithmKind, ExecutorKind};
+use sodda::util::testing::forall;
+use sodda::{ExperimentConfig, ExperimentConfigBuilder, Trainer};
+
+fn base(n: usize, m: usize, p: usize, q: usize, iters: usize) -> ExperimentConfigBuilder {
+    ExperimentConfig::builder()
+        .name("executor-equivalence")
+        .dense(n, m)
+        .grid(p, q)
+        .inner_steps(8)
+        .outer_iters(iters)
+        .eval_every(1)
+        .seed(7)
+}
+
+/// Run the identical config on both executors and demand bit equality
+/// of the final iterate, the full loss history, and the simulated-wire
+/// accounting.
+fn assert_executors_agree(b: ExperimentConfigBuilder, label: &str) {
+    let mut oracle =
+        Trainer::new(b.clone().executor(ExecutorKind::InProcess).build().unwrap()).unwrap();
+    let a = oracle.run().unwrap();
+    let mut threaded =
+        Trainer::new(b.executor(ExecutorKind::Threaded).build().unwrap()).unwrap();
+    let t = threaded.run().unwrap();
+    assert_eq!(a.w, t.w, "{label}: final iterate diverged");
+    assert_eq!(a.history.losses(), t.history.losses(), "{label}: loss history diverged");
+    assert_eq!(a.comm_bytes, t.comm_bytes, "{label}: wire accounting diverged");
+    assert_eq!(a.comm_msgs, t.comm_msgs, "{label}: message accounting diverged");
+}
+
+#[test]
+fn threaded_reproduces_oracle_across_random_sessions() {
+    // dense/CSR × even/ragged × Q ∈ {1,2,3} × all algorithms × sampled
+    // and full widths, three outer iterations each
+    forall(8, 20260807, |rng| {
+        let p = 1 + rng.below(3);
+        let q = 1 + rng.below(3);
+        let n = p * (4 + rng.below(40)) + rng.below(p);
+        let m = (p * q) * (2 + rng.below(6)) + rng.below(3);
+        let algo = match rng.below(3) {
+            0 => AlgorithmKind::Sodda,
+            1 => AlgorithmKind::Radisa,
+            _ => AlgorithmKind::RadisaAvg,
+        };
+        let mut b = base(n, m, p, q, 3).algorithm(algo).seed(rng.below(1000) as u64);
+        if rng.bool_with(0.5) {
+            b = b.sparse(n, m, 4);
+        }
+        if algo == AlgorithmKind::Sodda && rng.bool_with(0.5) {
+            // aggressive sampling: compact-payload phases on both sides
+            b = b.fractions_bcd(0.4, 0.3, 0.7);
+        }
+        assert_executors_agree(b, &format!("{algo:?} {n}x{m} on {p}x{q}"));
+    });
+}
+
+#[test]
+fn threaded_reproduces_oracle_on_ragged_sampled_grid() {
+    // the fixed worst-case composition: ragged rows and columns, Q > 1
+    // (leader-side z reduce), low sampled fractions (empty per-block
+    // intersections happen), CSR storage
+    let b = base(97, 23, 3, 2, 4).sparse(97, 23, 5).fractions_bcd(0.35, 0.25, 0.6);
+    assert_executors_agree(b, "sodda sampled sparse 97x23 on 3x2");
+}
+
+#[test]
+fn threaded_runs_are_seed_reproducible() {
+    // same seed, two fresh threaded sessions: completion order may vary
+    // between runs, results may not
+    let cfg = || base(85, 18, 2, 3, 4).executor(ExecutorKind::Threaded).build().unwrap();
+    let a = Trainer::new(cfg()).unwrap().run().unwrap();
+    let b = Trainer::new(cfg()).unwrap().run().unwrap();
+    assert_eq!(a.w, b.w);
+    assert_eq!(a.history.losses(), b.history.losses());
+}
+
+#[test]
+fn threaded_pooling_is_bit_identical_to_fresh_buffers() {
+    // PR 4's contract under the threaded transport: recycling reply
+    // buffers through channels changes no numbers
+    let cfg = base(120, 24, 2, 2, 4).executor(ExecutorKind::Threaded).build().unwrap();
+    let mut warm = Trainer::new(cfg.clone()).unwrap();
+    let a = warm.run().unwrap();
+    let mut cold = Trainer::new(cfg).unwrap();
+    while !cold.is_done() {
+        cold.drop_scratch();
+        cold.step().unwrap();
+    }
+    let o = cold.outcome();
+    assert_eq!(a.w, o.w);
+    assert_eq!(a.history.losses(), o.history.losses());
+}
+
+#[test]
+fn reconfigure_rejects_switching_executors() {
+    let pinned = |k: ExecutorKind| base(80, 12, 2, 2, 2).executor(k).build().unwrap();
+    let mut t = Trainer::new(pinned(ExecutorKind::InProcess)).unwrap();
+    assert_eq!(t.executor(), ExecutorKind::InProcess);
+    let err = t.reconfigure(pinned(ExecutorKind::Threaded)).unwrap_err();
+    assert!(err.to_string().contains("executor"), "unhelpful error: {err}");
+    // same kind, new seed: fine
+    let variant = base(80, 12, 2, 2, 2).executor(ExecutorKind::InProcess).seed(99).build().unwrap();
+    assert!(t.reconfigure(variant).is_ok());
+}
+
+// ---- selection plumbing (mutates the process env; serialized) -------------
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `SODDA_EXECUTOR` set to `value` (or unset for `None`),
+/// restoring whatever was there before — the CI threaded lane exports
+/// the knob process-wide and must still see it afterwards.
+fn with_env(value: Option<&str>, f: impl FnOnce()) {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prior = std::env::var(ExecutorKind::ENV).ok();
+    match value {
+        Some(v) => std::env::set_var(ExecutorKind::ENV, v),
+        None => std::env::remove_var(ExecutorKind::ENV),
+    }
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    match prior {
+        Some(v) => std::env::set_var(ExecutorKind::ENV, v),
+        None => std::env::remove_var(ExecutorKind::ENV),
+    }
+    if let Err(payload) = result {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[test]
+fn env_knob_selects_the_executor() {
+    let auto = || base(80, 12, 2, 2, 2).build().unwrap();
+    with_env(Some("threaded"), || {
+        assert_eq!(Trainer::new(auto()).unwrap().executor(), ExecutorKind::Threaded);
+    });
+    with_env(Some("in-process"), || {
+        assert_eq!(Trainer::new(auto()).unwrap().executor(), ExecutorKind::InProcess);
+    });
+    with_env(None, || {
+        assert_eq!(
+            Trainer::new(auto()).unwrap().executor(),
+            ExecutorKind::InProcess,
+            "unset env must default to the oracle"
+        );
+    });
+}
+
+#[test]
+fn config_pin_beats_the_env_knob() {
+    with_env(Some("threaded"), || {
+        let cfg = base(80, 12, 2, 2, 2).executor(ExecutorKind::InProcess).build().unwrap();
+        assert_eq!(Trainer::new(cfg).unwrap().executor(), ExecutorKind::InProcess);
+    });
+}
+
+#[test]
+fn garbage_env_value_is_an_error_not_a_fallback() {
+    with_env(Some("gpu-cluster"), || {
+        let err = Trainer::new(base(80, 12, 2, 2, 2).build().unwrap()).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("SODDA_EXECUTOR"), "unhelpful error: {chain}");
+    });
+}
