@@ -1,0 +1,105 @@
+//! Straggler benchmark: balanced vs throughput-weighted row sharding
+//! under heterogeneous worker profiles (PR 7's tentpole acceptance).
+//!
+//! A barrier phase waits for its slowest worker, so under a `one-slow`
+//! profile the balanced layout's makespan is pinned to the straggler
+//! while the weighted layout ([`ShardWeighting::Throughput`]) shrinks
+//! the slow worker's row shard until every worker finishes the
+//! row-proportional phases together. The headline ratio —
+//! balanced/weighted simulated seconds per iteration — comes from the
+//! `SimNet` cost model and is fully deterministic, so it is gated even
+//! in quick mode (≥ 1.15× under `one-slow:4` on a 3×2 grid; the
+//! analytic value is ≈ 2.8×: the µ/gradient phases improve 3× and the
+//! row-count-independent inner loops don't move). Wall-clock rows are
+//! report-only: the in-process executor runs workers back to back, so
+//! host time measures total work, which weighting does not change.
+//! BENCH_7.json records the ratios.
+
+use sodda::config::{ClusterProfile, ExecutorKind, ShardWeighting};
+use sodda::util::bench::Bench;
+use sodda::{ExperimentConfig, Trainer};
+
+const ITERS: usize = 8;
+
+fn session(profile: ClusterProfile, weighting: ShardWeighting) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .name("straggler")
+        .dense(6000, 600)
+        .grid(3, 2)
+        .inner_steps(4)
+        .outer_iters(ITERS)
+        .eval_every(ITERS)
+        .fractions_bcd(1.0, 1.0, 0.85)
+        .seed(42)
+        .executor(ExecutorKind::InProcess)
+        .cluster_profile(profile)
+        .shard_weighting(weighting)
+        .build()
+        .unwrap()
+}
+
+/// Deterministic simulated seconds per outer iteration for one config.
+fn sim_s_per_iter(cfg: ExperimentConfig) -> f64 {
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    t.sim_seconds() / ITERS as f64
+}
+
+fn main() {
+    let mut b = Bench::from_env("straggler");
+
+    let mut gated_ratio = None;
+    for (label, profile) in [
+        ("one-slow:4", ClusterProfile::one_slow(4.0)),
+        ("long-tail:4", ClusterProfile::long_tail(4.0)),
+    ] {
+        let balanced = sim_s_per_iter(session(profile.clone(), ShardWeighting::Balanced));
+        let weighted = sim_s_per_iter(session(profile, ShardWeighting::Throughput));
+        let ratio = balanced / weighted;
+        println!(
+            "{label}: balanced {:.3} ms/iter (sim), weighted {:.3} ms/iter (sim), ratio {ratio:.2}x",
+            balanced * 1e3,
+            weighted * 1e3
+        );
+        if label == "one-slow:4" {
+            gated_ratio = Some(ratio);
+        }
+    }
+    // sanity row: uniform profiles must not regress under weighting
+    // (Throughput falls back to the balanced boundary vectors)
+    let base = sim_s_per_iter(session(ClusterProfile::uniform(), ShardWeighting::Balanced));
+    let thru = sim_s_per_iter(session(ClusterProfile::uniform(), ShardWeighting::Throughput));
+    println!("uniform: balanced {:.3} ms/iter (sim), weighted identical: {}", base * 1e3, base == thru);
+
+    // wall-clock presence rows for the bench-gate file (report-only
+    // medians; the gated quantity above is simulated, not measured)
+    for (name, weighting) in [
+        ("one outer iter balanced (one-slow:4 3x2)", ShardWeighting::Balanced),
+        ("one outer iter weighted (one-slow:4 3x2)", ShardWeighting::Throughput),
+    ] {
+        let mut t =
+            Trainer::new(session(ClusterProfile::one_slow(4.0), weighting)).unwrap();
+        b.bench(name, || {
+            if t.is_done() {
+                t.reset();
+            }
+            t.step().unwrap();
+        });
+    }
+    b.finish();
+
+    // the model ratio is deterministic — gate it in every mode
+    if let Some(ratio) = gated_ratio {
+        if ratio < 1.15 {
+            eprintln!(
+                "REGRESSION: weighted sharding beats balanced by only {ratio:.2}x \
+                 (< 1.15x) under one-slow:4"
+            );
+            std::process::exit(1);
+        }
+        if base != thru {
+            eprintln!("REGRESSION: Throughput weighting changed the uniform-profile cost model");
+            std::process::exit(1);
+        }
+    }
+}

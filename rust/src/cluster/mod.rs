@@ -6,8 +6,9 @@
 //! where partitions live on executors) plus a shared [`ComputeEngine`].
 //! The leader orchestrates the three phases of Algorithm 1 through typed
 //! commands and collects tagged replies; the [`simnet::SimNet`] cost
-//! model charges each phase (see [`simnet::CostModel`] and the README's
-//! "Steady-state memory" section).
+//! model charges each phase (parameterized by the validated
+//! [`crate::config::ClusterProfile`] — see the README's "Fault tolerance
+//! & heterogeneous clusters" section).
 //!
 //! *How* the workers execute is pluggable: the [`transport`] submodule
 //! provides the sequential in-process oracle and the persistent
@@ -16,6 +17,33 @@
 //! [`ExecutorKind::resolve`] for [`Cluster::launch`]). The two modes are
 //! bit-for-bit identical — see the determinism contract in the
 //! `transport` module docs and the README's "Execution modes" section.
+//!
+//! ## Fault recovery
+//!
+//! Workers can die mid-phase — injected deterministically through
+//! [`Cluster::inject_fault`] (the test/benchmark substrate for the
+//! trainer's `FaultPlan`) or for real (a panicking worker thread).
+//! Either way the transport converts the missing reply into a
+//! synthetic [`transport::Reply::Fault`] instead of hanging the barrier,
+//! and the leader:
+//!
+//! 1. rebuilds the worker from the retained shard store ([`Cluster`]
+//!    keeps the launch [`Grid`] alive — the in-memory analogue of
+//!    re-reading a durable shard),
+//! 2. respawns the slot through [`transport::Transport::respawn`], and
+//! 3. replays the in-flight command (every phase retains enough of its
+//!    payload to resend — the SVRG phase keeps per-worker `Arc` clones
+//!    of its task snapshots).
+//!
+//! Recovery consumes no RNG draws and re-executes a command that never
+//! partially ran (kills are FIFO-ordered ahead of the phase command on
+//! both transports), and the leader's reduces stage replies by worker
+//! id — so a recovered run is **bit-for-bit identical** to the
+//! fault-free run (`tests/faults.rs` pins this on both executors). A
+//! worker death with no fault armed is a real bug and panics with the
+//! dead worker's id, replacing the former silent hang of the threaded
+//! recv. Recovery traffic is *not* charged to the [`SimNet`] cost
+//! model — the paper's time axis excludes failure handling.
 //!
 //! ## Steady-state memory
 //!
@@ -52,7 +80,7 @@
 pub mod simnet;
 pub mod transport;
 
-pub use simnet::{CostModel, SimNet};
+pub use simnet::SimNet;
 
 use std::cell::RefCell;
 use std::ops::Range;
@@ -84,11 +112,25 @@ pub struct SvrgTask {
     pub mu: Arc<Vec<f32>>,
     /// pre-sampled local row per inner step (per-task; the buffer is
     /// recycled through the leader pool — see
-    /// [`Cluster::recycled_idx_buf`])
-    pub idx: Vec<u32>,
+    /// [`Cluster::recycled_idx_buf`]; an `Arc` so the leader retains a
+    /// replay clone for fault recovery without copying)
+    pub idx: Arc<Vec<u32>>,
     pub gamma: f32,
     /// use the suffix-averaged combiner (RADiSA-avg)
     pub avg: bool,
+}
+
+/// Everything needed to replay one in-flight SVRG task after a worker
+/// death: `Arc` clones of the shared snapshots plus the scalar knobs
+/// (retaining these is allocation-free in the steady state).
+struct RetainedSvrg {
+    cols: Range<usize>,
+    gcols: Range<usize>,
+    w: Arc<Vec<f32>>,
+    mu: Arc<Vec<f32>>,
+    idx: Arc<Vec<u32>>,
+    gamma: f32,
+    avg: bool,
 }
 
 /// Leader-side recycled state: the reply-buffer pools plus the reduce
@@ -100,7 +142,11 @@ struct LeaderScratch {
     /// drained f32 reply buffers, handed back out with the next commands
     f32_pool: Vec<Vec<f32>>,
     /// drained SVRG `idx` payload buffers (see [`Cluster::recycled_idx_buf`])
-    idx_pool: Vec<Vec<u32>>,
+    idx_pool: Vec<Arc<Vec<u32>>>,
+    /// per-worker replay state of the in-flight SVRG phase (fixed `P·Q`
+    /// length; cleared as each reply lands so the pooled `idx` Arcs are
+    /// uniquely owned again)
+    svrg_retain: Vec<Option<RetainedSvrg>>,
     /// per-worker reply staging slots (fixed `P·Q` length) for reduces
     /// that must run in worker-id order
     slots: Vec<Option<Vec<f32>>>,
@@ -128,6 +174,18 @@ pub struct Cluster {
     pub density: Vec<f64>,
     transport: Box<dyn Transport>,
     scratch: RefCell<LeaderScratch>,
+    /// the launch grid, retained so dead workers can be rebuilt from
+    /// their shard — the in-memory analogue of a durable shard store
+    /// (costs one extra copy of the block data, the price of recovery)
+    store: Arc<Grid>,
+    /// shared engine handle for rebuilding [`WorkerCore`]s
+    engine: Arc<dyn ComputeEngine>,
+    loss: Loss,
+    /// workers with an injected (expected) kill not yet recovered —
+    /// a fault from any other worker is a genuine bug and panics
+    armed: RefCell<Vec<bool>>,
+    /// worker ids recovered so far, in recovery order
+    fault_log: RefCell<Vec<usize>>,
 }
 
 impl Cluster {
@@ -157,23 +215,74 @@ impl Cluster {
             .collect();
 
         // Grid stores blocks row-major [p][q]; worker ids follow it.
+        let store = Arc::new(grid);
         let mut cores = Vec::with_capacity(p * q);
         for pi in 0..p {
             for qi in 0..q {
-                cores.push(WorkerCore::new(grid.block(pi, qi).clone(), Arc::clone(&engine), loss));
+                cores.push(WorkerCore::new(store.block(pi, qi).clone(), Arc::clone(&engine), loss));
             }
         }
         let transport = transport::launch(kind, cores);
         let scratch = RefCell::new(LeaderScratch {
             f32_pool: Vec::new(),
             idx_pool: Vec::new(),
+            svrg_retain: (0..p * q).map(|_| None).collect(),
             slots: (0..p * q).map(|_| None).collect(),
             id_to_task: vec![usize::MAX; p * q],
             loss_parts: Vec::new(),
             z: Vec::new(),
             y_rows: Vec::new(),
         });
-        Cluster { p, q, layout, y, density, transport, scratch }
+        Cluster {
+            p,
+            q,
+            layout,
+            y,
+            density,
+            transport,
+            scratch,
+            store,
+            engine,
+            loss,
+            armed: RefCell::new(vec![false; p * q]),
+            fault_log: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Simulate a crash of worker `wid` (`p·Q + q`): the worker stops
+    /// executing and the next command addressed to it surfaces as a
+    /// fault, which the in-flight phase recovers from transparently —
+    /// rebuild from the shard store, respawn, replay. Deterministic on
+    /// both executors: the kill is FIFO-ordered ahead of the next
+    /// phase's commands, so the victim never partially executes one and
+    /// the recovered run stays bit-identical to a fault-free run.
+    pub fn inject_fault(&self, wid: usize) {
+        assert!(wid < self.p * self.q, "worker {wid} outside the {}x{} grid", self.p, self.q);
+        self.armed.borrow_mut()[wid] = true;
+        self.transport.kill(wid);
+    }
+
+    /// Worker ids recovered so far, in recovery order (observability for
+    /// tests and the trainer's fault history).
+    pub fn recovered_workers(&self) -> Vec<usize> {
+        self.fault_log.borrow().clone()
+    }
+
+    /// Re-launch dead worker `wid` from the retained shard store.
+    /// Panics when no fault was armed for it — an *unexpected* worker
+    /// death (e.g. a panicked thread) names the dead worker instead of
+    /// silently hanging the barrier or masking a crash as recoverable.
+    fn recover(&self, wid: usize) {
+        assert!(
+            self.armed.borrow()[wid],
+            "worker {wid} died unexpectedly mid-phase (no fault was injected)"
+        );
+        self.armed.borrow_mut()[wid] = false;
+        let (pi, qi) = (wid / self.q, wid % self.q);
+        let core =
+            WorkerCore::new(self.store.block(pi, qi).clone(), Arc::clone(&self.engine), self.loss);
+        self.transport.respawn(wid, core);
+        self.fault_log.borrow_mut().push(wid);
     }
 
     /// The executor running this cluster's workers.
@@ -192,8 +301,10 @@ impl Cluster {
 
     /// Pop a recycled SVRG `idx` buffer (returned to the pool by
     /// [`Cluster::svrg_run`] after each phase); fresh when the pool is
-    /// dry. Callers fill it and hand it back through [`SvrgTask::idx`].
-    pub fn recycled_idx_buf(&self) -> Vec<u32> {
+    /// dry. Callers fill it (uniquely owned by then — the replay clone
+    /// is dropped before pooling, see [`crate::util::arc_mut`]) and
+    /// hand it back through [`SvrgTask::idx`].
+    pub fn recycled_idx_buf(&self) -> Arc<Vec<u32>> {
         self.scratch.borrow_mut().idx_pool.pop().unwrap_or_default()
     }
 
@@ -209,8 +320,8 @@ impl Cluster {
         s.loss_parts = Vec::new();
         s.z = Vec::new();
         s.y_rows = Vec::new();
-        // slots / id_to_task keep their fixed P·Q length (allocated at
-        // launch, content-free between phases)
+        // slots / id_to_task / svrg_retain keep their fixed P·Q length
+        // (allocated at launch, content-free between phases)
     }
 
     /// Phase 1 of the µ^t estimate: partial margins, reduced over feature
@@ -282,11 +393,30 @@ impl Cluster {
                 );
             }
         }
-        for _ in 0..self.p * self.q {
-            let (id, reply) = self.transport.recv();
-            let Reply::Z(part) = reply else { panic!("expected Z reply") };
-            debug_assert!(s.slots[id].is_none(), "duplicate Z reply from worker {id}");
-            s.slots[id] = Some(part);
+        let mut remaining = self.p * self.q;
+        while remaining > 0 {
+            match self.transport.recv() {
+                (id, Reply::Z(part)) => {
+                    debug_assert!(s.slots[id].is_none(), "duplicate Z reply from worker {id}");
+                    s.slots[id] = Some(part);
+                    remaining -= 1;
+                }
+                (id, Reply::Fault) => {
+                    self.recover(id);
+                    let (pi, qi) = (id / self.q, id % self.q);
+                    let buf = s.f32_pool.pop().unwrap_or_default();
+                    self.transport.send(
+                        id,
+                        Cmd::PartialZ {
+                            w: Arc::clone(&w_blocks[qi]),
+                            cols: bcols.map(|bc| Arc::clone(&bc[qi])),
+                            rows: Arc::clone(&rows[pi]),
+                            buf,
+                        },
+                    );
+                }
+                _ => panic!("expected Z reply"),
+            }
         }
         z.resize_with(self.p, Vec::new);
         for (pi, zp) in z.iter_mut().enumerate() {
@@ -396,13 +526,31 @@ impl Cluster {
                     },
                 );
             }
-            for _ in 0..self.p {
+            let mut remaining = self.p;
+            while remaining > 0 {
                 // worker id == p index when q == 1; assignment (not
                 // reduction), so arrival order cannot change results
-                let (id, reply) = self.transport.recv();
-                let Reply::U(mut ub) = reply else { panic!("expected U reply") };
-                std::mem::swap(arc_mut(&mut u[id]), &mut ub);
-                s.f32_pool.push(ub);
+                match self.transport.recv() {
+                    (id, Reply::U(mut ub)) => {
+                        std::mem::swap(arc_mut(&mut u[id]), &mut ub);
+                        s.f32_pool.push(ub);
+                        remaining -= 1;
+                    }
+                    (id, Reply::Fault) => {
+                        self.recover(id);
+                        let buf = s.f32_pool.pop().unwrap_or_default();
+                        self.transport.send(
+                            id,
+                            Cmd::PartialU {
+                                w: Arc::clone(&w_blocks[0]),
+                                cols: bcols.map(|bc| Arc::clone(&bc[0])),
+                                rows: Arc::clone(&rows[id]),
+                                buf,
+                            },
+                        );
+                    }
+                    _ => panic!("expected U reply"),
+                }
             }
         }
     }
@@ -443,10 +591,22 @@ impl Cluster {
         }
         s.loss_parts.clear();
         s.loss_parts.resize(self.p, 0.0);
-        for _ in 0..self.p {
-            let (id, reply) = self.transport.recv();
-            let Reply::Loss(v) = reply else { panic!("expected Loss reply") };
-            s.loss_parts[id] = v;
+        let mut remaining = self.p;
+        while remaining > 0 {
+            match self.transport.recv() {
+                (id, Reply::Loss(v)) => {
+                    s.loss_parts[id] = v;
+                    remaining -= 1;
+                }
+                (id, Reply::Fault) => {
+                    self.recover(id);
+                    self.transport.send(
+                        id,
+                        Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[id]) },
+                    );
+                }
+                _ => panic!("expected Loss reply"),
+            }
         }
         s.loss_parts.iter().sum()
     }
@@ -507,11 +667,30 @@ impl Cluster {
                 );
             }
         }
-        for _ in 0..self.p * self.q {
-            let (id, reply) = self.transport.recv();
-            let Reply::Grad(slice) = reply else { panic!("expected Grad reply") };
-            debug_assert!(s.slots[id].is_none(), "duplicate Grad reply from worker {id}");
-            s.slots[id] = Some(slice);
+        let mut remaining = self.p * self.q;
+        while remaining > 0 {
+            match self.transport.recv() {
+                (id, Reply::Grad(slice)) => {
+                    debug_assert!(s.slots[id].is_none(), "duplicate Grad reply from worker {id}");
+                    s.slots[id] = Some(slice);
+                    remaining -= 1;
+                }
+                (id, Reply::Fault) => {
+                    self.recover(id);
+                    let (pi, qi) = (id / self.q, id % self.q);
+                    let buf = s.f32_pool.pop().unwrap_or_default();
+                    self.transport.send(
+                        id,
+                        Cmd::GradSlice {
+                            u: Arc::clone(&u[pi]),
+                            cols: ccols.map(|cc| Arc::clone(&cc[qi])),
+                            rows: Arc::clone(&rows[pi]),
+                            buf,
+                        },
+                    );
+                }
+                _ => panic!("expected Grad reply"),
+            }
         }
         g.clear();
         g.resize(self.layout.m_total, 0.0);
@@ -563,6 +742,17 @@ impl Cluster {
                 let wid = self.wid(t.p, t.q);
                 assert_eq!(s.id_to_task[wid], usize::MAX, "one task per worker per phase");
                 s.id_to_task[wid] = ti;
+                // retain a replay copy (Arc clones + scalars) in case
+                // the worker dies before replying
+                s.svrg_retain[wid] = Some(RetainedSvrg {
+                    cols: t.cols.clone(),
+                    gcols: t.gcols.clone(),
+                    w: Arc::clone(&t.w),
+                    mu: Arc::clone(&t.mu),
+                    idx: Arc::clone(&t.idx),
+                    gamma: t.gamma,
+                    avg: t.avg,
+                });
                 let buf = s.f32_pool.pop().unwrap_or_default();
                 self.transport.send(
                     wid,
@@ -579,21 +769,51 @@ impl Cluster {
                 );
             }
         }
-        for _ in 0..n {
-            let (id, reply) = self.transport.recv();
-            let Reply::W { w, idx } = reply else { panic!("expected W reply") };
-            // release the scratch borrow before the callback runs —
-            // `apply` is caller code and may legitimately re-enter the
-            // cluster (e.g. `recycled_idx_buf` to prep the next phase)
-            let ti = {
-                let mut s = self.scratch.borrow_mut();
-                let ti = s.id_to_task[id];
-                s.id_to_task[id] = usize::MAX;
-                s.idx_pool.push(idx);
-                ti
-            };
-            apply(ti, &w);
-            self.scratch.borrow_mut().f32_pool.push(w);
+        let mut remaining = n;
+        while remaining > 0 {
+            match self.transport.recv() {
+                (id, Reply::W { w, idx }) => {
+                    // release the scratch borrow before the callback
+                    // runs — `apply` is caller code and may legitimately
+                    // re-enter the cluster (e.g. `recycled_idx_buf` to
+                    // prep the next phase)
+                    let ti = {
+                        let mut s = self.scratch.borrow_mut();
+                        let ti = s.id_to_task[id];
+                        s.id_to_task[id] = usize::MAX;
+                        // drop the replay clone *before* pooling, so the
+                        // pooled idx Arc is uniquely owned again
+                        s.svrg_retain[id] = None;
+                        s.idx_pool.push(idx);
+                        ti
+                    };
+                    apply(ti, &w);
+                    self.scratch.borrow_mut().f32_pool.push(w);
+                    remaining -= 1;
+                }
+                (id, Reply::Fault) => {
+                    self.recover(id);
+                    let cmd = {
+                        let mut s = self.scratch.borrow_mut();
+                        let buf = s.f32_pool.pop().unwrap_or_default();
+                        let r = s.svrg_retain[id]
+                            .as_ref()
+                            .expect("fault from a worker with no retained SVRG task");
+                        Cmd::Svrg {
+                            cols: r.cols.clone(),
+                            gcols: r.gcols.clone(),
+                            w: Arc::clone(&r.w),
+                            mu: Arc::clone(&r.mu),
+                            idx: Arc::clone(&r.idx),
+                            gamma: r.gamma,
+                            avg: r.avg,
+                            buf,
+                        }
+                    };
+                    self.transport.send(id, cmd);
+                }
+                _ => panic!("expected W reply"),
+            }
         }
     }
 }
@@ -824,7 +1044,7 @@ mod tests {
                 gcols: 0..2,
                 w: Arc::clone(&w),
                 mu: Arc::clone(&mu),
-                idx: vec![0; 4],
+                idx: Arc::new(vec![0; 4]),
                 gamma: 0.0,
                 avg: false,
             },
@@ -835,7 +1055,7 @@ mod tests {
                 gcols: 6..8,
                 w,
                 mu,
-                idx: vec![0; 4],
+                idx: Arc::new(vec![0; 4]),
                 gamma: 0.0,
                 avg: true,
             },
@@ -1028,7 +1248,7 @@ mod tests {
                     gcols: 0..2,
                     w: Arc::clone(&w_snap),
                     mu: Arc::clone(&mu),
-                    idx: vec![0, 3, 1, 2],
+                    idx: Arc::new(vec![0, 3, 1, 2]),
                     gamma: 0.05,
                     avg: false,
                 },
@@ -1039,7 +1259,7 @@ mod tests {
                     gcols: c.layout.block_cols(1).start..c.layout.block_cols(1).start + 2,
                     w: w_snap,
                     mu,
-                    idx: vec![2, 0, 4, 1],
+                    idx: Arc::new(vec![2, 0, 4, 1]),
                     gamma: 0.05,
                     avg: true,
                 },
@@ -1065,5 +1285,123 @@ mod tests {
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
         let _ = c.partial_z(&w_blocks, &rows);
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
+    }
+
+    /// Every reduce phase, run fault-free on one cluster and with an
+    /// injected kill on an identical twin, must produce the same bits —
+    /// on both executors.
+    #[test]
+    fn injected_fault_recovers_bit_identically() {
+        for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+            let (a, _) = cluster_with(21, 9, 2, 2, 17, kind);
+            let (b, _) = cluster_with(21, 9, 2, 2, 17, kind);
+            let w: Vec<f32> = (0..9).map(|i| (i as f32 * 0.23).sin() * 0.4).collect();
+            let w_blocks: Vec<Arc<Vec<f32>>> =
+                (0..2).map(|qi| Arc::new(w[a.layout.block_cols(qi)].to_vec())).collect();
+            let rows: Vec<Arc<Vec<u32>>> = (0..2)
+                .map(|pi| Arc::new((0..a.layout.rows_in(pi) as u32).collect()))
+                .collect();
+
+            let z_ok = a.partial_z(&w_blocks, &rows);
+            b.inject_fault(2);
+            assert_eq!(z_ok, b.partial_z(&w_blocks, &rows), "{kind:?} partial_z");
+            assert_eq!(b.recovered_workers(), vec![2]);
+
+            let u_ok = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+            b.inject_fault(0);
+            assert_eq!(
+                u_ok,
+                b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge),
+                "{kind:?} partial_u"
+            );
+
+            let u_arcs: Vec<Arc<Vec<f32>>> = u_ok.into_iter().map(Arc::new).collect();
+            let g_ok = a.grad(&u_arcs, &rows);
+            b.inject_fault(3);
+            assert_eq!(g_ok, b.grad(&u_arcs, &rows), "{kind:?} grad");
+            assert_eq!(b.recovered_workers(), vec![2, 0, 3]);
+
+            let l_ok = a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+            b.inject_fault(1);
+            assert_eq!(
+                l_ok.to_bits(),
+                b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits(),
+                "{kind:?} block_loss"
+            );
+        }
+    }
+
+    #[test]
+    fn svrg_fault_replays_the_retained_task() {
+        for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+            let (a, _) = cluster_with(20, 8, 2, 2, 18, kind);
+            let (b, _) = cluster_with(20, 8, 2, 2, 18, kind);
+            let run = |c: &Cluster| {
+                let w = Arc::new((0..8).map(|i| 0.1 * i as f32 - 0.4).collect::<Vec<f32>>());
+                let mu = Arc::new((0..8).map(|i| 0.01 * i as f32).collect::<Vec<f32>>());
+                let tasks = vec![
+                    SvrgTask {
+                        p: 0,
+                        q: 0,
+                        cols: 0..2,
+                        gcols: 0..2,
+                        w: Arc::clone(&w),
+                        mu: Arc::clone(&mu),
+                        idx: Arc::new(vec![0, 3, 1, 2]),
+                        gamma: 0.05,
+                        avg: false,
+                    },
+                    SvrgTask {
+                        p: 1,
+                        q: 1,
+                        cols: 2..4,
+                        gcols: 6..8,
+                        w,
+                        mu,
+                        idx: Arc::new(vec![2, 0, 4, 1]),
+                        gamma: 0.05,
+                        avg: true,
+                    },
+                ];
+                let mut out = c.svrg(tasks);
+                out.sort_by_key(|(ti, _)| *ti);
+                out
+            };
+            let ok = run(&a);
+            // kill the worker holding the averaged task (p=1, q=1 → wid 3)
+            b.inject_fault(3);
+            assert_eq!(ok, run(&b), "{kind:?} svrg with fault");
+            assert_eq!(b.recovered_workers(), vec![3]);
+        }
+    }
+
+    #[test]
+    fn consecutive_faults_on_the_same_worker_recover() {
+        let (c, _) = cluster_with(20, 8, 2, 2, 19, ExecutorKind::Threaded);
+        let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+        let base = c.partial_z(&w_blocks, &rows);
+        for _ in 0..3 {
+            c.inject_fault(1);
+            assert_eq!(base, c.partial_z(&w_blocks, &rows));
+        }
+        assert_eq!(c.recovered_workers(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "died unexpectedly")]
+    fn unexpected_worker_death_panics_with_its_id() {
+        // a kill that bypasses inject_fault (no armed flag) models a
+        // genuine worker crash: the phase must name the dead worker
+        // instead of hanging the barrier
+        let (c, _) = cluster(20, 8, 2, 2, 20);
+        c.transport.kill(2);
+        let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+        let _ = c.partial_z(&w_blocks, &rows);
     }
 }

@@ -4,66 +4,102 @@
 //! substitute charges every phase of the algorithm with an explicit,
 //! reproducible model:
 //!
-//! * compute: `max_worker(flops) / flops_per_sec` (workers run in
-//!   parallel, the barrier waits for the slowest — exactly Spark's stage
-//!   semantics),
-//! * network: `total_bytes / bandwidth + 2·latency` per phase (scatter +
-//!   gather through the leader's link, one barrier round-trip).
+//! * compute: `max_worker(flops_w / rate_w)` seconds — workers run in
+//!   parallel at their profiled rates and the barrier waits for the
+//!   slowest, exactly Spark's stage semantics. Under a uniform profile
+//!   this is bit-identical to the historical single-rate charge
+//!   (`max(f_w) / base == max(f_w / base)` exactly in IEEE-754, since
+//!   division by one positive base is monotone).
+//! * network: `total_bytes / bandwidth + 2·latency·link_mult` per
+//!   barrier round — scatter + gather serialized through the leader's
+//!   link like a Spark driver, with the round-trip waiting on the
+//!   slowest worker's link (per-link skew collapses to its max at a
+//!   barrier).
 //!
-//! Being a *model* (instead of wall-clock) keeps the figures independent
-//! of which engine executes the kernels and of host noise; measured
-//! wall-clock is still recorded separately in the history.
+//! The model's parameters arrive exclusively through the validated
+//! config surface ([`ClusterProfile`] + [`NetworkConfig`]); the old
+//! free-floating `CostModel` struct is gone, so an unvalidated rate
+//! table can no longer reach the accounting. Being a *model* (instead
+//! of wall-clock) keeps the figures independent of which engine
+//! executes the kernels and of host noise; measured wall-clock is still
+//! recorded separately in the history.
 
-use crate::config::NetworkConfig;
-
-/// Cost-model parameters. `flops_per_sec` defaults to 200 MFLOP/s per
-/// worker — the effective rate of the paper's Scala/Spark executors on
-/// boxed doubles (2.2 GHz Xeons lose ~10× to JVM overhead on this kind
-/// of scalar-indexed loop), which puts laptop-scale instances in the same
-/// compute-dominated regime as the paper's cluster-scale runs.
-#[derive(Debug, Clone, Copy)]
-pub struct CostModel {
-    pub net: NetworkConfig,
-    pub flops_per_sec: f64,
-}
-
-impl Default for CostModel {
-    fn default() -> Self {
-        Self { net: NetworkConfig::default(), flops_per_sec: 2e8 }
-    }
-}
+use crate::config::{ClusterProfile, NetworkConfig};
 
 /// Mutable accumulator tracking simulated time and traffic for one run.
+///
+/// Built from a resolved [`ClusterProfile`] (one throughput rate per
+/// worker in `wid = p·Q + q` order); callers fold per-worker charges
+/// with [`SimNet::worker_s`] and commit the barrier via
+/// [`SimNet::phase`].
 #[derive(Debug, Clone)]
 pub struct SimNet {
-    pub model: CostModel,
+    net: NetworkConfig,
+    flops_per_sec: f64,
+    /// Relative throughput per worker (1.0 = `flops_per_sec`).
+    rates: Vec<f64>,
+    /// Barrier latency multiplier: the slowest link in the profile.
+    latency_mult: f64,
     sim_s: f64,
     total_bytes: u64,
     total_msgs: u64,
 }
 
 impl SimNet {
-    pub fn new(model: CostModel) -> Self {
-        Self { model, sim_s: 0.0, total_bytes: 0, total_msgs: 0 }
+    /// Stage the accounting for `workers` = P·Q workers under `profile`
+    /// (already validated by the config layer).
+    pub fn new(net: NetworkConfig, profile: &ClusterProfile, workers: usize) -> Self {
+        Self {
+            net,
+            flops_per_sec: profile.flops_per_sec(),
+            rates: profile.rates(workers),
+            latency_mult: profile.link_latency_factor(),
+            sim_s: 0.0,
+            total_bytes: 0,
+            total_msgs: 0,
+        }
     }
 
-    /// Charge one parallel phase: the slowest worker's compute plus the
+    /// Seconds worker `wid` needs for `flops` at its profiled rate.
+    /// Callers take the max across a phase's workers and hand it to
+    /// [`SimNet::phase`].
+    #[inline]
+    pub fn worker_s(&self, wid: usize, flops: f64) -> f64 {
+        flops / (self.flops_per_sec * self.rates[wid])
+    }
+
+    /// Charge one parallel phase: the slowest worker's compute seconds
+    /// (pre-folded by the caller via [`SimNet::worker_s`]) plus the
     /// phase's aggregate traffic (scatter+gather serialized on the
     /// leader's link, like a Spark driver). `rounds` is the number of
     /// sequential barrier round-trips inside the phase (RADiSA-avg's
-    /// rotating sub-epochs pay one per rotation).
-    pub fn phase(&mut self, max_worker_flops: f64, bytes: u64, msgs: u64, rounds: u64) {
-        let compute = max_worker_flops / self.model.flops_per_sec;
-        let net = bytes as f64 / self.model.net.bandwidth_bps
-            + if msgs > 0 { 2.0 * self.model.net.latency_s * rounds.max(1) as f64 } else { 0.0 };
-        self.sim_s += compute + net;
+    /// rotating sub-epochs pay one per rotation); each waits for the
+    /// profile's slowest link.
+    pub fn phase(&mut self, max_worker_s: f64, bytes: u64, msgs: u64, rounds: u64) {
+        let net = bytes as f64 / self.net.bandwidth_bps
+            + if msgs > 0 {
+                2.0 * self.net.latency_s * self.latency_mult * rounds.max(1) as f64
+            } else {
+                0.0
+            };
+        self.sim_s += max_worker_s + net;
         self.total_bytes += bytes;
         self.total_msgs += msgs;
     }
 
-    /// Charge leader-local compute (no traffic).
+    /// Charge leader-local compute (no traffic; the leader runs at the
+    /// base rate).
     pub fn local(&mut self, flops: f64) {
-        self.sim_s += flops / self.model.flops_per_sec;
+        self.sim_s += flops / self.flops_per_sec;
+    }
+
+    /// Overwrite the accumulators from a checkpoint snapshot (the
+    /// rates/link parameters are rebuilt from the config, which the
+    /// checkpoint does not duplicate).
+    pub fn restore(&mut self, sim_s: f64, total_bytes: u64, total_msgs: u64) {
+        self.sim_s = sim_s;
+        self.total_bytes = total_bytes;
+        self.total_msgs = total_msgs;
     }
 
     pub fn sim_s(&self) -> f64 {
@@ -84,55 +120,108 @@ mod tests {
     use super::*;
     use crate::assert_close;
 
-    fn model() -> CostModel {
-        CostModel {
-            net: NetworkConfig { latency_s: 1e-3, bandwidth_bps: 1e6 },
-            flops_per_sec: 1e9,
-        }
+    fn net() -> NetworkConfig {
+        NetworkConfig { latency_s: 1e-3, bandwidth_bps: 1e6 }
+    }
+
+    fn uniform(workers: usize) -> SimNet {
+        SimNet::new(net(), &ClusterProfile::uniform().with_flops_per_sec(1e9), workers)
+    }
+
+    /// Fold a per-worker flops table the way callers do.
+    fn makespan(s: &SimNet, flops: &[f64]) -> f64 {
+        flops.iter().enumerate().map(|(w, &f)| s.worker_s(w, f)).fold(0.0, f64::max)
     }
 
     #[test]
     fn rounds_multiply_latency() {
-        let mut a = SimNet::new(model());
+        let mut a = uniform(4);
         a.phase(0.0, 0, 2, 1);
-        let mut b = SimNet::new(model());
+        let mut b = uniform(4);
         b.phase(0.0, 0, 2, 5);
         assert_close!(b.sim_s(), 5.0 * a.sim_s(), 1e-9);
     }
 
     #[test]
     fn phase_accounting() {
-        let mut net = SimNet::new(model());
-        net.phase(2e9, 1_000_000, 4, 1);
-        // 2 s compute + 1 s transfer + 2 ms latency
-        assert_close!(net.sim_s(), 3.002, 1e-9);
-        assert_eq!(net.total_bytes(), 1_000_000);
-        assert_eq!(net.total_msgs(), 4);
+        let mut s = uniform(4);
+        let compute = makespan(&s, &[2e9, 1e9, 5e8, 2e9]);
+        s.phase(compute, 1_000_000, 4, 1);
+        // 2 s compute (slowest worker) + 1 s transfer + 2 ms latency
+        assert_close!(s.sim_s(), 3.002, 1e-9);
+        assert_eq!(s.total_bytes(), 1_000_000);
+        assert_eq!(s.total_msgs(), 4);
     }
 
     #[test]
     fn zero_message_phase_has_no_latency() {
-        let mut net = SimNet::new(model());
-        net.phase(0.0, 0, 0, 1);
-        assert_close!(net.sim_s(), 0.0, 1e-12, 1e-12);
+        let mut s = uniform(4);
+        s.phase(0.0, 0, 0, 1);
+        assert_close!(s.sim_s(), 0.0, 1e-12, 1e-12);
     }
 
     #[test]
     fn local_compute_only() {
-        let mut net = SimNet::new(model());
-        net.local(5e8);
-        assert_close!(net.sim_s(), 0.5, 1e-9);
-        assert_eq!(net.total_bytes(), 0);
+        let mut s = uniform(4);
+        s.local(5e8);
+        assert_close!(s.sim_s(), 0.5, 1e-9);
+        assert_eq!(s.total_bytes(), 0);
     }
 
     #[test]
     fn monotone_accumulation() {
-        let mut net = SimNet::new(model());
+        let mut s = uniform(4);
         let mut last = 0.0;
         for _ in 0..5 {
-            net.phase(1e6, 100, 1, 1);
-            assert!(net.sim_s() > last);
-            last = net.sim_s();
+            let c = makespan(&s, &[1e6; 4]);
+            s.phase(c, 100, 1, 1);
+            assert!(s.sim_s() > last);
+            last = s.sim_s();
         }
+    }
+
+    #[test]
+    fn uniform_profile_is_bit_identical_to_single_rate() {
+        // the pre-profile charge was max(flops)/base; the per-worker fold
+        // must reproduce it to the last bit under a uniform profile
+        let s = uniform(6);
+        let flops = [1.7e9, 3.3e8, 2.9e9, 1.0, 0.0, 2.9e9];
+        let folded = makespan(&s, &flops);
+        let legacy = flops.iter().fold(0.0f64, |a, &b| a.max(b)) / 1e9;
+        assert_eq!(folded.to_bits(), legacy.to_bits());
+    }
+
+    #[test]
+    fn straggler_dominates_the_barrier() {
+        // one worker at 1/4 rate: the same flops cost 4x its peers, and
+        // the barrier charge follows the straggler
+        let s = SimNet::new(net(), &ClusterProfile::one_slow(4.0).with_flops_per_sec(1e9), 4);
+        assert_close!(s.worker_s(0, 1e9), 4.0, 1e-12);
+        assert_close!(s.worker_s(1, 1e9), 1.0, 1e-12);
+        assert_close!(makespan(&s, &[1e9; 4]), 4.0, 1e-12);
+        // shrink the straggler's shard 4x and the barrier drops to ~1.6s
+        assert_close!(makespan(&s, &[0.4e9, 1.2e9, 1.2e9, 1.2e9]), 1.6, 1e-12);
+    }
+
+    #[test]
+    fn link_factor_scales_barrier_latency() {
+        let profile = ClusterProfile::uniform().with_flops_per_sec(1e9).with_link_latency_factor(3.0);
+        let mut skewed = SimNet::new(net(), &profile, 4);
+        skewed.phase(0.0, 0, 2, 1);
+        let mut base = uniform(4);
+        base.phase(0.0, 0, 2, 1);
+        assert_close!(skewed.sim_s(), 3.0 * base.sim_s(), 1e-9);
+    }
+
+    #[test]
+    fn restore_overwrites_accumulators() {
+        let mut s = uniform(4);
+        s.phase(1.5, 100, 2, 1);
+        let (t, b, m) = (s.sim_s(), s.total_bytes(), s.total_msgs());
+        let mut fresh = uniform(4);
+        fresh.restore(t, b, m);
+        assert_eq!(fresh.sim_s().to_bits(), s.sim_s().to_bits());
+        assert_eq!(fresh.total_bytes(), b);
+        assert_eq!(fresh.total_msgs(), m);
     }
 }

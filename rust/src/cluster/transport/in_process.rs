@@ -1,7 +1,7 @@
 //! The sequential oracle: every command executes inline on the leader
 //! thread, in send order, with replies queued FIFO.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 
 use crate::config::ExecutorKind;
@@ -14,7 +14,10 @@ use super::{Cmd, Reply, Transport, WorkerCore};
 /// exactly the arrival-order distribution the threaded mode can
 /// produce — the leader's id-staged reduces make the order invisible
 /// either way, but keeping the FIFO shape means both transports
-/// exercise identical leader code paths.
+/// exercise identical leader code paths. Faults are simulated the same
+/// way: a killed slot stops executing and synthesizes
+/// [`Reply::Fault`]s in the FIFO, so the leader's recovery path is
+/// byte-identical across transports.
 pub(crate) struct InProcess {
     // RefCell, not Mutex: the Transport trait is `Send` but not `Sync`,
     // and the leader drives phases from a single thread — `send`/`recv`
@@ -22,6 +25,9 @@ pub(crate) struct InProcess {
     // endpoints do. The borrows here are strictly scoped to one call,
     // so the dynamic checks can never trip.
     workers: Vec<RefCell<WorkerCore>>,
+    /// killed-and-not-yet-respawned flags (the inline analogue of a
+    /// worker thread having exited)
+    dead: Vec<Cell<bool>>,
     ready: RefCell<VecDeque<(usize, Reply)>>,
 }
 
@@ -30,6 +36,7 @@ impl InProcess {
         let n = cores.len();
         InProcess {
             workers: cores.into_iter().map(RefCell::new).collect(),
+            dead: (0..n).map(|_| Cell::new(false)).collect(),
             // pre-size to the grid: a phase has at most one outstanding
             // reply per worker, so the deque never reallocates
             ready: RefCell::new(VecDeque::with_capacity(n)),
@@ -38,14 +45,30 @@ impl InProcess {
 }
 
 impl Transport for InProcess {
-    fn send(&self, id: usize, cmd: Cmd) {
+    fn send(&self, id: usize, cmd: Cmd) -> bool {
+        if self.dead[id].get() {
+            // preserve the one-reply-per-send invariant: the barrier
+            // still collects P·Q replies, this one marked as a fault
+            self.ready.borrow_mut().push_back((id, Reply::Fault));
+            return false;
+        }
         if let Some(reply) = self.workers[id].borrow_mut().execute(cmd) {
             self.ready.borrow_mut().push_back((id, reply));
         }
+        true
     }
 
     fn recv(&self) -> (usize, Reply) {
         self.ready.borrow_mut().pop_front().expect("recv() with no command in flight")
+    }
+
+    fn kill(&self, id: usize) {
+        self.dead[id].set(true);
+    }
+
+    fn respawn(&self, id: usize, core: WorkerCore) {
+        *self.workers[id].borrow_mut() = core;
+        self.dead[id].set(false);
     }
 
     fn kind(&self) -> ExecutorKind {

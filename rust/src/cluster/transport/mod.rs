@@ -77,13 +77,14 @@ pub(crate) enum Cmd {
     /// `w`/`mu` snapshots (one allocation-free Arc clone per task
     /// instead of three owned copies); `avg` selects RADiSA-avg's
     /// suffix-averaged combiner. `idx` rides back with the reply so its
-    /// buffer recycles too.
+    /// buffer recycles too (an `Arc` so the leader can retain a clone
+    /// for fault replay without copying the id list).
     Svrg {
         cols: Range<usize>,
         gcols: Range<usize>,
         w: Arc<Vec<f32>>,
         mu: Arc<Vec<f32>>,
-        idx: Vec<u32>,
+        idx: Arc<Vec<u32>>,
         gamma: f32,
         avg: bool,
         buf: Vec<f32>,
@@ -91,6 +92,17 @@ pub(crate) enum Cmd {
     /// Terminate the worker loop ([`Threaded`] only; [`InProcess`] has
     /// no loop to terminate and simply drops its cores).
     Shutdown,
+    /// Simulated crash ([`Transport::kill`] delivery under [`Threaded`]):
+    /// the worker loop exits *without* replying, exactly like a thread
+    /// that died mid-phase. Never reaches [`WorkerCore::execute`] — the
+    /// thread loop intercepts it ([`InProcess`] flags the worker dead
+    /// without sending anything).
+    Die,
+    /// Liveness probe: alive workers swallow it without replying; a
+    /// dead worker's closed mailbox rejects the send, which is how
+    /// [`Threaded::recv`] distinguishes a crashed worker from a slow
+    /// phase. Never reaches [`WorkerCore::execute`].
+    Nop,
 }
 
 /// Worker replies (tagged with the worker's linear id by the transport).
@@ -99,7 +111,13 @@ pub(crate) enum Reply {
     U(Vec<f32>),
     Loss(f64),
     Grad(Vec<f32>),
-    W { w: Vec<f32>, idx: Vec<u32> },
+    W { w: Vec<f32>, idx: Arc<Vec<u32>> },
+    /// The worker died before replying (killed via [`Transport::kill`]
+    /// or an unexpected thread death). The transport synthesizes this
+    /// so the send-all/recv-all barrier still sees one reply per send —
+    /// the leader re-launches the worker and replays the command
+    /// instead of hanging forever.
+    Fault,
 }
 
 /// One worker's entire state: its shard, the shared engine, and the
@@ -215,7 +233,9 @@ impl WorkerCore {
                 }
                 Reply::W { w: buf, idx }
             }
-            Cmd::Shutdown => return None,
+            // the transports intercept Die/Nop before execute; treat
+            // them like Shutdown defensively if one ever slips through
+            Cmd::Shutdown | Cmd::Die | Cmd::Nop => return None,
         };
         Some(reply)
     }
@@ -232,13 +252,30 @@ impl WorkerCore {
 pub(crate) trait Transport: Send {
     /// Deliver `cmd` to worker `id`. [`InProcess`] executes it inline
     /// before returning; [`Threaded`] enqueues it on the worker's
-    /// mailbox. Either way the reply is eventually observable through
-    /// [`Transport::recv`].
-    fn send(&self, id: usize, cmd: Cmd);
+    /// mailbox. Either way exactly one reply per send is eventually
+    /// observable through [`Transport::recv`] — a dead worker's send
+    /// yields a synthetic [`Reply::Fault`] (and `false` here).
+    fn send(&self, id: usize, cmd: Cmd) -> bool;
 
-    /// Next finished `(worker id, reply)` pair. Panics if called with no
-    /// command in flight (a protocol bug, not a runtime condition).
+    /// Next finished `(worker id, reply)` pair; `(id, `[`Reply::Fault`]`)`
+    /// when worker `id` died instead of replying. Panics ([`InProcess`])
+    /// or blocks ([`Threaded`]) if called with no command in flight — a
+    /// protocol bug, not a runtime condition.
     fn recv(&self) -> (usize, Reply);
+
+    /// Simulated crash of worker `id`: it stops executing and every
+    /// in-flight or subsequent command to it resolves to
+    /// [`Reply::Fault`] until [`Transport::respawn`]. Delivery is
+    /// FIFO-ordered with `send` on both transports, so a kill issued
+    /// before a phase's sends takes effect before the phase command —
+    /// the worker never partially executes it.
+    fn kill(&self, id: usize);
+
+    /// Re-launch worker `id` from a freshly rebuilt [`WorkerCore`]
+    /// (shard + engine + empty scratch). The slot is live again
+    /// afterwards; the replacement sees only commands sent after this
+    /// call.
+    fn respawn(&self, id: usize, core: WorkerCore);
 
     /// Which executor this transport implements (selection reporting).
     fn kind(&self) -> ExecutorKind;

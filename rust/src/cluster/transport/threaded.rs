@@ -1,12 +1,54 @@
 //! The real runtime: one persistent OS thread per worker, mailboxes
 //! down, a shared reply channel up.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::config::ExecutorKind;
 
 use super::{Cmd, Reply, Transport, WorkerCore};
+
+/// How long `recv` waits for a reply before probing in-flight workers
+/// for liveness. Purely a detection latency: a slow-but-alive phase
+/// survives any number of probe rounds untouched.
+const PROBE_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Spawn one worker thread owning `core`, looping on its private
+/// mailbox. [`Cmd::Nop`] (liveness probe) is swallowed without a reply;
+/// [`Cmd::Die`] (simulated crash) exits the loop without replying —
+/// both are intercepted here so [`WorkerCore::execute`] stays identical
+/// across transports.
+fn spawn_worker(
+    id: usize,
+    mut core: WorkerCore,
+    rx: Receiver<Cmd>,
+    reply_tx: Sender<(usize, Reply)>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("worker-{id}"))
+        .spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Nop => continue,
+                    Cmd::Die => break,
+                    cmd => match core.execute(cmd) {
+                        // a dead leader (dropped receiver) is a
+                        // normal shutdown race, not an error
+                        Some(reply) => {
+                            if reply_tx.send((id, reply)).is_err() {
+                                break;
+                            }
+                        }
+                        None => break,
+                    },
+                }
+            }
+        })
+        .expect("spawn worker thread")
+}
 
 /// Thread-per-worker executor. Each of the P×Q threads owns its
 /// [`WorkerCore`] (shard + scratch) outright and loops on its private
@@ -14,51 +56,125 @@ use super::{Cmd, Reply, Transport, WorkerCore};
 /// overlap across cores for real — the leader's send-all/recv-all
 /// barriers plus id-staged reduces keep the numbers bit-identical to
 /// the in-process oracle (see the module docs in `transport/mod.rs`).
+///
+/// Fault detection: `recv` waits with a timeout; on expiry it probes
+/// every in-flight worker with [`Cmd::Nop`] — a closed mailbox means
+/// the thread exited without replying (killed or panicked), and the
+/// leader gets `(id, `[`Reply::Fault`]`)` instead of hanging forever on
+/// a reply that will never come. The `RefCell`s exist for
+/// [`Transport::respawn`], which swaps in a fresh channel + thread
+/// through `&self` (same single-leader-thread contract as the
+/// in-process transport).
 pub(crate) struct Threaded {
-    cmd_txs: Vec<Sender<Cmd>>,
+    cmd_txs: RefCell<Vec<Sender<Cmd>>>,
+    /// kept alive so `recv` can never see `Disconnected` even with
+    /// every worker dead (faults are reported per-worker instead)
+    reply_tx: Sender<(usize, Reply)>,
     reply_rx: Receiver<(usize, Reply)>,
-    handles: Vec<JoinHandle<()>>,
+    handles: RefCell<Vec<JoinHandle<()>>>,
+    /// in-flight commands per worker (≤ 1 under the phase barriers);
+    /// only in-flight workers are probed, so an idle dead worker is
+    /// reported exactly once per command addressed to it
+    pending: RefCell<Vec<u32>>,
+    /// workers whose send already failed — their synthetic faults,
+    /// drained by `recv` before touching the reply channel
+    faulted: RefCell<VecDeque<usize>>,
 }
 
 impl Threaded {
     pub(crate) fn spawn(cores: Vec<WorkerCore>) -> Threaded {
+        let n = cores.len();
         let (reply_tx, reply_rx) = channel::<(usize, Reply)>();
-        let mut cmd_txs = Vec::with_capacity(cores.len());
-        let mut handles = Vec::with_capacity(cores.len());
-        for (id, mut core) in cores.into_iter().enumerate() {
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (id, core) in cores.into_iter().enumerate() {
             let (tx, rx) = channel::<Cmd>();
-            let reply_tx = reply_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("worker-{id}"))
-                .spawn(move || {
-                    while let Ok(cmd) = rx.recv() {
-                        match core.execute(cmd) {
-                            // a dead leader (dropped receiver) is a
-                            // normal shutdown race, not an error
-                            Some(reply) => {
-                                if reply_tx.send((id, reply)).is_err() {
-                                    break;
-                                }
-                            }
-                            None => break,
-                        }
-                    }
-                })
-                .expect("spawn worker thread");
+            handles.push(spawn_worker(id, core, rx, reply_tx.clone()));
             cmd_txs.push(tx);
-            handles.push(handle);
         }
-        Threaded { cmd_txs, reply_rx, handles }
+        Threaded {
+            cmd_txs: RefCell::new(cmd_txs),
+            reply_tx,
+            reply_rx,
+            handles: RefCell::new(handles),
+            pending: RefCell::new(vec![0; n]),
+            faulted: RefCell::new(VecDeque::new()),
+        }
     }
 }
 
 impl Transport for Threaded {
-    fn send(&self, id: usize, cmd: Cmd) {
-        self.cmd_txs[id].send(cmd).expect("worker thread hung up");
+    fn send(&self, id: usize, cmd: Cmd) -> bool {
+        if self.cmd_txs.borrow()[id].send(cmd).is_ok() {
+            self.pending.borrow_mut()[id] += 1;
+            true
+        } else {
+            // mailbox closed: the thread already exited. Queue the
+            // synthetic fault so the barrier still sees one reply.
+            self.faulted.borrow_mut().push_back(id);
+            false
+        }
     }
 
     fn recv(&self) -> (usize, Reply) {
-        self.reply_rx.recv().expect("all worker threads hung up")
+        if let Some(id) = self.faulted.borrow_mut().pop_front() {
+            self.pending.borrow_mut()[id] = 0;
+            return (id, Reply::Fault);
+        }
+        loop {
+            match self.reply_rx.recv_timeout(PROBE_INTERVAL) {
+                Ok((id, reply)) => {
+                    let pending = &mut self.pending.borrow_mut()[id];
+                    *pending = pending.saturating_sub(1);
+                    return (id, reply);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // probe every in-flight worker: an Err means its
+                    // mailbox receiver is gone, i.e. the thread exited
+                    // without replying
+                    let dead = {
+                        let pending = self.pending.borrow();
+                        let txs = self.cmd_txs.borrow();
+                        (0..txs.len())
+                            .find(|&i| pending[i] > 0 && txs[i].send(Cmd::Nop).is_err())
+                    };
+                    if let Some(id) = dead {
+                        // close the replied-then-died race: prefer any
+                        // reply that landed while we probed
+                        if let Ok((rid, reply)) = self.reply_rx.try_recv() {
+                            let pending = &mut self.pending.borrow_mut()[rid];
+                            *pending = pending.saturating_sub(1);
+                            return (rid, reply);
+                        }
+                        self.pending.borrow_mut()[id] = 0;
+                        return (id, Reply::Fault);
+                    }
+                    // everyone in flight is alive — just a slow phase
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("leader holds a reply_tx clone")
+                }
+            }
+        }
+    }
+
+    fn kill(&self, id: usize) {
+        // FIFO with send: the Die lands in the mailbox ahead of any
+        // later phase command, so the victim never partially executes
+        // one. Ignore the error if the worker is already gone.
+        let _ = self.cmd_txs.borrow()[id].send(Cmd::Die);
+    }
+
+    fn respawn(&self, id: usize, core: WorkerCore) {
+        let (tx, rx) = channel::<Cmd>();
+        let handle = spawn_worker(id, core, rx, self.reply_tx.clone());
+        let old_tx = std::mem::replace(&mut self.cmd_txs.borrow_mut()[id], tx);
+        drop(old_tx);
+        let old = std::mem::replace(&mut self.handles.borrow_mut()[id], handle);
+        // the old thread has already exited (that is why we are here);
+        // join reaps it without blocking the phase
+        let _ = old.join();
+        self.pending.borrow_mut()[id] = 0;
     }
 
     fn kind(&self) -> ExecutorKind {
@@ -68,13 +184,13 @@ impl Transport for Threaded {
 
 impl Drop for Threaded {
     fn drop(&mut self) {
-        for tx in &self.cmd_txs {
-            // a worker that already exited (panicked) has dropped its
-            // receiver; ignore the send error and still join below so
-            // its panic propagates nowhere silently
+        for tx in self.cmd_txs.get_mut() {
+            // a worker that already exited (killed or panicked) has
+            // dropped its receiver; ignore the send error and still
+            // join below so no thread outlives the cluster
             let _ = tx.send(Cmd::Shutdown);
         }
-        for handle in self.handles.drain(..) {
+        for handle in self.handles.get_mut().drain(..) {
             let _ = handle.join();
         }
     }

@@ -12,8 +12,8 @@
 use anyhow::{Context, Result};
 
 use super::{
-    AlgorithmKind, DataConfig, EngineKind, ExecutorKind, ExperimentConfig, NetworkConfig,
-    SamplingFractions, Schedule,
+    AlgorithmKind, ClusterProfile, DataConfig, EngineKind, ExecutorKind, ExperimentConfig,
+    NetworkConfig, SamplingFractions, Schedule, ShardWeighting,
 };
 use crate::loss::Loss;
 
@@ -46,6 +46,8 @@ pub struct ExperimentConfigBuilder {
     engine: EngineKind,
     executor: Option<ExecutorKind>,
     network: Option<NetworkConfig>,
+    cluster_profile: Option<ClusterProfile>,
+    shard_weighting: ShardWeighting,
     eval_every: usize,
     strict_even_grid: bool,
 }
@@ -67,6 +69,8 @@ impl Default for ExperimentConfigBuilder {
             engine: EngineKind::Native,
             executor: None,
             network: None,
+            cluster_profile: None,
+            shard_weighting: ShardWeighting::Balanced,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -165,6 +169,22 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    /// Per-worker throughput/latency heterogeneity for the simulated
+    /// cost model (preset constructors on [`ClusterProfile`]); unset =
+    /// uniform workers at the default rate. Validated against the P·Q
+    /// grid at build time (rates > 0, explicit length == P·Q).
+    pub fn cluster_profile(mut self, profile: ClusterProfile) -> Self {
+        self.cluster_profile = Some(profile);
+        self
+    }
+
+    /// Size row shards by worker throughput instead of equally (see
+    /// [`ShardWeighting`]).
+    pub fn shard_weighting(mut self, weighting: ShardWeighting) -> Self {
+        self.shard_weighting = weighting;
+        self
+    }
+
     /// Evaluate F(ω) every `k` outer iterations (1 = every iteration).
     pub fn eval_every(mut self, k: usize) -> Self {
         self.eval_every = k;
@@ -203,6 +223,8 @@ impl ExperimentConfigBuilder {
             engine: self.engine,
             executor: self.executor,
             network: self.network,
+            cluster_profile: self.cluster_profile,
+            shard_weighting: self.shard_weighting,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         };
@@ -235,6 +257,8 @@ impl ExperimentConfig {
             engine: self.engine,
             executor: self.executor,
             network: self.network,
+            cluster_profile: self.cluster_profile.clone(),
+            shard_weighting: self.shard_weighting,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         }
@@ -322,6 +346,28 @@ mod tests {
         assert_eq!(v.name, "variant");
         assert_eq!(v.fractions.b, 0.9);
         assert_eq!(base.to_builder().build().unwrap().name, base.name);
+    }
+
+    #[test]
+    fn cluster_profile_builds_validated_and_survives_to_builder() {
+        let cfg = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .cluster_profile(ClusterProfile::one_slow(4.0))
+            .shard_weighting(ShardWeighting::Throughput)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.cluster_profile, Some(ClusterProfile::one_slow(4.0)));
+        assert_eq!(cfg.shard_weighting, ShardWeighting::Throughput);
+        let back = cfg.to_builder().build().unwrap();
+        assert_eq!(back.cluster_profile, cfg.cluster_profile);
+        assert_eq!(back.shard_weighting, ShardWeighting::Throughput);
+        // explicit rate vectors are validated against the grid at build
+        let bad = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .cluster_profile(ClusterProfile::explicit(vec![1.0; 5]));
+        assert!(bad.build().is_err(), "5 rates on a 3x2 grid must be rejected");
     }
 
     #[test]

@@ -233,6 +233,319 @@ impl Default for NetworkConfig {
     }
 }
 
+/// Named heterogeneity shapes a [`ClusterProfile`] resolves against the
+/// P·Q worker grid. Private on purpose: profiles are built through the
+/// preset constructors so every shape that reaches the cost model has
+/// been validated.
+#[derive(Debug, Clone, PartialEq)]
+enum ProfileShape {
+    /// Every worker runs at the base rate.
+    Uniform,
+    /// Worker 0 runs `factor`× slower than the rest — the classic
+    /// single-straggler regime.
+    OneSlow { factor: f64 },
+    /// Rates decay smoothly from the base rate down to `1/factor` with
+    /// a cubic profile: most workers near full speed, a slow tail.
+    LongTail { factor: f64 },
+    /// One relative rate per worker, indexed by `wid = p·Q + q`.
+    Explicit { rates: Vec<f64> },
+}
+
+/// Per-worker cluster heterogeneity: the simulated cost model's view of
+/// relative worker throughput and link latency. This is the sealed
+/// replacement for the old bare `CostModel` struct — profiles can only
+/// be built through the preset constructors here and reach
+/// `SimNet` via the validated config surface, so the cost model can no
+/// longer be assembled ad hoc outside `config/`.
+///
+/// A profile is resolved against the concrete P·Q grid at staging time:
+/// [`ClusterProfile::rates`] yields one relative-throughput multiplier
+/// per worker (1.0 = the base `flops_per_sec`), and the simulated
+/// makespan of a barrier phase becomes `max_worker(flops_w / rate_w)`.
+/// Per-link latency skew collapses to a single multiplier at the
+/// barrier (the leader waits for the slowest link), carried by
+/// [`ClusterProfile::link_latency_factor`]; bandwidth remains
+/// leader-serialized as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterProfile {
+    /// Base worker throughput in flops/second (rate multiplier 1.0).
+    flops_per_sec: f64,
+    shape: ProfileShape,
+    /// Latency multiplier on the slowest worker's link (≥ 1).
+    link_latency_factor: f64,
+}
+
+impl Default for ClusterProfile {
+    fn default() -> Self {
+        ClusterProfile::uniform()
+    }
+}
+
+impl ClusterProfile {
+    /// Base throughput of the historical cost model (kept bit-compatible:
+    /// a uniform profile at this rate reproduces pre-profile `sim_s`
+    /// values exactly).
+    pub const DEFAULT_FLOPS_PER_SEC: f64 = 2e8;
+
+    fn with_shape(shape: ProfileShape) -> Self {
+        ClusterProfile {
+            flops_per_sec: Self::DEFAULT_FLOPS_PER_SEC,
+            shape,
+            link_latency_factor: 1.0,
+        }
+    }
+
+    /// Every worker at the base rate — the pre-profile behavior.
+    pub fn uniform() -> Self {
+        Self::with_shape(ProfileShape::Uniform)
+    }
+
+    /// Worker 0 runs `factor`× slower than the rest.
+    pub fn one_slow(factor: f64) -> Self {
+        Self::with_shape(ProfileShape::OneSlow { factor })
+    }
+
+    /// Rates decay cubically from the base rate to `1/factor`: most
+    /// workers fast, a slow tail.
+    pub fn long_tail(factor: f64) -> Self {
+        Self::with_shape(ProfileShape::LongTail { factor })
+    }
+
+    /// One relative rate per worker, indexed by `wid = p·Q + q`; the
+    /// vector length must equal P·Q (validated at build time).
+    pub fn explicit(rates: Vec<f64>) -> Self {
+        Self::with_shape(ProfileShape::Explicit { rates })
+    }
+
+    /// Override the base worker throughput (flops/second).
+    pub fn with_flops_per_sec(mut self, flops_per_sec: f64) -> Self {
+        self.flops_per_sec = flops_per_sec;
+        self
+    }
+
+    /// Multiply the slowest link's latency by `factor` (≥ 1); the
+    /// barrier charge waits for that link every round.
+    pub fn with_link_latency_factor(mut self, factor: f64) -> Self {
+        self.link_latency_factor = factor;
+        self
+    }
+
+    pub fn flops_per_sec(&self) -> f64 {
+        self.flops_per_sec
+    }
+
+    pub fn link_latency_factor(&self) -> f64 {
+        self.link_latency_factor
+    }
+
+    /// True when every worker runs at the same rate (the shape is
+    /// uniform, or explicit with all-equal entries).
+    pub fn is_uniform(&self) -> bool {
+        match &self.shape {
+            ProfileShape::Uniform => true,
+            ProfileShape::OneSlow { factor } | ProfileShape::LongTail { factor } => *factor == 1.0,
+            ProfileShape::Explicit { rates } => rates.windows(2).all(|w| w[0] == w[1]),
+        }
+    }
+
+    /// The preset's wire name (serialization + CLI echo).
+    pub fn preset_name(&self) -> &'static str {
+        match self.shape {
+            ProfileShape::Uniform => "uniform",
+            ProfileShape::OneSlow { .. } => "one-slow",
+            ProfileShape::LongTail { .. } => "long-tail",
+            ProfileShape::Explicit { .. } => "explicit",
+        }
+    }
+
+    /// Resolve the shape against a concrete grid: one relative rate per
+    /// worker, in `wid = p·Q + q` order, each in `(0, 1]`-ish units of
+    /// the base rate.
+    pub fn rates(&self, workers: usize) -> Vec<f64> {
+        match &self.shape {
+            ProfileShape::Uniform => vec![1.0; workers],
+            ProfileShape::OneSlow { factor } => {
+                let mut r = vec![1.0; workers];
+                if let Some(first) = r.first_mut() {
+                    *first = 1.0 / factor;
+                }
+                r
+            }
+            ProfileShape::LongTail { factor } => (0..workers)
+                .map(|i| {
+                    let frac = if workers > 1 { i as f64 / (workers - 1) as f64 } else { 1.0 };
+                    1.0 / (1.0 + (factor - 1.0) * frac * frac * frac)
+                })
+                .collect(),
+            ProfileShape::Explicit { rates } => rates.clone(),
+        }
+    }
+
+    /// Validate against the concrete worker count (called from
+    /// [`ExperimentConfig::validate`], which knows P·Q).
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        ensure!(
+            self.flops_per_sec.is_finite() && self.flops_per_sec > 0.0,
+            "cluster profile: flops_per_sec={} must be finite and positive",
+            self.flops_per_sec
+        );
+        ensure!(
+            self.link_latency_factor.is_finite() && self.link_latency_factor >= 1.0,
+            "cluster profile: link_latency_factor={} must be ≥ 1",
+            self.link_latency_factor
+        );
+        match &self.shape {
+            ProfileShape::Uniform => {}
+            ProfileShape::OneSlow { factor } | ProfileShape::LongTail { factor } => {
+                ensure!(
+                    factor.is_finite() && *factor >= 1.0,
+                    "cluster profile: slowdown factor {factor} must be ≥ 1"
+                );
+            }
+            ProfileShape::Explicit { rates } => {
+                ensure!(
+                    rates.len() == workers,
+                    "cluster profile: {} explicit rates for {workers} workers (need P·Q)",
+                    rates.len()
+                );
+                for (i, r) in rates.iter().enumerate() {
+                    ensure!(
+                        r.is_finite() && *r > 0.0,
+                        "cluster profile: rate[{i}]={r} must be finite and positive"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json_value(&self) -> Value {
+        let mut fields = vec![
+            ("shape", json::s(self.preset_name())),
+            ("flops_per_sec", json::num(self.flops_per_sec)),
+        ];
+        match &self.shape {
+            ProfileShape::Uniform => {}
+            ProfileShape::OneSlow { factor } | ProfileShape::LongTail { factor } => {
+                fields.push(("factor", json::num(*factor)));
+            }
+            ProfileShape::Explicit { rates } => {
+                fields.push(("rates", Value::Arr(rates.iter().map(|&r| json::num(r)).collect())));
+            }
+        }
+        if self.link_latency_factor != 1.0 {
+            fields.push(("link_latency_factor", json::num(self.link_latency_factor)));
+        }
+        json::obj(fields)
+    }
+
+    fn from_json_value(v: &Value) -> Result<Self> {
+        let shape = match v.get("shape")?.as_str()? {
+            "uniform" => ProfileShape::Uniform,
+            "one-slow" => ProfileShape::OneSlow { factor: v.get("factor")?.as_f64()? },
+            "long-tail" => ProfileShape::LongTail { factor: v.get("factor")?.as_f64()? },
+            "explicit" => ProfileShape::Explicit {
+                rates: v
+                    .get("rates")?
+                    .as_arr()?
+                    .iter()
+                    .map(|r| r.as_f64())
+                    .collect::<Result<Vec<f64>>>()?,
+            },
+            other => anyhow::bail!("unknown cluster profile shape {other:?}"),
+        };
+        Ok(ClusterProfile {
+            flops_per_sec: v.get("flops_per_sec")?.as_f64()?,
+            shape,
+            link_latency_factor: v
+                .opt("link_latency_factor")
+                .map(|f| f.as_f64())
+                .transpose()?
+                .unwrap_or(1.0),
+        })
+    }
+}
+
+impl std::fmt::Display for ClusterProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.shape {
+            ProfileShape::Uniform => f.write_str("uniform"),
+            ProfileShape::OneSlow { factor } => write!(f, "one-slow:{factor}"),
+            ProfileShape::LongTail { factor } => write!(f, "long-tail:{factor}"),
+            ProfileShape::Explicit { rates } => write!(f, "explicit({} rates)", rates.len()),
+        }
+    }
+}
+
+/// CLI syntax: `uniform`, `one-slow[:factor]`, `long-tail[:factor]`,
+/// `explicit:r0,r1,...` (default factor 4).
+impl std::str::FromStr for ClusterProfile {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let factor = |default: f64| -> Result<f64, String> {
+            match arg {
+                Some(a) => a.parse::<f64>().map_err(|e| format!("profile factor {a:?}: {e}")),
+                None => Ok(default),
+            }
+        };
+        match name.to_ascii_lowercase().as_str() {
+            "uniform" => Ok(ClusterProfile::uniform()),
+            "one-slow" | "one_slow" | "oneslow" => Ok(ClusterProfile::one_slow(factor(4.0)?)),
+            "long-tail" | "long_tail" | "longtail" => Ok(ClusterProfile::long_tail(factor(4.0)?)),
+            "explicit" => {
+                let list = arg.ok_or("explicit profile needs rates: explicit:r0,r1,...")?;
+                let rates = list
+                    .split(',')
+                    .map(|r| r.trim().parse::<f64>().map_err(|e| format!("rate {r:?}: {e}")))
+                    .collect::<Result<Vec<f64>, String>>()?;
+                Ok(ClusterProfile::explicit(rates))
+            }
+            other => Err(format!(
+                "unknown cluster profile {other:?} (uniform|one-slow[:f]|long-tail[:f]|explicit:r0,r1,...)"
+            )),
+        }
+    }
+}
+
+/// How the `Trainer` sizes row shards across the P observation
+/// partitions at staging time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardWeighting {
+    /// Equal-sized shards (floor-balanced boundary vectors) — the
+    /// historical behavior.
+    #[default]
+    Balanced,
+    /// Shards proportional to worker throughput from the cluster
+    /// profile: a row partition's weight is the slowest rate among its
+    /// Q workers, so barrier-bound phases finish together under skewed
+    /// profiles.
+    Throughput,
+}
+
+impl std::fmt::Display for ShardWeighting {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShardWeighting::Balanced => "balanced",
+            ShardWeighting::Throughput => "throughput",
+        })
+    }
+}
+
+impl std::str::FromStr for ShardWeighting {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "balanced" => Ok(Self::Balanced),
+            "throughput" | "weighted" => Ok(Self::Throughput),
+            other => Err(format!("unknown shard weighting {other:?} (balanced|throughput)")),
+        }
+    }
+}
+
 /// Everything needed to launch one training run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -257,6 +570,13 @@ pub struct ExperimentConfig {
     /// see [`ExecutorKind::resolve`])
     pub executor: Option<ExecutorKind>,
     pub network: Option<NetworkConfig>,
+    /// per-worker throughput/latency heterogeneity for the simulated
+    /// cost model; `None` = uniform workers at the default rate (the
+    /// historical behavior, bit-frozen)
+    pub cluster_profile: Option<ClusterProfile>,
+    /// how row shards are sized across the P partitions (see
+    /// [`ShardWeighting`]); `Balanced` is the historical behavior
+    pub shard_weighting: ShardWeighting,
     /// evaluate F(w) every k outer iterations (1 = every iteration)
     pub eval_every: usize,
     /// reject shapes that don't divide evenly into the grid (the paper's
@@ -293,6 +613,21 @@ impl ExperimentConfig {
         ensure!(self.inner_steps > 0, "inner_steps must be positive");
         ensure!(self.outer_iters > 0, "outer_iters must be positive");
         ensure!(self.eval_every > 0, "eval_every must be positive");
+        if let Some(profile) = &self.cluster_profile {
+            profile.validate(self.p * self.q)?;
+        }
+        if self.shard_weighting == ShardWeighting::Throughput {
+            ensure!(
+                self.engine != EngineKind::Xla,
+                "throughput-weighted shards produce non-uniform layouts; the XLA engine \
+                 requires uniform block shapes"
+            );
+            ensure!(
+                !self.strict_even_grid,
+                "strict_even_grid contradicts throughput weighting (weighted boundary \
+                 vectors are deliberately uneven)"
+            );
+        }
         self.fractions.validate()?;
         self.schedule.validate()?;
         Ok(())
@@ -375,6 +710,12 @@ impl ExperimentConfig {
                 ]),
             ));
         }
+        if let Some(profile) = &self.cluster_profile {
+            fields.push(("cluster_profile", profile.to_json_value()));
+        }
+        if self.shard_weighting != ShardWeighting::default() {
+            fields.push(("shard_weighting", json::s(self.shard_weighting.to_string())));
+        }
         json::obj(fields).to_string_pretty()
     }
 
@@ -440,6 +781,14 @@ impl ExperimentConfig {
                 None => None,
             },
             network,
+            cluster_profile: v
+                .opt("cluster_profile")
+                .map(ClusterProfile::from_json_value)
+                .transpose()?,
+            shard_weighting: match v.opt("shard_weighting").map(|w| w.as_str()).transpose()? {
+                Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+                None => ShardWeighting::default(),
+            },
             eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
             strict_even_grid: v
                 .opt("strict_even_grid")
@@ -472,6 +821,8 @@ mod tests {
             engine: EngineKind::Native,
             executor: None,
             network: None,
+            cluster_profile: None,
+            shard_weighting: ShardWeighting::Balanced,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -552,6 +903,84 @@ mod tests {
         assert!("remote".parse::<ExecutorKind>().is_err());
         assert_eq!(ExecutorKind::Threaded.to_string(), "threaded");
         assert_eq!(ExecutorKind::InProcess.to_string(), "in-process");
+    }
+
+    #[test]
+    fn cluster_profile_round_trips_through_json() {
+        for profile in [
+            ClusterProfile::uniform(),
+            ClusterProfile::one_slow(4.0),
+            ClusterProfile::long_tail(8.0).with_flops_per_sec(5e8),
+            ClusterProfile::explicit(vec![1.0; 15]).with_link_latency_factor(2.5),
+        ] {
+            let mut cfg = sample();
+            cfg.cluster_profile = Some(profile.clone());
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.cluster_profile, Some(profile));
+        }
+        // unset profile is not emitted — legacy configs stay byte-identical
+        let json = sample().to_json();
+        assert!(!json.contains("cluster_profile"), "unset profile must not serialize");
+        assert!(!json.contains("shard_weighting"), "default weighting must not serialize");
+        let back = ExperimentConfig::from_json(&json).unwrap();
+        assert_eq!(back.cluster_profile, None);
+        assert_eq!(back.shard_weighting, ShardWeighting::Balanced);
+    }
+
+    #[test]
+    fn shard_weighting_round_trips_through_json() {
+        let mut cfg = sample();
+        cfg.shard_weighting = ShardWeighting::Throughput;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.shard_weighting, ShardWeighting::Throughput);
+    }
+
+    #[test]
+    fn profile_validation_checks_rates_and_length() {
+        let mut cfg = sample(); // 5x3 grid: 15 workers
+        cfg.cluster_profile = Some(ClusterProfile::explicit(vec![1.0; 14]));
+        assert!(cfg.validate().is_err(), "explicit length must equal P·Q");
+        cfg.cluster_profile = Some(ClusterProfile::explicit(vec![1.0; 15]));
+        assert!(cfg.validate().is_ok());
+        let mut rates = vec![1.0; 15];
+        rates[3] = 0.0;
+        cfg.cluster_profile = Some(ClusterProfile::explicit(rates));
+        assert!(cfg.validate().is_err(), "zero rate must be rejected");
+        cfg.cluster_profile = Some(ClusterProfile::one_slow(0.5));
+        assert!(cfg.validate().is_err(), "slowdown factor < 1 must be rejected");
+        cfg.cluster_profile = Some(ClusterProfile::uniform().with_flops_per_sec(-1.0));
+        assert!(cfg.validate().is_err(), "negative base rate must be rejected");
+    }
+
+    #[test]
+    fn throughput_weighting_rejects_xla_and_strict_grids() {
+        let mut cfg = sample();
+        cfg.shard_weighting = ShardWeighting::Throughput;
+        assert!(cfg.validate().is_ok());
+        cfg.engine = EngineKind::Xla;
+        assert!(cfg.validate().is_err(), "weighted shards are non-uniform; XLA must reject");
+        cfg.engine = EngineKind::Native;
+        cfg.strict_even_grid = true;
+        assert!(cfg.validate().is_err(), "strict even grid contradicts weighting");
+    }
+
+    #[test]
+    fn profile_presets_parse_and_resolve() {
+        let p: ClusterProfile = "one-slow:4".parse().unwrap();
+        let r = p.rates(6);
+        assert_eq!(r[0], 0.25);
+        assert!(r[1..].iter().all(|&x| x == 1.0));
+        let lt: ClusterProfile = "long-tail:8".parse().unwrap();
+        let r = lt.rates(8);
+        assert_eq!(r[0], 1.0);
+        assert_eq!(*r.last().unwrap(), 0.125);
+        assert!(r.windows(2).all(|w| w[0] >= w[1]), "long tail must be non-increasing");
+        let ex: ClusterProfile = "explicit:1,0.5,0.25".parse().unwrap();
+        assert_eq!(ex.rates(3), vec![1.0, 0.5, 0.25]);
+        assert_eq!("uniform".parse::<ClusterProfile>().unwrap(), ClusterProfile::uniform());
+        assert!("gpu".parse::<ClusterProfile>().is_err());
+        assert!(ClusterProfile::uniform().is_uniform());
+        assert!(!ClusterProfile::one_slow(4.0).is_uniform());
     }
 
     #[test]

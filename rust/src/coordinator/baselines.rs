@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cluster::{Cluster, CostModel, SimNet};
+use crate::cluster::{Cluster, SimNet};
 use crate::config::ExperimentConfig;
 use crate::data::{Dataset, Grid, Layout};
 use crate::engine::ComputeEngine;
@@ -44,7 +44,8 @@ impl Ctx {
     fn new(cfg: &ExperimentConfig, ds: &Dataset, engine: Arc<dyn ComputeEngine>) -> Result<Ctx> {
         let grid = Grid::partition(ds, cfg.p, cfg.q)?;
         let cluster = Cluster::launch(grid, Arc::clone(&engine), cfg.loss);
-        let net = SimNet::new(CostModel { net: cfg.network.unwrap_or_default(), ..CostModel::default() });
+        let profile = cfg.cluster_profile.clone().unwrap_or_default();
+        let net = SimNet::new(cfg.network.unwrap_or_default(), &profile, cfg.p * cfg.q);
         let w = vec![0.0f32; ds.m()];
         Ok(Ctx {
             cluster,
@@ -82,17 +83,17 @@ impl Ctx {
         // cost model: same two phases as the µ^t estimate, full features
         // (charged at each block's actual column count)
         let mut bytes = 0u64;
-        let mut max_flops = 0f64;
+        let mut max_s = 0f64;
         for pi in 0..p {
             for qi in 0..q {
                 let mq = self.cluster.layout.cols_in(qi);
                 bytes += 4 * (2 * mq as u64 + 2 * rows_arc[pi].len() as u64);
                 let fl =
                     4.0 * rows_arc[pi].len() as f64 * mq as f64 * self.cluster.density_at(pi, qi);
-                max_flops = max_flops.max(fl);
+                max_s = max_s.max(self.net.worker_s(pi * q + qi, fl));
             }
         }
-        self.net.phase(max_flops, bytes, 4 * (p * q) as u64, 2);
+        self.net.phase(max_s, bytes, 4 * (p * q) as u64, 2);
         self.grad_coord_evals += (total_rows * self.cluster.layout.m_total) as u64;
         g
     }

@@ -38,6 +38,37 @@ pub fn split_points(total: usize, parts: usize) -> Vec<usize> {
     (0..=parts).map(|i| i * total / parts).collect()
 }
 
+/// Weighted boundaries splitting `0..total` into `parts` ranges whose
+/// sizes are proportional to `weights` (cumulative-weight rounding:
+/// `bounds[i] = round(total · Σw_{<i} / Σw)`), then clamped so every
+/// part is non-empty (requires `total ≥ parts`). Heterogeneous-cluster
+/// layouts use this to size shards by worker throughput so the barrier
+/// stops waiting on the straggler.
+pub fn split_points_weighted(total: usize, weights: &[f64]) -> Vec<usize> {
+    let parts = weights.len();
+    debug_assert!(parts > 0, "split into zero parts");
+    debug_assert!(total >= parts, "weighted split needs total >= parts");
+    debug_assert!(weights.iter().all(|&w| w.is_finite() && w > 0.0), "weights must be positive");
+    let sum: f64 = weights.iter().sum();
+    let mut bounds = Vec::with_capacity(parts + 1);
+    let mut cum = 0.0;
+    bounds.push(0usize);
+    for &w in &weights[..parts - 1] {
+        cum += w;
+        bounds.push(((total as f64 * cum / sum).round() as usize).min(total));
+    }
+    bounds.push(total);
+    // clamp passes guarantee strictly increasing bounds (non-empty parts)
+    for i in 1..=parts {
+        bounds[i] = bounds[i].max(bounds[i - 1] + 1);
+    }
+    bounds[parts] = total;
+    for i in (1..parts).rev() {
+        bounds[i] = bounds[i].min(bounds[i + 1] - 1);
+    }
+    bounds
+}
+
 /// The partition geometry of a `P × Q` grid over an `N × M` dataset:
 /// explicit per-partition row boundaries, per-block column boundaries,
 /// and per-block sub-block boundaries. Shared verbatim between
@@ -73,6 +104,42 @@ impl Layout {
             p * q
         );
         let row_bounds = split_points(n_total, p);
+        let col_bounds = split_points(m_total, q);
+        let sub_bounds =
+            (0..q).map(|qi| split_points(col_bounds[qi + 1] - col_bounds[qi], p)).collect();
+        Ok(Layout { p, q, n_total, m_total, row_bounds, col_bounds, sub_bounds })
+    }
+
+    /// Throughput-weighted ragged layout: observation partition sizes
+    /// are proportional to `row_weights` (one per partition, typically
+    /// the slowest worker rate in that row of the grid) so faster rows
+    /// get more rows and the phase barrier stops waiting on the
+    /// straggler. Columns stay balanced — feature-block width governs
+    /// the wire cost, which is rate-independent.
+    pub fn weighted(
+        n_total: usize,
+        m_total: usize,
+        p: usize,
+        q: usize,
+        row_weights: &[f64],
+    ) -> Result<Layout> {
+        ensure!(p > 0 && q > 0, "P and Q must be positive");
+        ensure!(
+            row_weights.len() == p,
+            "row_weights has {} entries for P={p} partitions",
+            row_weights.len()
+        );
+        ensure!(
+            row_weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "row weights must be finite and positive"
+        );
+        ensure!(n_total >= p, "N={n_total} < P={p} would leave empty observation partitions");
+        ensure!(
+            m_total >= p * q,
+            "M={m_total} < P·Q={} would leave empty sub-blocks",
+            p * q
+        );
+        let row_bounds = split_points_weighted(n_total, row_weights);
         let col_bounds = split_points(m_total, q);
         let sub_bounds =
             (0..q).map(|qi| split_points(col_bounds[qi + 1] - col_bounds[qi], p)).collect();
@@ -173,6 +240,22 @@ impl Grid {
     /// paper's uniform `n = N/P`, `m̃ = M/QP` blocks exactly.
     pub fn partition(ds: &Dataset, p: usize, q: usize) -> Result<Grid> {
         let layout = Layout::new(ds.n(), ds.m(), p, q)?;
+        Self::partition_with_layout(ds, layout)
+    }
+
+    /// Partition `ds` along a pre-staged [`Layout`] (balanced or
+    /// throughput-weighted — the blocks simply follow the boundary
+    /// vectors).
+    pub fn partition_with_layout(ds: &Dataset, layout: Layout) -> Result<Grid> {
+        ensure!(
+            layout.n_total == ds.n() && layout.m_total == ds.m(),
+            "layout is {}x{} but dataset is {}x{}",
+            layout.n_total,
+            layout.m_total,
+            ds.n(),
+            ds.m()
+        );
+        let (p, q) = (layout.p, layout.q);
         let mut blocks = Vec::with_capacity(p * q);
         for pi in 0..p {
             let rr = layout.block_rows(pi);
@@ -262,6 +345,65 @@ mod tests {
         assert_eq!(split_points(60, 3), vec![0, 20, 40, 60]);
         assert_eq!(split_points(7, 3), vec![0, 2, 4, 7]);
         assert_eq!(split_points(3, 3), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn weighted_split_is_proportional_and_non_empty() {
+        // rates 1:2:2 over 100 rows → ~20/40/40
+        let b = split_points_weighted(100, &[1.0, 2.0, 2.0]);
+        assert_eq!(b, vec![0, 20, 60, 100]);
+        // extreme skew still leaves every part non-empty
+        let b = split_points_weighted(5, &[1e-6, 1.0, 1e-6, 1.0, 1e-6]);
+        assert_eq!(b.len(), 6);
+        assert_eq!(*b.last().unwrap(), 5);
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+        // equal weights need not equal split_points (round vs floor),
+        // but must still be balanced within one row
+        let b = split_points_weighted(61, &[1.0; 3]);
+        let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(sizes.iter().all(|&s| s == 20 || s == 21), "{sizes:?}");
+    }
+
+    #[test]
+    fn weighted_layout_sizes_rows_by_throughput() {
+        let l = Layout::weighted(400, 24, 4, 2, &[0.25, 1.0, 1.0, 1.0]).unwrap();
+        // straggler row gets ~1/13 of the rows, fast rows ~4/13
+        assert_eq!(l.rows_in(0), 31);
+        assert!((1..4).all(|p| l.rows_in(p) == 123), "{:?}", l.row_bounds());
+        // columns stay balanced
+        for qi in 0..2 {
+            assert_eq!(l.cols_in(qi), 12);
+        }
+        // geometry invariants hold for consumers
+        assert_eq!(l.row_bounds().len(), 5);
+        assert_eq!(*l.row_bounds().last().unwrap(), 400);
+        for r in [0, 30, 31, 399] {
+            let p = l.partition_of_row(r);
+            assert!(l.block_rows(p).contains(&r));
+        }
+    }
+
+    #[test]
+    fn weighted_layout_rejects_bad_weights() {
+        assert!(Layout::weighted(60, 24, 3, 2, &[1.0, 2.0]).is_err(), "wrong length");
+        assert!(Layout::weighted(60, 24, 3, 2, &[1.0, 0.0, 2.0]).is_err(), "zero weight");
+        assert!(Layout::weighted(60, 24, 3, 2, &[1.0, f64::NAN, 2.0]).is_err(), "NaN weight");
+        assert!(Layout::weighted(2, 24, 3, 2, &[1.0; 3]).is_err(), "N < P");
+    }
+
+    #[test]
+    fn partition_with_layout_checks_dataset_shape() {
+        let ds = synth::dense_zhang(60, 24, 0);
+        let l = Layout::new(61, 24, 3, 2).unwrap();
+        assert!(Grid::partition_with_layout(&ds, l).is_err());
+        let l = Layout::weighted(60, 24, 3, 2, &[0.5, 1.0, 1.0]).unwrap();
+        let g = Grid::partition_with_layout(&ds, l).unwrap();
+        let total: usize = (0..3).map(|p| g.layout.rows_in(p)).sum();
+        assert_eq!(total, 60);
+        for b in g.blocks() {
+            assert_eq!(b.x.rows(), g.layout.rows_in(b.p));
+            assert_eq!(b.y.len(), g.layout.rows_in(b.p));
+        }
     }
 
     #[test]

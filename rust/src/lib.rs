@@ -94,4 +94,4 @@ pub mod runtime;
 pub mod train;
 
 pub use config::{ExperimentConfig, ExperimentConfigBuilder};
-pub use train::{TrainOutcome, Trainer};
+pub use train::{FaultEvent, FaultPlan, RunState, TrainOutcome, Trainer};

@@ -11,6 +11,8 @@
 //!   repro train --preset small --algo sodda --iters 40
 //!   repro train --n 5000 --m 360 --algo radisa-avg --engine xla
 //!   repro train --preset small --target-loss 0.1
+//!   repro train --preset small --profile one-slow:4 --weighted --faults 2@3:mu
+//!   repro train --preset small --checkpoint run.ckpt --checkpoint-every 5
 //!   repro fig2 --panel a --out results
 //!   repro fig3 --scale 100 --iters 20
 
@@ -19,12 +21,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use sodda::config::{preset, AlgorithmKind, DataConfig, ExecutorKind, ExperimentConfig, Schedule};
+use sodda::config::{
+    preset, AlgorithmKind, DataConfig, ExecutorKind, ExperimentConfig, Schedule, ShardWeighting,
+};
 use sodda::harness::{self, Opts};
 use sodda::loss::Loss;
 use sodda::util::cli::Args;
 use sodda::util::json;
-use sodda::Trainer;
+use sodda::{RunState, Trainer};
 
 const HELP: &str = "\
 repro — SODDA (Fang & Klabjan 2018) reproduction driver
@@ -63,6 +67,12 @@ COMMON FLAGS
   --executor X     in-process | threaded (default: SODDA_EXECUTOR env,
                    else in-process; see README \"Execution modes\")
   --threads        shorthand for --executor threaded
+  --profile P      cluster heterogeneity for the cost model: uniform |
+                   one-slow[:f] | long-tail[:f] | explicit:r0,r1,...
+                   (default uniform; see README \"Fault tolerance\")
+  --shard-weighting W  balanced | throughput — throughput sizes row
+                   shards by the worker rates in --profile
+  --weighted       shorthand for --shard-weighting throughput
 
 TRAIN FLAGS
   --preset NAME    small | medium | large | diag-neg10 | loc-neg5
@@ -73,6 +83,15 @@ TRAIN FLAGS
   --loss F         hinge | logistic | squared (default hinge)
   --b --c --d      sampling fractions (default 0.85/0.80/0.85)
   --target-loss F  stop early once F(w) reaches this value
+  --faults PLAN    kill schedule worker@iter:phase[,...] with phases
+                   mu | grad | inner (e.g. \"2@3:mu,0@5:inner\");
+                   recovery is bit-transparent. Overrides the
+                   SODDA_FAULT_PLAN environment variable
+  --checkpoint F   write a resumable snapshot to <out>/F every
+                   --checkpoint-every K iterations (default 1) and at
+                   the end; excludes --target-loss
+  --resume F       continue from a snapshot file written by
+                   --checkpoint (pass the original run's config flags)
 ";
 
 fn main() {
@@ -194,6 +213,17 @@ fn cfg_from(
     if let Some(e) = args.get("executor") {
         b = b.executor(e.parse().map_err(|e: String| anyhow::anyhow!(e))?);
     }
+    // heterogeneity knobs: bare --weighted is shorthand, an explicit
+    // --shard-weighting wins (mirrors the --threads/--executor pair)
+    if let Some(p) = args.get("profile") {
+        b = b.cluster_profile(p.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
+    if args.has("weighted") {
+        b = b.shard_weighting(ShardWeighting::Throughput);
+    }
+    if let Some(w) = args.get("shard-weighting") {
+        b = b.shard_weighting(w.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
     b.build()
 }
 
@@ -208,7 +238,21 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
     println!("config:\n{}", cfg.to_json());
     let ds = cfg.data.try_materialize(cfg.seed)?;
     println!("dataset {} ({} x {})", ds.name, ds.n(), ds.m());
-    let mut trainer = Trainer::with_dataset(cfg.clone(), ds)?;
+    // --resume continues a checkpointed run mid-trajectory; the config
+    // assembled above must describe the same session (validated at
+    // staging: run name, width, executor, iteration horizon)
+    let mut trainer = match args.get("resume") {
+        Some(path) => {
+            let snap = RunState::load(std::path::Path::new(path))?;
+            let t = Trainer::resume_with_dataset(cfg.clone(), ds, snap)?;
+            println!("resumed {path} at iteration {}", t.iteration());
+            t
+        }
+        None => Trainer::with_dataset(cfg.clone(), ds)?,
+    };
+    if let Some(plan) = args.get("faults") {
+        trainer.set_fault_plan(Some(plan.parse()?));
+    }
     println!(
         "engine {}, algorithm {}, executor {}\n",
         trainer.engine().name(),
@@ -218,15 +262,43 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
 
     let target = args.parse_or("target-loss", f64::NEG_INFINITY)?;
     let t0 = Instant::now();
-    println!("iter   F(w)       sim_s     comm_MB");
-    let out = trainer.run_with_observer(|r| {
+    fn print_record(r: &sodda::metrics::IterRecord) {
         println!("{:4}   {:.5}   {:8.3}  {:8.2}", r.iter, r.loss, r.sim_s, r.comm_bytes as f64 / 1e6);
-        if r.loss <= target {
-            ControlFlow::Break(())
-        } else {
-            ControlFlow::Continue(())
+    }
+    let out = if trainer.is_done() {
+        println!("snapshot is already at the final iteration; writing its history");
+        trainer.outcome()
+    } else if let Some(name) = args.get("checkpoint") {
+        if args.has("target-loss") {
+            bail!("--checkpoint and --target-loss are mutually exclusive");
         }
-    })?;
+        let every = args.parse_or("checkpoint-every", 1usize)?;
+        let ckpt = o.out_dir.join(name);
+        println!("checkpointing to {} every {every} iteration(s)", ckpt.display());
+        let out = trainer.run_with_checkpoints(&ckpt, every)?;
+        println!("iter   F(w)       sim_s     comm_MB");
+        out.history.records.iter().for_each(print_record);
+        out
+    } else {
+        println!("iter   F(w)       sim_s     comm_MB");
+        trainer.run_with_observer(|r| {
+            print_record(r);
+            if r.loss <= target {
+                ControlFlow::Break(())
+            } else {
+                ControlFlow::Continue(())
+            }
+        })?
+    };
+    if !out.history.faults.is_empty() {
+        let log: Vec<String> = out
+            .history
+            .faults
+            .iter()
+            .map(|f| format!("{}@{}:{}", f.worker, f.iter, f.phase))
+            .collect();
+        println!("recovered {} injected fault(s): {}", log.len(), log.join(","));
+    }
     let path = o.out_dir.join(format!("{}.csv", cfg.name));
     out.history.write_csv(&path)?;
     out.history.write_json(&o.out_dir.join(format!("{}.json", cfg.name)))?;

@@ -27,16 +27,66 @@ pub struct IterRecord {
     pub grad_coord_evals: u64,
 }
 
+/// Which phase of an outer iteration a fault was injected into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// the µ^t-estimate z/u pass (phase 1)
+    Mu,
+    /// the gradient-slice pass (phase 2)
+    Grad,
+    /// the parallel SVRG inner loops (phase 3)
+    Inner,
+}
+
+impl std::fmt::Display for FaultPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultPhase::Mu => "mu",
+            FaultPhase::Grad => "grad",
+            FaultPhase::Inner => "inner",
+        })
+    }
+}
+
+impl std::str::FromStr for FaultPhase {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<FaultPhase> {
+        match s {
+            "mu" => Ok(FaultPhase::Mu),
+            "grad" => Ok(FaultPhase::Grad),
+            "inner" => Ok(FaultPhase::Inner),
+            other => anyhow::bail!("unknown fault phase {other:?} (expected mu|grad|inner)"),
+        }
+    }
+}
+
+/// One injected-and-recovered worker fault (recorded by the trainer;
+/// recovery is bit-transparent, so this is pure observability).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRecord {
+    /// outer iteration the kill landed in
+    pub iter: usize,
+    /// linear worker id (`p·Q + q`)
+    pub worker: usize,
+    pub phase: FaultPhase,
+}
+
 /// Append-only training history.
 #[derive(Debug, Clone, Default)]
 pub struct History {
     pub run: String,
     pub records: Vec<IterRecord>,
+    /// faults injected and recovered during the run (empty for a
+    /// fault-free run; **not** part of trajectory-equality comparisons,
+    /// which go through [`History::records`]/[`History::losses`] — a
+    /// recovered run is bit-identical to a fault-free one everywhere
+    /// else)
+    pub faults: Vec<FaultRecord>,
 }
 
 impl History {
     pub fn new(run: impl Into<String>) -> Self {
-        Self { run: run.into(), records: Vec::new() }
+        Self { run: run.into(), records: Vec::new(), faults: Vec::new() }
     }
 
     pub fn push(&mut self, rec: IterRecord) {
@@ -81,7 +131,7 @@ impl History {
     }
 
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("run", json::s(self.run.clone())),
             (
                 "records",
@@ -101,7 +151,27 @@ impl History {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // emitted only for runs that actually saw faults, keeping
+        // fault-free histories byte-identical to the legacy schema
+        if !self.faults.is_empty() {
+            fields.push((
+                "faults",
+                Value::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            json::obj(vec![
+                                ("iter", json::num(f.iter as f64)),
+                                ("worker", json::num(f.worker as f64)),
+                                ("phase", json::s(f.phase.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<History> {
@@ -115,6 +185,15 @@ impl History {
                 comm_bytes: r.get("comm_bytes")?.as_f64()? as u64,
                 grad_coord_evals: r.get("grad_coord_evals")?.as_f64()? as u64,
             });
+        }
+        if let Some(faults) = v.opt("faults") {
+            for f in faults.as_arr()? {
+                h.faults.push(FaultRecord {
+                    iter: f.get("iter")?.as_usize()?,
+                    worker: f.get("worker")?.as_usize()?,
+                    phase: f.get("phase")?.as_str()?.parse()?,
+                });
+            }
         }
         Ok(h)
     }
@@ -165,5 +244,28 @@ mod tests {
         let back = History::from_json(&v).unwrap();
         assert_eq!(back.records, h.records);
         assert_eq!(back.run, "t");
+    }
+
+    #[test]
+    fn fault_records_round_trip_and_stay_off_the_legacy_schema() {
+        let mut h = History::new("t");
+        h.push(rec(1, 0.5, 0.1));
+        assert!(
+            !h.to_json().to_string_pretty().contains("faults"),
+            "fault-free history must keep the legacy schema"
+        );
+        h.faults.push(FaultRecord { iter: 3, worker: 2, phase: FaultPhase::Inner });
+        h.faults.push(FaultRecord { iter: 5, worker: 0, phase: FaultPhase::Mu });
+        let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
+        let back = History::from_json(&v).unwrap();
+        assert_eq!(back.faults, h.faults);
+    }
+
+    #[test]
+    fn fault_phase_parses_its_display() {
+        for p in [FaultPhase::Mu, FaultPhase::Grad, FaultPhase::Inner] {
+            assert_eq!(p.to_string().parse::<FaultPhase>().unwrap(), p);
+        }
+        assert!("outer".parse::<FaultPhase>().is_err());
     }
 }

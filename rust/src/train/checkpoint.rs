@@ -1,0 +1,399 @@
+//! Checkpoint/resume: a versioned, serializable snapshot of a run.
+//!
+//! [`Trainer::checkpoint`] freezes the current run — iterate ω^t, the
+//! recorded history, all three RNG streams, the cost-model accumulators
+//! and the completed-iteration count — into a [`RunState`].
+//! [`Trainer::resume`] stages a *fresh* session from the config
+//! (dataset, partition grid, engine and cluster are derived state, so
+//! they are rebuilt, not serialized) and installs the snapshot after
+//! validating it against the staged session. Because every stochastic
+//! choice flows from the three xoshiro streams and the cost model is
+//! pure accumulation, the resumed run continues the exact trajectory: a
+//! checkpoint taken at any `t` followed by `resume` reproduces the
+//! uninterrupted run's remaining records bit-for-bit (`wall_s`
+//! excepted — wall clocks restart with the process).
+//!
+//! The on-disk format is the crate's hand-rolled JSON, tagged
+//! [`CHECKPOINT_FORMAT`]. RNG registers and the u64 counters serialize
+//! as **decimal strings**: a JSON number is an `f64` and cannot carry
+//! all 64 bits. `f32`/`f64` payloads are exact — `f32 → f64` widening
+//! is lossless and the writer emits shortest-round-trip `f64` text.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::{sim_net_for, RunCore, TrainOutcome, Trainer};
+use crate::config::{ExecutorKind, ExperimentConfig};
+use crate::data::Dataset;
+use crate::metrics::History;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Format tag of the checkpoint schema this build reads and writes.
+/// [`RunState::from_json`] rejects anything else — resuming from a
+/// half-understood snapshot would corrupt a trajectory silently.
+pub const CHECKPOINT_FORMAT: &str = "sodda-checkpoint-v1";
+
+/// The serializable state of one run at an outer-iteration boundary —
+/// everything [`Trainer::resume`] needs that is not derivable from the
+/// [`ExperimentConfig`]. Produced by [`Trainer::checkpoint`]; see the
+/// module docs for the exactness contract.
+#[derive(Debug, Clone)]
+pub struct RunState {
+    /// name of the run this snapshot belongs to (validated on resume)
+    pub run: String,
+    /// executor the session ran on when the snapshot was taken. The two
+    /// executors are bit-identical, but a resume that silently switches
+    /// runtimes would invalidate wall-clock comparisons — resume
+    /// validates the staged session resolves to the same kind.
+    pub executor: ExecutorKind,
+    /// completed outer iterations
+    pub t: usize,
+    /// iterate ω^t
+    pub w: Vec<f32>,
+    pub history: History,
+    /// xoshiro256** registers of the set-sampling stream
+    pub rng_sets: [u64; 4],
+    /// … of the π_q permutation stream
+    pub rng_perm: [u64; 4],
+    /// … of the SVRG row-sampling stream
+    pub rng_rows: [u64; 4],
+    /// simulated-network accumulators ([`crate::cluster::SimNet`])
+    pub sim_s: f64,
+    pub comm_bytes: u64,
+    pub comm_msgs: u64,
+    pub grad_coord_evals: u64,
+}
+
+fn rng_to_json(s: [u64; 4]) -> Value {
+    Value::Arr(s.iter().map(|x| json::s(x.to_string())).collect())
+}
+
+fn rng_from_json(v: &Value) -> Result<[u64; 4]> {
+    let arr = v.as_arr()?;
+    ensure!(arr.len() == 4, "rng state must have 4 registers, found {}", arr.len());
+    let mut out = [0u64; 4];
+    for (o, x) in out.iter_mut().zip(arr) {
+        *o = x.as_str()?.parse().context("bad rng register")?;
+    }
+    Ok(out)
+}
+
+fn u64_from_json(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)?.as_str()?.parse().with_context(|| format!("bad u64 counter {key:?}"))
+}
+
+impl RunState {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("format", json::s(CHECKPOINT_FORMAT)),
+            ("run", json::s(self.run.clone())),
+            ("executor", json::s(self.executor.to_string())),
+            ("t", json::num(self.t as f64)),
+            ("sim_s", json::num(self.sim_s)),
+            ("comm_bytes", json::s(self.comm_bytes.to_string())),
+            ("comm_msgs", json::s(self.comm_msgs.to_string())),
+            ("grad_coord_evals", json::s(self.grad_coord_evals.to_string())),
+            ("rng_sets", rng_to_json(self.rng_sets)),
+            ("rng_perm", rng_to_json(self.rng_perm)),
+            ("rng_rows", rng_to_json(self.rng_rows)),
+            ("w", Value::Arr(self.w.iter().map(|&x| json::num(x as f64)).collect())),
+            ("history", self.history.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunState> {
+        let format = v.get("format")?.as_str()?;
+        ensure!(
+            format == CHECKPOINT_FORMAT,
+            "unsupported checkpoint format {format:?} (this build reads {CHECKPOINT_FORMAT:?})"
+        );
+        let executor: ExecutorKind =
+            v.get("executor")?.as_str()?.parse().map_err(anyhow::Error::msg)?;
+        let w = v
+            .get("w")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_f64()? as f32))
+            .collect::<Result<Vec<f32>>>()?;
+        Ok(RunState {
+            run: v.get("run")?.as_str()?.to_string(),
+            executor,
+            t: v.get("t")?.as_usize()?,
+            w,
+            history: History::from_json(v.get("history")?)?,
+            rng_sets: rng_from_json(v.get("rng_sets")?).context("rng_sets")?,
+            rng_perm: rng_from_json(v.get("rng_perm")?).context("rng_perm")?,
+            rng_rows: rng_from_json(v.get("rng_rows")?).context("rng_rows")?,
+            sim_s: v.get("sim_s")?.as_f64()?,
+            comm_bytes: u64_from_json(v, "comm_bytes")?,
+            comm_msgs: u64_from_json(v, "comm_msgs")?,
+            grad_coord_evals: u64_from_json(v, "grad_coord_evals")?,
+        })
+    }
+
+    /// Write the snapshot to `path` (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read a snapshot written by [`RunState::save`].
+    pub fn load(path: &Path) -> Result<RunState> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let v = Value::parse(&text)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))?;
+        RunState::from_json(&v)
+    }
+}
+
+/// Periodic checkpoint writer for step-driven loops (and the engine
+/// behind [`Trainer::run_with_checkpoints`]). Unlike the
+/// [`observers`](super::observers) closures this is *not* an
+/// `FnMut(&IterRecord)` — a snapshot needs the whole run state, which
+/// the record stream deliberately does not carry — so it observes the
+/// trainer between steps instead:
+///
+/// ```no_run
+/// # fn main() -> anyhow::Result<()> {
+/// # let cfg = sodda::ExperimentConfig::builder().name("ckpt").dense(200, 24)
+/// #     .grid(2, 2).outer_iters(10).build()?;
+/// let mut trainer = sodda::Trainer::new(cfg)?;
+/// let obs = sodda::train::CheckpointObserver::new("out/ckpt.json", 5);
+/// while !trainer.is_done() {
+///     trainer.step()?;
+///     obs.observe(&trainer)?;
+/// }
+/// # Ok(()) }
+/// ```
+pub struct CheckpointObserver {
+    path: PathBuf,
+    every: usize,
+}
+
+impl CheckpointObserver {
+    /// Write to `path` every `every` completed iterations (and at run
+    /// completion, so the final state is always on disk).
+    pub fn new(path: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
+        CheckpointObserver { path: path.into(), every: every.max(1) }
+    }
+
+    /// Snapshot `trainer` if its iteration count hits the cadence.
+    /// Returns whether a checkpoint was written.
+    pub fn observe(&self, trainer: &Trainer) -> Result<bool> {
+        if trainer.iteration() % self.every == 0 || trainer.is_done() {
+            let state = trainer.checkpoint();
+            state.save(&self.path).with_context(|| {
+                format!("checkpointing {:?} at iteration {}", state.run, state.t)
+            })?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+impl Trainer {
+    /// Snapshot the current run as a serializable [`RunState`] (clones;
+    /// the run continues unaffected). Meaningful at outer-iteration
+    /// boundaries — which is the only place callers can be, since
+    /// [`Trainer::step`] is atomic.
+    pub fn checkpoint(&self) -> RunState {
+        RunState {
+            run: self.cfg.name.clone(),
+            executor: self.cluster.executor(),
+            t: self.state.t,
+            w: self.state.w.clone(),
+            history: self.state.history.clone(),
+            rng_sets: self.state.rng_sets.state(),
+            rng_perm: self.state.rng_perm.state(),
+            rng_rows: self.state.rng_rows.state(),
+            sim_s: self.state.net.sim_s(),
+            comm_bytes: self.state.net.total_bytes(),
+            comm_msgs: self.state.net.total_msgs(),
+            grad_coord_evals: self.state.grad_coord_evals,
+        }
+    }
+
+    /// Stage a fresh session from `cfg` and continue the checkpointed
+    /// run. The config must be the one the snapshot was taken under (or
+    /// an equivalent: same name, model width, executor resolution, and
+    /// at least `state.t` outer iterations) — mismatches are staging
+    /// errors, not mid-run surprises.
+    pub fn resume(cfg: ExperimentConfig, state: RunState) -> Result<Trainer> {
+        let mut trainer = Trainer::new(cfg)?;
+        trainer.install(state)?;
+        Ok(trainer)
+    }
+
+    /// [`Trainer::resume`] around a caller-provided dataset (the same
+    /// sharing contract as [`Trainer::with_dataset`]).
+    pub fn resume_with_dataset(
+        cfg: ExperimentConfig,
+        ds: impl Into<Arc<Dataset>>,
+        state: RunState,
+    ) -> Result<Trainer> {
+        let mut trainer = Trainer::with_dataset(cfg, ds)?;
+        trainer.install(state)?;
+        Ok(trainer)
+    }
+
+    /// Drive the current run to completion, writing a [`RunState`] to
+    /// `path` every `every` iterations and at completion (see
+    /// [`CheckpointObserver`]).
+    pub fn run_with_checkpoints(
+        &mut self,
+        path: impl Into<PathBuf>,
+        every: usize,
+    ) -> Result<TrainOutcome> {
+        ensure!(
+            !self.is_done(),
+            "run {:?} already complete after {} iterations; \
+             use warm_start/reconfigure/reset to start another run",
+            self.cfg.name,
+            self.cfg.outer_iters
+        );
+        let obs = CheckpointObserver::new(path, every);
+        while !self.is_done() {
+            self.step()?;
+            obs.observe(self)?;
+        }
+        Ok(self.outcome())
+    }
+
+    /// Validate `snap` against this freshly staged session and swap it
+    /// in as the current run state.
+    fn install(&mut self, snap: RunState) -> Result<()> {
+        ensure!(
+            snap.run == self.cfg.name,
+            "checkpoint belongs to run {:?}, config stages {:?}",
+            snap.run,
+            self.cfg.name
+        );
+        ensure!(
+            snap.w.len() == self.cluster.layout.m_total,
+            "checkpoint iterate has {} coordinates, staged model has {}",
+            snap.w.len(),
+            self.cluster.layout.m_total
+        );
+        ensure!(
+            snap.t <= self.cfg.outer_iters,
+            "checkpoint is at iteration {} but config runs only {}",
+            snap.t,
+            self.cfg.outer_iters
+        );
+        ensure!(
+            snap.executor == self.cluster.executor(),
+            "checkpoint was taken on the {} executor, this session resolved to {}",
+            snap.executor,
+            self.cluster.executor()
+        );
+        let mut net = sim_net_for(&self.cfg);
+        net.restore(snap.sim_s, snap.comm_bytes, snap.comm_msgs);
+        self.state = RunCore {
+            w: snap.w,
+            history: snap.history,
+            net,
+            rng_sets: Rng::from_state(snap.rng_sets),
+            rng_perm: Rng::from_state(snap.rng_perm),
+            rng_rows: Rng::from_state(snap.rng_rows),
+            t: snap.t,
+            grad_coord_evals: snap.grad_coord_evals,
+            t_start: Instant::now(),
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(iters: usize) -> ExperimentConfig {
+        ExperimentConfig::builder()
+            .name("ckpt-unit")
+            .dense(200, 24)
+            .grid(2, 2)
+            .inner_steps(4)
+            .outer_iters(iters)
+            .seed(5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn run_state_round_trips_through_json() {
+        let mut t = Trainer::new(cfg(6)).unwrap();
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        let snap = t.checkpoint();
+        let text = snap.to_json().to_string_pretty();
+        let back = RunState::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.run, snap.run);
+        assert_eq!(back.executor, snap.executor);
+        assert_eq!(back.t, snap.t);
+        assert_eq!(back.w, snap.w, "iterate must survive the text round trip bit-for-bit");
+        assert_eq!(back.rng_sets, snap.rng_sets);
+        assert_eq!(back.rng_perm, snap.rng_perm);
+        assert_eq!(back.rng_rows, snap.rng_rows);
+        assert_eq!(back.sim_s, snap.sim_s);
+        assert_eq!(back.comm_bytes, snap.comm_bytes);
+        assert_eq!(back.comm_msgs, snap.comm_msgs);
+        assert_eq!(back.grad_coord_evals, snap.grad_coord_evals);
+        assert_eq!(back.history.records, snap.history.records);
+    }
+
+    #[test]
+    fn rng_registers_survive_as_full_u64s() {
+        // a register with > 53 significant bits would be mangled by an
+        // f64 JSON number; the string encoding must not lose it
+        let snap = rng_from_json(&rng_to_json([u64::MAX, 1, 0x8000_0000_0000_0001, 42])).unwrap();
+        assert_eq!(snap, [u64::MAX, 1, 0x8000_0000_0000_0001, 42]);
+    }
+
+    #[test]
+    fn resume_validates_the_staged_session() {
+        let mut t = Trainer::new(cfg(6)).unwrap();
+        t.step().unwrap();
+        let snap = t.checkpoint();
+
+        let renamed = cfg(6).to_builder().name("other").build().unwrap();
+        assert!(Trainer::resume(renamed, snap.clone()).is_err(), "name mismatch");
+
+        let narrow = ExperimentConfig::builder()
+            .name("ckpt-unit")
+            .dense(200, 16)
+            .grid(2, 2)
+            .inner_steps(4)
+            .outer_iters(6)
+            .seed(5)
+            .build()
+            .unwrap();
+        assert!(Trainer::resume(narrow, snap.clone()).is_err(), "width mismatch");
+
+        let mut past = snap.clone();
+        past.t = 99;
+        assert!(Trainer::resume(cfg(6), past).is_err(), "t beyond the horizon");
+
+        assert!(Trainer::resume(cfg(6), snap).is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_other_formats() {
+        let mut t = Trainer::new(cfg(2)).unwrap();
+        t.step().unwrap();
+        let text = t.checkpoint().to_json().to_string_pretty();
+        let bad = text.replace(CHECKPOINT_FORMAT, "sodda-checkpoint-v999");
+        assert!(RunState::from_json(&Value::parse(&bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Deterministic fault plans: *which worker dies when*.
+//!
+//! A [`FaultPlan`] is a seeded (or hand-written) schedule of worker
+//! kills — `(outer iteration, phase, worker)` triples. The trainer arms
+//! each due kill via [`crate::cluster::Cluster::inject_fault`]
+//! immediately before the phase's sends, so the victim's mailbox sees
+//! the kill FIFO-ordered ahead of the phase command and recovery is
+//! bit-transparent (see the cluster module docs). Because recovery
+//! changes no numbers, a plan can be applied to *any* run — the
+//! `SODDA_FAULT_PLAN` environment variable turns every test of a CI
+//! lane into a fault-recovery test without touching its assertions.
+//!
+//! Plans use a compact text syntax, one event per comma-separated
+//! entry: `worker@iter:phase` (e.g. `"2@3:mu,0@5:inner"` kills worker
+//! 2 in iteration 3's µ-phase and worker 0 in iteration 5's inner
+//! loops). Phases are `mu` | `grad` | `inner`.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::metrics::FaultPhase;
+use crate::util::rng::Rng;
+
+/// One scheduled kill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// outer iteration (1-based, like the trainer's `t`)
+    pub iter: usize,
+    pub phase: FaultPhase,
+    /// linear worker id (`p·Q + q`)
+    pub worker: usize,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}:{}", self.worker, self.iter, self.phase)
+    }
+}
+
+impl FromStr for FaultEvent {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<FaultEvent> {
+        let (worker, rest) =
+            s.split_once('@').with_context(|| format!("fault event {s:?}: expected worker@iter:phase"))?;
+        let (iter, phase) =
+            rest.split_once(':').with_context(|| format!("fault event {s:?}: expected worker@iter:phase"))?;
+        Ok(FaultEvent {
+            worker: worker.trim().parse().with_context(|| format!("fault event {s:?}: bad worker id"))?,
+            iter: iter.trim().parse().with_context(|| format!("fault event {s:?}: bad iteration"))?,
+            phase: phase.trim().parse()?,
+        })
+    }
+}
+
+/// A deterministic schedule of worker kills, applied by the trainer.
+///
+/// Application is **lenient by design**: events addressing a worker
+/// outside the run's grid or an iteration past the run's horizon are
+/// ignored. That is what makes one environment-level plan (the
+/// `rust-faults` CI lane's kill matrix) applicable across every test's
+/// grid size — and since recovery is bit-exact, the ignored/applied
+/// distinction never shows up in numbers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+/// Environment variable holding a plan applied to every staged trainer
+/// (unless overridden via [`crate::Trainer::set_fault_plan`]).
+pub const FAULT_PLAN_ENV: &str = "SODDA_FAULT_PLAN";
+
+impl FaultPlan {
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        FaultPlan { events }
+    }
+
+    /// `kills` seeded kills spread over `workers` workers, `iters`
+    /// outer iterations and all three phases. Same seed → same plan,
+    /// independent of any training RNG stream (the plan draws from its
+    /// own generator, and recovery itself consumes no RNG).
+    pub fn seeded(seed: u64, kills: usize, workers: usize, iters: usize) -> FaultPlan {
+        let mut rng = Rng::seed_from_u64(seed).fork(0xFA);
+        let events = (0..kills)
+            .map(|_| FaultEvent {
+                iter: 1 + rng.below(iters.max(1)),
+                phase: match rng.below(3) {
+                    0 => FaultPhase::Mu,
+                    1 => FaultPhase::Grad,
+                    _ => FaultPhase::Inner,
+                },
+                worker: rng.below(workers.max(1)),
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    /// Read the plan from `SODDA_FAULT_PLAN`. `Ok(None)` when unset or
+    /// blank; a set-but-unparseable value is an error (a silently
+    /// ignored typo would fake fault coverage).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(v) if !v.trim().is_empty() => {
+                let plan = v.parse().with_context(|| format!("{FAULT_PLAN_ENV}={v:?}"))?;
+                Ok(Some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Workers due to die in `(iter, phase)` on a `workers`-sized grid
+    /// (deduplicated — killing a dead worker twice in one phase is one
+    /// kill; out-of-range events are ignored, see the type docs).
+    pub(crate) fn kills_for(&self, iter: usize, phase: FaultPhase, workers: usize) -> Vec<usize> {
+        let mut due: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.iter == iter && e.phase == phase && e.worker < workers)
+            .map(|e| e.worker)
+            .collect();
+        due.sort_unstable();
+        due.dedup();
+        due
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            ensure!(!part.is_empty(), "fault plan {s:?}: empty event");
+            events.push(part.parse()?);
+        }
+        Ok(FaultPlan { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_and_round_trips() {
+        let plan: FaultPlan = "2@3:mu, 0@5:inner,1@1:grad".parse().unwrap();
+        assert_eq!(plan.events().len(), 3);
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2 }
+        );
+        let back: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn bad_plans_are_errors() {
+        assert!("".parse::<FaultPlan>().is_err());
+        assert!("2@3".parse::<FaultPlan>().is_err(), "missing phase");
+        assert!("2:mu".parse::<FaultPlan>().is_err(), "missing iter");
+        assert!("x@3:mu".parse::<FaultPlan>().is_err(), "bad worker");
+        assert!("2@3:outer".parse::<FaultPlan>().is_err(), "bad phase");
+        assert!("2@3:mu,,1@1:grad".parse::<FaultPlan>().is_err(), "empty entry");
+    }
+
+    #[test]
+    fn kills_for_filters_dedups_and_ignores_out_of_range() {
+        let plan: FaultPlan = "2@3:mu,2@3:mu,0@3:mu,9@3:mu,1@4:mu,0@3:grad".parse().unwrap();
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![0, 2]);
+        assert_eq!(plan.kills_for(3, FaultPhase::Grad, 4), vec![0]);
+        assert_eq!(plan.kills_for(4, FaultPhase::Mu, 4), vec![1]);
+        assert_eq!(plan.kills_for(3, FaultPhase::Inner, 4), Vec::<usize>::new());
+        // worker 9 exists on a bigger grid
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 16), vec![0, 2, 9]);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_in_range() {
+        let a = FaultPlan::seeded(7, 5, 6, 20);
+        let b = FaultPlan::seeded(7, 5, 6, 20);
+        assert_eq!(a, b);
+        assert_eq!(a.events().len(), 5);
+        for e in a.events() {
+            assert!(e.worker < 6 && e.iter >= 1 && e.iter <= 20, "{e}");
+        }
+        assert_ne!(FaultPlan::seeded(8, 5, 6, 20), a, "different seed, different plan");
+    }
+}

@@ -23,13 +23,28 @@
 //! (compatible) config on the same staged dataset/cluster/engine,
 //! [`Trainer::warm_start`] seeds ω^0 with a previous iterate for
 //! resumed/chained runs, and [`Trainer::reset`] restarts from scratch.
+//! Across processes the lifecycle is symmetrical: [`Trainer::checkpoint`]
+//! snapshots the run as a serializable [`RunState`] and
+//! [`Trainer::resume`] continues it bit-for-bit in a fresh session.
+//!
+//! Unreliable clusters: a [`FaultPlan`] (set via `SODDA_FAULT_PLAN` or
+//! [`Trainer::set_fault_plan`]) schedules deterministic worker kills;
+//! the leader detects each death, respawns the worker from its shard
+//! and replays the in-flight phase, so a faulted run's trajectory is
+//! bit-identical to the fault-free one (the recoveries are logged in
+//! [`History::faults`]).
 //!
 //! The legacy free functions `coordinator::train` /
 //! `coordinator::train_with_engine` are thin shims over this type.
 
+mod checkpoint;
+mod faults;
 mod step;
 
 pub mod observers;
+
+pub use checkpoint::{CheckpointObserver, RunState, CHECKPOINT_FORMAT};
+pub use faults::{FaultEvent, FaultPlan, FAULT_PLAN_ENV};
 
 use std::ops::ControlFlow;
 use std::sync::Arc;
@@ -37,9 +52,9 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::cluster::{Cluster, CostModel, SimNet};
-use crate::config::{EngineKind, ExecutorKind, ExperimentConfig};
-use crate::data::{Dataset, Grid};
+use crate::cluster::{Cluster, SimNet};
+use crate::config::{EngineKind, ExecutorKind, ExperimentConfig, ShardWeighting};
+use crate::data::{Dataset, Grid, Layout};
 use crate::engine::ComputeEngine;
 use crate::engine::NativeEngine;
 use crate::metrics::{History, IterRecord};
@@ -57,8 +72,9 @@ pub struct TrainOutcome {
 
 /// Per-run mutable state; replaced wholesale by `reset`/`reconfigure`/
 /// `warm_start` while the staged session (dataset, cluster, engine)
-/// stays put.
-struct RunState {
+/// stays put. (The *serializable* snapshot of this state is the public
+/// [`RunState`] produced by [`Trainer::checkpoint`].)
+struct RunCore {
     w: Vec<f32>,
     history: History,
     net: SimNet,
@@ -82,13 +98,21 @@ pub struct Trainer {
     /// the native engine, workers use the configured engine.
     leader_engine: Arc<dyn ComputeEngine>,
     cluster: Cluster,
-    state: RunState,
+    state: RunCore,
     /// Recycled per-iteration buffers (see the `step` module docs and
     /// the README "Steady-state memory" section). Deliberately
     /// **outside** `RunState`: `reset`/`reconfigure`/`warm_start` swap
     /// the run state but keep the warm buffers — pooling never changes
     /// numbers, only where they are written.
     ws: step::Workspace,
+    /// Session-level fault schedule (see [`FaultPlan`]): kills are armed
+    /// immediately before the phase they target, recovered workers are
+    /// logged to [`History::faults`]. Read from `SODDA_FAULT_PLAN` at
+    /// staging; [`Trainer::set_fault_plan`] overrides. Deliberately not
+    /// part of [`RunState`] — a plan describes the *cluster's* failures,
+    /// not the run's math (recovery is bit-transparent), so a resumed
+    /// run re-reads its environment.
+    fault_plan: Option<FaultPlan>,
 }
 
 /// Build the engine named by the config. The XLA engine loads the AOT
@@ -182,10 +206,16 @@ impl Trainer {
             cfg.data.n(),
             cfg.data.m()
         );
-        let grid = Grid::partition(ds.as_ref(), cfg.p, cfg.q)?;
+        let layout = staged_layout(&cfg)?;
+        let grid = Grid::partition_with_layout(ds.as_ref(), layout)?;
         let kind = ExecutorKind::resolve(cfg.executor)
             .with_context(|| format!("resolving executor for {:?}", cfg.name))?;
         let cluster = Cluster::launch_with(grid, Arc::clone(&engine), cfg.loss, kind);
+        // a set-but-malformed SODDA_FAULT_PLAN fails here, at staging —
+        // not silently mid-run after the expensive state is built
+        let fault_plan = FaultPlan::from_env()
+            .with_context(|| format!("staging {:?}", cfg.name))?
+            .filter(|plan| !plan.is_empty());
         Ok(Trainer {
             state: fresh_state(&cfg, cluster.layout.m_total),
             cfg,
@@ -194,6 +224,7 @@ impl Trainer {
             leader_engine: Arc::new(NativeEngine),
             cluster,
             ws: step::Workspace::default(),
+            fault_plan,
         })
     }
 
@@ -220,8 +251,27 @@ impl Trainer {
 
     /// Simulated cluster seconds accumulated by the current run's cost
     /// model (benches report this next to measured `wall_ns_per_iter`).
+    ///
+    /// *Note*: subsumed by [`Trainer::checkpoint`], whose [`RunState`]
+    /// carries `sim_s` next to the byte/message totals; prefer the
+    /// snapshot when reading more than one counter.
     pub fn sim_seconds(&self) -> f64 {
         self.state.net.sim_s()
+    }
+
+    /// The session's fault schedule, if any (staged from
+    /// `SODDA_FAULT_PLAN` or set via [`Trainer::set_fault_plan`]).
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault_plan.as_ref()
+    }
+
+    /// Replace the session's fault schedule (`None` disables injection).
+    /// Overrides whatever `SODDA_FAULT_PLAN` staged. Takes effect from
+    /// the next outer iteration; because recovery is bit-transparent the
+    /// trajectory is unchanged either way — only [`History::faults`]
+    /// and the cluster's respawn log notice.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault_plan = plan.filter(|p| !p.is_empty());
     }
 
     /// Completed outer iterations of the current run.
@@ -247,6 +297,10 @@ impl Trainer {
     }
 
     /// Snapshot the current run as a [`TrainOutcome`] (clones).
+    ///
+    /// *Note*: for a snapshot a later session can continue from, use
+    /// [`Trainer::checkpoint`] — a [`RunState`] carries the RNG streams
+    /// and accumulators that `TrainOutcome` (a reporting type) does not.
     pub fn outcome(&self) -> TrainOutcome {
         TrainOutcome {
             w: self.state.w.clone(),
@@ -428,13 +482,48 @@ impl Trainer {
     }
 }
 
-fn fresh_state(cfg: &ExperimentConfig, m_total: usize) -> RunState {
+/// The run's cost model: network parameters + the (validated) cluster
+/// profile resolved against the P·Q grid. An unset profile is the
+/// bit-frozen uniform default.
+fn sim_net_for(cfg: &ExperimentConfig) -> SimNet {
+    let profile = cfg.cluster_profile.clone().unwrap_or_default();
+    SimNet::new(cfg.network.unwrap_or_default(), &profile, cfg.p * cfg.q)
+}
+
+/// The session's row/column boundary vectors. `Balanced` keeps the
+/// frozen equal-split layout; `Throughput` sizes row shards by worker
+/// rate (a row partition is barrier-bound by its *slowest* worker
+/// across the Q feature blocks) so skewed profiles finish phases
+/// together. A uniform profile falls back to the balanced boundary
+/// vectors bit-for-bit.
+fn staged_layout(cfg: &ExperimentConfig) -> Result<Layout> {
+    let (n, m) = (cfg.data.n(), cfg.data.m());
+    match cfg.shard_weighting {
+        ShardWeighting::Balanced => Layout::new(n, m, cfg.p, cfg.q),
+        ShardWeighting::Throughput => {
+            let profile = cfg.cluster_profile.clone().unwrap_or_default();
+            let rates = profile.rates(cfg.p * cfg.q);
+            let weights: Vec<f64> = (0..cfg.p)
+                .map(|pi| {
+                    (0..cfg.q).map(|qi| rates[pi * cfg.q + qi]).fold(f64::INFINITY, f64::min)
+                })
+                .collect();
+            if weights.windows(2).all(|w| w[0] == w[1]) {
+                Layout::new(n, m, cfg.p, cfg.q)
+            } else {
+                Layout::weighted(n, m, cfg.p, cfg.q, &weights)
+            }
+        }
+    }
+}
+
+fn fresh_state(cfg: &ExperimentConfig, m_total: usize) -> RunCore {
     // independent RNG streams (see util::rng docs)
     let root = Rng::seed_from_u64(cfg.seed);
-    RunState {
+    RunCore {
         w: vec![0.0f32; m_total],
         history: History::new(&cfg.name),
-        net: SimNet::new(CostModel { net: cfg.network.unwrap_or_default(), ..CostModel::default() }),
+        net: sim_net_for(cfg),
         rng_sets: root.fork(0xB0),
         rng_perm: root.fork(0xC0),
         rng_rows: root.fork(0xD0),

@@ -28,12 +28,36 @@
 use std::ops::Range;
 use std::sync::Arc;
 
+use super::faults::FaultPlan;
 use super::Trainer;
-use crate::cluster::SvrgTask;
+use crate::cluster::{Cluster, SvrgTask};
 use crate::config::AlgorithmKind;
 use crate::coordinator::sampling::{self, SampleSets};
-use crate::metrics::IterRecord;
+use crate::metrics::{FaultPhase, FaultRecord, History, IterRecord};
 use crate::util::arc_mut;
+
+/// Arm this `(iter, phase)`'s scheduled kills right before the phase's
+/// sends: [`Cluster::inject_fault`] puts the kill FIFO-ahead of the
+/// phase command in the victim's mailbox, so the worker dies *cleanly
+/// between commands* and the leader's recovery replay is bit-exact (see
+/// the cluster module docs). Every worker participates in every phase,
+/// so an armed kill always fires within its phase. Recovered faults are
+/// observability-only — they land in [`History::faults`], never in the
+/// trajectory.
+fn arm_due_faults(
+    plan: Option<&FaultPlan>,
+    cluster: &Cluster,
+    history: &mut History,
+    iter: usize,
+    phase: FaultPhase,
+    workers: usize,
+) {
+    let Some(plan) = plan else { return };
+    for worker in plan.kills_for(iter, phase, workers) {
+        cluster.inject_fault(worker);
+        history.faults.push(FaultRecord { iter, worker, phase });
+    }
+}
 
 /// The session's reusable iteration state: masked/sliced parameter
 /// buffers, per-partition row and `u` vectors, the gradient/µ vector,
@@ -99,7 +123,8 @@ impl Trainer {
     /// Run outer iteration `self.state.t` (already advanced by `step`).
     /// Returns the record when this iteration hits the eval cadence.
     pub(super) fn iterate(&mut self) -> Option<IterRecord> {
-        let Trainer { cfg, cluster, leader_engine, state, ws, .. } = self;
+        let Trainer { cfg, cluster, leader_engine, state, ws, fault_plan, .. } = self;
+        let fault_plan = fault_plan.as_ref();
         let (p, q) = (cfg.p, cfg.q);
         let (n_total, m_total) = (cluster.layout.n_total, cluster.layout.m_total);
         let t = state.t;
@@ -166,7 +191,7 @@ impl Trainer {
             // intersection lists (the full path covers every column) —
             // no per-(p,q) binary searches.
             let mut bytes = 0u64;
-            let mut max_flops = 0f64;
+            let mut max_s = 0f64;
             for qi in 0..q {
                 let bq =
                     if b_sampled { ws.bcols[qi].len() } else { cluster.layout.cols_in(qi) };
@@ -181,14 +206,15 @@ impl Trainer {
                     bytes += 4 * (bq as u64 + ws.rows[pi].len() as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * bq as f64 * cluster.density_at(pi, qi);
-                    max_flops = max_flops.max(fl);
+                    max_s = max_s.max(state.net.worker_s(pi * q + qi, fl));
                 }
             }
-            state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+            state.net.phase(max_s, bytes, 2 * (p * q) as u64, 1);
         }
 
         // u = f'(z, y): fused on-worker when the grid has one feature
         // block, z-reduce + leader dloss otherwise (the cluster picks)
+        arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Mu, p * q);
         let leader = leader_engine.as_ref();
         if b_sampled {
             cluster
@@ -199,6 +225,7 @@ impl Trainer {
         state.net.local(ws.sets.d.len() as f64);
 
         let c_sampled = ws.sets.c.len() < m_total;
+        arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Grad, p * q);
         let g = arc_mut(&mut ws.mu);
         if c_sampled {
             ws.ccols.resize_with(q, Default::default);
@@ -217,7 +244,7 @@ impl Trainer {
         }
         {
             let mut bytes = 0u64;
-            let mut max_flops = 0f64;
+            let mut max_s = 0f64;
             for qi in 0..q {
                 let cq =
                     if c_sampled { ws.ccols[qi].len() } else { cluster.layout.cols_in(qi) };
@@ -225,10 +252,10 @@ impl Trainer {
                     bytes += 4 * (ws.rows[pi].len() as u64 + cq as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * cq as f64 * cluster.density_at(pi, qi);
-                    max_flops = max_flops.max(fl);
+                    max_s = max_s.max(state.net.worker_s(pi * q + qi, fl));
                 }
             }
-            state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+            state.net.phase(max_s, bytes, 2 * (p * q) as u64, 1);
         }
 
         // µ = (g ∘ C) / d^t — in place; `ws.mu` then ships to every task
@@ -273,7 +300,7 @@ impl Trainer {
                 state.rng_rows.sample_with_replacement_into(
                     cluster.layout.rows_in(pi),
                     cfg.inner_steps,
-                    &mut idx,
+                    arc_mut(&mut idx),
                 );
                 ws.tasks.push(SvrgTask {
                     p: pi,
@@ -290,6 +317,7 @@ impl Trainer {
                 ws.task_density.push(cluster.density_at(pi, qi));
             }
         }
+        arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Inner, p * q);
         {
             let w = &mut state.w;
             let task_cols = &ws.task_cols;
@@ -298,19 +326,21 @@ impl Trainer {
             });
         }
         // cost from the actual (ragged) sub-block dims: the phase waits
-        // on the slowest worker — the max (width × density) task — while
-        // traffic and coordinate evals sum the true widths
-        let mut max_flops = 0f64;
+        // on the slowest worker — the max per-worker (width × density) /
+        // rate task — while traffic and coordinate evals sum the true
+        // widths. Tasks were pushed qi-major, so task ti ran on worker
+        // (ti % p)·Q + ti / p.
+        let mut max_s = 0f64;
         let mut bytes = 0u64;
         let mut inner_evals = 0u64;
         for (ti, gcols) in ws.task_cols.iter().enumerate() {
             let width = gcols.len();
             let fl = 6.0 * cfg.inner_steps as f64 * width as f64 * ws.task_density[ti];
-            max_flops = max_flops.max(fl);
+            max_s = max_s.max(state.net.worker_s((ti % p) * q + ti / p, fl));
             bytes += 4 * (3 * width as u64 + cfg.inner_steps as u64 + width as u64);
             inner_evals += (cfg.inner_steps * width) as u64;
         }
-        state.net.phase(max_flops, bytes, 2 * (p * q) as u64, 1);
+        state.net.phase(max_s, bytes, 2 * (p * q) as u64, 1);
         state.grad_coord_evals += inner_evals;
 
         // ---- reporting -------------------------------------------------------

@@ -1,0 +1,286 @@
+//! Unreliable-cluster suite: fault injection with leader-side recovery,
+//! and checkpoint/resume.
+//!
+//! The contract under test is *bit-transparency*: a run that loses (and
+//! recovers) workers mid-phase, or that is checkpointed to JSON and
+//! resumed in a fresh session, must reproduce the uninterrupted
+//! fault-free trajectory exactly — same iterate, same losses, same
+//! simulated-cost and wire accounting (`wall_s` excepted: wall clocks
+//! restart with the process).
+//!
+//! Staging a `Trainer` reads `SODDA_FAULT_PLAN`, so every test in this
+//! binary serializes on one lock: the env-mutating tests swap the knob
+//! under it, and the rest hold it so they never stage mid-swap. (The
+//! `rust-faults` CI lane exports a plan process-wide; tests that need a
+//! specific schedule set it through `set_fault_plan`, which overrides
+//! the environment either way.)
+
+use std::sync::{Mutex, MutexGuard};
+
+use sodda::config::ExecutorKind;
+use sodda::metrics::History;
+use sodda::train::FAULT_PLAN_ENV;
+use sodda::util::json::Value;
+use sodda::util::testing::forall;
+use sodda::{ExperimentConfig, ExperimentConfigBuilder, FaultPlan, RunState, Trainer};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with `SODDA_FAULT_PLAN` set to `value` (unset for `None`),
+/// restoring the prior value — the CI fault lane exports the knob
+/// process-wide and must still see it afterwards.
+fn with_plan_env(value: Option<&str>, f: impl FnOnce()) {
+    let _g = locked();
+    let prior = std::env::var(FAULT_PLAN_ENV).ok();
+    match value {
+        Some(v) => std::env::set_var(FAULT_PLAN_ENV, v),
+        None => std::env::remove_var(FAULT_PLAN_ENV),
+    }
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    match prior {
+        Some(v) => std::env::set_var(FAULT_PLAN_ENV, v),
+        None => std::env::remove_var(FAULT_PLAN_ENV),
+    }
+    if let Err(payload) = result {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+fn base(n: usize, m: usize, p: usize, q: usize, iters: usize) -> ExperimentConfigBuilder {
+    ExperimentConfig::builder()
+        .name("faults-suite")
+        .dense(n, m)
+        .grid(p, q)
+        .inner_steps(8)
+        .outer_iters(iters)
+        .eval_every(1)
+        .seed(11)
+}
+
+/// Everything trajectory equality means, minus `wall_s`.
+fn assert_same_trajectory(a: &History, b: &History, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count diverged");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.iter, y.iter, "{label}: record cadence diverged");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{label}: loss at iter {}", x.iter);
+        assert_eq!(x.sim_s.to_bits(), y.sim_s.to_bits(), "{label}: sim_s at iter {}", x.iter);
+        assert_eq!(x.comm_bytes, y.comm_bytes, "{label}: comm_bytes at iter {}", x.iter);
+        assert_eq!(
+            x.grad_coord_evals, y.grad_coord_evals,
+            "{label}: grad_coord_evals at iter {}",
+            x.iter
+        );
+    }
+}
+
+// ---- fault recovery --------------------------------------------------------
+
+/// ISSUE 7 acceptance: a seeded run killing k ∈ {1, 2} workers at
+/// seeded (iteration, phase) points reproduces the fault-free `History`
+/// bit-for-bit, on both executors.
+#[test]
+fn seeded_kills_reproduce_the_fault_free_run_bit_for_bit() {
+    let _g = locked();
+    for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+        for k in [1usize, 2] {
+            let cfg = || base(90, 18, 2, 2, 5).executor(kind).build().unwrap();
+            let mut clean = Trainer::new(cfg()).unwrap();
+            clean.set_fault_plan(None);
+            let a = clean.run().unwrap();
+
+            let plan = FaultPlan::seeded(0xDEAD + k as u64, k, 4, 5);
+            let mut faulted = Trainer::new(cfg()).unwrap();
+            faulted.set_fault_plan(Some(plan.clone()));
+            let b = faulted.run().unwrap();
+
+            let label = format!("{kind} k={k} plan=[{plan}]");
+            assert_eq!(a.w, b.w, "{label}: final iterate diverged");
+            assert_same_trajectory(&a.history, &b.history, &label);
+            assert_eq!(a.comm_bytes, b.comm_bytes, "{label}: wire accounting diverged");
+            assert_eq!(a.comm_msgs, b.comm_msgs, "{label}: message accounting diverged");
+            assert!(a.history.faults.is_empty(), "{label}: clean run logged faults");
+            assert!(
+                !faulted.history().faults.is_empty(),
+                "{label}: the plan never fired — the test proved nothing"
+            );
+        }
+    }
+}
+
+/// Property: the two executors agree bit-for-bit *under the same seeded
+/// fault plan* — recovery must be deterministic on both substrates, not
+/// merely transparent on each.
+#[test]
+fn executors_agree_under_the_same_fault_plan() {
+    let _g = locked();
+    forall(6, 20260808, |rng| {
+        let p = 1 + rng.below(3);
+        let q = 1 + rng.below(3);
+        let n = p * (5 + rng.below(30)) + rng.below(p);
+        let m = (p * q) * (2 + rng.below(5)) + rng.below(3);
+        let iters = 3;
+        let plan = FaultPlan::seeded(rng.below(1_000_000) as u64, 1 + rng.below(3), p * q, iters);
+        let mut b = base(n, m, p, q, iters).seed(rng.below(1000) as u64);
+        if rng.bool_with(0.5) {
+            b = b.sparse(n, m, 4);
+        }
+        if rng.bool_with(0.5) {
+            b = b.fractions_bcd(0.4, 0.3, 0.7);
+        }
+        let run = |kind: ExecutorKind| {
+            let mut t = Trainer::new(b.clone().executor(kind).build().unwrap()).unwrap();
+            t.set_fault_plan(Some(plan.clone()));
+            (t.run().unwrap(), t.history().faults.clone())
+        };
+        let (a, fa) = run(ExecutorKind::InProcess);
+        let (t, ft) = run(ExecutorKind::Threaded);
+        let label = format!("{n}x{m} on {p}x{q}, plan=[{plan}]");
+        assert_eq!(a.w, t.w, "{label}: final iterate diverged");
+        assert_same_trajectory(&a.history, &t.history, &label);
+        assert_eq!(a.comm_bytes, t.comm_bytes, "{label}: wire accounting diverged");
+        assert_eq!(fa, ft, "{label}: fault logs diverged");
+    });
+}
+
+#[test]
+fn fault_log_records_what_the_plan_scheduled() {
+    let _g = locked();
+    let plan: FaultPlan = "3@2:mu,0@2:grad,1@4:inner".parse().unwrap();
+    let mut t = Trainer::new(base(80, 16, 2, 2, 5).build().unwrap()).unwrap();
+    t.set_fault_plan(Some(plan));
+    t.run().unwrap();
+    let seen: Vec<String> =
+        t.history().faults.iter().map(|f| format!("{}@{}:{}", f.worker, f.iter, f.phase)).collect();
+    assert_eq!(seen, vec!["3@2:mu", "0@2:grad", "1@4:inner"]);
+    // and the log survives the history's JSON round trip
+    let v = Value::parse(&t.history().to_json().to_string_pretty()).unwrap();
+    assert_eq!(History::from_json(&v).unwrap().faults, t.history().faults);
+}
+
+// ---- checkpoint / resume ---------------------------------------------------
+
+/// Checkpoint at every possible boundary t, resume in a fresh session,
+/// and demand the remaining trajectory matches the uninterrupted run —
+/// across dense/CSR × even/ragged shapes.
+#[test]
+fn checkpoint_resume_reproduces_the_trajectory() {
+    let _g = locked();
+    let shapes: [(ExperimentConfigBuilder, &str); 4] = [
+        (base(120, 24, 2, 2, 5), "dense even"),
+        (base(97, 23, 3, 2, 5), "dense ragged"),
+        (base(120, 24, 2, 2, 5).sparse(120, 24, 4), "csr even"),
+        (base(85, 19, 2, 3, 5).sparse(85, 19, 5), "csr ragged"),
+    ];
+    for (b, label) in shapes {
+        let cfg = || b.clone().build().unwrap();
+        let mut full = Trainer::new(cfg()).unwrap();
+        let a = full.run().unwrap();
+        for t_mid in [0usize, 2, 5] {
+            let mut first = Trainer::new(cfg()).unwrap();
+            for _ in 0..t_mid {
+                first.step().unwrap();
+            }
+            // force the snapshot through its serialized form — resuming
+            // from in-memory state would not test the format
+            let text = first.checkpoint().to_json().to_string_pretty();
+            let snap = RunState::from_json(&Value::parse(&text).unwrap()).unwrap();
+            let mut second = Trainer::resume(cfg(), snap).unwrap();
+            assert_eq!(second.iteration(), t_mid, "{label}: resume lost the iteration count");
+            let o = if second.is_done() { second.outcome() } else { second.run().unwrap() };
+            let lb = format!("{label}, checkpointed at t={t_mid}");
+            assert_eq!(a.w, o.w, "{lb}: final iterate diverged");
+            assert_same_trajectory(&a.history, &o.history, &lb);
+            assert_eq!(a.comm_bytes, o.comm_bytes, "{lb}: wire accounting diverged");
+            assert_eq!(a.comm_msgs, o.comm_msgs, "{lb}: message accounting diverged");
+        }
+    }
+}
+
+/// The combined headline: kill workers *and* interrupt/resume the run —
+/// still bit-identical to the pristine uninterrupted, fault-free run.
+#[test]
+fn faulted_interrupted_run_still_matches_the_pristine_one() {
+    let _g = locked();
+    for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+        let cfg = || base(90, 18, 2, 2, 6).executor(kind).build().unwrap();
+        let mut pristine = Trainer::new(cfg()).unwrap();
+        pristine.set_fault_plan(None);
+        let a = pristine.run().unwrap();
+
+        let plan = FaultPlan::seeded(77, 2, 4, 6);
+        let mut first = Trainer::new(cfg()).unwrap();
+        first.set_fault_plan(Some(plan.clone()));
+        for _ in 0..3 {
+            first.step().unwrap();
+        }
+        let mut second = Trainer::resume(cfg(), first.checkpoint()).unwrap();
+        second.set_fault_plan(Some(plan.clone()));
+        let o = second.run().unwrap();
+
+        let label = format!("{kind} plan=[{plan}]");
+        assert_eq!(a.w, o.w, "{label}: final iterate diverged");
+        assert_same_trajectory(&a.history, &o.history, &label);
+    }
+}
+
+#[test]
+fn run_with_checkpoints_leaves_a_resumable_file() {
+    let _g = locked();
+    let dir = std::env::temp_dir().join(format!("sodda-ckpt-{}", std::process::id()));
+    let path = dir.join("run.json");
+    let cfg = || base(80, 16, 2, 2, 5).build().unwrap();
+    let mut t = Trainer::new(cfg()).unwrap();
+    let a = t.run_with_checkpoints(&path, 2).unwrap();
+    let snap = RunState::load(&path).unwrap();
+    assert_eq!(snap.t, 5, "final checkpoint must capture the completed run");
+    let resumed = Trainer::resume(cfg(), snap).unwrap();
+    assert!(resumed.is_done());
+    assert_eq!(resumed.weights(), &a.w[..]);
+    assert_same_trajectory(&a.history, resumed.history(), "run_with_checkpoints");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- SODDA_FAULT_PLAN plumbing ---------------------------------------------
+
+#[test]
+fn env_plan_is_staged_and_applied() {
+    let auto = || base(80, 16, 2, 2, 3).build().unwrap();
+    with_plan_env(Some("1@2:grad"), || {
+        let mut t = Trainer::new(auto()).unwrap();
+        let expect: FaultPlan = "1@2:grad".parse().unwrap();
+        assert_eq!(t.fault_plan(), Some(&expect), "staging must pick up the env plan");
+        t.run().unwrap();
+        assert_eq!(t.history().faults.len(), 1);
+        assert_eq!(t.history().faults[0].worker, 1);
+        assert_eq!(t.history().faults[0].iter, 2);
+    });
+    with_plan_env(None, || {
+        assert!(Trainer::new(auto()).unwrap().fault_plan().is_none());
+    });
+    with_plan_env(Some("   "), || {
+        assert!(Trainer::new(auto()).unwrap().fault_plan().is_none(), "blank means unset");
+    });
+}
+
+#[test]
+fn malformed_env_plan_is_a_staging_error() {
+    with_plan_env(Some("2@3:outer"), || {
+        let err = Trainer::new(base(80, 16, 2, 2, 3).build().unwrap()).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains(FAULT_PLAN_ENV), "unhelpful error: {chain}");
+    });
+}
+
+#[test]
+fn set_fault_plan_overrides_the_env() {
+    with_plan_env(Some("0@1:mu"), || {
+        let mut t = Trainer::new(base(80, 16, 2, 2, 3).build().unwrap()).unwrap();
+        t.set_fault_plan(None);
+        t.run().unwrap();
+        assert!(t.history().faults.is_empty(), "cleared plan must not fire");
+    });
+}
