@@ -34,7 +34,7 @@ fn alloc_events() -> u64 {
 fn main() {
     // the rows here compare executors explicitly (config pins); the
     // lane-wide env knob must not skew the pinned-default rows below
-    std::env::remove_var(ExecutorKind::ENV);
+    sodda::util::env::unset(ExecutorKind::ENV);
     let mut b = Bench::from_env("full_iteration");
     b.set_alloc_counter(alloc_events);
     let pr = preset("small").unwrap();

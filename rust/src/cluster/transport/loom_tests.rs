@@ -1,0 +1,181 @@
+//! Exhaustive model checking of the threaded transport protocol.
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg loom"`:
+//!
+//! ```text
+//! cd rust && RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+//! ```
+//!
+//! Because `threaded.rs` takes every thread/channel primitive from the
+//! `sync.rs` shim, the [`Threaded`] these scenarios drive is the real
+//! protocol implementation — mailbox FIFOs, the shared reply channel,
+//! the `recv_timeout` + `Nop` liveness probe, kill → respawn → replay,
+//! and Drop's shutdown+join — executed under loom's scheduler, which
+//! explores every interleaving up to the preemption bound instead of
+//! the one the OS happens to produce. Each scenario body re-runs once
+//! per explored schedule, so everything (dataset, cores, transport) is
+//! rebuilt inside the closure and every assertion must hold on *all*
+//! schedules: a reply that can be lost, a fault that can be reported
+//! twice, or a shutdown that can deadlock shows up as a failing (or
+//! hanging) schedule here rather than as a once-a-month CI flake.
+//!
+//! The preemption bound (3) is the standard loom state-space cap:
+//! exhaustive over all schedules with at most three involuntary
+//! context switches per thread, which is where virtually all real
+//! channel/recovery bugs live (the PR 7 silent-hang bug needed one).
+
+use std::sync::Arc;
+
+use super::{Cmd, InProcess, Reply, Threaded, Transport, WorkerCore};
+use crate::data::{synth, Grid};
+use crate::engine::{ComputeEngine, NativeEngine};
+use crate::loss::Loss;
+
+/// Exhaustively check `f` over thread interleavings (≤3 preemptions).
+fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+/// Tiny deterministic cores: a 4×4 dense dataset split into `p`
+/// row-blocks (one worker per block, full width). Rebuilt per
+/// schedule — cheap, and free of sync operations, so it adds no
+/// branching to the model.
+fn cores(p: usize, seed: u64) -> Vec<WorkerCore> {
+    let ds = synth::dense_zhang(4, 4, seed);
+    let grid = Grid::partition(&ds, p, 1).unwrap();
+    let engine: Arc<dyn ComputeEngine> = Arc::new(NativeEngine);
+    grid.blocks()
+        .map(|b| WorkerCore::new(b.clone(), Arc::clone(&engine), Loss::Hinge))
+        .collect()
+}
+
+/// A full-width `BlockLoss` over all `n_per` rows of a block — the
+/// simplest command with a value-carrying reply.
+fn loss_cmd(n_per: usize) -> Cmd {
+    let w: Vec<f32> = (0..4).map(|j| 0.3 * j as f32 - 0.4).collect();
+    let rows: Vec<u32> = (0..n_per as u32).collect();
+    Cmd::BlockLoss { w: Arc::new(w), rows: Arc::new(rows) }
+}
+
+/// What the sequential oracle computes for the same cores + commands,
+/// keyed by worker id.
+fn oracle_losses(p: usize, seed: u64, n_per: usize) -> Vec<f64> {
+    let oracle = InProcess::new(cores(p, seed));
+    for id in 0..p {
+        assert!(oracle.send(id, loss_cmd(n_per)));
+    }
+    let mut out = vec![0.0; p];
+    for _ in 0..p {
+        match oracle.recv() {
+            (id, Reply::Loss(l)) => out[id] = l,
+            other => panic!("oracle returned {other:?}"),
+        }
+    }
+    out
+}
+
+/// Scenario 1 — phase fan-in: two workers race their replies onto the
+/// shared channel; whatever the arrival order, the leader must see
+/// exactly one reply per worker and the oracle's bits for each.
+#[test]
+fn loom_phase_fan_in_is_exact_under_all_interleavings() {
+    model(|| {
+        let expected = oracle_losses(2, 1, 2);
+        let t = Threaded::spawn(cores(2, 1));
+        assert!(t.send(0, loss_cmd(2)));
+        assert!(t.send(1, loss_cmd(2)));
+        let mut got: [Option<f64>; 2] = [None, None];
+        for _ in 0..2 {
+            match t.recv() {
+                (id, Reply::Loss(l)) => {
+                    assert!(got[id].is_none(), "worker {id} replied twice");
+                    got[id] = Some(l);
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        for id in 0..2 {
+            assert_eq!(
+                got[id].unwrap().to_bits(),
+                expected[id].to_bits(),
+                "worker {id} diverged from the oracle"
+            );
+        }
+    });
+}
+
+/// Scenario 2 — kill during a phase: whether the phase send beats the
+/// `Die` into the mailbox, loses to it, or observes the mailbox
+/// already closed, the barrier must get exactly one `Fault`, and a
+/// respawn + replay must produce the oracle's bits.
+#[test]
+fn loom_kill_during_phase_recovers_bit_identically() {
+    model(|| {
+        let expected = oracle_losses(1, 2, 4)[0];
+        let mut all = cores(1, 2);
+        let core = all.pop().unwrap();
+        let replacement =
+            WorkerCore::new(core.block.clone(), Arc::clone(&core.engine), Loss::Hinge);
+        let t = Threaded::spawn(vec![core]);
+        t.kill(0);
+        let _ = t.send(0, loss_cmd(4));
+        assert!(
+            matches!(t.recv(), (0, Reply::Fault)),
+            "a killed worker must surface as exactly one Fault"
+        );
+        t.respawn(0, replacement);
+        assert!(t.send(0, loss_cmd(4)), "respawned mailbox must accept commands");
+        match t.recv() {
+            (0, Reply::Loss(l)) => assert_eq!(l.to_bits(), expected.to_bits()),
+            other => panic!("expected the replayed loss, got {other:?}"),
+        }
+    });
+}
+
+/// Scenario 3 — Drop racing an in-flight reply: the leader consumes
+/// one of two outstanding replies and drops the transport while the
+/// other may still be anywhere between `execute` and the reply
+/// channel. Every schedule must shut down and join both workers —
+/// loom flags the interleaving as a hang if any leaks or deadlocks.
+#[test]
+fn loom_drop_with_inflight_reply_never_deadlocks() {
+    model(|| {
+        let t = Threaded::spawn(cores(2, 3));
+        assert!(t.send(0, loss_cmd(2)));
+        assert!(t.send(1, loss_cmd(2)));
+        let (id, reply) = t.recv();
+        assert!(matches!(reply, Reply::Loss(_)), "worker {id} sent {reply:?}");
+        drop(t);
+    });
+}
+
+/// Scenario 4 — double-kill in one phase: the second `Die` lands in a
+/// closing (or already closed) mailbox and must be swallowed; the
+/// barrier still sees exactly one `Fault`, and recovery still replays
+/// to the oracle's bits.
+#[test]
+fn loom_double_kill_faults_once_and_recovers() {
+    model(|| {
+        let expected = oracle_losses(1, 4, 4)[0];
+        let mut all = cores(1, 4);
+        let core = all.pop().unwrap();
+        let replacement =
+            WorkerCore::new(core.block.clone(), Arc::clone(&core.engine), Loss::Hinge);
+        let t = Threaded::spawn(vec![core]);
+        t.kill(0);
+        t.kill(0);
+        let _ = t.send(0, loss_cmd(4));
+        assert!(matches!(t.recv(), (0, Reply::Fault)));
+        t.respawn(0, replacement);
+        assert!(t.send(0, loss_cmd(4)));
+        match t.recv() {
+            (0, Reply::Loss(l)) => assert_eq!(l.to_bits(), expected.to_bits()),
+            other => panic!("expected the replayed loss, got {other:?}"),
+        }
+    });
+}

@@ -19,7 +19,12 @@
 //!   mpsc mailbox per worker and one shared reply channel back to the
 //!   leader. Phases genuinely overlap across cores.
 //!
-//! ## The determinism contract
+//! ## Determinism contract
+//!
+//! This section is load-bearing: `xtask lint` (`doc_contract`) fails
+//! the build if it disappears, the README's correctness-tooling
+//! section points here, and the `rust-loom` / `rust-tsan` CI lanes
+//! exist to enforce the clauses below mechanically.
 //!
 //! `Threaded` reproduces `InProcess` **bit-for-bit** (enforced by
 //! `tests/executor.rs`), by construction rather than by luck:
@@ -36,9 +41,20 @@
 //! (and thread identity). Reply buffers recycle through the leader pool
 //! identically in both — commands carry the recycled buffer down and
 //! the reply carries it back, whatever the substrate.
+//!
+//! The contract is checked from three directions: example-based
+//! equality (`tests/executor.rs`, `tests/faults.rs`), exhaustive
+//! interleaving exploration of the mailbox/reply/recovery protocol
+//! under loom (`loom_tests.rs`, via the `sync.rs` shim), and data-race
+//! detection on the real OS-thread runtime (the ThreadSanitizer CI
+//! lane).
 
 mod in_process;
+mod sync;
 mod threaded;
+
+#[cfg(all(test, loom))]
+mod loom_tests;
 
 pub(crate) use in_process::InProcess;
 pub(crate) use threaded::Threaded;
@@ -106,6 +122,9 @@ pub(crate) enum Cmd {
 }
 
 /// Worker replies (tagged with the worker's linear id by the transport).
+/// `Debug` is for test diagnostics (the shutdown-edge and loom suites
+/// print unexpected replies).
+#[derive(Debug)]
 pub(crate) enum Reply {
     Z(Vec<f32>),
     U(Vec<f32>),

@@ -1,0 +1,176 @@
+//! Sync-primitive shim: `std` normally, `loom` under `--cfg loom`.
+//!
+//! The threaded transport is written against this module instead of
+//! `std::sync::mpsc`/`std::thread` directly, so the *same* protocol
+//! code (mailboxes down, shared reply channel up, `recv_timeout` +
+//! `Nop` liveness probing, kill → respawn → replay, Drop shutdown+join)
+//! can be run under loom's model checker, which exhaustively explores
+//! thread interleavings (`cargo test --lib loom_tests` with
+//! `RUSTFLAGS="--cfg loom"`; see `loom_tests.rs`).
+//!
+//! loom has no mpsc channel, so the `cfg(loom)` half hand-rolls one
+//! from the primitives loom *does* model (`Mutex` + `Condvar` + a
+//! `VecDeque`), with the mpsc API surface the transport uses: `send`
+//! fails once the receiver is dropped, `recv` blocks until a value or
+//! total sender disconnect, `try_recv` never blocks. The one semantic
+//! liberty is [`Receiver::recv_timeout`]: loom has no notion of wall
+//! time, so an empty queue reports `Timeout` immediately (after a
+//! scheduler yield). That is a sound over-approximation — it makes the
+//! model explore *every* probe round the real executor could ever take,
+//! including the paths where the timeout fires while a worker is alive
+//! and mid-compute.
+
+#[cfg(not(loom))]
+mod imp {
+    pub(crate) use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+    pub(crate) use std::thread::JoinHandle;
+
+    /// `std::thread::Builder` spawn with a thread name (visible in
+    /// panics and debuggers). loom's side ignores the name — its
+    /// threads are model entities, not OS threads.
+    pub(crate) fn spawn_named<F>(name: String, f: F) -> JoinHandle<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        std::thread::Builder::new().name(name).spawn(f).expect("spawn worker thread")
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    use std::collections::VecDeque;
+    use std::time::Duration;
+
+    use loom::sync::{Arc, Condvar, Mutex};
+
+    pub(crate) use loom::thread::JoinHandle;
+
+    pub(crate) fn spawn_named<F>(_name: String, f: F) -> JoinHandle<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        loom::thread::spawn(f)
+    }
+
+    struct State<T> {
+        q: VecDeque<T>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<State<T>>,
+        cv: Condvar,
+    }
+
+    pub(crate) struct Sender<T>(Arc<Chan<T>>);
+    pub(crate) struct Receiver<T>(Arc<Chan<T>>);
+
+    /// Mirrors `std::sync::mpsc::SendError`: hands the value back.
+    #[allow(dead_code)] // the payload is never inspected, only dropped
+    pub(crate) struct SendError<T>(pub(crate) T);
+    pub(crate) struct RecvError;
+    pub(crate) enum RecvTimeoutError {
+        Timeout,
+        Disconnected,
+    }
+    #[allow(dead_code)] // variants mirror std's enum; callers only use Ok
+    pub(crate) enum TryRecvError {
+        Empty,
+        Disconnected,
+    }
+
+    pub(crate) fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(State { q: VecDeque::new(), senders: 1, rx_alive: true }),
+            cv: Condvar::new(),
+        });
+        (Sender(Arc::clone(&chan)), Receiver(chan))
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Sender<T> {
+            self.0.state.lock().unwrap().senders += 1;
+            Sender(Arc::clone(&self.0))
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut s = self.0.state.lock().unwrap();
+            s.senders -= 1;
+            if s.senders == 0 {
+                // wake a receiver blocked in `recv` so it can observe
+                // the disconnect instead of sleeping forever
+                self.0.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub(crate) fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let mut s = self.0.state.lock().unwrap();
+            if !s.rx_alive {
+                return Err(SendError(value));
+            }
+            s.q.push_back(value);
+            self.0.cv.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            // senders never block, so flipping the flag is enough for
+            // them to start failing fast
+            self.0.state.lock().unwrap().rx_alive = false;
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub(crate) fn recv(&self) -> Result<T, RecvError> {
+            let mut s = self.0.state.lock().unwrap();
+            loop {
+                if let Some(v) = s.q.pop_front() {
+                    return Ok(v);
+                }
+                if s.senders == 0 {
+                    return Err(RecvError);
+                }
+                s = self.0.cv.wait(s).unwrap();
+            }
+        }
+
+        /// An empty queue is an *instant* timeout under the model (loom
+        /// has no clock). The `yield_now` is loom's spin-loop contract:
+        /// it tells the scheduler to run the other threads before this
+        /// one retries, so the probe loop in `Threaded::recv` always
+        /// makes global progress and the model terminates.
+        pub(crate) fn recv_timeout(&self, _timeout: Duration) -> Result<T, RecvTimeoutError> {
+            {
+                let mut s = self.0.state.lock().unwrap();
+                if let Some(v) = s.q.pop_front() {
+                    return Ok(v);
+                }
+                if s.senders == 0 {
+                    return Err(RecvTimeoutError::Disconnected);
+                }
+            }
+            loom::thread::yield_now();
+            Err(RecvTimeoutError::Timeout)
+        }
+
+        pub(crate) fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut s = self.0.state.lock().unwrap();
+            if let Some(v) = s.q.pop_front() {
+                return Ok(v);
+            }
+            if s.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            Err(TryRecvError::Empty)
+        }
+    }
+}
+
+pub(crate) use imp::*;

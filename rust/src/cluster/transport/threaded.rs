@@ -1,14 +1,17 @@
 //! The real runtime: one persistent OS thread per worker, mailboxes
 //! down, a shared reply channel up.
+//!
+//! All thread/channel primitives come from the [`super::sync`] shim
+//! (`std` normally, `loom` under `--cfg loom`), so this exact protocol
+//! — not a test double of it — is what the loom suite model-checks.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::config::ExecutorKind;
 
+use super::sync::{channel, spawn_named, JoinHandle, Receiver, RecvTimeoutError, Sender};
 use super::{Cmd, Reply, Transport, WorkerCore};
 
 /// How long `recv` waits for a reply before probing in-flight workers
@@ -27,27 +30,24 @@ fn spawn_worker(
     rx: Receiver<Cmd>,
     reply_tx: Sender<(usize, Reply)>,
 ) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name(format!("worker-{id}"))
-        .spawn(move || {
-            while let Ok(cmd) = rx.recv() {
-                match cmd {
-                    Cmd::Nop => continue,
-                    Cmd::Die => break,
-                    cmd => match core.execute(cmd) {
-                        // a dead leader (dropped receiver) is a
-                        // normal shutdown race, not an error
-                        Some(reply) => {
-                            if reply_tx.send((id, reply)).is_err() {
-                                break;
-                            }
+    spawn_named(format!("worker-{id}"), move || {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Cmd::Nop => continue,
+                Cmd::Die => break,
+                cmd => match core.execute(cmd) {
+                    // a dead leader (dropped receiver) is a
+                    // normal shutdown race, not an error
+                    Some(reply) => {
+                        if reply_tx.send((id, reply)).is_err() {
+                            break;
                         }
-                        None => break,
-                    },
-                }
+                    }
+                    None => break,
+                },
             }
-        })
-        .expect("spawn worker thread")
+        }
+    })
 }
 
 /// Thread-per-worker executor. Each of the P×Q threads owns its
@@ -193,5 +193,119 @@ impl Drop for Threaded {
         for handle in self.handles.get_mut().drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+/// Shutdown/recovery edge cases that the phase barriers in `Cluster`
+/// never produce on their own. They double as the seed scenarios for
+/// the loom suite (`loom_tests.rs`), which replays the same shapes
+/// under exhaustive interleaving; here they run once on real OS
+/// threads. Gated out under `--cfg loom`: these construct `Threaded`
+/// outside a `loom::model`, where loom primitives panic.
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::InProcess;
+    use super::*;
+    use crate::data::{synth, Grid};
+    use crate::engine::{ComputeEngine, NativeEngine};
+    use crate::loss::Loss;
+
+    fn cores(n: usize, m: usize, p: usize, q: usize, seed: u64) -> Vec<WorkerCore> {
+        let ds = synth::dense_zhang(n, m, seed);
+        let grid = Grid::partition(&ds, p, q).unwrap();
+        let engine: Arc<dyn ComputeEngine> = Arc::new(NativeEngine);
+        grid.blocks()
+            .map(|b| WorkerCore::new(b.clone(), Arc::clone(&engine), Loss::Hinge))
+            .collect()
+    }
+
+    /// A full-width `BlockLoss` for a block of `m_per` columns and
+    /// `n_per` rows — the simplest command with a value-carrying reply.
+    fn loss_cmd(n_per: usize, m_per: usize) -> Cmd {
+        let w: Vec<f32> = (0..m_per).map(|j| 0.3 * j as f32 - 0.4).collect();
+        let rows: Vec<u32> = (0..n_per as u32).collect();
+        Cmd::BlockLoss { w: Arc::new(w), rows: Arc::new(rows) }
+    }
+
+    /// What the in-process oracle computes for the same core + command.
+    fn oracle_loss(core: WorkerCore, cmd: Cmd) -> f64 {
+        let oracle = InProcess::new(vec![core]);
+        assert!(oracle.send(0, cmd));
+        match oracle.recv() {
+            (0, Reply::Loss(l)) => l,
+            other => panic!("oracle returned {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drop_with_reply_still_queued_joins_cleanly() {
+        let t = Threaded::spawn(cores(8, 4, 2, 1, 3));
+        assert!(t.send(0, loss_cmd(4, 4)));
+        assert!(t.send(1, loss_cmd(4, 4)));
+        // consume one reply, leave the other queued (or in flight) and
+        // drop: Shutdown must still reach both workers and join must
+        // not hang on the unread reply
+        let (_, reply) = t.recv();
+        assert!(matches!(reply, Reply::Loss(_)), "got {reply:?}");
+        drop(t);
+    }
+
+    #[test]
+    fn drop_after_kill_without_respawn_joins_cleanly() {
+        let t = Threaded::spawn(cores(8, 4, 2, 1, 4));
+        t.kill(0);
+        // Drop's Shutdown send to the dead mailbox fails silently; the
+        // join must still reap the exited thread and worker 1
+        drop(t);
+    }
+
+    #[test]
+    fn respawn_then_immediate_drop_joins_the_replacement() {
+        let mut all = cores(8, 4, 2, 1, 5);
+        let spare = all.remove(0);
+        let replacement =
+            WorkerCore::new(spare.block.clone(), Arc::clone(&spare.engine), Loss::Hinge);
+        all.insert(0, spare);
+        let t = Threaded::spawn(all);
+        t.kill(0);
+        // whether the send beats the Die into the mailbox or observes
+        // it closed, the barrier sees exactly one fault for worker 0
+        let _ = t.send(0, loss_cmd(4, 4));
+        assert!(matches!(t.recv(), (0, Reply::Fault)));
+        t.respawn(0, replacement);
+        // no further traffic: Drop must shut down and join the
+        // replacement thread it never spoke to
+        drop(t);
+    }
+
+    #[test]
+    fn double_kill_in_one_phase_faults_once_then_recovers() {
+        let mut all = cores(8, 4, 1, 1, 6);
+        let core = all.pop().unwrap();
+        let replacement =
+            WorkerCore::new(core.block.clone(), Arc::clone(&core.engine), Loss::Hinge);
+        let expected = oracle_loss(
+            WorkerCore::new(core.block.clone(), Arc::clone(&core.engine), Loss::Hinge),
+            loss_cmd(8, 4),
+        );
+        let t = Threaded::spawn(vec![core]);
+        t.kill(0);
+        t.kill(0); // second Die lands in a closing/closed mailbox: must be a no-op
+        // either the send observes the closed mailbox (synthetic fault
+        // queued) or it lands and the probe path detects the exited
+        // thread — both must surface exactly one Fault, not two
+        let _ = t.send(0, loss_cmd(8, 4));
+        assert!(matches!(t.recv(), (0, Reply::Fault)));
+        t.respawn(0, replacement);
+        assert!(t.send(0, loss_cmd(8, 4)), "respawned worker must accept commands");
+        match t.recv() {
+            (0, Reply::Loss(l)) => {
+                assert_eq!(l.to_bits(), expected.to_bits(), "replayed phase must match oracle")
+            }
+            other => panic!("expected a loss reply after respawn, got {other:?}"),
+        }
+        drop(t);
     }
 }

@@ -124,8 +124,8 @@ impl ExecutorKind {
         if let Some(kind) = pref {
             return Ok(kind);
         }
-        match std::env::var(Self::ENV) {
-            Ok(v) if !v.is_empty() => {
+        match crate::util::env::read(Self::ENV) {
+            Some(v) if !v.is_empty() => {
                 v.parse().map_err(|e: String| anyhow::anyhow!("{}: {e}", Self::ENV))
             }
             _ => Ok(ExecutorKind::InProcess),

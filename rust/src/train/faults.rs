@@ -100,8 +100,8 @@ impl FaultPlan {
     /// blank; a set-but-unparseable value is an error (a silently
     /// ignored typo would fake fault coverage).
     pub fn from_env() -> Result<Option<FaultPlan>> {
-        match std::env::var(FAULT_PLAN_ENV) {
-            Ok(v) if !v.trim().is_empty() => {
+        match crate::util::env::read(FAULT_PLAN_ENV) {
+            Some(v) if !v.trim().is_empty() => {
                 let plan = v.parse().with_context(|| format!("{FAULT_PLAN_ENV}={v:?}"))?;
                 Ok(Some(plan))
             }

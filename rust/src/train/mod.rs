@@ -134,7 +134,8 @@ pub fn build_engine(cfg: &ExperimentConfig) -> Result<Arc<dyn ComputeEngine>> {
                 cfg.p,
                 cfg.q
             );
-            let dir = std::env::var("SODDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            let dir =
+                crate::util::env::read("SODDA_ARTIFACTS").unwrap_or_else(|| "artifacts".into());
             let rt = Arc::new(
                 crate::runtime::XlaRuntime::load(&dir).context(
                     "loading AOT artifacts (build them with `make artifacts` at the partition shape)",

@@ -66,7 +66,7 @@ pub struct Stats {
 
 impl Bench {
     pub fn from_env(group: &str) -> Bench {
-        let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1");
+        let quick = crate::util::env::read("BENCH_QUICK").is_some_and(|v| v == "1");
         let (budget, warmup) = if quick {
             (Duration::from_millis(200), Duration::from_millis(50))
         } else {
@@ -212,8 +212,8 @@ impl Bench {
     /// to `target/bench/<group>.json`), and return the JSON text.
     pub fn finish(self) -> String {
         let text = self.report().to_string_pretty();
-        let path = std::env::var("BENCH_OUT")
-            .unwrap_or_else(|_| format!("target/bench/{}.json", self.group));
+        let path = crate::util::env::read("BENCH_OUT")
+            .unwrap_or_else(|| format!("target/bench/{}.json", self.group));
         let path = std::path::PathBuf::from(path);
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -312,9 +312,10 @@ mod tests {
 
     #[test]
     fn measures_something_sane_and_emits_json() {
-        std::env::set_var("BENCH_QUICK", "1");
         let out = std::env::temp_dir().join("sodda-bench-selftest/selftest.json");
-        std::env::set_var("BENCH_OUT", &out);
+        let _env = crate::util::env::ScopedEnv::new()
+            .with("BENCH_QUICK", Some("1"))
+            .with("BENCH_OUT", Some(out.to_str().unwrap()));
         let mut b = Bench::from_env("selftest");
         let s = b.bench_elems("noop-ish", 2, || std::hint::black_box(1 + 1));
         assert!(s.min_ns >= 0.0 && s.median_ns < 1e6, "{s:?}");
@@ -328,7 +329,6 @@ mod tests {
         // BENCH_OUT file round-trips
         let on_disk = std::fs::read_to_string(&out).unwrap();
         assert_eq!(Value::parse(&on_disk).unwrap(), v);
-        std::env::remove_var("BENCH_OUT");
     }
 
     #[test]
@@ -362,7 +362,7 @@ mod tests {
         fn fake_counter() -> u64 {
             FAKE.fetch_add(500, Ordering::Relaxed)
         }
-        std::env::set_var("BENCH_QUICK", "1");
+        let _env = crate::util::env::ScopedEnv::new().with("BENCH_QUICK", Some("1"));
         // no finish()/BENCH_OUT here — inspect the report directly so
         // this test cannot race the env-var round-trip test above
         let mut b = Bench::from_env("alloc-selftest");
@@ -406,7 +406,7 @@ mod tests {
 
     #[test]
     fn annotate_attaches_columns_to_the_latest_row() {
-        std::env::set_var("BENCH_QUICK", "1");
+        let _env = crate::util::env::ScopedEnv::new().with("BENCH_QUICK", Some("1"));
         let mut b = Bench::from_env("annotate-selftest");
         b.bench("first", || std::hint::black_box(1 + 1));
         let s = b.bench("second", || std::hint::black_box(2 + 2));

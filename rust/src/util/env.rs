@@ -1,0 +1,133 @@
+//! The sanctioned environment-variable surface.
+//!
+//! Every knob the crate reads from the process environment —
+//! `SODDA_EXECUTOR`, `SODDA_FAULT_PLAN`, `SODDA_ARTIFACTS`,
+//! `BENCH_QUICK`, `BENCH_OUT` — goes through [`read`]. The `raw_env`
+//! lint in `xtask` rejects `std::env::var` / `set_var` / `remove_var`
+//! anywhere else in the tree, which is what makes env-dependent tests
+//! safe to run concurrently: every *mutation* goes through this module
+//! and serializes on one process-wide lock, so two tests can't
+//! interleave a set/restore pair and leak a knob into each other.
+//!
+//! ## Locking discipline
+//!
+//! - [`read`] takes **no** lock. Tests legitimately hold the lock
+//!   across a whole stage-and-train scope (set `SODDA_FAULT_PLAN`,
+//!   build a `Trainer` that reads it, assert, restore); if reads
+//!   locked too, that pattern would self-deadlock. A read is a single
+//!   `std::env::var` call — the OS-level race this leaves open (a read
+//!   concurrent with a mutation elsewhere) existed under the old
+//!   ad-hoc mutexes too and is exactly what holding [`lock`] or a
+//!   [`ScopedEnv`] for the duration of the sensitive scope prevents.
+//! - [`set`] / [`unset`] acquire the lock per call. Never call them
+//!   while already holding [`lock`] or a [`ScopedEnv`] — the lock is
+//!   not reentrant. Inside a scope, use [`ScopedEnv::with`] instead.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// One lock for the whole process. Not reentrant.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the env lock for a scope that *reads* a knob some other test
+/// might mutate (e.g. staging a `Trainer` while the fault-plan suite
+/// runs). A panic in a previous holder is fine — the guard's state is
+/// `()`, so a poisoned lock is recovered, not propagated.
+pub fn lock() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read a knob. `None` when unset or not valid UTF-8. Lock-free — see
+/// the module docs for why.
+pub fn read(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// Set a knob, serialized against every other mutation. Must not be
+/// called while holding [`lock`] or a [`ScopedEnv`].
+pub fn set(name: &str, value: &str) {
+    let _g = lock();
+    std::env::set_var(name, value);
+}
+
+/// Remove a knob, serialized against every other mutation. Must not be
+/// called while holding [`lock`] or a [`ScopedEnv`].
+pub fn unset(name: &str) {
+    let _g = lock();
+    std::env::remove_var(name);
+}
+
+/// RAII env scope for tests: holds the process lock, applies
+/// overrides, and restores every prior value (in reverse order, even
+/// on panic) when dropped. Replaces the per-file save/restore mutexes
+/// the executor and fault suites used to carry.
+///
+/// ```
+/// let _env = sodda::util::env::ScopedEnv::new().with("BENCH_QUICK", Some("1"));
+/// assert_eq!(sodda::util::env::read("BENCH_QUICK").as_deref(), Some("1"));
+/// ```
+pub struct ScopedEnv {
+    saved: Vec<(String, Option<String>)>,
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl ScopedEnv {
+    #[allow(clippy::new_without_default)] // a lock acquisition is not a Default
+    pub fn new() -> ScopedEnv {
+        ScopedEnv { saved: Vec::new(), _guard: lock() }
+    }
+
+    /// Override `name` (`Some` sets, `None` unsets), remembering the
+    /// prior value for restore-on-drop.
+    pub fn with(mut self, name: &str, value: Option<&str>) -> ScopedEnv {
+        self.saved.push((name.to_string(), std::env::var(name).ok()));
+        match value {
+            Some(v) => std::env::set_var(name, v),
+            None => std::env::remove_var(name),
+        }
+        self
+    }
+}
+
+impl Drop for ScopedEnv {
+    fn drop(&mut self) {
+        for (name, prior) in self.saved.drain(..).rev() {
+            match prior {
+                Some(v) => std::env::set_var(name, v),
+                None => std::env::remove_var(name),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_env_sets_unsets_and_restores() {
+        // distinct knob per test: tests in this module run concurrently
+        // and only synchronize while actually holding the lock
+        const KNOB: &str = "SODDA_ENV_SELFTEST_RESTORE";
+        set(KNOB, "outer");
+        {
+            let _env = ScopedEnv::new().with(KNOB, Some("inner")).with(KNOB, None);
+            assert_eq!(read(KNOB), None, "latest override wins");
+        }
+        assert_eq!(read(KNOB).as_deref(), Some("outer"), "restored in reverse order");
+        unset(KNOB);
+        assert_eq!(read(KNOB), None);
+    }
+
+    #[test]
+    fn scoped_env_restores_on_panic() {
+        const KNOB: &str = "SODDA_ENV_SELFTEST_PANIC";
+        // The guard is dropped during unwind, so the knob never leaks
+        // into other tests even when the body dies.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _env = ScopedEnv::new().with(KNOB, Some("doomed"));
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert_eq!(read(KNOB), None);
+    }
+}

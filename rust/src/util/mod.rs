@@ -9,11 +9,13 @@
 //! * [`cli`] — flag parser for the `repro` binary and examples
 //! * [`bench`] — micro-benchmark harness (criterion-style reporting)
 //! * [`alloc`] — counting global allocator for alloc-regression gates
+//! * [`env`] — the sanctioned env-var surface + process-wide test lock
 //! * [`testing`] — assert helpers + a tiny property-test driver
 
 pub mod alloc;
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod rng;
 pub mod testing;

@@ -11,11 +11,10 @@
 //! beats the `SODDA_EXECUTOR` env knob beats the in-process default).
 //!
 //! Selection tests mutate the process environment, so they serialize on
-//! a local mutex and restore the prior value (the CI threaded lane sets
-//! `SODDA_EXECUTOR` globally); every other test pins its executor
-//! through the config and never reads the environment.
-
-use std::sync::Mutex;
+//! the crate-wide `util::env` lock (via `ScopedEnv`) and restore the
+//! prior value (the CI threaded lane sets `SODDA_EXECUTOR` globally);
+//! every other test pins its executor through the config and never
+//! reads the environment.
 
 use sodda::config::{AlgorithmKind, ExecutorKind};
 use sodda::util::testing::forall;
@@ -125,26 +124,14 @@ fn reconfigure_rejects_switching_executors() {
 
 // ---- selection plumbing (mutates the process env; serialized) -------------
 
-static ENV_LOCK: Mutex<()> = Mutex::new(());
-
-/// Run `f` with `SODDA_EXECUTOR` set to `value` (or unset for `None`),
-/// restoring whatever was there before — the CI threaded lane exports
-/// the knob process-wide and must still see it afterwards.
+/// Run `f` with `SODDA_EXECUTOR` set to `value` (or unset for `None`).
+/// `ScopedEnv` holds the process-wide env lock for the scope and
+/// restores whatever was there before (even on panic) — the CI
+/// threaded lane exports the knob process-wide and must still see it
+/// afterwards.
 fn with_env(value: Option<&str>, f: impl FnOnce()) {
-    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
-    let prior = std::env::var(ExecutorKind::ENV).ok();
-    match value {
-        Some(v) => std::env::set_var(ExecutorKind::ENV, v),
-        None => std::env::remove_var(ExecutorKind::ENV),
-    }
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-    match prior {
-        Some(v) => std::env::set_var(ExecutorKind::ENV, v),
-        None => std::env::remove_var(ExecutorKind::ENV),
-    }
-    if let Err(payload) = result {
-        std::panic::resume_unwind(payload);
-    }
+    let _env = sodda::util::env::ScopedEnv::new().with(ExecutorKind::ENV, value);
+    f();
 }
 
 #[test]

@@ -9,13 +9,14 @@
 //! restart with the process).
 //!
 //! Staging a `Trainer` reads `SODDA_FAULT_PLAN`, so every test in this
-//! binary serializes on one lock: the env-mutating tests swap the knob
-//! under it, and the rest hold it so they never stage mid-swap. (The
-//! `rust-faults` CI lane exports a plan process-wide; tests that need a
-//! specific schedule set it through `set_fault_plan`, which overrides
-//! the environment either way.)
+//! binary serializes on the crate-wide `util::env` lock: the
+//! env-mutating tests swap the knob under it (`ScopedEnv`), and the
+//! rest hold it so they never stage mid-swap. (The `rust-faults` CI
+//! lane exports a plan process-wide; tests that need a specific
+//! schedule set it through `set_fault_plan`, which overrides the
+//! environment either way.)
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::MutexGuard;
 
 use sodda::config::ExecutorKind;
 use sodda::metrics::History;
@@ -24,30 +25,17 @@ use sodda::util::json::Value;
 use sodda::util::testing::forall;
 use sodda::{ExperimentConfig, ExperimentConfigBuilder, FaultPlan, RunState, Trainer};
 
-static ENV_LOCK: Mutex<()> = Mutex::new(());
-
 fn locked() -> MutexGuard<'static, ()> {
-    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    sodda::util::env::lock()
 }
 
-/// Run `f` with `SODDA_FAULT_PLAN` set to `value` (unset for `None`),
-/// restoring the prior value — the CI fault lane exports the knob
-/// process-wide and must still see it afterwards.
+/// Run `f` with `SODDA_FAULT_PLAN` set to `value` (unset for `None`).
+/// `ScopedEnv` holds the process-wide env lock for the scope and
+/// restores the prior value (even on panic) — the CI fault lane
+/// exports the knob process-wide and must still see it afterwards.
 fn with_plan_env(value: Option<&str>, f: impl FnOnce()) {
-    let _g = locked();
-    let prior = std::env::var(FAULT_PLAN_ENV).ok();
-    match value {
-        Some(v) => std::env::set_var(FAULT_PLAN_ENV, v),
-        None => std::env::remove_var(FAULT_PLAN_ENV),
-    }
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-    match prior {
-        Some(v) => std::env::set_var(FAULT_PLAN_ENV, v),
-        None => std::env::remove_var(FAULT_PLAN_ENV),
-    }
-    if let Err(payload) = result {
-        std::panic::resume_unwind(payload);
-    }
+    let _env = sodda::util::env::ScopedEnv::new().with(FAULT_PLAN_ENV, value);
+    f();
 }
 
 fn base(n: usize, m: usize, p: usize, q: usize, iters: usize) -> ExperimentConfigBuilder {

@@ -1,0 +1,928 @@
+//! Repo-invariant lints: properties of *this* codebase that clippy
+//! cannot express, enforced lexically over a comment-and-string
+//! scrubbed view of the tree.
+//!
+//! | lint | invariant |
+//! |------|-----------|
+//! | `hash_containers` | no `HashMap`/`HashSet` in `train/`, `cluster/`, `engine/` — hash iteration order is nondeterministic and those are the modules the bit-for-bit determinism contract covers |
+//! | `config_literal` | `ExperimentConfig` is only struct-literal-constructed inside `config/` — everyone else goes through the validating builder |
+//! | `raw_env` | no `std::env::var`/`set_var`/`remove_var` outside `util/env.rs` — the sanctioned module is what makes env-mutating tests race-free |
+//! | `steady_alloc` | `train/step.rs` never calls the allocating (non-`_into`) cluster/engine entry points — the steady state is allocation-free by budget |
+//! | `wildcard_cmd` | `WorkerCore::execute` has no wildcard `Cmd` arm — adding a command must force every transport-visible match to be revisited |
+//! | `doc_refs` | backticked path references in README/ROADMAP/CHANGES and `//!` module docs point at files that exist |
+//! | `doc_contract` | the determinism-contract doc section and the CI lanes that enforce it stay present |
+//!
+//! Any flagged line can be waived with `lint:allow(<name>)` in a
+//! comment on the same line or the line above — waivers are meant to
+//! be rare and self-justifying (say *why* next to the tag).
+//!
+//! Every lint has a fixture test below proving it fires on a seeded
+//! violation and stays quiet on the conforming shape, so a lint that
+//! silently stops matching is a test failure, not a blind spot.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Names, in report order — `main.rs` prints the count.
+pub const LINT_NAMES: [&str; 7] = [
+    "hash_containers",
+    "config_literal",
+    "raw_env",
+    "steady_alloc",
+    "wildcard_cmd",
+    "doc_refs",
+    "doc_contract",
+];
+
+pub struct Outcome {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+}
+
+pub struct Violation {
+    pub lint: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// One scanned file: the raw text (waivers, docs, markdown) and, for
+/// Rust sources, a scrubbed view with comment and string/char-literal
+/// contents blanked to spaces (newlines kept, so line numbers agree).
+struct LintFile {
+    path: String,
+    raw_lines: Vec<String>,
+    scrubbed: String,
+}
+
+impl LintFile {
+    fn scrubbed_lines(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.scrubbed.lines().enumerate()
+    }
+
+    fn is_rust(&self) -> bool {
+        self.path.ends_with(".rs")
+    }
+}
+
+fn lint_file(path: &str, text: &str) -> LintFile {
+    let scrubbed = if path.ends_with(".rs") { scrub_rust(text) } else { text.to_string() };
+    LintFile {
+        path: path.to_string(),
+        raw_lines: text.lines().map(str::to_string).collect(),
+        scrubbed,
+    }
+}
+
+/// Run every lint over the tree rooted at `root` (the repo root).
+pub fn run(root: &Path) -> io::Result<Outcome> {
+    let files = collect(root)?;
+    let mut violations = Vec::new();
+    violations.extend(hash_containers(&files));
+    violations.extend(config_literal(&files));
+    violations.extend(raw_env(&files));
+    violations.extend(steady_alloc(&files));
+    violations.extend(wildcard_cmd(&files));
+    violations.extend(doc_refs(root, &files));
+    violations.extend(doc_contract(&files));
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Outcome { files_scanned: files.len(), violations })
+}
+
+// ---------------------------------------------------------------- collect --
+
+/// Rust sources under these roots are linted; `rust/xtask` itself is
+/// deliberately out of scope (its fixtures *contain* seeded
+/// violations).
+const RS_DIRS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+const TEXT_FILES: [&str; 4] =
+    ["README.md", "ROADMAP.md", "CHANGES.md", ".github/workflows/ci.yml"];
+
+fn collect(root: &Path) -> io::Result<Vec<LintFile>> {
+    let mut out = Vec::new();
+    for dir in RS_DIRS {
+        walk(root, &root.join(dir), &mut out)?;
+    }
+    for name in TEXT_FILES {
+        let p = root.join(name);
+        if p.is_file() {
+            out.push(lint_file(name, &fs::read_to_string(&p)?));
+        }
+    }
+    Ok(out)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<LintFile>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?.iter().map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("walked path is under root")
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(lint_file(&rel, &fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- scrubber --
+
+/// Blank comments, string/char-literal contents, raw strings and byte
+/// strings to spaces, preserving newlines (and therefore line
+/// numbers). Lifetimes (`'a`) survive; `'x'` char literals do not.
+fn scrub_rust(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nesting tracked
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        let prev_ident = i > 0 && ident(b[i - 1]);
+        // raw (and raw byte) strings: r"..."  r#"..."#  br"..."
+        if (c == 'r' || c == 'b') && !prev_ident {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0;
+                while k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    for _ in i..=k {
+                        out.push(' ');
+                    }
+                    i = k + 1;
+                    while i < n {
+                        if b[i] == '"' {
+                            let mut h = 0;
+                            while h < hashes && i + 1 + h < n && b[i + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            // plain byte string b"..." — blank the `b`, let the next
+            // iteration handle the opening quote
+            if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+                out.push(' ');
+                i += 1;
+                continue;
+            }
+        }
+        // ordinary string literal
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < n {
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // lifetime vs char literal
+        if c == '\'' {
+            let lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if lifetime {
+                out.push('\'');
+                i += 1;
+                continue;
+            }
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < n {
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                } else if b[i] == '\'' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- helpers --
+
+/// `lint:allow(<name>)` on the flagged line or the one above it.
+fn waived(file: &LintFile, line_idx: usize, lint: &str) -> bool {
+    let tag = format!("lint:allow({lint})");
+    let on = |idx: usize| file.raw_lines.get(idx).is_some_and(|l| l.contains(&tag));
+    on(line_idx) || (line_idx > 0 && on(line_idx - 1))
+}
+
+/// Byte offset of `word` in `line` with identifier boundaries on both
+/// sides, or `None`.
+fn find_word(line: &str, word: &str) -> Option<usize> {
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    for (pos, _) in line.match_indices(word) {
+        let before_ok = !line[..pos].chars().next_back().is_some_and(ident);
+        let after_ok = !line[pos + word.len()..].chars().next().is_some_and(ident);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+fn violation(lint: &'static str, file: &LintFile, line_idx: usize, msg: String) -> Violation {
+    Violation { lint, file: file.path.clone(), line: line_idx + 1, msg }
+}
+
+// ------------------------------------------------------------------ lints --
+
+/// Directories covered by the determinism contract: everything a
+/// computed number flows through.
+const HOT_DIRS: [&str; 3] = ["rust/src/train/", "rust/src/cluster/", "rust/src/engine/"];
+
+fn hash_containers(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if !f.is_rust() || !HOT_DIRS.iter().any(|d| f.path.starts_with(d)) {
+            continue;
+        }
+        for (idx, line) in f.scrubbed_lines() {
+            for word in ["HashMap", "HashSet"] {
+                if find_word(line, word).is_some() && !waived(f, idx, "hash_containers") {
+                    out.push(violation(
+                        "hash_containers",
+                        f,
+                        idx,
+                        format!(
+                            "`{word}` in a determinism-contract module: hash iteration \
+                             order is nondeterministic. Use a Vec/sorted structure, or \
+                             waive with lint:allow(hash_containers) if it is only ever \
+                             membership-tested"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn config_literal(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if !f.is_rust() || f.path.starts_with("rust/src/config/") {
+            continue;
+        }
+        for (idx, line) in f.scrubbed_lines() {
+            let Some(pos) = find_word(line, "ExperimentConfig") else { continue };
+            let after = line[pos + "ExperimentConfig".len()..].trim_start();
+            if !after.starts_with('{') {
+                continue;
+            }
+            let before = &line[..pos];
+            // `-> ExperimentConfig {`, `impl ExperimentConfig {` and
+            // friends are type positions, not construction
+            if before.contains("->") || before.contains("impl") || before.contains("struct") {
+                continue;
+            }
+            if !waived(f, idx, "config_literal") {
+                out.push(violation(
+                    "config_literal",
+                    f,
+                    idx,
+                    "`ExperimentConfig { .. }` struct literal outside config/: construct \
+                     through `ExperimentConfig::builder()` so validation cannot be skipped"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+const ENV_PATTERNS: [&str; 3] = ["env::var", "env::set_var", "env::remove_var"];
+const ENV_MODULE: &str = "rust/src/util/env.rs";
+
+fn raw_env(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if !f.is_rust() || f.path == ENV_MODULE {
+            continue;
+        }
+        for (idx, line) in f.scrubbed_lines() {
+            for pat in ENV_PATTERNS {
+                if line.contains(pat) && !waived(f, idx, "raw_env") {
+                    out.push(violation(
+                        "raw_env",
+                        f,
+                        idx,
+                        format!(
+                            "raw `{pat}` outside util/env.rs: go through \
+                             `util::env::read`/`set`/`unset`/`ScopedEnv` so env access \
+                             stays serialized under the shared test lock"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Allocating (non-`_into`, non-pooled) cluster/engine entry points
+/// that must not appear in the steady-state step. `block_loss` is
+/// absent on purpose: it reduces to a scalar through the leader pool.
+const ALLOC_CALLS: [&str; 10] = [
+    ".partial_z(",
+    ".partial_z_cols(",
+    ".partial_u(",
+    ".partial_u_cols(",
+    ".grad(",
+    ".grad_cols(",
+    ".grad_slice(",
+    ".svrg(",
+    ".svrg_inner(",
+    ".svrg_inner_avg(",
+];
+const STEP_FILE: &str = "rust/src/train/step.rs";
+
+fn steady_alloc(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.path != STEP_FILE {
+            continue;
+        }
+        for (idx, line) in f.scrubbed_lines() {
+            for pat in ALLOC_CALLS {
+                if line.contains(pat) && !waived(f, idx, "steady_alloc") {
+                    out.push(violation(
+                        "steady_alloc",
+                        f,
+                        idx,
+                        format!(
+                            "allocating entry point `{pat}..)` in the steady-state step: \
+                             use the pooled `_into` variant (the alloc-regression gate \
+                             budgets ~7 allocations per outer iteration)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+const TRANSPORT_MOD: &str = "rust/src/cluster/transport/mod.rs";
+
+/// `WorkerCore::execute` must match `Cmd` exhaustively by name: a new
+/// command variant has to be a compile error at every transport-visible
+/// match, not silently swallowed by `_ =>`.
+fn wildcard_cmd(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some(f) = files.iter().find(|f| f.path == TRANSPORT_MOD) else {
+        return out;
+    };
+    let text = &f.scrubbed;
+    let Some(fn_pos) = text.find("fn execute") else {
+        out.push(Violation {
+            lint: "wildcard_cmd",
+            file: f.path.clone(),
+            line: 1,
+            msg: "expected `fn execute` in transport/mod.rs — if WorkerCore::execute moved \
+                  or was renamed, update the wildcard_cmd lint so it keeps guarding the \
+                  Cmd match"
+                .to_string(),
+        });
+        return out;
+    };
+    let bytes: Vec<char> = text[fn_pos..].chars().collect();
+    // span of the function body: first '{' after the signature to its
+    // matching '}'
+    let mut depth = 0usize;
+    let mut body_end = bytes.len();
+    let mut started = false;
+    let mut k = 0;
+    while k < bytes.len() {
+        match bytes[k] {
+            '{' => {
+                depth += 1;
+                started = true;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if started && depth == 0 {
+                    body_end = k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut j = 0;
+    while j < body_end {
+        if bytes[j] == '_'
+            && (j == 0 || !ident(bytes[j - 1]))
+            && (j + 1 >= bytes.len() || !ident(bytes[j + 1]))
+        {
+            let mut t = j + 1;
+            while t < bytes.len() && bytes[t].is_whitespace() {
+                t += 1;
+            }
+            if t + 1 < bytes.len() && bytes[t] == '=' && bytes[t + 1] == '>' {
+                let line_idx =
+                    text[..fn_pos].matches('\n').count() + bytes[..j].iter().filter(|&&c| c == '\n').count();
+                if !waived(f, line_idx, "wildcard_cmd") {
+                    out.push(violation(
+                        "wildcard_cmd",
+                        f,
+                        line_idx,
+                        "wildcard `_ =>` arm inside WorkerCore::execute: match every Cmd \
+                         variant by name so adding a command forces this site to be \
+                         revisited"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+const DOC_EXTS: [&str; 9] =
+    [".rs", ".md", ".json", ".toml", ".yml", ".yaml", ".py", ".txt", ".sh"];
+
+/// Does a backticked token look like a path reference this repo should
+/// contain? Conservative on purpose: flags only slash-paths with a
+/// known extension (or trailing `/`) and bare `*.md` names.
+fn path_candidate(tok: &str) -> bool {
+    if tok.is_empty() || tok.len() > 100 || tok.chars().any(char::is_whitespace) {
+        return false;
+    }
+    const NON_PATH: [&str; 12] =
+        ["<", ">", "(", ")", "{", "}", "*", "|", "=", "::", "#", "@"];
+    if NON_PATH.iter().any(|b| tok.contains(b)) {
+        return false;
+    }
+    if tok.starts_with('/') || tok.starts_with('-') || tok.starts_with("http") {
+        return false;
+    }
+    // build outputs and AOT artifact bundles are legitimately
+    // referenced in docs but never checked in
+    if tok.starts_with("target/") || tok.starts_with("artifacts/") {
+        return false;
+    }
+    if tok.contains('/') {
+        tok.ends_with('/') || DOC_EXTS.iter().any(|e| tok.ends_with(e))
+    } else {
+        tok.ends_with(".md")
+    }
+}
+
+/// Backticked inline-code spans on one line (fenced blocks are the
+/// caller's concern).
+fn inline_code_spans(line: &str) -> Vec<&str> {
+    line.split('`').skip(1).step_by(2).collect()
+}
+
+fn doc_refs(root: &Path, files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        // (doc line index, text, resolution base for relative refs)
+        let doc_lines: Vec<(usize, &str)> = if f.path.ends_with(".md") {
+            f.raw_lines.iter().enumerate().map(|(i, l)| (i, l.as_str())).collect()
+        } else if f.is_rust() {
+            f.raw_lines
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| {
+                    l.trim_start().strip_prefix("//!").map(|rest| (i, rest))
+                })
+                .collect()
+        } else {
+            continue;
+        };
+        let file_dir = Path::new(&f.path).parent().map(|d| root.join(d));
+        let mut in_fence = false;
+        for (idx, text) in doc_lines {
+            if text.trim_start().starts_with("```") {
+                in_fence = !in_fence;
+                continue;
+            }
+            if in_fence {
+                continue;
+            }
+            for tok in inline_code_spans(text) {
+                if !path_candidate(tok) || waived(f, idx, "doc_refs") {
+                    continue;
+                }
+                let mut bases =
+                    vec![root.to_path_buf(), root.join("rust"), root.join("rust/src")];
+                if let Some(d) = &file_dir {
+                    bases.push(d.clone());
+                }
+                if bases.iter().any(|b| b.join(tok).exists()) {
+                    continue;
+                }
+                out.push(violation(
+                    "doc_refs",
+                    f,
+                    idx,
+                    format!(
+                        "doc reference `{tok}` does not resolve against the repo root, \
+                         rust/, rust/src/, or this file's directory — fix the path or \
+                         waive with lint:allow(doc_refs)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+const CONTRACT_HEADING: &str = "## Determinism contract";
+const CI_FILE: &str = ".github/workflows/ci.yml";
+const CI_LANES: [&str; 4] = ["rust-loom:", "rust-tsan:", "rust-miri:", "xtask"];
+
+/// The correctness-tooling docs and CI lanes reference each other;
+/// this keeps any of them from quietly disappearing in a refactor.
+fn doc_contract(files: &[LintFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut require = |path: &str, needle: &str, msg: &str| {
+        match files.iter().find(|f| f.path == path) {
+            Some(f) if f.raw_lines.iter().any(|l| l.contains(needle)) => {}
+            Some(f) => out.push(Violation {
+                lint: "doc_contract",
+                file: f.path.clone(),
+                line: 1,
+                msg: msg.to_string(),
+            }),
+            None => out.push(Violation {
+                lint: "doc_contract",
+                file: path.to_string(),
+                line: 1,
+                msg: format!("file missing from the tree: {msg}"),
+            }),
+        }
+    };
+    require(
+        TRANSPORT_MOD,
+        CONTRACT_HEADING,
+        "the `## Determinism contract` section is gone from the transport module docs — \
+         it is the normative statement the executor-equivalence, loom and TSan lanes \
+         enforce; move it, don't delete it (and update this lint)",
+    );
+    require(
+        "README.md",
+        "eterminism contract",
+        "README no longer references the determinism contract (see \
+         cluster/transport/mod.rs) — the correctness-tooling section must point at it",
+    );
+    for lane in CI_LANES {
+        require(
+            CI_FILE,
+            lane,
+            &format!("CI lane `{lane}` disappeared from the workflow — the correctness \
+                      tooling (loom/TSan/Miri/xtask) must stay wired into CI"),
+        );
+    }
+    out
+}
+
+// ------------------------------------------------------------------ tests --
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(spec: &[(&str, &str)]) -> Vec<LintFile> {
+        spec.iter().map(|(p, t)| lint_file(p, t)).collect()
+    }
+
+    // -- scrubber --
+
+    #[test]
+    fn scrubber_blanks_comments_strings_and_chars_but_not_code() {
+        let src = "let a = \"HashMap\"; // HashMap\nlet b = 'H'; /* HashMap */ let c = HashMap::new();\n";
+        let s = scrub_rust(src);
+        assert_eq!(s.lines().count(), 2);
+        assert!(!s.lines().next().unwrap().contains("HashMap"), "{s}");
+        assert!(s.lines().nth(1).unwrap().contains("HashMap::new"), "{s}");
+        assert_eq!(s.lines().nth(1).unwrap().matches("HashMap").count(), 1, "{s}");
+    }
+
+    #[test]
+    fn scrubber_handles_raw_strings_escapes_and_lifetimes() {
+        let src = r####"let r = r#"env::var "quoted" inside"#; let s = "esc \" env::var";
+fn f<'a>(x: &'a str) -> &'a str { x }
+let c = '"'; let d = b"env::var"; let e = br#"env::var"#; let done = 1;
+"####;
+        let s = scrub_rust(src);
+        assert!(!s.contains("env::var"), "{s}");
+        assert!(s.contains("<'a>"), "lifetimes must survive: {s}");
+        assert!(s.contains("&'a str"), "{s}");
+        assert!(s.contains("let done = 1;"), "code after literals must survive: {s}");
+    }
+
+    #[test]
+    fn scrubber_handles_nested_block_comments() {
+        let s = scrub_rust("a /* x /* HashSet */ y */ b = HashSet;\n");
+        assert_eq!(s.matches("HashSet").count(), 1, "{s}");
+        assert!(s.contains("b = HashSet;"), "{s}");
+    }
+
+    // -- hash_containers --
+
+    #[test]
+    fn hash_containers_fires_in_hot_dirs_only() {
+        let fs = files(&[
+            ("rust/src/train/step2.rs", "use std::collections::HashMap;\n"),
+            ("rust/src/data/synth2.rs", "use std::collections::HashMap;\n"),
+        ]);
+        let v = hash_containers(&fs);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert_eq!(v[0].file, "rust/src/train/step2.rs");
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn hash_containers_respects_waivers_and_scrubbing() {
+        let fs = files(&[(
+            "rust/src/engine/x.rs",
+            "// lint:allow(hash_containers): membership only\nlet s: HashSet<u32> = x;\nlet msg = \"HashSet\";\n",
+        )]);
+        assert!(hash_containers(&fs).is_empty());
+        let fs = files(&[("rust/src/engine/x.rs", "let s: HashSet<u32> = x; // lint:allow(hash_containers)\n")]);
+        assert!(hash_containers(&fs).is_empty());
+    }
+
+    #[test]
+    fn hash_containers_needs_word_boundary() {
+        let fs = files(&[("rust/src/cluster/x.rs", "struct MyHashMapLike; let HashMapper = 1;\n")]);
+        assert!(hash_containers(&fs).is_empty());
+    }
+
+    // -- config_literal --
+
+    #[test]
+    fn config_literal_fires_on_construction_outside_config() {
+        let fs = files(&[("rust/src/train/x.rs", "let c = ExperimentConfig { p: 1 };\n")]);
+        let v = config_literal(&fs);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn config_literal_ignores_type_positions_and_config_module() {
+        let fs = files(&[
+            ("rust/src/train/x.rs", "fn cfg() -> ExperimentConfig {\n"),
+            ("rust/src/train/y.rs", "impl ExperimentConfig {\n"),
+            ("rust/src/config/presets.rs", "let c = ExperimentConfig { p: 1 };\n"),
+            ("rust/tests/z.rs", "fn base(n: usize) -> ExperimentConfig {\n"),
+        ]);
+        assert!(config_literal(&fs).is_empty());
+    }
+
+    // -- raw_env --
+
+    #[test]
+    fn raw_env_fires_outside_the_sanctioned_module() {
+        let fs = files(&[
+            ("rust/src/train/x.rs", "let v = std::env::var(\"SODDA_EXECUTOR\");\n"),
+            ("rust/tests/t.rs", "std::env::set_var(\"A\", \"1\");\nstd::env::remove_var(\"A\");\n"),
+            ("rust/src/util/env.rs", "std::env::var(name).ok()\n"),
+        ]);
+        let v = raw_env(&fs);
+        assert_eq!(v.len(), 3, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert!(v.iter().all(|v| v.file != "rust/src/util/env.rs"));
+    }
+
+    #[test]
+    fn raw_env_allows_sanctioned_calls_and_strings() {
+        let fs = files(&[(
+            "rust/src/train/x.rs",
+            "let v = crate::util::env::read(\"X\");\nsodda::util::env::unset(k);\nlet s = \"env::var\";\n",
+        )]);
+        assert!(raw_env(&fs).is_empty());
+    }
+
+    // -- steady_alloc --
+
+    #[test]
+    fn steady_alloc_fires_only_in_step_rs_and_only_on_allocating_names() {
+        let fs = files(&[(
+            "rust/src/train/step.rs",
+            "let z = cluster.partial_u(&w, &rows);\nlet ok = cluster.partial_u_cols_into(&w, &mut buf);\nlet l = cluster.block_loss(&w, &rows);\n",
+        )]);
+        let v = steady_alloc(&fs);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert_eq!(v[0].line, 1);
+
+        let fs = files(&[("rust/src/train/outer.rs", "let z = cluster.partial_u(&w, &rows);\n")]);
+        assert!(steady_alloc(&fs).is_empty(), "other files may call allocating APIs");
+    }
+
+    // -- wildcard_cmd --
+
+    const EXEC_OK: &str = "pub(crate) fn execute(&mut self, cmd: Cmd) -> Option<Reply> {\n    let reply = match cmd {\n        Cmd::Shutdown | Cmd::Die | Cmd::Nop => return None,\n    };\n    Some(reply)\n}\nfn after() { match x { _ => 1 } }\n";
+
+    #[test]
+    fn wildcard_cmd_accepts_exhaustive_match_and_ignores_other_fns() {
+        let fs = files(&[(TRANSPORT_MOD, EXEC_OK)]);
+        assert!(wildcard_cmd(&fs).is_empty());
+    }
+
+    #[test]
+    fn wildcard_cmd_fires_on_a_seeded_wildcard_arm() {
+        let seeded = EXEC_OK.replace("Cmd::Shutdown | Cmd::Die | Cmd::Nop => return None", "_ => return None");
+        let fs = files(&[(TRANSPORT_MOD, &seeded)]);
+        let v = wildcard_cmd(&fs);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn wildcard_cmd_fires_when_execute_is_missing() {
+        let fs = files(&[(TRANSPORT_MOD, "fn run() {}\n")]);
+        let v = wildcard_cmd(&fs);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("renamed"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn wildcard_cmd_ignores_underscore_bindings() {
+        let src = "fn execute(&mut self) {\n    let _ = tx.send(x);\n    let _unused = 1;\n    match c { Cmd::Nop => {} }\n}\n";
+        let fs = files(&[(TRANSPORT_MOD, src)]);
+        assert!(wildcard_cmd(&fs).is_empty());
+    }
+
+    // -- doc_refs --
+
+    #[test]
+    fn doc_refs_flags_ghost_paths_and_accepts_real_ones() {
+        let root = std::env::temp_dir().join("xtask-docref-fixture");
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(root.join("rust/src")).unwrap();
+        fs::write(root.join("rust/src/lib.rs"), "pub fn x() {}\n").unwrap();
+        let fs_ = files(&[(
+            "README.md",
+            "see `src/lib.rs` and `src/ghost.rs` for details\n```\ncode `src/also_ghost.rs` in a fence\n```\nplain `not-a-path` and `A × B` and `1/f` stay quiet\n",
+        )]);
+        let v = doc_refs(&root, &fs_);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert!(v[0].msg.contains("src/ghost.rs"), "{}", v[0].msg);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn doc_refs_reads_module_docs_and_resolves_relative_to_the_file() {
+        let root = std::env::temp_dir().join("xtask-docref-moddoc");
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(root.join("rust/src/cluster/transport")).unwrap();
+        fs::write(root.join("rust/src/cluster/transport/sync.rs"), "").unwrap();
+        // `transport/sync.rs` resolves only against the doc file's own
+        // directory, not the root/rust/rust-src bases
+        let good =
+            files(&[("rust/src/cluster/mod.rs", "//! see `transport/sync.rs` for the shim\n")]);
+        assert!(doc_refs(&root, &good).is_empty());
+        let bad = files(&[("rust/src/cluster/mod.rs", "//! see `gone/away.rs` for nothing\n")]);
+        assert_eq!(doc_refs(&root, &bad).len(), 1);
+        // bare names without a slash are not path candidates — too many
+        // false positives (`main.rs`-style prose mentions)
+        let bare = files(&[("rust/src/cluster/mod.rs", "//! see `nonexistent.rs`\n")]);
+        assert!(doc_refs(&root, &bare).is_empty());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    // -- doc_contract --
+
+    fn contract_files() -> Vec<LintFile> {
+        files(&[
+            (TRANSPORT_MOD, "//! ## Determinism contract\nfn execute() {}\n"),
+            ("README.md", "the determinism contract lives in the transport docs\n"),
+            (CI_FILE, "jobs:\n  rust-loom:\n  rust-tsan:\n  rust-miri:\n  x:\n    run: cargo run -p xtask -- lint\n"),
+        ])
+    }
+
+    #[test]
+    fn doc_contract_passes_when_everything_is_wired() {
+        assert!(doc_contract(&contract_files()).is_empty());
+    }
+
+    #[test]
+    fn doc_contract_fires_when_the_heading_or_a_lane_vanishes() {
+        let mut fs_ = contract_files();
+        fs_[0] = lint_file(TRANSPORT_MOD, "//! no contract here\nfn execute() {}\n");
+        assert_eq!(doc_contract(&fs_).len(), 1);
+
+        let mut fs_ = contract_files();
+        fs_[2] = lint_file(CI_FILE, "jobs:\n  rust-loom:\n  rust-miri:\n    run: xtask\n");
+        let v = doc_contract(&fs_);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert!(v[0].msg.contains("rust-tsan"), "{}", v[0].msg);
+    }
+
+    // -- end to end on this repo --
+
+    #[test]
+    fn the_real_tree_is_lint_clean() {
+        // xtask sits at <repo>/rust/xtask
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().parent().unwrap();
+        let outcome = run(root).expect("scan the repo");
+        assert!(outcome.files_scanned > 40, "scanned {} files", outcome.files_scanned);
+        let msgs: Vec<String> = outcome.violations.iter().map(|v| v.to_string()).collect();
+        assert!(msgs.is_empty(), "violations on the real tree:\n{}", msgs.join("\n"));
+    }
+}

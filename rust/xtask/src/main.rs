@@ -1,0 +1,67 @@
+//! `cargo xtask`-style repo tooling. One subcommand so far:
+//!
+//! ```text
+//! cargo run -p xtask -- lint [--root <repo-root>]
+//! ```
+//!
+//! runs the repo-invariant lint pass (see [`lints`]) over the tree and
+//! exits non-zero listing every violation. CI runs it in the main
+//! `rust` lane; the lints themselves are unit-tested against seeded
+//! violations in `lints.rs`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+mod lints;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <repo-root>]");
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("lint") => {}
+        _ => return usage(),
+    }
+    let root = match (it.next().map(String::as_str), it.next()) {
+        (None, _) => {
+            // xtask lives at <repo>/rust/xtask
+            let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            p.pop();
+            p.pop();
+            p
+        }
+        (Some("--root"), Some(path)) => PathBuf::from(path),
+        _ => return usage(),
+    };
+
+    let outcome = match lints::run(&root) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("xtask lint: failed to scan {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if outcome.violations.is_empty() {
+        println!(
+            "xtask lint: OK — {} files, {} lints, 0 violations",
+            outcome.files_scanned,
+            lints::LINT_NAMES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &outcome.violations {
+            eprintln!("{v}");
+        }
+        eprintln!(
+            "xtask lint: {} violation(s) across {} files (waive a line with \
+             `lint:allow(<name>)` in a comment on or above it)",
+            outcome.violations.len(),
+            outcome.files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}
