@@ -1,0 +1,111 @@
+//! Re-shard benchmark: the cost of elastic degradation (PR 9's
+//! tentpole acceptance).
+//!
+//! A permanent worker loss triggers a live re-shard: the trainer rolls
+//! the interrupted iteration back, re-partitions the surviving data
+//! onto a grid one row-partition smaller, and charges the `SimNet` for
+//! the shuffle. Both halves of that charge are deterministic model
+//! outputs, so they are **gated on every run, quick mode included**:
+//!
+//! * the shuffle bytes must equal an independent re-partition's summed
+//!   wire size (`Store::approx_bytes` + labels) — the accounting is
+//!   honest, not an estimate;
+//! * the shuffle must cost simulated time (> 0), and the degraded run
+//!   must still complete its full horizon on the shrunk grid.
+//!
+//! Wall-clock rows are report-only medians for the bench-gate file:
+//! they time a short degraded run (kill → rollback → re-shard →
+//! continue) next to its clean twin, on the in-process executor.
+
+use sodda::config::ExecutorKind;
+use sodda::data::{Grid, Layout};
+use sodda::util::bench::Bench;
+use sodda::{ExperimentConfig, Trainer};
+
+const ITERS: usize = 6;
+
+fn session(n: usize, m: usize, iters: usize) -> ExperimentConfig {
+    ExperimentConfig::builder()
+        .name("reshard")
+        .dense(n, m)
+        .grid(3, 2)
+        .inner_steps(4)
+        .outer_iters(iters)
+        .eval_every(iters)
+        .fractions_bcd(1.0, 1.0, 0.85)
+        .seed(42)
+        .executor(ExecutorKind::InProcess)
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut b = Bench::from_env("reshard");
+
+    // ---- deterministic gates: honest shuffle accounting ----------------
+    let (n, m) = (6000, 600);
+    let mut t = Trainer::new(session(n, m, ITERS)).unwrap();
+    t.set_fault_plan(Some("1@3:grad!perm".parse().unwrap()));
+    t.run().unwrap();
+    let reshards = t.history().reshards.clone();
+    assert_eq!(reshards.len(), 1, "expected exactly one re-shard");
+    let r = reshards[0];
+    println!(
+        "perm loss of worker {} at iter {}: {}x{} -> {}x{}, shuffled {} bytes in {:.3} sim ms",
+        r.worker,
+        r.iter,
+        r.from_p,
+        r.from_q,
+        r.to_p,
+        r.to_q,
+        r.bytes,
+        r.sim_s * 1e3
+    );
+
+    // independently re-partition the dataset at the shrunk shape and sum
+    // the wire size of every block the re-shard had to move
+    let layout = Layout::new(n, m, r.to_p, r.to_q).unwrap();
+    let grid = Grid::partition_with_layout(t.dataset(), layout).unwrap();
+    let expected: u64 =
+        grid.blocks().map(|blk| (blk.x.approx_bytes() + 4 * blk.y.len()) as u64).sum();
+
+    let mut failed = false;
+    if r.bytes != expected {
+        eprintln!(
+            "REGRESSION: re-shard charged {} bytes but the shrunk partition weighs {} — \
+             the SimNet shuffle accounting is dishonest",
+            r.bytes, expected
+        );
+        failed = true;
+    }
+    if r.sim_s <= 0.0 {
+        eprintln!("REGRESSION: the re-shard shuffle cost no simulated time");
+        failed = true;
+    }
+    if !t.is_done() || t.history().records.last().map(|rec| rec.iter) != Some(ITERS) {
+        eprintln!("REGRESSION: the degraded run did not complete its horizon");
+        failed = true;
+    }
+    if (t.config().p, t.config().q) != (r.to_p, r.to_q) {
+        eprintln!("REGRESSION: the session is not running on the shrunk grid it logged");
+        failed = true;
+    }
+
+    // ---- report-only wall rows (smaller shape: each sample stages,
+    // kills, re-shards and finishes a whole run) ------------------------
+    b.bench("degraded run (perm@2, 3x2 -> 2x2)", || {
+        let mut t = Trainer::new(session(1200, 240, 4)).unwrap();
+        t.set_fault_plan(Some("1@2:grad!perm".parse().unwrap()));
+        t.run().unwrap()
+    });
+    b.bench("clean run (same shape, 3x2)", || {
+        let mut t = Trainer::new(session(1200, 240, 4)).unwrap();
+        t.set_fault_plan(None);
+        t.run().unwrap()
+    });
+    b.finish();
+
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -45,6 +45,22 @@
 //! recv. Recovery traffic is *not* charged to the [`SimNet`] cost
 //! model — the paper's time axis excludes failure handling.
 //!
+//! ## Escalation to permanent loss
+//!
+//! Respawn is not guaranteed to succeed: the leader's
+//! [`crate::config::RecoveryPolicy`] gives each fault `max_retries`
+//! respawn attempts (with linear backoff between them) before giving
+//! up, and a fault armed through [`Cluster::inject_permanent_fault`]
+//! (the `!perm` fault-plan syntax) skips the attempts entirely. Either
+//! way the in-flight phase stops and returns a typed
+//! [`PermanentLoss`] carrying the dead worker's id — every phase
+//! method is `Result`-returning for exactly this. A permanent loss is
+//! *not* a dead-end error: the `Trainer` catches it, recomputes a
+//! shrunk layout, restages the surviving shards onto a fresh cluster
+//! (charging SimNet the shuffle bytes) and re-runs the interrupted
+//! iteration — see `train/mod.rs` and the README's elastic
+//! re-sharding section.
+//!
 //! ## Steady-state memory
 //!
 //! After warm-up the message protocol allocates nothing per phase:
@@ -83,16 +99,49 @@ pub mod transport;
 pub use simnet::SimNet;
 
 use std::cell::RefCell;
+use std::fmt;
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Duration;
 
 use transport::{Cmd, Reply, Transport, WorkerCore};
 
-use crate::config::ExecutorKind;
+use crate::config::{ExecutorKind, RecoveryPolicy};
 use crate::data::{Grid, Layout};
 use crate::engine::ComputeEngine;
 use crate::loss::Loss;
 use crate::util::arc_mut;
+
+/// A worker the recovery machinery gave up on: every respawn attempt
+/// allowed by the [`RecoveryPolicy`] failed, or the fault was armed
+/// permanent ([`Cluster::inject_permanent_fault`]). Carried by every
+/// phase method's `Err` — the in-flight phase is abandoned (surviving
+/// workers may still hold queued commands; the cluster is meant to be
+/// dropped wholesale). Not a dead-end: the `Trainer` catches this,
+/// re-shards onto a shrunk grid and re-runs the interrupted iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PermanentLoss {
+    /// linear worker id (`p·Q + q`) on the grid that lost the worker
+    pub worker: usize,
+}
+
+impl fmt::Display for PermanentLoss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "worker {} permanently lost (recovery exhausted)", self.worker)
+    }
+}
+
+impl std::error::Error for PermanentLoss {}
+
+/// Per-worker fault arming state (see [`Cluster::inject_fault`] /
+/// [`Cluster::inject_permanent_fault`]). A death with `Clear` armed is
+/// a genuine bug and panics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Armed {
+    Clear,
+    Transient,
+    Perm,
+}
 
 /// One SVRG assignment for the inner-loop phase.
 pub struct SvrgTask {
@@ -183,9 +232,11 @@ pub struct Cluster {
     loss: Loss,
     /// workers with an injected (expected) kill not yet recovered —
     /// a fault from any other worker is a genuine bug and panics
-    armed: RefCell<Vec<bool>>,
+    armed: RefCell<Vec<Armed>>,
     /// worker ids recovered so far, in recovery order
     fault_log: RefCell<Vec<usize>>,
+    /// retry/backoff/escalation knobs for [`Cluster::recover`]
+    policy: RecoveryPolicy,
 }
 
 impl Cluster {
@@ -199,12 +250,28 @@ impl Cluster {
         Self::launch_with(grid, engine, loss, kind)
     }
 
-    /// Move the grid's blocks into workers run by the given executor.
+    /// Move the grid's blocks into workers run by the given executor,
+    /// recovering faults under the default [`RecoveryPolicy`].
     pub fn launch_with(
         grid: Grid,
         engine: Arc<dyn ComputeEngine>,
         loss: Loss,
         kind: ExecutorKind,
+    ) -> Cluster {
+        Self::launch_with_policy(grid, engine, loss, kind, RecoveryPolicy::default())
+    }
+
+    /// [`Cluster::launch_with`] with explicit recovery knobs: the
+    /// threaded transport probes its reply channel every
+    /// `policy.probe_ms`, and [`Cluster::recover`] retries respawn
+    /// `policy.max_retries` times (linear `backoff_ms` between
+    /// attempts) before escalating to [`PermanentLoss`].
+    pub fn launch_with_policy(
+        grid: Grid,
+        engine: Arc<dyn ComputeEngine>,
+        loss: Loss,
+        kind: ExecutorKind,
+        policy: RecoveryPolicy,
     ) -> Cluster {
         let layout = grid.layout.clone();
         let (p, q) = (layout.p, layout.q);
@@ -222,7 +289,7 @@ impl Cluster {
                 cores.push(WorkerCore::new(store.block(pi, qi).clone(), Arc::clone(&engine), loss));
             }
         }
-        let transport = transport::launch(kind, cores);
+        let transport = transport::launch(kind, cores, Duration::from_millis(policy.probe_ms));
         let scratch = RefCell::new(LeaderScratch {
             f32_pool: Vec::new(),
             idx_pool: Vec::new(),
@@ -244,8 +311,9 @@ impl Cluster {
             store,
             engine,
             loss,
-            armed: RefCell::new(vec![false; p * q]),
+            armed: RefCell::new(vec![Armed::Clear; p * q]),
             fault_log: RefCell::new(Vec::new()),
+            policy,
         }
     }
 
@@ -258,8 +326,25 @@ impl Cluster {
     /// the recovered run stays bit-identical to a fault-free run.
     pub fn inject_fault(&self, wid: usize) {
         assert!(wid < self.p * self.q, "worker {wid} outside the {}x{} grid", self.p, self.q);
-        self.armed.borrow_mut()[wid] = true;
+        self.armed.borrow_mut()[wid] = Armed::Transient;
         self.transport.kill(wid);
+    }
+
+    /// [`Cluster::inject_fault`] with no way back: the next phase that
+    /// touches `wid` skips the respawn attempts and escalates straight
+    /// to [`PermanentLoss`] — the `!perm` fault-plan syntax and the
+    /// machine-loss half of `tests/faults.rs` ride on this.
+    pub fn inject_permanent_fault(&self, wid: usize) {
+        assert!(wid < self.p * self.q, "worker {wid} outside the {}x{} grid", self.p, self.q);
+        self.armed.borrow_mut()[wid] = Armed::Perm;
+        self.transport.kill(wid);
+    }
+
+    /// Make the next `n` transport respawn attempts fail (test hook for
+    /// the retry/escalation path; a no-op on the in-process oracle,
+    /// whose inline respawn cannot fail).
+    pub fn refuse_respawns(&self, n: usize) {
+        self.transport.refuse_respawns(n);
     }
 
     /// Worker ids recovered so far, in recovery order (observability for
@@ -268,26 +353,53 @@ impl Cluster {
         self.fault_log.borrow().clone()
     }
 
-    /// Re-launch dead worker `wid` from the retained shard store.
-    /// Panics when no fault was armed for it — an *unexpected* worker
-    /// death (e.g. a panicked thread) names the dead worker instead of
-    /// silently hanging the barrier or masking a crash as recoverable.
-    fn recover(&self, wid: usize) {
+    /// Re-launch dead worker `wid` from the retained shard store, under
+    /// the cluster's [`RecoveryPolicy`]: up to `max_retries` respawn
+    /// attempts with linear backoff (`attempt · backoff_ms`) between
+    /// them, then escalate to [`PermanentLoss`]. A fault armed
+    /// permanent escalates immediately — no attempts. Panics when no
+    /// fault was armed for `wid` — an *unexpected* worker death (e.g. a
+    /// panicked thread) names the dead worker instead of silently
+    /// hanging the barrier or masking a crash as recoverable.
+    fn recover(&self, wid: usize) -> Result<(), PermanentLoss> {
+        let arm = self.armed.borrow()[wid];
         assert!(
-            self.armed.borrow()[wid],
+            arm != Armed::Clear,
             "worker {wid} died unexpectedly mid-phase (no fault was injected)"
         );
-        self.armed.borrow_mut()[wid] = false;
+        self.armed.borrow_mut()[wid] = Armed::Clear;
+        if arm == Armed::Perm {
+            return Err(PermanentLoss { worker: wid });
+        }
         let (pi, qi) = (wid / self.q, wid % self.q);
-        let core =
-            WorkerCore::new(self.store.block(pi, qi).clone(), Arc::clone(&self.engine), self.loss);
-        self.transport.respawn(wid, core);
-        self.fault_log.borrow_mut().push(wid);
+        for attempt in 1..=self.policy.max_retries {
+            let core = WorkerCore::new(
+                self.store.block(pi, qi).clone(),
+                Arc::clone(&self.engine),
+                self.loss,
+            );
+            if self.transport.respawn(wid, core) {
+                self.fault_log.borrow_mut().push(wid);
+                return Ok(());
+            }
+            if attempt < self.policy.max_retries && self.policy.backoff_ms > 0 {
+                std::thread::sleep(Duration::from_millis(attempt as u64 * self.policy.backoff_ms));
+            }
+        }
+        Err(PermanentLoss { worker: wid })
     }
 
     /// The executor running this cluster's workers.
     pub fn executor(&self) -> ExecutorKind {
         self.transport.kind()
+    }
+
+    /// Wire size of the retained shard store (matrix blocks + labels) —
+    /// exactly the bytes a (re-)staging of this cluster puts on the
+    /// network. The trainer debug-asserts its re-shard shuffle charge
+    /// against this, keeping the SimNet accounting honest.
+    pub fn staged_bytes(&self) -> u64 {
+        self.store.blocks().map(|b| (b.x.approx_bytes() + 4 * b.y.len()) as u64).sum()
     }
 
     #[inline]
@@ -328,10 +440,14 @@ impl Cluster {
     /// partitions. `w_blocks[q]` is the (masked) parameter slice of block
     /// q; `rows[p]` the sampled local row ids of partition p. Returns
     /// `z[p][k] = x_{rows[p][k]}^{B} · w_B`.
-    pub fn partial_z(&self, w_blocks: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<Vec<f32>> {
+    pub fn partial_z(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+    ) -> Result<Vec<Vec<f32>>, PermanentLoss> {
         let mut z = Vec::new();
-        self.partial_z_into(w_blocks, rows, &mut z);
-        z
+        self.partial_z_into(w_blocks, rows, &mut z)?;
+        Ok(z)
     }
 
     /// In-place [`Cluster::partial_z`]: refills the caller's per-partition
@@ -343,7 +459,7 @@ impl Cluster {
         w_blocks: &[Arc<Vec<f32>>],
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         self.partial_z_impl(w_blocks, None, rows, z)
     }
 
@@ -360,7 +476,7 @@ impl Cluster {
         bcols: &[Arc<Vec<u32>>],
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         self.partial_z_impl(w_blocks, Some(bcols), rows, z)
     }
 
@@ -370,7 +486,7 @@ impl Cluster {
         bcols: Option<&[Arc<Vec<u32>>]>,
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
@@ -402,7 +518,7 @@ impl Cluster {
                     remaining -= 1;
                 }
                 (id, Reply::Fault) => {
-                    self.recover(id);
+                    self.recover(id)?;
                     let (pi, qi) = (id / self.q, id % self.q);
                     let buf = s.f32_pool.pop().unwrap_or_default();
                     self.transport.send(
@@ -431,6 +547,7 @@ impl Cluster {
             }
             s.f32_pool.push(part);
         }
+        Ok(())
     }
 
     /// Phase-1 derivative `u[p][k] = f'(z_k, y_k)`. On single-feature-
@@ -446,14 +563,14 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         leader: &dyn ComputeEngine,
         loss: Loss,
-    ) -> Vec<Vec<f32>> {
+    ) -> Result<Vec<Vec<f32>>, PermanentLoss> {
         let mut u = Vec::new();
-        self.partial_u_into(w_blocks, rows, leader, loss, &mut u);
+        self.partial_u_into(w_blocks, rows, leader, loss, &mut u)?;
         // the Arcs are uniquely owned here (fresh vector, phase barrier
         // passed), so this unwraps without copying
-        u.into_iter()
+        Ok(u.into_iter()
             .map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
-            .collect()
+            .collect())
     }
 
     /// In-place [`Cluster::partial_u`]: refills the caller's recycled
@@ -470,7 +587,7 @@ impl Cluster {
         leader: &dyn ComputeEngine,
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         self.partial_u_impl(w_blocks, None, rows, leader, loss, u)
     }
 
@@ -487,7 +604,7 @@ impl Cluster {
         leader: &dyn ComputeEngine,
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         self.partial_u_impl(w_blocks, Some(bcols), rows, leader, loss, u)
     }
 
@@ -499,11 +616,11 @@ impl Cluster {
         leader: &dyn ComputeEngine,
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         u.resize_with(self.p, Default::default);
         if self.q > 1 {
             let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
-            self.partial_z_impl(w_blocks, bcols, rows, &mut z);
+            self.partial_z_impl(w_blocks, bcols, rows, &mut z)?;
             let mut s = self.scratch.borrow_mut();
             let s = &mut *s;
             for (pi, up) in u.iter_mut().enumerate() {
@@ -537,7 +654,7 @@ impl Cluster {
                         remaining -= 1;
                     }
                     (id, Reply::Fault) => {
-                        self.recover(id);
+                        self.recover(id)?;
                         let buf = s.f32_pool.pop().unwrap_or_default();
                         self.transport.send(
                             id,
@@ -553,6 +670,7 @@ impl Cluster {
                 }
             }
         }
+        Ok(())
     }
 
     /// Distributed objective term `Σ_k f(z_k, y_k)` over the given rows.
@@ -567,10 +685,10 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         leader: &dyn ComputeEngine,
         loss: Loss,
-    ) -> f64 {
+    ) -> Result<f64, PermanentLoss> {
         if self.q > 1 {
             let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
-            self.partial_z_into(w_blocks, rows, &mut z);
+            self.partial_z_into(w_blocks, rows, &mut z)?;
             let mut s = self.scratch.borrow_mut();
             let s = &mut *s;
             let mut total = 0.0f64;
@@ -580,7 +698,7 @@ impl Cluster {
                 total += leader.loss_from_z(loss, zp, &s.y_rows);
             }
             s.z = z;
-            return total;
+            return Ok(total);
         }
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
@@ -599,7 +717,7 @@ impl Cluster {
                     remaining -= 1;
                 }
                 (id, Reply::Fault) => {
-                    self.recover(id);
+                    self.recover(id)?;
                     self.transport.send(
                         id,
                         Cmd::BlockLoss { w: Arc::clone(&w_blocks[0]), rows: Arc::clone(&rows[id]) },
@@ -608,22 +726,31 @@ impl Cluster {
                 _ => panic!("expected Loss reply"),
             }
         }
-        s.loss_parts.iter().sum()
+        Ok(s.loss_parts.iter().sum())
     }
 
     /// Phase 2: gradient slices. `u[p]` aligned with `rows[p]`. Returns
     /// the global gradient-sum vector (length `m_total`), summed over
     /// observation partitions per feature block.
-    pub fn grad(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>]) -> Vec<f32> {
+    pub fn grad(
+        &self,
+        u: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+    ) -> Result<Vec<f32>, PermanentLoss> {
         let mut g = Vec::new();
-        self.grad_into(u, rows, &mut g);
-        g
+        self.grad_into(u, rows, &mut g)?;
+        Ok(g)
     }
 
     /// In-place [`Cluster::grad`]: zeroes and refills the caller's
     /// buffer, assembling slices in worker-id order exactly like the
     /// allocating path (bit-for-bit).
-    pub fn grad_into(&self, u: &[Arc<Vec<f32>>], rows: &[Arc<Vec<u32>>], g: &mut Vec<f32>) {
+    pub fn grad_into(
+        &self,
+        u: &[Arc<Vec<f32>>],
+        rows: &[Arc<Vec<u32>>],
+        g: &mut Vec<f32>,
+    ) -> Result<(), PermanentLoss> {
         self.grad_impl(u, None, rows, g)
     }
 
@@ -641,7 +768,7 @@ impl Cluster {
         ccols: &[Arc<Vec<u32>>],
         rows: &[Arc<Vec<u32>>],
         g: &mut Vec<f32>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         self.grad_impl(u, Some(ccols), rows, g)
     }
 
@@ -651,7 +778,7 @@ impl Cluster {
         ccols: Option<&[Arc<Vec<u32>>]>,
         rows: &[Arc<Vec<u32>>],
         g: &mut Vec<f32>,
-    ) {
+    ) -> Result<(), PermanentLoss> {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
             for qi in 0..self.q {
@@ -676,7 +803,7 @@ impl Cluster {
                     remaining -= 1;
                 }
                 (id, Reply::Fault) => {
-                    self.recover(id);
+                    self.recover(id)?;
                     let (pi, qi) = (id / self.q, id % self.q);
                     let buf = s.f32_pool.pop().unwrap_or_default();
                     self.transport.send(
@@ -717,14 +844,15 @@ impl Cluster {
             }
             s.f32_pool.push(slice);
         }
+        Ok(())
     }
 
     /// Phase 3: the parallel inner loops. Returns `(task_index, w_L)` in
     /// completion order.
-    pub fn svrg(&self, mut tasks: Vec<SvrgTask>) -> Vec<(usize, Vec<f32>)> {
+    pub fn svrg(&self, mut tasks: Vec<SvrgTask>) -> Result<Vec<(usize, Vec<f32>)>, PermanentLoss> {
         let mut out = Vec::with_capacity(tasks.len());
-        self.svrg_run(&mut tasks, |ti, w| out.push((ti, w.to_vec())));
-        out
+        self.svrg_run(&mut tasks, |ti, w| out.push((ti, w.to_vec())))?;
+        Ok(out)
     }
 
     /// Pooled [`Cluster::svrg`]: drains `tasks` (the vector keeps its
@@ -734,7 +862,11 @@ impl Cluster {
     /// phase allocates nothing. Completion order is non-deterministic,
     /// but tasks own disjoint column ranges, so any write-back through
     /// `apply` lands bit-identically.
-    pub fn svrg_run(&self, tasks: &mut Vec<SvrgTask>, mut apply: impl FnMut(usize, &[f32])) {
+    pub fn svrg_run(
+        &self,
+        tasks: &mut Vec<SvrgTask>,
+        mut apply: impl FnMut(usize, &[f32]),
+    ) -> Result<(), PermanentLoss> {
         let n = tasks.len();
         {
             let mut s = self.scratch.borrow_mut();
@@ -792,7 +924,7 @@ impl Cluster {
                     remaining -= 1;
                 }
                 (id, Reply::Fault) => {
-                    self.recover(id);
+                    self.recover(id)?;
                     let cmd = {
                         let mut s = self.scratch.borrow_mut();
                         let buf = s.f32_pool.pop().unwrap_or_default();
@@ -815,6 +947,7 @@ impl Cluster {
                 _ => panic!("expected W reply"),
             }
         }
+        Ok(())
     }
 }
 
@@ -839,7 +972,7 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 6..(qi + 1) * 6].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
-        let z = c.partial_z(&w_blocks, &rows);
+        let z = c.partial_z(&w_blocks, &rows).unwrap();
         for pi in 0..3 {
             for k in 0..10 {
                 let gr = pi * 10 + k;
@@ -858,19 +991,19 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 6..(qi + 1) * 6].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new(vec![0u32, 2, 5, 9])).collect();
-        let cold_z = c.partial_z(&w_blocks, &rows);
-        let warm_z = c.partial_z(&w_blocks, &rows);
+        let cold_z = c.partial_z(&w_blocks, &rows).unwrap();
+        let warm_z = c.partial_z(&w_blocks, &rows).unwrap();
         assert_eq!(cold_z, warm_z);
-        let cold_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
-        let warm_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let cold_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
+        let warm_u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         assert_eq!(cold_u, warm_u);
-        let cold_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
-        let warm_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let cold_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
+        let warm_l = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         assert_eq!(cold_l, warm_l);
         c.drop_scratch();
-        assert_eq!(c.partial_z(&w_blocks, &rows), cold_z);
-        assert_eq!(c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge), cold_u);
-        assert_eq!(c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge), cold_l);
+        assert_eq!(c.partial_z(&w_blocks, &rows).unwrap(), cold_z);
+        assert_eq!(c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap(), cold_u);
+        assert_eq!(c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap(), cold_l);
     }
 
     #[test]
@@ -880,9 +1013,9 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
-        let _ = c.partial_z(&w_blocks, &rows);
+        let _ = c.partial_z(&w_blocks, &rows).unwrap();
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
-        let _ = c.partial_z(&w_blocks, &rows);
+        let _ = c.partial_z(&w_blocks, &rows).unwrap();
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
     }
 
@@ -927,15 +1060,15 @@ mod tests {
             (0..2).map(|qi| Arc::new(w_masked[c.layout.block_cols(qi)].to_vec())).collect();
 
         let mut z_sampled = Vec::new();
-        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z_sampled);
-        let z_full = c.partial_z(&w_blocks, &rows);
+        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z_sampled).unwrap();
+        let z_full = c.partial_z(&w_blocks, &rows).unwrap();
         for (zs, zf) in z_sampled.iter().zip(&z_full) {
             assert_close_slice(zs, zf, 1e-5, 1e-6, "sampled z vs masked z");
         }
 
         let mut u_sampled = Vec::new();
-        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u_sampled);
-        let u_full = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u_sampled).unwrap();
+        let u_full = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         for (us, uf) in u_sampled.iter().zip(&u_full) {
             assert_close_slice(us, uf, 1e-5, 1e-6, "sampled u vs masked u");
         }
@@ -944,8 +1077,8 @@ mod tests {
         let u_arcs: Vec<Arc<Vec<f32>>> =
             u_full.iter().map(|up| Arc::new(up.clone())).collect();
         let mut g_sampled = Vec::new();
-        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_sampled);
-        let g_full = c.grad(&u_arcs, &rows);
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_sampled).unwrap();
+        let g_full = c.grad(&u_arcs, &rows).unwrap();
         assert_eq!(g_sampled.len(), 12, "sampled g is full-length, projected");
         for i in 0..12u32 {
             if c_ids.contains(&i) {
@@ -969,22 +1102,22 @@ mod tests {
         let (bcols, w_compact) = split_cols(&c, &b_ids, &w);
         assert!(bcols[0].is_empty(), "test premise: empty intersection in block 0");
         let mut cold = Vec::new();
-        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut cold);
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut cold).unwrap();
         let mut warm = Vec::new();
-        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut warm);
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut warm).unwrap();
         let cold_v: Vec<Vec<f32>> = cold.iter().map(|a| a.as_ref().clone()).collect();
         let warm_v: Vec<Vec<f32>> = warm.iter().map(|a| a.as_ref().clone()).collect();
         assert_eq!(cold_v, warm_v);
         let u_arcs = cold;
         let (ccols, _) = split_cols(&c, &b_ids, &w);
         let mut g1 = Vec::new();
-        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g1);
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g1).unwrap();
         let mut g2 = Vec::new();
-        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g2);
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g2).unwrap();
         assert_eq!(g1, g2);
         c.drop_scratch();
         let mut g3 = Vec::new();
-        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g3);
+        c.grad_cols_into(&u_arcs, &ccols, &rows, &mut g3).unwrap();
         assert_eq!(g1, g3, "pooled vs fresh sampled grad must not change bits");
     }
 
@@ -998,9 +1131,9 @@ mod tests {
         let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
         let (bcols, w_compact) = split_cols(&c, &b_ids, &w);
         let mut u = Vec::new();
-        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u);
+        c.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut u).unwrap();
         let mut z = Vec::new();
-        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z);
+        c.partial_z_cols_into(&w_compact, &bcols, &rows, &mut z).unwrap();
         for pi in 0..3 {
             for k in 0..10 {
                 let want = Loss::Hinge.dloss(z[pi][k], c.y[pi][k]);
@@ -1015,7 +1148,7 @@ mod tests {
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new((0..10u32).collect())).collect();
         let u: Vec<Arc<Vec<f32>>> =
             (0..2).map(|pi| Arc::new((0..10).map(|k| (pi * 10 + k) as f32 * 0.1).collect())).collect();
-        let g = c.grad(&u, &rows);
+        let g = c.grad(&u, &rows).unwrap();
         let mut want = vec![0.0f32; 8];
         for gr in 0..20 {
             let uv = gr as f32 * 0.1;
@@ -1060,7 +1193,7 @@ mod tests {
                 avg: true,
             },
         ];
-        let mut out = c.svrg(tasks);
+        let mut out = c.svrg(tasks).unwrap();
         out.sort_by_key(|(ti, _)| *ti);
         assert_eq!(out[0].1, vec![1.0, 2.0]);
         assert_eq!(out[1].1, vec![3.0, 4.0]);
@@ -1072,8 +1205,8 @@ mod tests {
         let w: Vec<f32> = (0..12).map(|i| 0.05 * i as f32 - 0.2).collect();
         let w_blocks = vec![Arc::new(w)];
         let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
-        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
-        let z = c.partial_z(&w_blocks, &rows);
+        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
+        let z = c.partial_z(&w_blocks, &rows).unwrap();
         for pi in 0..3 {
             for k in 0..10 {
                 let want = Loss::Hinge.dloss(z[pi][k], c.y[pi][k]);
@@ -1088,7 +1221,7 @@ mod tests {
         let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.4).sin() * 0.3).collect();
         let w_blocks = vec![Arc::new(w.clone())];
         let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new((0..10u32).collect())).collect();
-        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         crate::assert_close!(total / 30.0, ds.objective(&w, Loss::Hinge), 1e-4, 1e-5);
     }
 
@@ -1101,14 +1234,14 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3, 7])).collect();
-        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
-        let z = c.partial_z(&w_blocks, &rows);
+        let u = c.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
+        let z = c.partial_z(&w_blocks, &rows).unwrap();
         for pi in 0..2 {
             let y_rows: Vec<f32> = rows[pi].iter().map(|&r| c.y[pi][r as usize]).collect();
             let want = NativeEngine.dloss_u(Loss::Hinge, &z[pi], &y_rows);
             assert_eq!(u[pi], want, "p={pi}");
         }
-        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        let total = c.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         let want: f64 = (0..2)
             .map(|pi| {
                 let y_rows: Vec<f32> = rows[pi].iter().map(|&r| c.y[pi][r as usize]).collect();
@@ -1129,7 +1262,7 @@ mod tests {
         let rows: Vec<Arc<Vec<u32>>> = (0..2)
             .map(|pi| Arc::new((0..c.layout.rows_in(pi) as u32).collect()))
             .collect();
-        let z = c.partial_z(&w_blocks, &rows);
+        let z = c.partial_z(&w_blocks, &rows).unwrap();
         for pi in 0..2 {
             assert_eq!(z[pi].len(), c.layout.rows_in(pi));
             for k in 0..c.layout.rows_in(pi) {
@@ -1144,7 +1277,7 @@ mod tests {
                 Arc::new((0..c.layout.rows_in(pi)).map(|k| (base + k) as f32 * 0.1).collect())
             })
             .collect();
-        let g = c.grad(&u, &rows);
+        let g = c.grad(&u, &rows).unwrap();
         let mut want = vec![0.0f32; 9];
         for gr in 0..21 {
             let uv = gr as f32 * 0.1;
@@ -1208,30 +1341,30 @@ mod tests {
             .map(|pi| Arc::new((0..a.layout.rows_in(pi) as u32).collect()))
             .collect();
 
-        assert_eq!(a.partial_z(&w_blocks, &rows), b.partial_z(&w_blocks, &rows));
-        let ua = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
-        let ub = b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+        assert_eq!(a.partial_z(&w_blocks, &rows).unwrap(), b.partial_z(&w_blocks, &rows).unwrap());
+        let ua = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
+        let ub = b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
         assert_eq!(ua, ub);
         assert_eq!(
-            a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits(),
-            b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits()
+            a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap().to_bits(),
+            b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap().to_bits()
         );
         let u_arcs: Vec<Arc<Vec<f32>>> = ua.into_iter().map(Arc::new).collect();
-        assert_eq!(a.grad(&u_arcs, &rows), b.grad(&u_arcs, &rows));
+        assert_eq!(a.grad(&u_arcs, &rows).unwrap(), b.grad(&u_arcs, &rows).unwrap());
 
         // sampled-width phases: B spans both blocks, C ⊂ B
         let b_ids = [1u32, 3, 5, 7, 8];
         let (bcols, w_compact) = split_cols(&a, &b_ids, &w);
         let mut us_a = Vec::new();
-        a.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_a);
+        a.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_a).unwrap();
         let mut us_b = Vec::new();
-        b.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_b);
+        b.partial_u_cols_into(&w_compact, &bcols, &rows, &NativeEngine, Loss::Hinge, &mut us_b).unwrap();
         assert_eq!(us_a, us_b);
         let (ccols, _) = split_cols(&a, &[3u32, 7], &w);
         let mut g_a = Vec::new();
-        a.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_a);
+        a.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_a).unwrap();
         let mut g_b = Vec::new();
-        b.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_b);
+        b.grad_cols_into(&u_arcs, &ccols, &rows, &mut g_b).unwrap();
         assert_eq!(g_a, g_b);
 
         // SVRG with a nonzero step: real inner loops, plain and averaged
@@ -1264,7 +1397,7 @@ mod tests {
                     avg: true,
                 },
             ];
-            let mut out = c.svrg(tasks);
+            let mut out = c.svrg(tasks).unwrap();
             out.sort_by_key(|(ti, _)| *ti);
             out
         };
@@ -1281,9 +1414,9 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
-        let _ = c.partial_z(&w_blocks, &rows);
+        let _ = c.partial_z(&w_blocks, &rows).unwrap();
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "all 4 reply buffers recycled");
-        let _ = c.partial_z(&w_blocks, &rows);
+        let _ = c.partial_z(&w_blocks, &rows).unwrap();
         assert_eq!(c.scratch.borrow().f32_pool.len(), 4, "pool does not grow on reuse");
     }
 
@@ -1302,30 +1435,30 @@ mod tests {
                 .map(|pi| Arc::new((0..a.layout.rows_in(pi) as u32).collect()))
                 .collect();
 
-            let z_ok = a.partial_z(&w_blocks, &rows);
+            let z_ok = a.partial_z(&w_blocks, &rows).unwrap();
             b.inject_fault(2);
-            assert_eq!(z_ok, b.partial_z(&w_blocks, &rows), "{kind:?} partial_z");
+            assert_eq!(z_ok, b.partial_z(&w_blocks, &rows).unwrap(), "{kind:?} partial_z");
             assert_eq!(b.recovered_workers(), vec![2]);
 
-            let u_ok = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+            let u_ok = a.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
             b.inject_fault(0);
             assert_eq!(
                 u_ok,
-                b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge),
+                b.partial_u(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap(),
                 "{kind:?} partial_u"
             );
 
             let u_arcs: Vec<Arc<Vec<f32>>> = u_ok.into_iter().map(Arc::new).collect();
-            let g_ok = a.grad(&u_arcs, &rows);
+            let g_ok = a.grad(&u_arcs, &rows).unwrap();
             b.inject_fault(3);
-            assert_eq!(g_ok, b.grad(&u_arcs, &rows), "{kind:?} grad");
+            assert_eq!(g_ok, b.grad(&u_arcs, &rows).unwrap(), "{kind:?} grad");
             assert_eq!(b.recovered_workers(), vec![2, 0, 3]);
 
-            let l_ok = a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge);
+            let l_ok = a.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap();
             b.inject_fault(1);
             assert_eq!(
                 l_ok.to_bits(),
-                b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).to_bits(),
+                b.block_loss(&w_blocks, &rows, &NativeEngine, Loss::Hinge).unwrap().to_bits(),
                 "{kind:?} block_loss"
             );
         }
@@ -1363,7 +1496,7 @@ mod tests {
                         avg: true,
                     },
                 ];
-                let mut out = c.svrg(tasks);
+                let mut out = c.svrg(tasks).unwrap();
                 out.sort_by_key(|(ti, _)| *ti);
                 out
             };
@@ -1382,10 +1515,10 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
-        let base = c.partial_z(&w_blocks, &rows);
+        let base = c.partial_z(&w_blocks, &rows).unwrap();
         for _ in 0..3 {
             c.inject_fault(1);
-            assert_eq!(base, c.partial_z(&w_blocks, &rows));
+            assert_eq!(base, c.partial_z(&w_blocks, &rows).unwrap());
         }
         assert_eq!(c.recovered_workers(), vec![1, 1, 1]);
     }
@@ -1402,6 +1535,60 @@ mod tests {
         let w_blocks: Vec<Arc<Vec<f32>>> =
             (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
         let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
-        let _ = c.partial_z(&w_blocks, &rows);
+        let _ = c.partial_z(&w_blocks, &rows).unwrap();
+    }
+
+    #[test]
+    fn permanent_fault_escalates_without_respawning() {
+        for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+            let (c, _) = cluster_with(20, 8, 2, 2, 21, kind);
+            let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+            let w_blocks: Vec<Arc<Vec<f32>>> =
+                (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+            let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+            c.inject_permanent_fault(2);
+            assert_eq!(
+                c.partial_z(&w_blocks, &rows),
+                Err(PermanentLoss { worker: 2 }),
+                "{kind:?} perm fault must escalate"
+            );
+            assert_eq!(c.recovered_workers(), Vec::<usize>::new(), "no respawn on a perm fault");
+        }
+    }
+
+    #[test]
+    fn exhausted_respawn_retries_escalate_to_permanent_loss() {
+        // threaded only: its respawn can be made to fail; the policy
+        // allows 2 attempts, all refused -> escalation. With one refusal
+        // fewer, the final attempt lands and the phase completes.
+        let ds = synth::dense_zhang(20, 8, 22);
+        let policy = RecoveryPolicy { max_retries: 2, backoff_ms: 0, probe_ms: 50 };
+        let launch = || {
+            let grid = Grid::partition(&ds, 2, 2).unwrap();
+            Cluster::launch_with_policy(
+                grid,
+                Arc::new(NativeEngine),
+                Loss::Hinge,
+                ExecutorKind::Threaded,
+                policy,
+            )
+        };
+        let w: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[qi * 4..(qi + 1) * 4].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..2).map(|_| Arc::new(vec![0u32, 3])).collect();
+
+        let c = launch();
+        let base = c.partial_z(&w_blocks, &rows).unwrap();
+        c.refuse_respawns(2);
+        c.inject_fault(1);
+        assert_eq!(c.partial_z(&w_blocks, &rows), Err(PermanentLoss { worker: 1 }));
+        drop(c);
+
+        let c = launch();
+        c.refuse_respawns(1);
+        c.inject_fault(1);
+        assert_eq!(c.partial_z(&w_blocks, &rows), Ok(base), "second attempt must succeed");
+        assert_eq!(c.recovered_workers(), vec![1]);
     }
 }

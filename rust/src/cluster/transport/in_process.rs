@@ -66,9 +66,12 @@ impl Transport for InProcess {
         self.dead[id].set(true);
     }
 
-    fn respawn(&self, id: usize, core: WorkerCore) {
+    fn respawn(&self, id: usize, core: WorkerCore) -> bool {
+        // the inline oracle rebuilds in place — respawn cannot fail, so
+        // retry/escalation behavior is exercised on the threaded side
         *self.workers[id].borrow_mut() = core;
         self.dead[id].set(false);
+        true
     }
 
     fn kind(&self) -> ExecutorKind {

@@ -291,19 +291,37 @@ pub(crate) trait Transport: Send {
     fn kill(&self, id: usize);
 
     /// Re-launch worker `id` from a freshly rebuilt [`WorkerCore`]
-    /// (shard + engine + empty scratch). The slot is live again
-    /// afterwards; the replacement sees only commands sent after this
-    /// call.
-    fn respawn(&self, id: usize, core: WorkerCore);
+    /// (shard + engine + empty scratch). Returns `true` when the slot
+    /// is live again (the replacement sees only commands sent after
+    /// this call) and `false` when the substrate could not bring the
+    /// worker back — the leader's [`RecoveryPolicy`] retry loop reacts
+    /// to `false`, eventually escalating to permanent loss.
+    ///
+    /// [`RecoveryPolicy`]: crate::config::RecoveryPolicy
+    fn respawn(&self, id: usize, core: WorkerCore) -> bool;
+
+    /// Make the next `n` [`Transport::respawn`] calls report failure
+    /// without touching the slot (fault-injection hook for testing the
+    /// retry/escalation path; default: respawns never refuse).
+    fn refuse_respawns(&self, n: usize) {
+        let _ = n;
+    }
 
     /// Which executor this transport implements (selection reporting).
     fn kind(&self) -> ExecutorKind;
 }
 
 /// Build the transport for `kind` over the given worker cores.
-pub(crate) fn launch(kind: ExecutorKind, cores: Vec<WorkerCore>) -> Box<dyn Transport> {
+/// `probe` is the threaded executor's liveness-probe timeout (from the
+/// leader's recovery policy; ignored by the in-process oracle, which
+/// detects death inline).
+pub(crate) fn launch(
+    kind: ExecutorKind,
+    cores: Vec<WorkerCore>,
+    probe: std::time::Duration,
+) -> Box<dyn Transport> {
     match kind {
         ExecutorKind::InProcess => Box::new(InProcess::new(cores)),
-        ExecutorKind::Threaded => Box::new(Threaded::spawn(cores)),
+        ExecutorKind::Threaded => Box::new(Threaded::spawn_with_probe(cores, probe)),
     }
 }

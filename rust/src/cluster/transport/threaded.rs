@@ -5,7 +5,7 @@
 //! (`std` normally, `loom` under `--cfg loom`), so this exact protocol
 //! — not a test double of it — is what the loom suite model-checks.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::time::Duration;
 
@@ -14,9 +14,10 @@ use crate::config::ExecutorKind;
 use super::sync::{channel, spawn_named, JoinHandle, Receiver, RecvTimeoutError, Sender};
 use super::{Cmd, Reply, Transport, WorkerCore};
 
-/// How long `recv` waits for a reply before probing in-flight workers
-/// for liveness. Purely a detection latency: a slow-but-alive phase
-/// survives any number of probe rounds untouched.
+/// Default for how long `recv` waits for a reply before probing
+/// in-flight workers for liveness (overridable per cluster through the
+/// recovery policy's `probe_ms`). Purely a detection latency: a
+/// slow-but-alive phase survives any number of probe rounds untouched.
 const PROBE_INTERVAL: Duration = Duration::from_millis(100);
 
 /// Spawn one worker thread owning `core`, looping on its private
@@ -79,10 +80,20 @@ pub(crate) struct Threaded {
     /// workers whose send already failed — their synthetic faults,
     /// drained by `recv` before touching the reply channel
     faulted: RefCell<VecDeque<usize>>,
+    /// liveness-probe timeout for `recv` (the recovery policy's
+    /// `probe_ms`)
+    probe: Duration,
+    /// respawns left to refuse (fault-injection hook, see
+    /// [`Transport::refuse_respawns`])
+    refusals: Cell<usize>,
 }
 
 impl Threaded {
     pub(crate) fn spawn(cores: Vec<WorkerCore>) -> Threaded {
+        Self::spawn_with_probe(cores, PROBE_INTERVAL)
+    }
+
+    pub(crate) fn spawn_with_probe(cores: Vec<WorkerCore>, probe: Duration) -> Threaded {
         let n = cores.len();
         let (reply_tx, reply_rx) = channel::<(usize, Reply)>();
         let mut cmd_txs = Vec::with_capacity(n);
@@ -99,6 +110,8 @@ impl Threaded {
             handles: RefCell::new(handles),
             pending: RefCell::new(vec![0; n]),
             faulted: RefCell::new(VecDeque::new()),
+            probe,
+            refusals: Cell::new(0),
         }
     }
 }
@@ -122,7 +135,7 @@ impl Transport for Threaded {
             return (id, Reply::Fault);
         }
         loop {
-            match self.reply_rx.recv_timeout(PROBE_INTERVAL) {
+            match self.reply_rx.recv_timeout(self.probe) {
                 Ok((id, reply)) => {
                     let pending = &mut self.pending.borrow_mut()[id];
                     *pending = pending.saturating_sub(1);
@@ -165,7 +178,11 @@ impl Transport for Threaded {
         let _ = self.cmd_txs.borrow()[id].send(Cmd::Die);
     }
 
-    fn respawn(&self, id: usize, core: WorkerCore) {
+    fn respawn(&self, id: usize, core: WorkerCore) -> bool {
+        if self.refusals.get() > 0 {
+            self.refusals.set(self.refusals.get() - 1);
+            return false;
+        }
         let (tx, rx) = channel::<Cmd>();
         let handle = spawn_worker(id, core, rx, self.reply_tx.clone());
         let old_tx = std::mem::replace(&mut self.cmd_txs.borrow_mut()[id], tx);
@@ -175,6 +192,11 @@ impl Transport for Threaded {
         // join reaps it without blocking the phase
         let _ = old.join();
         self.pending.borrow_mut()[id] = 0;
+        true
+    }
+
+    fn refuse_respawns(&self, n: usize) {
+        self.refusals.set(self.refusals.get() + n);
     }
 
     fn kind(&self) -> ExecutorKind {
@@ -274,7 +296,7 @@ mod tests {
         // it closed, the barrier sees exactly one fault for worker 0
         let _ = t.send(0, loss_cmd(4, 4));
         assert!(matches!(t.recv(), (0, Reply::Fault)));
-        t.respawn(0, replacement);
+        assert!(t.respawn(0, replacement));
         // no further traffic: Drop must shut down and join the
         // replacement thread it never spoke to
         drop(t);
@@ -298,7 +320,7 @@ mod tests {
         // thread — both must surface exactly one Fault, not two
         let _ = t.send(0, loss_cmd(8, 4));
         assert!(matches!(t.recv(), (0, Reply::Fault)));
-        t.respawn(0, replacement);
+        assert!(t.respawn(0, replacement));
         assert!(t.send(0, loss_cmd(8, 4)), "respawned worker must accept commands");
         match t.recv() {
             (0, Reply::Loss(l)) => {

@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 
 use super::{
     AlgorithmKind, ClusterProfile, DataConfig, EngineKind, ExecutorKind, ExperimentConfig,
-    NetworkConfig, SamplingFractions, Schedule, ShardWeighting,
+    NetworkConfig, RecoveryPolicy, SamplingFractions, Schedule, ShardWeighting,
 };
 use crate::loss::Loss;
 
@@ -48,6 +48,7 @@ pub struct ExperimentConfigBuilder {
     network: Option<NetworkConfig>,
     cluster_profile: Option<ClusterProfile>,
     shard_weighting: ShardWeighting,
+    recovery: Option<RecoveryPolicy>,
     eval_every: usize,
     strict_even_grid: bool,
 }
@@ -71,6 +72,7 @@ impl Default for ExperimentConfigBuilder {
             network: None,
             cluster_profile: None,
             shard_weighting: ShardWeighting::Balanced,
+            recovery: None,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -185,6 +187,13 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    /// Fault retry/escalation policy (see [`RecoveryPolicy`]); unset =
+    /// the default (3 retries, 10ms backoff, 100ms probe).
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = Some(policy);
+        self
+    }
+
     /// Evaluate F(ω) every `k` outer iterations (1 = every iteration).
     pub fn eval_every(mut self, k: usize) -> Self {
         self.eval_every = k;
@@ -225,6 +234,7 @@ impl ExperimentConfigBuilder {
             network: self.network,
             cluster_profile: self.cluster_profile,
             shard_weighting: self.shard_weighting,
+            recovery: self.recovery,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         };
@@ -259,6 +269,7 @@ impl ExperimentConfig {
             network: self.network,
             cluster_profile: self.cluster_profile.clone(),
             shard_weighting: self.shard_weighting,
+            recovery: self.recovery,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         }
@@ -368,6 +379,24 @@ mod tests {
             .grid(3, 2)
             .cluster_profile(ClusterProfile::explicit(vec![1.0; 5]));
         assert!(bad.build().is_err(), "5 rates on a 3x2 grid must be rejected");
+    }
+
+    #[test]
+    fn recovery_policy_survives_to_builder() {
+        let policy = RecoveryPolicy { max_retries: 2, backoff_ms: 5, probe_ms: 50 };
+        let cfg = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .recovery(policy)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.recovery, Some(policy));
+        assert_eq!(cfg.to_builder().build().unwrap().recovery, Some(policy));
+        let bad = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .recovery(RecoveryPolicy { max_retries: 0, backoff_ms: 5, probe_ms: 50 });
+        assert!(bad.build().is_err(), "zero-retry policy must be rejected at build");
     }
 
     #[test]

@@ -546,6 +546,94 @@ impl std::str::FromStr for ShardWeighting {
     }
 }
 
+/// Leader-side fault recovery policy: how many respawn attempts a dead
+/// worker gets (with linear backoff between them) before the leader
+/// *escalates* the fault to a permanent loss, and how long the threaded
+/// executor waits on a silent reply channel before probing worker
+/// liveness. `None` on the config means [`RecoveryPolicy::default`].
+///
+/// Escalation is not an error path: on permanent loss the `Trainer`
+/// re-shards the surviving data onto a shrunk grid and continues (see
+/// `Trainer::step`), charging SimNet the shuffle cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Respawn attempts per fault before escalating to permanent loss.
+    pub max_retries: usize,
+    /// Sleep between respawn attempts, milliseconds (attempt `k` waits
+    /// `k · backoff_ms`). Real time, not simulated — SimNet cost is
+    /// charged by the re-shard step, not the retry loop.
+    pub backoff_ms: u64,
+    /// Threaded-executor liveness probe timeout, milliseconds: how long
+    /// the leader waits on a silent reply channel before pinging the
+    /// in-flight workers.
+    pub probe_ms: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        // probe_ms matches the pre-policy hardwired 100ms probe interval
+        RecoveryPolicy { max_retries: 3, backoff_ms: 10, probe_ms: 100 }
+    }
+}
+
+impl RecoveryPolicy {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_retries >= 1, "recovery policy: max_retries must be ≥ 1");
+        ensure!(self.probe_ms >= 1, "recovery policy: probe_ms must be ≥ 1");
+        ensure!(self.backoff_ms <= 10_000, "recovery policy: backoff_ms={} > 10s is surely a typo", self.backoff_ms);
+        Ok(())
+    }
+
+    fn to_json_value(&self) -> Value {
+        json::obj(vec![
+            ("max_retries", json::num(self.max_retries as f64)),
+            ("backoff_ms", json::num(self.backoff_ms as f64)),
+            ("probe_ms", json::num(self.probe_ms as f64)),
+        ])
+    }
+
+    fn from_json_value(v: &Value) -> Result<Self> {
+        Ok(RecoveryPolicy {
+            max_retries: v.get("max_retries")?.as_usize()?,
+            backoff_ms: v.get("backoff_ms")?.as_usize()? as u64,
+            probe_ms: v.get("probe_ms")?.as_usize()? as u64,
+        })
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}", self.max_retries, self.backoff_ms, self.probe_ms)
+    }
+}
+
+/// CLI syntax: `retries[:backoff_ms[:probe_ms]]` — omitted fields keep
+/// their defaults (`3:10:100`).
+impl std::str::FromStr for RecoveryPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut policy = RecoveryPolicy::default();
+        let mut parts = s.split(':');
+        let retries = parts.next().unwrap_or("").trim();
+        policy.max_retries =
+            retries.parse().map_err(|e| format!("recovery retries {retries:?}: {e}"))?;
+        if let Some(b) = parts.next() {
+            policy.backoff_ms =
+                b.trim().parse().map_err(|e| format!("recovery backoff_ms {b:?}: {e}"))?;
+        }
+        if let Some(p) = parts.next() {
+            policy.probe_ms =
+                p.trim().parse().map_err(|e| format!("recovery probe_ms {p:?}: {e}"))?;
+        }
+        if let Some(extra) = parts.next() {
+            return Err(format!(
+                "recovery policy {s:?}: trailing {extra:?} (syntax: retries[:backoff_ms[:probe_ms]])"
+            ));
+        }
+        Ok(policy)
+    }
+}
+
 /// Everything needed to launch one training run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -577,6 +665,9 @@ pub struct ExperimentConfig {
     /// how row shards are sized across the P partitions (see
     /// [`ShardWeighting`]); `Balanced` is the historical behavior
     pub shard_weighting: ShardWeighting,
+    /// fault retry/escalation policy (see [`RecoveryPolicy`]); `None` =
+    /// the default policy (3 retries, 10ms backoff, 100ms probe)
+    pub recovery: Option<RecoveryPolicy>,
     /// evaluate F(w) every k outer iterations (1 = every iteration)
     pub eval_every: usize,
     /// reject shapes that don't divide evenly into the grid (the paper's
@@ -615,6 +706,9 @@ impl ExperimentConfig {
         ensure!(self.eval_every > 0, "eval_every must be positive");
         if let Some(profile) = &self.cluster_profile {
             profile.validate(self.p * self.q)?;
+        }
+        if let Some(recovery) = &self.recovery {
+            recovery.validate()?;
         }
         if self.shard_weighting == ShardWeighting::Throughput {
             ensure!(
@@ -716,6 +810,9 @@ impl ExperimentConfig {
         if self.shard_weighting != ShardWeighting::default() {
             fields.push(("shard_weighting", json::s(self.shard_weighting.to_string())));
         }
+        if let Some(recovery) = &self.recovery {
+            fields.push(("recovery", recovery.to_json_value()));
+        }
         json::obj(fields).to_string_pretty()
     }
 
@@ -789,6 +886,7 @@ impl ExperimentConfig {
                 Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
                 None => ShardWeighting::default(),
             },
+            recovery: v.opt("recovery").map(RecoveryPolicy::from_json_value).transpose()?,
             eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
             strict_even_grid: v
                 .opt("strict_even_grid")
@@ -823,6 +921,7 @@ mod tests {
             network: None,
             cluster_profile: None,
             shard_weighting: ShardWeighting::Balanced,
+            recovery: None,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -981,6 +1080,43 @@ mod tests {
         assert!("gpu".parse::<ClusterProfile>().is_err());
         assert!(ClusterProfile::uniform().is_uniform());
         assert!(!ClusterProfile::one_slow(4.0).is_uniform());
+    }
+
+    #[test]
+    fn recovery_policy_parses_and_round_trips() {
+        let p: RecoveryPolicy = "5".parse().unwrap();
+        assert_eq!(p, RecoveryPolicy { max_retries: 5, ..RecoveryPolicy::default() });
+        let p: RecoveryPolicy = "2:50".parse().unwrap();
+        assert_eq!(p, RecoveryPolicy { max_retries: 2, backoff_ms: 50, probe_ms: 100 });
+        let p: RecoveryPolicy = "4:0:250".parse().unwrap();
+        assert_eq!(p, RecoveryPolicy { max_retries: 4, backoff_ms: 0, probe_ms: 250 });
+        // Display → FromStr round trip
+        assert_eq!(p.to_string().parse::<RecoveryPolicy>().unwrap(), p);
+        assert!("".parse::<RecoveryPolicy>().is_err());
+        assert!("3:1:2:9".parse::<RecoveryPolicy>().is_err(), "trailing field must be rejected");
+        assert!("x".parse::<RecoveryPolicy>().is_err());
+
+        let mut cfg = sample();
+        cfg.recovery = Some(p);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.recovery, Some(p));
+        // unset policy is not emitted — legacy configs stay byte-identical
+        let json = sample().to_json();
+        assert!(!json.contains("recovery"), "unset policy must not serialize");
+        assert_eq!(ExperimentConfig::from_json(&json).unwrap().recovery, None);
+    }
+
+    #[test]
+    fn recovery_policy_validation() {
+        let mut cfg = sample();
+        cfg.recovery = Some(RecoveryPolicy { max_retries: 0, backoff_ms: 1, probe_ms: 100 });
+        assert!(cfg.validate().is_err(), "zero retries must be rejected");
+        cfg.recovery = Some(RecoveryPolicy { max_retries: 1, backoff_ms: 1, probe_ms: 0 });
+        assert!(cfg.validate().is_err(), "zero probe must be rejected");
+        cfg.recovery = Some(RecoveryPolicy { max_retries: 1, backoff_ms: 60_000, probe_ms: 100 });
+        assert!(cfg.validate().is_err(), "absurd backoff must be rejected");
+        cfg.recovery = Some(RecoveryPolicy::default());
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

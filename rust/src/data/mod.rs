@@ -63,6 +63,18 @@ impl Store {
         matches!(self, Store::Sparse(_))
     }
 
+    /// Per-row work proxy for cost-balanced sharding
+    /// ([`Layout::weighted_by_cost`]): the per-row nnz for sparse
+    /// stores, `None` for dense ones (every row costs the same, so
+    /// count-proportional splitting is already exact — and stays
+    /// bit-identical to the historical layouts).
+    pub fn row_costs(&self) -> Option<Vec<f64>> {
+        match self {
+            Store::Dense(_) => None,
+            Store::Sparse(m) => Some((0..m.rows).map(|r| m.row_nnz(r) as f64).collect()),
+        }
+    }
+
     /// `x_r[lo..hi] · w` (w local to the range).
     #[inline]
     pub fn row_dot_range(&self, r: usize, lo: usize, hi: usize, w: &[f32]) -> f32 {

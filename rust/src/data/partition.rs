@@ -69,6 +69,54 @@ pub fn split_points_weighted(total: usize, weights: &[f64]) -> Vec<usize> {
     bounds
 }
 
+/// Cost-aware weighted boundaries: split `0..total` into `parts` ranges
+/// whose summed per-item `costs` (not item counts) are proportional to
+/// `weights` — each boundary is the prefix-sum index nearest to its
+/// cumulative cost target, then clamped non-empty exactly like
+/// [`split_points_weighted`]. Sparse (CSR) shards use this with per-row
+/// nnz as the cost so skewed-density partitions carry equal *work*;
+/// with uniform costs it degrades to count-proportional splitting.
+pub fn split_points_by_cost(total: usize, weights: &[f64], costs: &[f64]) -> Vec<usize> {
+    let parts = weights.len();
+    debug_assert!(parts > 0, "split into zero parts");
+    debug_assert!(total >= parts, "cost split needs total >= parts");
+    debug_assert_eq!(costs.len(), total, "one cost per item");
+    debug_assert!(weights.iter().all(|&w| w.is_finite() && w > 0.0), "weights must be positive");
+    debug_assert!(costs.iter().all(|&c| c.is_finite() && c >= 0.0), "costs must be non-negative");
+    let wsum: f64 = weights.iter().sum();
+    let mut prefix = Vec::with_capacity(total + 1);
+    prefix.push(0.0f64);
+    for &c in costs {
+        prefix.push(prefix.last().unwrap() + c);
+    }
+    let csum = *prefix.last().unwrap();
+    if csum <= 0.0 {
+        // all-zero costs carry no signal — fall back to count-proportional
+        return split_points_weighted(total, weights);
+    }
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    let mut cumw = 0.0;
+    for &w in &weights[..parts - 1] {
+        cumw += w;
+        let target = csum * cumw / wsum;
+        // nearest prefix index to the cumulative cost target
+        let i = prefix.partition_point(|&c| c < target).min(total);
+        let b = if i > 0 && (target - prefix[i - 1]) <= (prefix[i] - target) { i - 1 } else { i };
+        bounds.push(b);
+    }
+    bounds.push(total);
+    // clamp passes guarantee strictly increasing bounds (non-empty parts)
+    for i in 1..=parts {
+        bounds[i] = bounds[i].max(bounds[i - 1] + 1);
+    }
+    bounds[parts] = total;
+    for i in (1..parts).rev() {
+        bounds[i] = bounds[i].min(bounds[i + 1] - 1);
+    }
+    bounds
+}
+
 /// The partition geometry of a `P × Q` grid over an `N × M` dataset:
 /// explicit per-partition row boundaries, per-block column boundaries,
 /// and per-block sub-block boundaries. Shared verbatim between
@@ -140,6 +188,51 @@ impl Layout {
             p * q
         );
         let row_bounds = split_points_weighted(n_total, row_weights);
+        let col_bounds = split_points(m_total, q);
+        let sub_bounds =
+            (0..q).map(|qi| split_points(col_bounds[qi + 1] - col_bounds[qi], p)).collect();
+        Ok(Layout { p, q, n_total, m_total, row_bounds, col_bounds, sub_bounds })
+    }
+
+    /// [`Layout::weighted`] with per-row costs: observation partition
+    /// boundaries place `row_costs` mass (per-row nnz for CSR data)
+    /// proportional to `row_weights`, so a skewed-density sparse matrix
+    /// yields shards of equal *work* per unit of worker rate rather
+    /// than equal row counts. Columns stay balanced, like `weighted`.
+    pub fn weighted_by_cost(
+        n_total: usize,
+        m_total: usize,
+        p: usize,
+        q: usize,
+        row_weights: &[f64],
+        row_costs: &[f64],
+    ) -> Result<Layout> {
+        ensure!(p > 0 && q > 0, "P and Q must be positive");
+        ensure!(
+            row_weights.len() == p,
+            "row_weights has {} entries for P={p} partitions",
+            row_weights.len()
+        );
+        ensure!(
+            row_weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "row weights must be finite and positive"
+        );
+        ensure!(
+            row_costs.len() == n_total,
+            "row_costs has {} entries for N={n_total} rows",
+            row_costs.len()
+        );
+        ensure!(
+            row_costs.iter().all(|c| c.is_finite() && *c >= 0.0),
+            "row costs must be finite and non-negative"
+        );
+        ensure!(n_total >= p, "N={n_total} < P={p} would leave empty observation partitions");
+        ensure!(
+            m_total >= p * q,
+            "M={m_total} < P·Q={} would leave empty sub-blocks",
+            p * q
+        );
+        let row_bounds = split_points_by_cost(n_total, row_weights, row_costs);
         let col_bounds = split_points(m_total, q);
         let sub_bounds =
             (0..q).map(|qi| split_points(col_bounds[qi + 1] - col_bounds[qi], p)).collect();
@@ -362,6 +455,53 @@ mod tests {
         let b = split_points_weighted(61, &[1.0; 3]);
         let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
         assert!(sizes.iter().all(|&s| s == 20 || s == 21), "{sizes:?}");
+    }
+
+    #[test]
+    fn cost_split_balances_mass_not_counts() {
+        // rows 0..20 carry 30 cost units, rows 20..60 carry 3: equal
+        // weights must put ~240 units in each of 3 parts, i.e. bounds
+        // [0, 8, 16, 60] — nothing like the count-balanced [0,20,40,60]
+        let costs: Vec<f64> = (0..60).map(|r| if r < 20 { 30.0 } else { 3.0 }).collect();
+        let b = split_points_by_cost(60, &[1.0; 3], &costs);
+        assert_eq!(b, vec![0, 8, 16, 60]);
+        let mass: Vec<f64> =
+            b.windows(2).map(|w| costs[w[0]..w[1]].iter().sum()).collect();
+        assert!(mass.iter().all(|&m| m == 240.0), "{mass:?}");
+        // uniform costs degrade to count-proportional splitting
+        let flat = vec![1.0; 100];
+        assert_eq!(
+            split_points_by_cost(100, &[1.0, 2.0, 2.0], &flat),
+            split_points_weighted(100, &[1.0, 2.0, 2.0])
+        );
+        // all-zero costs carry no signal — same fallback
+        let zero = vec![0.0; 100];
+        assert_eq!(
+            split_points_by_cost(100, &[1.0, 2.0, 2.0], &zero),
+            split_points_weighted(100, &[1.0, 2.0, 2.0])
+        );
+        // extreme skew still leaves every part non-empty
+        let mut spike = vec![0.0; 6];
+        spike[0] = 1e9;
+        let b = split_points_by_cost(6, &[1.0; 3], &spike);
+        assert_eq!(*b.last().unwrap(), 6);
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+    }
+
+    #[test]
+    fn cost_layout_keeps_columns_balanced_and_rows_nonempty() {
+        let costs: Vec<f64> = (0..60).map(|r| if r < 20 { 30.0 } else { 3.0 }).collect();
+        let l = Layout::weighted_by_cost(60, 24, 3, 2, &[1.0; 3], &costs).unwrap();
+        assert_eq!(l.row_bounds(), &[0, 8, 16, 60]);
+        for qi in 0..2 {
+            assert_eq!(l.cols_in(qi), 12);
+        }
+        assert!(Layout::weighted_by_cost(60, 24, 3, 2, &[1.0; 3], &costs[..59]).is_err());
+        assert!(Layout::weighted_by_cost(60, 24, 3, 2, &[1.0; 2], &costs).is_err());
+        assert!(
+            Layout::weighted_by_cost(60, 24, 3, 2, &[1.0, -1.0, 1.0], &costs).is_err(),
+            "negative weight must be rejected"
+        );
     }
 
     #[test]

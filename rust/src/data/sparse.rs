@@ -254,6 +254,13 @@ impl CsrMatrix {
         self.values.len()
     }
 
+    /// Stored entries in row `r` — the per-row work proxy that
+    /// cost-balanced sharding splits on.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) as usize
+    }
+
     /// Fraction of stored entries relative to the dense size.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.rows as f64 * self.cols as f64)

@@ -83,10 +83,16 @@ TRAIN FLAGS
   --loss F         hinge | logistic | squared (default hinge)
   --b --c --d      sampling fractions (default 0.85/0.80/0.85)
   --target-loss F  stop early once F(w) reaches this value
-  --faults PLAN    kill schedule worker@iter:phase[,...] with phases
-                   mu | grad | inner (e.g. \"2@3:mu,0@5:inner\");
-                   recovery is bit-transparent. Overrides the
-                   SODDA_FAULT_PLAN environment variable
+  --faults PLAN    kill schedule worker@iter:phase[!perm][,...] with
+                   phases mu | grad | inner (e.g. \"2@3:mu,1@4:grad!perm\");
+                   transient recovery is bit-transparent, a !perm event
+                   is a permanent loss: the run re-shards onto a shrunk
+                   grid and continues. Overrides the SODDA_FAULT_PLAN
+                   environment variable
+  --recovery R[:B[:P]]  escalation policy: R respawn retries per fault
+                   (linear backoff B ms between attempts) before the
+                   leader declares the worker permanently lost; P ms
+                   liveness-probe interval (default 3:10:100)
   --checkpoint F   write a resumable snapshot to <out>/F every
                    --checkpoint-every K iterations (default 1) and at
                    the end; excludes --target-loss
@@ -224,6 +230,9 @@ fn cfg_from(
     if let Some(w) = args.get("shard-weighting") {
         b = b.shard_weighting(w.parse().map_err(|e: String| anyhow::anyhow!(e))?);
     }
+    if let Some(r) = args.get("recovery") {
+        b = b.recovery(r.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
     b.build()
 }
 
@@ -240,7 +249,8 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
     println!("dataset {} ({} x {})", ds.name, ds.n(), ds.m());
     // --resume continues a checkpointed run mid-trajectory; the config
     // assembled above must describe the same session (validated at
-    // staging: run name, width, executor, iteration horizon)
+    // staging: run name, width, iteration horizon — the snapshot's
+    // executor is provenance only, so resuming on the other one is fine)
     let mut trainer = match args.get("resume") {
         Some(path) => {
             let snap = RunState::load(std::path::Path::new(path))?;
@@ -295,9 +305,25 @@ fn cmd_train(args: &Args, o: &Opts) -> Result<()> {
             .history
             .faults
             .iter()
-            .map(|f| format!("{}@{}:{}", f.worker, f.iter, f.phase))
+            .map(|f| {
+                format!("{}@{}:{}{}", f.worker, f.iter, f.phase, if f.perm { "!perm" } else { "" })
+            })
             .collect();
-        println!("recovered {} injected fault(s): {}", log.len(), log.join(","));
+        println!("survived {} injected fault(s): {}", log.len(), log.join(","));
+    }
+    for r in &out.history.reshards {
+        println!(
+            "permanent loss of worker {} at iter {}: re-sharded {}x{} -> {}x{} \
+             ({:.2} MB shuffled, {:.3} sim s)",
+            r.worker,
+            r.iter,
+            r.from_p,
+            r.from_q,
+            r.to_p,
+            r.to_q,
+            r.bytes as f64 / 1e6,
+            r.sim_s
+        );
     }
     let path = o.out_dir.join(format!("{}.csv", cfg.name));
     out.history.write_csv(&path)?;

@@ -60,15 +60,42 @@ impl std::str::FromStr for FaultPhase {
     }
 }
 
-/// One injected-and-recovered worker fault (recorded by the trainer;
-/// recovery is bit-transparent, so this is pure observability).
+/// One injected worker fault (recorded by the trainer at arm time;
+/// transient recovery is bit-transparent, so for `perm: false` this is
+/// pure observability — a `perm: true` record marks the loss the
+/// re-shard step reacted to).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FaultRecord {
     /// outer iteration the kill landed in
     pub iter: usize,
-    /// linear worker id (`p·Q + q`)
+    /// linear worker id (`p·Q + q`) **on the grid at arm time**
     pub worker: usize,
     pub phase: FaultPhase,
+    /// permanent loss: the worker was not respawned; the trainer
+    /// re-sharded onto a shrunk grid (see [`ReshardRecord`])
+    pub perm: bool,
+}
+
+/// One live re-shard: the trainer's reaction to a permanent worker
+/// loss, with the simulated shuffle cost actually charged to SimNet.
+/// (Voluntary `reconfigure` grid changes restage through the same
+/// machinery but run between sessions, off the simulated clock — they
+/// don't append here.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReshardRecord {
+    /// outer iteration that was interrupted and re-run on the new grid
+    pub iter: usize,
+    /// worker permanently lost (id on the pre-shrink grid)
+    pub worker: usize,
+    pub from_p: usize,
+    pub from_q: usize,
+    pub to_p: usize,
+    pub to_q: usize,
+    /// bytes of shard payload re-staged over the simulated network —
+    /// equal to the summed `approx_bytes()` of every re-staged block
+    pub bytes: u64,
+    /// simulated seconds the shuffle cost (makespan + wire time)
+    pub sim_s: f64,
 }
 
 /// Append-only training history.
@@ -82,11 +109,13 @@ pub struct History {
     /// recovered run is bit-identical to a fault-free one everywhere
     /// else)
     pub faults: Vec<FaultRecord>,
+    /// live re-shards (permanent losses and `reconfigure` grid changes)
+    pub reshards: Vec<ReshardRecord>,
 }
 
 impl History {
     pub fn new(run: impl Into<String>) -> Self {
-        Self { run: run.into(), records: Vec::new(), faults: Vec::new() }
+        Self { run: run.into(), records: Vec::new(), faults: Vec::new(), reshards: Vec::new() }
     }
 
     pub fn push(&mut self, rec: IterRecord) {
@@ -161,10 +190,38 @@ impl History {
                     self.faults
                         .iter()
                         .map(|f| {
-                            json::obj(vec![
+                            let mut rec = vec![
                                 ("iter", json::num(f.iter as f64)),
                                 ("worker", json::num(f.worker as f64)),
                                 ("phase", json::s(f.phase.to_string())),
+                            ];
+                            // emitted only for escalated faults, keeping
+                            // transient records on the legacy schema
+                            if f.perm {
+                                rec.push(("perm", Value::Bool(true)));
+                            }
+                            json::obj(rec)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.reshards.is_empty() {
+            fields.push((
+                "reshards",
+                Value::Arr(
+                    self.reshards
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("iter", json::num(r.iter as f64)),
+                                ("worker", json::num(r.worker as f64)),
+                                ("from_p", json::num(r.from_p as f64)),
+                                ("from_q", json::num(r.from_q as f64)),
+                                ("to_p", json::num(r.to_p as f64)),
+                                ("to_q", json::num(r.to_q as f64)),
+                                ("bytes", json::num(r.bytes as f64)),
+                                ("sim_s", json::num(r.sim_s)),
                             ])
                         })
                         .collect(),
@@ -192,6 +249,21 @@ impl History {
                     iter: f.get("iter")?.as_usize()?,
                     worker: f.get("worker")?.as_usize()?,
                     phase: f.get("phase")?.as_str()?.parse()?,
+                    perm: f.opt("perm").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+                });
+            }
+        }
+        if let Some(reshards) = v.opt("reshards") {
+            for r in reshards.as_arr()? {
+                h.reshards.push(ReshardRecord {
+                    iter: r.get("iter")?.as_usize()?,
+                    worker: r.get("worker")?.as_usize()?,
+                    from_p: r.get("from_p")?.as_usize()?,
+                    from_q: r.get("from_q")?.as_usize()?,
+                    to_p: r.get("to_p")?.as_usize()?,
+                    to_q: r.get("to_q")?.as_usize()?,
+                    bytes: r.get("bytes")?.as_f64()? as u64,
+                    sim_s: r.get("sim_s")?.as_f64()?,
                 });
             }
         }
@@ -254,11 +326,40 @@ mod tests {
             !h.to_json().to_string_pretty().contains("faults"),
             "fault-free history must keep the legacy schema"
         );
-        h.faults.push(FaultRecord { iter: 3, worker: 2, phase: FaultPhase::Inner });
-        h.faults.push(FaultRecord { iter: 5, worker: 0, phase: FaultPhase::Mu });
-        let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
+        h.faults.push(FaultRecord { iter: 3, worker: 2, phase: FaultPhase::Inner, perm: false });
+        h.faults.push(FaultRecord { iter: 5, worker: 0, phase: FaultPhase::Mu, perm: true });
+        let text = h.to_json().to_string_pretty();
+        assert_eq!(
+            text.matches("perm").count(),
+            1,
+            "only escalated faults carry the perm key"
+        );
+        let v = crate::util::json::Value::parse(&text).unwrap();
         let back = History::from_json(&v).unwrap();
         assert_eq!(back.faults, h.faults);
+    }
+
+    #[test]
+    fn reshard_records_round_trip_and_stay_off_the_legacy_schema() {
+        let mut h = History::new("t");
+        h.push(rec(1, 0.5, 0.1));
+        assert!(
+            !h.to_json().to_string_pretty().contains("reshards"),
+            "reshard-free history must keep the legacy schema"
+        );
+        h.reshards.push(ReshardRecord {
+            iter: 4,
+            worker: 2,
+            from_p: 3,
+            from_q: 2,
+            to_p: 2,
+            to_q: 2,
+            bytes: 12_345,
+            sim_s: 0.75,
+        });
+        let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
+        let back = History::from_json(&v).unwrap();
+        assert_eq!(back.reshards, h.reshards);
     }
 
     #[test]

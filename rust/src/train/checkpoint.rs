@@ -18,6 +18,26 @@
 //! as **decimal strings**: a JSON number is an `f64` and cannot carry
 //! all 64 bits. `f32`/`f64` payloads are exact — `f32 → f64` widening
 //! is lossless and the writer emits shortest-round-trip `f64` text.
+//!
+//! ## Durability
+//!
+//! Every write is **atomic**: the JSON lands in a `.tmp` sibling first
+//! and is renamed over the target, so a crash mid-save can never leave
+//! a truncated checkpoint where a good one used to be — the previous
+//! snapshot survives, and the leftover `.tmp` is overwritten by the
+//! next save.
+//!
+//! For long runs with a tight cadence, [`CheckpointObserver::incremental`]
+//! switches to **delta mode**: a full snapshot is written once, and
+//! subsequent saves write only the dirty state — changed ω coordinates,
+//! the new history tail, the RNG registers and counters — to a
+//! `<path>.delta` sibling (format [`CHECKPOINT_DELTA_FORMAT`]). When
+//! more than half the coordinates are dirty the observer *compacts*:
+//! writes a fresh full snapshot and drops the delta. [`RunState::load`]
+//! applies a matching delta transparently (a stale delta — one whose
+//! base iteration does not match the full snapshot, as left by a crash
+//! between compaction's two steps — is ignored; the full snapshot is
+//! authoritative).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -37,6 +57,34 @@ use crate::util::rng::Rng;
 /// half-understood snapshot would corrupt a trajectory silently.
 pub const CHECKPOINT_FORMAT: &str = "sodda-checkpoint-v1";
 
+/// Format tag of the incremental-delta schema (see the module docs'
+/// Durability section). A delta rides on the full snapshot it was
+/// diffed against and is never loaded on its own.
+pub const CHECKPOINT_DELTA_FORMAT: &str = "sodda-checkpoint-delta-v1";
+
+/// The `.delta` sibling of a checkpoint path (`out/ckpt.json` →
+/// `out/ckpt.json.delta`).
+fn delta_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".delta");
+    path.with_file_name(name)
+}
+
+/// Crash-safe write: parent dirs, then `.tmp` sibling, then rename.
+fn atomic_write(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut tmp = path.file_name().unwrap_or_default().to_os_string();
+    tmp.push(".tmp");
+    let tmp = path.with_file_name(tmp);
+    std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))
+}
+
 /// The serializable state of one run at an outer-iteration boundary —
 /// everything [`Trainer::resume`] needs that is not derivable from the
 /// [`ExperimentConfig`]. Produced by [`Trainer::checkpoint`]; see the
@@ -45,10 +93,12 @@ pub const CHECKPOINT_FORMAT: &str = "sodda-checkpoint-v1";
 pub struct RunState {
     /// name of the run this snapshot belongs to (validated on resume)
     pub run: String,
-    /// executor the session ran on when the snapshot was taken. The two
-    /// executors are bit-identical, but a resume that silently switches
-    /// runtimes would invalidate wall-clock comparisons — resume
-    /// validates the staged session resolves to the same kind.
+    /// executor the session ran on when the snapshot was taken.
+    /// **Provenance, not a constraint**: the two executors are
+    /// bit-identical (the cross-executor resume tests in
+    /// `tests/faults.rs` pin this), so a resume may stage either kind —
+    /// the field records where the numbers came from for wall-clock
+    /// bookkeeping.
     pub executor: ExecutorKind,
     /// completed outer iterations
     pub t: usize,
@@ -136,24 +186,142 @@ impl RunState {
     }
 
     /// Write the snapshot to `path` (creating parent directories).
+    /// Atomic: a crash mid-save leaves the previous checkpoint intact
+    /// (see the module docs' Durability section).
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .with_context(|| format!("creating {}", dir.display()))?;
-            }
-        }
-        std::fs::write(path, self.to_json().to_string_pretty())
+        atomic_write(path, &self.to_json().to_string_pretty())
             .with_context(|| format!("writing checkpoint {}", path.display()))
     }
 
-    /// Read a snapshot written by [`RunState::save`].
+    /// Write only what changed since `base` (a full snapshot already on
+    /// disk) to `path` — changed ω coordinates, the history tail, RNG
+    /// registers and counters. Atomic like [`RunState::save`]. The delta
+    /// is only loadable next to its base: [`RunState::load`] of the full
+    /// snapshot's path applies it transparently.
+    pub fn save_delta(&self, base: &RunState, path: &Path) -> Result<()> {
+        ensure!(
+            base.run == self.run && base.w.len() == self.w.len() && base.t <= self.t,
+            "delta checkpoint: base (run {:?}, t={}, {} coords) does not underlie \
+             run {:?}, t={}, {} coords",
+            base.run,
+            base.t,
+            base.w.len(),
+            self.run,
+            self.t,
+            self.w.len()
+        );
+        atomic_write(path, &self.delta_to_json(base).to_string_pretty())
+            .with_context(|| format!("writing delta checkpoint {}", path.display()))
+    }
+
+    fn delta_to_json(&self, base: &RunState) -> Value {
+        let mut dw_idx = Vec::new();
+        let mut dw_val = Vec::new();
+        for (i, (&a, &b)) in base.w.iter().zip(&self.w).enumerate() {
+            if a != b {
+                dw_idx.push(json::num(i as f64));
+                dw_val.push(json::num(b as f64));
+            }
+        }
+        // history is append-only at iteration boundaries, so the
+        // since-base tails are pure index suffixes
+        let tail = History {
+            run: self.history.run.clone(),
+            records: self.history.records[base.history.records.len()..].to_vec(),
+            faults: self.history.faults[base.history.faults.len()..].to_vec(),
+            reshards: self.history.reshards[base.history.reshards.len()..].to_vec(),
+        };
+        json::obj(vec![
+            ("format", json::s(CHECKPOINT_DELTA_FORMAT)),
+            ("run", json::s(self.run.clone())),
+            ("executor", json::s(self.executor.to_string())),
+            ("base_t", json::num(base.t as f64)),
+            ("base_records", json::num(base.history.records.len() as f64)),
+            ("t", json::num(self.t as f64)),
+            ("sim_s", json::num(self.sim_s)),
+            ("comm_bytes", json::s(self.comm_bytes.to_string())),
+            ("comm_msgs", json::s(self.comm_msgs.to_string())),
+            ("grad_coord_evals", json::s(self.grad_coord_evals.to_string())),
+            ("rng_sets", rng_to_json(self.rng_sets)),
+            ("rng_perm", rng_to_json(self.rng_perm)),
+            ("rng_rows", rng_to_json(self.rng_rows)),
+            ("dw_idx", Value::Arr(dw_idx)),
+            ("dw_val", Value::Arr(dw_val)),
+            ("history_tail", tail.to_json()),
+        ])
+    }
+
+    /// Reconstruct the full state `base` + delta. Errors if the delta
+    /// does not ride on exactly this base.
+    fn apply_delta(base: &RunState, v: &Value) -> Result<RunState> {
+        let format = v.get("format")?.as_str()?;
+        ensure!(
+            format == CHECKPOINT_DELTA_FORMAT,
+            "unsupported delta format {format:?} (this build reads {CHECKPOINT_DELTA_FORMAT:?})"
+        );
+        ensure!(
+            v.get("run")?.as_str()? == base.run && v.get("base_t")?.as_usize()? == base.t,
+            "delta does not ride on this snapshot (run {:?}, t={})",
+            base.run,
+            base.t
+        );
+        let mut out = base.clone();
+        out.executor = v.get("executor")?.as_str()?.parse().map_err(anyhow::Error::msg)?;
+        out.t = v.get("t")?.as_usize()?;
+        out.sim_s = v.get("sim_s")?.as_f64()?;
+        out.comm_bytes = u64_from_json(v, "comm_bytes")?;
+        out.comm_msgs = u64_from_json(v, "comm_msgs")?;
+        out.grad_coord_evals = u64_from_json(v, "grad_coord_evals")?;
+        out.rng_sets = rng_from_json(v.get("rng_sets")?).context("rng_sets")?;
+        out.rng_perm = rng_from_json(v.get("rng_perm")?).context("rng_perm")?;
+        out.rng_rows = rng_from_json(v.get("rng_rows")?).context("rng_rows")?;
+        let idx = v.get("dw_idx")?.as_arr()?;
+        let val = v.get("dw_val")?.as_arr()?;
+        ensure!(idx.len() == val.len(), "delta dw_idx/dw_val length mismatch");
+        for (i, x) in idx.iter().zip(val) {
+            let i = i.as_usize()?;
+            ensure!(i < out.w.len(), "delta coordinate {i} out of range");
+            out.w[i] = x.as_f64()? as f32;
+        }
+        let tail = History::from_json(v.get("history_tail")?).context("history_tail")?;
+        out.history.records.extend_from_slice(&tail.records);
+        out.history.faults.extend_from_slice(&tail.faults);
+        out.history.reshards.extend_from_slice(&tail.reshards);
+        Ok(out)
+    }
+
+    /// Read a snapshot written by [`RunState::save`]. A matching
+    /// `<path>.delta` sibling (delta mode, see the module docs) is
+    /// applied transparently; a *stale* delta — base iteration not
+    /// matching the snapshot, as left by a crash between compaction's
+    /// full write and delta removal — is ignored.
     pub fn load(path: &Path) -> Result<RunState> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         let v = Value::parse(&text)
             .with_context(|| format!("parsing checkpoint {}", path.display()))?;
-        RunState::from_json(&v)
+        if v.get("format").ok().and_then(|f| f.as_str().ok()) == Some(CHECKPOINT_DELTA_FORMAT) {
+            anyhow::bail!(
+                "{} is an incremental delta; load the full snapshot it rides on \
+                 (same path without the .delta suffix)",
+                path.display()
+            );
+        }
+        let snap = RunState::from_json(&v)?;
+        let dpath = delta_path(path);
+        let Ok(dtext) = std::fs::read_to_string(&dpath) else {
+            return Ok(snap);
+        };
+        let dv = Value::parse(&dtext)
+            .with_context(|| format!("parsing delta checkpoint {}", dpath.display()))?;
+        let fresh = dv.get("run").and_then(|r| Ok(r.as_str()? == snap.run)).unwrap_or(false)
+            && dv.get("base_t").and_then(Value::as_usize).map_or(false, |t| t == snap.t);
+        if fresh {
+            RunState::apply_delta(&snap, &dv)
+                .with_context(|| format!("applying delta checkpoint {}", dpath.display()))
+        } else {
+            Ok(snap)
+        }
     }
 }
 
@@ -179,26 +347,62 @@ impl RunState {
 pub struct CheckpointObserver {
     path: PathBuf,
     every: usize,
+    /// delta mode: keep the last *full* snapshot on disk as the diff
+    /// base, writing dirty state to the `.delta` sibling in between
+    incremental: bool,
+    base: std::cell::RefCell<Option<RunState>>,
 }
 
 impl CheckpointObserver {
     /// Write to `path` every `every` completed iterations (and at run
-    /// completion, so the final state is always on disk).
+    /// completion, so the final state is always on disk). Every write
+    /// is a full snapshot.
     pub fn new(path: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
-        CheckpointObserver { path: path.into(), every: every.max(1) }
+        CheckpointObserver {
+            path: path.into(),
+            every: every.max(1),
+            incremental: false,
+            base: std::cell::RefCell::new(None),
+        }
+    }
+
+    /// Like [`CheckpointObserver::new`], but in **delta mode**: the
+    /// first write is a full snapshot, subsequent writes diff against it
+    /// into `<path>.delta` — and compact back to a full snapshot once
+    /// more than half the coordinates are dirty. [`RunState::load`] of
+    /// `path` reconstructs the latest state either way.
+    pub fn incremental(path: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
+        CheckpointObserver { incremental: true, ..CheckpointObserver::new(path, every) }
     }
 
     /// Snapshot `trainer` if its iteration count hits the cadence.
-    /// Returns whether a checkpoint was written.
+    /// Returns whether a checkpoint (full or delta) was written.
     pub fn observe(&self, trainer: &Trainer) -> Result<bool> {
-        if trainer.iteration() % self.every == 0 || trainer.is_done() {
-            let state = trainer.checkpoint();
-            state.save(&self.path).with_context(|| {
-                format!("checkpointing {:?} at iteration {}", state.run, state.t)
-            })?;
+        if !(trainer.iteration() % self.every == 0 || trainer.is_done()) {
+            return Ok(false);
+        }
+        let state = trainer.checkpoint();
+        let ctx = || format!("checkpointing {:?} at iteration {}", state.run, state.t);
+        if self.incremental {
+            let mut base = self.base.borrow_mut();
+            if let Some(b) = base.as_ref() {
+                let dirty = b.w.iter().zip(&state.w).filter(|(x, y)| x != y).count();
+                if b.run == state.run && b.t <= state.t && 2 * dirty <= state.w.len() {
+                    state.save_delta(b, &delta_path(&self.path)).with_context(ctx)?;
+                    return Ok(true);
+                }
+            }
+            // first write, or compaction: the full snapshot becomes the
+            // new base and any delta riding on the old one is dropped
+            // (a crash between these two steps leaves a stale delta,
+            // which `load` ignores)
+            state.save(&self.path).with_context(ctx)?;
+            let _ = std::fs::remove_file(delta_path(&self.path));
+            *base = Some(state);
             return Ok(true);
         }
-        Ok(false)
+        state.save(&self.path).with_context(ctx)?;
+        Ok(true)
     }
 }
 
@@ -291,12 +495,10 @@ impl Trainer {
             snap.t,
             self.cfg.outer_iters
         );
-        ensure!(
-            snap.executor == self.cluster.executor(),
-            "checkpoint was taken on the {} executor, this session resolved to {}",
-            snap.executor,
-            self.cluster.executor()
-        );
+        // deliberately no executor check: the two executors are
+        // bit-identical, so a snapshot resumes on either kind —
+        // `snap.executor` is provenance, not a constraint (the
+        // cross-executor tests in tests/faults.rs pin the bit-identity)
         let mut net = sim_net_for(&self.cfg);
         net.restore(snap.sim_s, snap.comm_bytes, snap.comm_msgs);
         self.state = RunCore {
@@ -386,6 +588,114 @@ mod tests {
         assert!(Trainer::resume(cfg(6), past).is_err(), "t beyond the horizon");
 
         assert!(Trainer::resume(cfg(6), snap).is_ok());
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sodda-ckpt-unit-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn mid_save_crash_leaves_the_previous_checkpoint_intact() {
+        let dir = tmp("atomic");
+        let path = dir.join("ckpt.json");
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.step().unwrap();
+        let good = t.checkpoint();
+        good.save(&path).unwrap();
+
+        // simulate a crash mid-save: a truncated payload sits in the
+        // .tmp sibling, never renamed over the target
+        let stale_tmp = dir.join("ckpt.json.tmp");
+        let half = good.to_json().to_string_pretty();
+        std::fs::write(&stale_tmp, &half[..half.len() / 2]).unwrap();
+        let back = RunState::load(&path).unwrap();
+        assert_eq!(back.t, good.t);
+        assert_eq!(back.w, good.w, "the previous checkpoint must survive a crashed save");
+
+        // and the next save simply overwrites the leftover .tmp
+        t.step().unwrap();
+        t.checkpoint().save(&path).unwrap();
+        assert_eq!(RunState::load(&path).unwrap().t, 2);
+
+        // a checkpoint truncated in place (torn copy, bad disk) fails
+        // loudly rather than resuming a corrupt trajectory
+        std::fs::write(&path, &half[..half.len() / 2]).unwrap();
+        assert!(RunState::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incremental_observer_round_trips_through_delta_and_compaction() {
+        let dir = tmp("delta");
+        let path = dir.join("ckpt.json");
+        let obs = CheckpointObserver::incremental(&path, 1);
+        let mut t = Trainer::new(cfg(5)).unwrap();
+        t.step().unwrap();
+        obs.observe(&t).unwrap(); // full base at t=1
+        let base = RunState::load(&path).unwrap();
+        assert_eq!(base.t, 1);
+
+        t.step().unwrap();
+        obs.observe(&t).unwrap();
+        let live = t.checkpoint();
+        // whether this write was a delta or a compaction, load must
+        // reconstruct the live state exactly
+        let loaded = RunState::load(&path).unwrap();
+        assert_eq!(loaded.t, 2);
+        assert_eq!(loaded.w, live.w, "delta apply must reproduce ω bit-for-bit");
+        assert_eq!(loaded.rng_rows, live.rng_rows);
+        assert_eq!(loaded.comm_bytes, live.comm_bytes);
+        assert_eq!(loaded.history.records, live.history.records);
+
+        // ...and resuming from the reconstructed state continues the
+        // exact trajectory
+        let mut resumed = Trainer::resume(cfg(5), loaded).unwrap();
+        let a = resumed.run().unwrap();
+        while !t.is_done() {
+            t.step().unwrap();
+        }
+        assert_eq!(a.w, t.outcome().w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_delta_is_ignored_and_bare_delta_is_rejected() {
+        let dir = tmp("stale");
+        let path = dir.join("ckpt.json");
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.step().unwrap();
+        let s1 = t.checkpoint();
+        s1.save(&path).unwrap();
+        t.step().unwrap();
+        let s2 = t.checkpoint();
+        s2.save_delta(&s1, &super::delta_path(&path)).unwrap();
+        assert_eq!(RunState::load(&path).unwrap().t, 2, "matching delta applies");
+
+        // interrupted compaction: a newer full snapshot lands but the
+        // old delta was not yet removed — the delta no longer matches
+        // and must be ignored
+        t.step().unwrap();
+        t.checkpoint().save(&path).unwrap();
+        assert_eq!(RunState::load(&path).unwrap().t, 3, "stale delta is ignored");
+
+        // a delta path on its own is not a loadable checkpoint
+        assert!(RunState::load(&super::delta_path(&path)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_crosses_executors() {
+        // provenance only: a snapshot taken on one executor resumes on
+        // the other (the bit-identity of the two transports is pinned
+        // end-to-end in tests/faults.rs)
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.step().unwrap();
+        let mut snap = t.checkpoint();
+        snap.executor = match snap.executor {
+            ExecutorKind::InProcess => ExecutorKind::Threaded,
+            ExecutorKind::Threaded => ExecutorKind::InProcess,
+        };
+        assert!(Trainer::resume(cfg(4), snap).is_ok());
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! Plans use a compact text syntax, one event per comma-separated
 //! entry: `worker@iter:phase` (e.g. `"2@3:mu,0@5:inner"` kills worker
 //! 2 in iteration 3's µ-phase and worker 0 in iteration 5's inner
-//! loops). Phases are `mu` | `grad` | `inner`.
+//! loops). Phases are `mu` | `grad` | `inner`. A `!perm` suffix
+//! (`"1@2:grad!perm"`) marks the loss *permanent*: the leader skips
+//! the respawn path entirely and escalates, so the trainer's
+//! re-shard-and-continue machinery is exercised deterministically.
 
 use std::fmt;
 use std::str::FromStr;
@@ -31,25 +34,45 @@ pub struct FaultEvent {
     pub phase: FaultPhase,
     /// linear worker id (`p·Q + q`)
     pub worker: usize,
+    /// permanent loss: respawn is refused and the leader escalates
+    /// (re-shard onto a shrunk grid) instead of recovering in place
+    pub perm: bool,
 }
 
 impl fmt::Display for FaultEvent {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}@{}:{}", self.worker, self.iter, self.phase)
+        write!(f, "{}@{}:{}", self.worker, self.iter, self.phase)?;
+        if self.perm {
+            f.write_str("!perm")?;
+        }
+        Ok(())
     }
 }
 
 impl FromStr for FaultEvent {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<FaultEvent> {
-        let (worker, rest) =
-            s.split_once('@').with_context(|| format!("fault event {s:?}: expected worker@iter:phase"))?;
-        let (iter, phase) =
-            rest.split_once(':').with_context(|| format!("fault event {s:?}: expected worker@iter:phase"))?;
+        let (body, perm) = match s.split_once('!') {
+            Some((body, flag)) => {
+                ensure!(
+                    flag.trim().eq_ignore_ascii_case("perm"),
+                    "fault event {s:?}: unknown modifier {flag:?} (only !perm)"
+                );
+                (body, true)
+            }
+            None => (s, false),
+        };
+        let (worker, rest) = body
+            .split_once('@')
+            .with_context(|| format!("fault event {s:?}: expected worker@iter:phase[!perm]"))?;
+        let (iter, phase) = rest
+            .split_once(':')
+            .with_context(|| format!("fault event {s:?}: expected worker@iter:phase[!perm]"))?;
         Ok(FaultEvent {
             worker: worker.trim().parse().with_context(|| format!("fault event {s:?}: bad worker id"))?,
             iter: iter.trim().parse().with_context(|| format!("fault event {s:?}: bad iteration"))?,
             phase: phase.trim().parse()?,
+            perm,
         })
     }
 }
@@ -91,6 +114,29 @@ impl FaultPlan {
                     _ => FaultPhase::Inner,
                 },
                 worker: rng.below(workers.max(1)),
+                perm: false,
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    /// Like [`FaultPlan::seeded`], but roughly one event in three is a
+    /// permanent loss (`!perm`). Draws an extra RNG value per event, so
+    /// it is deliberately *not* bit-compatible with `seeded` — use it
+    /// where the escalation path itself is under test (e.g. the
+    /// round-trip property test over the full syntax).
+    pub fn seeded_with_perm(seed: u64, kills: usize, workers: usize, iters: usize) -> FaultPlan {
+        let mut rng = Rng::seed_from_u64(seed).fork(0xFA);
+        let events = (0..kills)
+            .map(|_| FaultEvent {
+                iter: 1 + rng.below(iters.max(1)),
+                phase: match rng.below(3) {
+                    0 => FaultPhase::Mu,
+                    1 => FaultPhase::Grad,
+                    _ => FaultPhase::Inner,
+                },
+                worker: rng.below(workers.max(1)),
+                perm: rng.below(3) == 0,
             })
             .collect();
         FaultPlan { events }
@@ -117,19 +163,37 @@ impl FaultPlan {
         &self.events
     }
 
-    /// Workers due to die in `(iter, phase)` on a `workers`-sized grid
-    /// (deduplicated — killing a dead worker twice in one phase is one
-    /// kill; out-of-range events are ignored, see the type docs).
-    pub(crate) fn kills_for(&self, iter: usize, phase: FaultPhase, workers: usize) -> Vec<usize> {
-        let mut due: Vec<usize> = self
+    /// Workers due to die in `(iter, phase)` on a `workers`-sized grid,
+    /// each with its permanence flag (deduplicated — killing a dead
+    /// worker twice in one phase is one kill, and a permanent event
+    /// absorbs a transient one on the same worker; out-of-range events
+    /// are ignored, see the type docs).
+    pub(crate) fn kills_for(
+        &self,
+        iter: usize,
+        phase: FaultPhase,
+        workers: usize,
+    ) -> Vec<(usize, bool)> {
+        let mut due: Vec<(usize, bool)> = self
             .events
             .iter()
             .filter(|e| e.iter == iter && e.phase == phase && e.worker < workers)
-            .map(|e| e.worker)
+            .map(|e| (e.worker, e.perm))
             .collect();
+        // sort puts (w, false) before (w, true); keep the perm entry
         due.sort_unstable();
-        due.dedup();
+        due.reverse();
+        due.dedup_by_key(|&mut (w, _)| w);
+        due.reverse();
         due
+    }
+
+    /// Drop every event scheduled at or before `iter` — called after a
+    /// re-shard so already-consumed events (whose worker ids addressed
+    /// the *old* grid) can't re-arm against the shrunk one when the
+    /// interrupted iteration is re-run.
+    pub(crate) fn prune_through(&mut self, iter: usize) {
+        self.events.retain(|e| e.iter > iter);
     }
 }
 
@@ -168,10 +232,26 @@ mod tests {
         assert_eq!(plan.events().len(), 3);
         assert_eq!(
             plan.events()[0],
-            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2 }
+            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2, perm: false }
         );
         let back: FaultPlan = plan.to_string().parse().unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn perm_suffix_parses_and_displays() {
+        let plan: FaultPlan = "1@2:grad!perm, 0@5:mu".parse().unwrap();
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent { iter: 2, phase: FaultPhase::Grad, worker: 1, perm: true }
+        );
+        assert!(!plan.events()[1].perm);
+        assert_eq!(plan.to_string(), "1@2:grad!perm,0@5:mu");
+        // lenient on whitespace and case around the modifier
+        let e: FaultEvent = " 3@7:inner ! PERM ".trim().parse().unwrap();
+        assert!(e.perm);
+        assert!("1@2:grad!forever".parse::<FaultEvent>().is_err(), "unknown modifier");
+        assert!("1@2:grad!".parse::<FaultEvent>().is_err(), "empty modifier");
     }
 
     #[test]
@@ -187,12 +267,33 @@ mod tests {
     #[test]
     fn kills_for_filters_dedups_and_ignores_out_of_range() {
         let plan: FaultPlan = "2@3:mu,2@3:mu,0@3:mu,9@3:mu,1@4:mu,0@3:grad".parse().unwrap();
-        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![0, 2]);
-        assert_eq!(plan.kills_for(3, FaultPhase::Grad, 4), vec![0]);
-        assert_eq!(plan.kills_for(4, FaultPhase::Mu, 4), vec![1]);
-        assert_eq!(plan.kills_for(3, FaultPhase::Inner, 4), Vec::<usize>::new());
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![(0, false), (2, false)]);
+        assert_eq!(plan.kills_for(3, FaultPhase::Grad, 4), vec![(0, false)]);
+        assert_eq!(plan.kills_for(4, FaultPhase::Mu, 4), vec![(1, false)]);
+        assert_eq!(plan.kills_for(3, FaultPhase::Inner, 4), Vec::<(usize, bool)>::new());
         // worker 9 exists on a bigger grid
-        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 16), vec![0, 2, 9]);
+        assert_eq!(
+            plan.kills_for(3, FaultPhase::Mu, 16),
+            vec![(0, false), (2, false), (9, false)]
+        );
+    }
+
+    #[test]
+    fn perm_event_absorbs_transient_duplicate() {
+        let plan: FaultPlan = "2@3:mu,2@3:mu!perm,0@3:mu".parse().unwrap();
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![(0, false), (2, true)]);
+        let plan: FaultPlan = "2@3:mu!perm,2@3:mu".parse().unwrap();
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![(2, true)]);
+    }
+
+    #[test]
+    fn prune_through_drops_consumed_iterations() {
+        let mut plan: FaultPlan = "2@3:mu,0@5:inner,1@1:grad!perm".parse().unwrap();
+        plan.prune_through(3);
+        assert_eq!(plan.events().len(), 1);
+        assert_eq!(plan.events()[0].iter, 5);
+        plan.prune_through(5);
+        assert!(plan.is_empty());
     }
 
     #[test]
@@ -203,7 +304,24 @@ mod tests {
         assert_eq!(a.events().len(), 5);
         for e in a.events() {
             assert!(e.worker < 6 && e.iter >= 1 && e.iter <= 20, "{e}");
+            assert!(!e.perm, "plain seeded plans stay transient");
         }
         assert_ne!(FaultPlan::seeded(8, 5, 6, 20), a, "different seed, different plan");
+    }
+
+    #[test]
+    fn display_from_str_round_trips_over_seeded_plans() {
+        // property test over the full syntax, including !perm events
+        let mut saw_perm = false;
+        let mut saw_transient = false;
+        for seed in 0..64u64 {
+            let plan = FaultPlan::seeded_with_perm(seed, 6, 8, 12);
+            saw_perm |= plan.events().iter().any(|e| e.perm);
+            saw_transient |= plan.events().iter().any(|e| !e.perm);
+            let text = plan.to_string();
+            let back: FaultPlan = text.parse().unwrap_or_else(|e| panic!("{text:?}: {e}"));
+            assert_eq!(back, plan, "round trip failed for {text:?}");
+        }
+        assert!(saw_perm && saw_transient, "the sweep must cover both event kinds");
     }
 }

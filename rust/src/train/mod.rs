@@ -32,7 +32,15 @@
 //! the leader detects each death, respawns the worker from its shard
 //! and replays the in-flight phase, so a faulted run's trajectory is
 //! bit-identical to the fault-free one (the recoveries are logged in
-//! [`History::faults`]).
+//! [`History::faults`]). When recovery is exhausted — a `!perm` event,
+//! or [`crate::config::RecoveryPolicy`] retries running out — the
+//! worker is *permanently* lost: the trainer rolls the interrupted
+//! iteration back to its start, re-shards the surviving data onto a
+//! grid one observation row (or feature column) smaller, charges the
+//! simulated network for the shuffle (logged in [`History::reshards`]),
+//! and re-runs the iteration on the shrunk cluster. The degraded run
+//! continues the same trajectory *as if staged on the smaller grid*,
+//! which is what the equivalence tests in `tests/faults.rs` pin down.
 //!
 //! The legacy free functions `coordinator::train` /
 //! `coordinator::train_with_engine` are thin shims over this type.
@@ -43,21 +51,25 @@ mod step;
 
 pub mod observers;
 
-pub use checkpoint::{CheckpointObserver, RunState, CHECKPOINT_FORMAT};
+pub use checkpoint::{
+    CheckpointObserver, RunState, CHECKPOINT_DELTA_FORMAT, CHECKPOINT_FORMAT,
+};
 pub use faults::{FaultEvent, FaultPlan, FAULT_PLAN_ENV};
 
 use std::ops::ControlFlow;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::cluster::{Cluster, SimNet};
-use crate::config::{EngineKind, ExecutorKind, ExperimentConfig, ShardWeighting};
+use crate::config::{
+    ClusterProfile, EngineKind, ExecutorKind, ExperimentConfig, ShardWeighting,
+};
 use crate::data::{Dataset, Grid, Layout};
 use crate::engine::ComputeEngine;
 use crate::engine::NativeEngine;
-use crate::metrics::{History, IterRecord};
+use crate::metrics::{History, IterRecord, ReshardRecord};
 use crate::util::rng::Rng;
 
 /// Result of one training run.
@@ -87,6 +99,28 @@ struct RunCore {
     t_start: Instant,
 }
 
+/// Iteration-start snapshot for the permanent-loss rollback. A failed
+/// `iterate` leaves `w` (SVRG write-backs land as replies arrive), the
+/// RNG streams and the cost counters mid-iteration; [`Trainer::step`]
+/// restores all of them before re-running the iteration on the
+/// re-sharded grid. The buffers persist across iterations (the `w`
+/// copy reuses its allocation) so the steady-state iteration stays
+/// inside the O(1)-allocations budget pinned by `tests/alloc_regression`.
+#[derive(Default)]
+struct Rollback {
+    w: Vec<f32>,
+    rng_sets: [u64; 4],
+    rng_perm: [u64; 4],
+    rng_rows: [u64; 4],
+    sim_s: f64,
+    bytes: u64,
+    msgs: u64,
+    grad_coord_evals: u64,
+    /// records.len() at iteration start (pushes only happen at iteration
+    /// end today, but truncating keeps the snapshot future-proof)
+    records: usize,
+}
+
 /// A staged, reusable training session (see the module docs).
 pub struct Trainer {
     cfg: ExperimentConfig,
@@ -113,6 +147,8 @@ pub struct Trainer {
     /// not the run's math (recovery is bit-transparent), so a resumed
     /// run re-reads its environment.
     fault_plan: Option<FaultPlan>,
+    /// Persistent iteration-start snapshot for permanent-loss rollback.
+    rollback: Rollback,
 }
 
 /// Build the engine named by the config. The XLA engine loads the AOT
@@ -207,11 +243,17 @@ impl Trainer {
             cfg.data.n(),
             cfg.data.m()
         );
-        let layout = staged_layout(&cfg)?;
+        let layout = staged_layout(&cfg, ds.as_ref())?;
         let grid = Grid::partition_with_layout(ds.as_ref(), layout)?;
         let kind = ExecutorKind::resolve(cfg.executor)
             .with_context(|| format!("resolving executor for {:?}", cfg.name))?;
-        let cluster = Cluster::launch_with(grid, Arc::clone(&engine), cfg.loss, kind);
+        let cluster = Cluster::launch_with_policy(
+            grid,
+            Arc::clone(&engine),
+            cfg.loss,
+            kind,
+            cfg.recovery.unwrap_or_default(),
+        );
         // a set-but-malformed SODDA_FAULT_PLAN fails here, at staging —
         // not silently mid-run after the expensive state is built
         let fault_plan = FaultPlan::from_env()
@@ -226,6 +268,7 @@ impl Trainer {
             cluster,
             ws: step::Workspace::default(),
             fault_plan,
+            rollback: Rollback::default(),
         })
     }
 
@@ -317,6 +360,11 @@ impl Trainer {
     /// iteration was recorded (per `eval_every`), `None` otherwise.
     /// Erroring on a finished run keeps silent no-op loops from hiding
     /// bugs — `warm_start`/`reconfigure`/`reset` start the next run.
+    ///
+    /// A worker permanently lost mid-iteration (see the module docs) is
+    /// handled here: the iteration rolls back to its start, the session
+    /// re-shards onto a shrunk grid, and the iteration re-runs. Only an
+    /// unrecoverable loss — the last worker of a `1×1` grid — errors.
     pub fn step(&mut self) -> Result<Option<IterRecord>> {
         ensure!(
             !self.is_done(),
@@ -325,9 +373,160 @@ impl Trainer {
             self.cfg.name,
             self.cfg.outer_iters
         );
-        self.ensure_initial_record();
+        self.ensure_initial_record()?;
         self.state.t += 1;
-        Ok(self.iterate())
+        loop {
+            self.save_rollback_point();
+            match self.iterate() {
+                Ok(rec) => return Ok(rec),
+                Err(lost) => {
+                    self.restore_rollback_point();
+                    let worker = lost.worker;
+                    self.reshard_after_loss(worker).with_context(|| {
+                        format!(
+                            "run {:?}: worker {worker} permanently lost at iteration {}",
+                            self.cfg.name, self.state.t
+                        )
+                    })?;
+                }
+            }
+        }
+    }
+
+    /// Snapshot everything `iterate` mutates before it records. Cheap:
+    /// one `memcpy` of ω plus a handful of scalars, into retained buffers.
+    fn save_rollback_point(&mut self) {
+        let rb = &mut self.rollback;
+        rb.w.clear();
+        rb.w.extend_from_slice(&self.state.w);
+        rb.rng_sets = self.state.rng_sets.state();
+        rb.rng_perm = self.state.rng_perm.state();
+        rb.rng_rows = self.state.rng_rows.state();
+        rb.sim_s = self.state.net.sim_s();
+        rb.bytes = self.state.net.total_bytes();
+        rb.msgs = self.state.net.total_msgs();
+        rb.grad_coord_evals = self.state.grad_coord_evals;
+        rb.records = self.state.history.records.len();
+    }
+
+    /// Undo a half-finished iteration (see [`Rollback`]). `History::faults`
+    /// is deliberately *not* rewound: the kills really happened, and the
+    /// arm-time logging in `step::arm_due_faults` is what keeps the fault
+    /// log identical across executors.
+    fn restore_rollback_point(&mut self) {
+        let rb = &self.rollback;
+        self.state.w.copy_from_slice(&rb.w);
+        self.state.rng_sets = Rng::from_state(rb.rng_sets);
+        self.state.rng_perm = Rng::from_state(rb.rng_perm);
+        self.state.rng_rows = Rng::from_state(rb.rng_rows);
+        self.state.net.restore(rb.sim_s, rb.bytes, rb.msgs);
+        self.state.grad_coord_evals = rb.grad_coord_evals;
+        self.state.history.records.truncate(rb.records);
+    }
+
+    /// Elastic degradation after a permanent worker loss: shrink the grid
+    /// by one observation-row partition (or one feature column once
+    /// `P == 1`), rebuild the cluster profile without the lost machine,
+    /// recompute the layout under the session's [`ShardWeighting`],
+    /// restage the surviving data onto a fresh cluster of the same
+    /// executor, and charge the [`SimNet`] for the shuffle — every
+    /// re-staged byte crosses the wire, and the phase's makespan is the
+    /// slowest worker's staging time under the shrunk profile. The
+    /// shuffle is logged as a [`ReshardRecord`].
+    fn reshard_after_loss(&mut self, lost: usize) -> Result<()> {
+        let (p, q) = (self.cfg.p, self.cfg.q);
+        let (p2, q2) = if p > 1 {
+            (p - 1, q)
+        } else if q > 1 {
+            (p, q - 1)
+        } else {
+            bail!("the only worker of the 1x1 grid is gone — nothing left to re-shard onto")
+        };
+        // Re-enumerate the surviving machines: drop the lost worker's
+        // rate and keep the first P₂·Q₂ of the rest (the grid loses a
+        // whole row/column of slots, so the trailing survivors idle out).
+        // A uniform profile is count-independent and carries over as-is.
+        let old = self.cfg.cluster_profile.clone().unwrap_or_default();
+        let profile2 = if old.is_uniform() {
+            old.clone()
+        } else {
+            let mut rates = old.rates(p * q);
+            rates.remove(lost);
+            rates.truncate(p2 * q2);
+            ClusterProfile::explicit(rates)
+                .with_flops_per_sec(old.flops_per_sec())
+                .with_link_latency_factor(old.link_latency_factor())
+        };
+        let cfg2 = self
+            .cfg
+            .to_builder()
+            .grid(p2, q2)
+            .cluster_profile(profile2)
+            .build()
+            .context("building the shrunk-grid config")?;
+        let layout = staged_layout(&cfg2, &self.ds)?;
+        let grid = Grid::partition_with_layout(self.ds.as_ref(), layout)?;
+
+        // Shuffle accounting: every surviving shard moves to its new
+        // owner. Bytes = wire size of each re-staged block (matrix +
+        // labels); makespan = the slowest worker's staging time, with
+        // block bytes as the work proxy.
+        let mut net = sim_net_for(&cfg2);
+        net.restore(
+            self.state.net.sim_s(),
+            self.state.net.total_bytes(),
+            self.state.net.total_msgs(),
+        );
+        let before = net.sim_s();
+        let mut bytes = 0u64;
+        let mut makespan = 0f64;
+        for b in grid.blocks() {
+            let blk = (b.x.approx_bytes() + 4 * b.y.len()) as u64;
+            bytes += blk;
+            makespan = makespan.max(net.worker_s(b.p * q2 + b.q, blk as f64));
+        }
+        net.phase(makespan, bytes, (p2 * q2) as u64, 1);
+        let sim_s = net.sim_s() - before;
+
+        let cluster = Cluster::launch_with_policy(
+            grid,
+            Arc::clone(&self.engine),
+            cfg2.loss,
+            self.cluster.executor(),
+            cfg2.recovery.unwrap_or_default(),
+        );
+        // honest accounting: what the SimNet was charged is exactly what
+        // the new cluster's retained store holds
+        debug_assert_eq!(
+            bytes,
+            cluster.staged_bytes(),
+            "re-shard shuffle charge != bytes actually re-staged"
+        );
+        self.state.history.reshards.push(ReshardRecord {
+            iter: self.state.t,
+            worker: lost,
+            from_p: p,
+            from_q: q,
+            to_p: p2,
+            to_q: q2,
+            bytes,
+            sim_s,
+        });
+        self.state.net = net;
+        self.cluster = cluster;
+        self.cfg = cfg2;
+        // per-iteration buffers are sized to the old grid; drop them
+        self.ws = step::Workspace::default();
+        // fault events at or before the interrupted iteration targeted
+        // the old grid and were already armed — the re-run must not
+        // re-arm them (worker ids have been renumbered anyway)
+        if let Some(plan) = self.fault_plan.as_mut() {
+            plan.prune_through(self.state.t);
+        }
+        if self.fault_plan.as_ref().is_some_and(FaultPlan::is_empty) {
+            self.fault_plan = None;
+        }
+        Ok(())
     }
 
     /// Drive the current run to completion. Like [`Trainer::step`], an
@@ -357,7 +556,7 @@ impl Trainer {
         // deliver iteration 0 only when it lands now — a run resumed
         // after an early break at iteration 0 already delivered it
         if self.state.t == 0 && self.state.history.records.is_empty() {
-            self.ensure_initial_record();
+            self.ensure_initial_record()?;
             let first = self.state.history.records[0];
             if observer(&first).is_break() {
                 return Ok(self.outcome());
@@ -399,13 +598,17 @@ impl Trainer {
     /// Start a fresh run under a new config on the same staged session.
     ///
     /// Everything staged must stay valid, so the new config must keep the
-    /// session's dataset dimensions, partition grid, loss, and engine
-    /// kind (workers own their shards and loss; the XLA engine is
-    /// compiled at a fixed inner-loop length). Name, algorithm,
-    /// fractions, schedule, seed, iteration counts, eval cadence and
-    /// network model are free — which is exactly what the fig2/table2
-    /// sweeps vary. Note the session keeps the dataset it was staged
-    /// with: `cfg.seed` reseeds the training streams only.
+    /// session's dataset dimensions, loss, and engine kind (workers own
+    /// their shards and loss; the XLA engine is compiled at a fixed
+    /// inner-loop length). A *grid* change is allowed when the session's
+    /// engine is not shape-specialized: the dataset is re-partitioned and
+    /// the cluster relaunched through the same restaging machinery as
+    /// elastic re-sharding — but voluntarily, between runs, off the
+    /// simulated clock (no shuffle charge, no [`ReshardRecord`]). Name,
+    /// algorithm, fractions, schedule, seed, iteration counts, eval
+    /// cadence and network model are free — which is exactly what the
+    /// fig2/table2 sweeps vary. Note the session keeps the dataset it was
+    /// staged with: `cfg.seed` reseeds the training streams only.
     pub fn reconfigure(&mut self, cfg: ExperimentConfig) -> Result<()> {
         cfg.validate()?;
         ensure!(
@@ -415,14 +618,6 @@ impl Trainer {
             self.ds.m(),
             cfg.data.n(),
             cfg.data.m()
-        );
-        ensure!(
-            cfg.p == self.cfg.p && cfg.q == self.cfg.q,
-            "reconfigure: session grid is {}x{}, new config wants {}x{} (stage a new Trainer)",
-            self.cfg.p,
-            self.cfg.q,
-            cfg.p,
-            cfg.q
         );
         ensure!(
             cfg.loss == self.cfg.loss,
@@ -455,6 +650,29 @@ impl Trainer {
                 cfg.inner_steps
             );
         }
+        if cfg.p != self.cfg.p || cfg.q != self.cfg.q {
+            // shape-specialized (AOT) kernels are compiled at one block
+            // shape — a different grid needs different artifacts
+            ensure!(
+                self.engine.fixed_inner_steps().is_none(),
+                "reconfigure: session holds shape-specialized kernels compiled for the \
+                 {}x{} grid; a {}x{} grid needs a new Trainer",
+                self.cfg.p,
+                self.cfg.q,
+                cfg.p,
+                cfg.q
+            );
+            let layout = staged_layout(&cfg, &self.ds)?;
+            let grid = Grid::partition_with_layout(self.ds.as_ref(), layout)?;
+            self.cluster = Cluster::launch_with_policy(
+                grid,
+                Arc::clone(&self.engine),
+                cfg.loss,
+                kind,
+                cfg.recovery.unwrap_or_default(),
+            );
+            self.ws = step::Workspace::default();
+        }
         self.cfg = cfg;
         self.reset();
         Ok(())
@@ -464,12 +682,15 @@ impl Trainer {
     /// Lazy (first `step`/`run`) so that staging, `reconfigure` and the
     /// reconfigure-then-`warm_start` idiom never pay for an objective
     /// evaluation that the next call would immediately discard.
-    fn ensure_initial_record(&mut self) {
+    fn ensure_initial_record(&mut self) -> Result<()> {
         if self.state.t == 0 && self.state.history.records.is_empty() {
             // the run's wall clock starts when the run does, not at
             // staging — sessions may sit staged for a while before use
             self.state.t_start = Instant::now();
-            let loss = self.objective_now();
+            // a permanent loss during the iteration-0 evaluation (no
+            // fault plan can arm before iteration 1) would mean the
+            // cluster died before the run began — surface it as an error
+            let loss = self.objective_now()?;
             let rec = IterRecord {
                 iter: 0,
                 loss,
@@ -480,6 +701,7 @@ impl Trainer {
             };
             self.state.history.push(rec);
         }
+        Ok(())
     }
 }
 
@@ -496,8 +718,13 @@ fn sim_net_for(cfg: &ExperimentConfig) -> SimNet {
 /// rate (a row partition is barrier-bound by its *slowest* worker
 /// across the Q feature blocks) so skewed profiles finish phases
 /// together. A uniform profile falls back to the balanced boundary
-/// vectors bit-for-bit.
-fn staged_layout(cfg: &ExperimentConfig) -> Result<Layout> {
+/// vectors bit-for-bit — unless the dataset is sparse, in which case
+/// `Throughput` splits by *nnz mass* ([`Layout::weighted_by_cost`] with
+/// per-row nnz as the cost): on skewed-density CSR data equal row
+/// counts are not equal work, so the density-aware split is what makes
+/// shards actually finish together. Dense `Throughput` layouts are
+/// unchanged (every row costs the same).
+fn staged_layout(cfg: &ExperimentConfig, ds: &Dataset) -> Result<Layout> {
     let (n, m) = (cfg.data.n(), cfg.data.m());
     match cfg.shard_weighting {
         ShardWeighting::Balanced => Layout::new(n, m, cfg.p, cfg.q),
@@ -509,10 +736,11 @@ fn staged_layout(cfg: &ExperimentConfig) -> Result<Layout> {
                     (0..cfg.q).map(|qi| rates[pi * cfg.q + qi]).fold(f64::INFINITY, f64::min)
                 })
                 .collect();
-            if weights.windows(2).all(|w| w[0] == w[1]) {
-                Layout::new(n, m, cfg.p, cfg.q)
-            } else {
-                Layout::weighted(n, m, cfg.p, cfg.q, &weights)
+            let uniform = weights.windows(2).all(|w| w[0] == w[1]);
+            match ds.x.row_costs() {
+                Some(costs) => Layout::weighted_by_cost(n, m, cfg.p, cfg.q, &weights, &costs),
+                None if uniform => Layout::new(n, m, cfg.p, cfg.q),
+                None => Layout::weighted(n, m, cfg.p, cfg.q, &weights),
             }
         }
     }
@@ -615,8 +843,6 @@ mod tests {
     #[test]
     fn reconfigure_rejects_incompatible_sessions() {
         let mut t = Trainer::new(cfg(3)).unwrap();
-        let other_grid = cfg(3).to_builder().grid(2, 1).build().unwrap();
-        assert!(t.reconfigure(other_grid).is_err());
         let other_loss =
             cfg(3).to_builder().loss(crate::loss::Loss::Logistic).build().unwrap();
         assert!(t.reconfigure(other_loss).is_err());
@@ -630,6 +856,106 @@ mod tests {
             .build()
             .unwrap();
         assert!(t.reconfigure(variant).is_ok());
+    }
+
+    #[test]
+    fn reconfigure_restages_grid_changes() {
+        // a grid change re-partitions the staged dataset in place; the
+        // restaged session's run must be bit-identical to a session
+        // staged fresh at the new grid
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.run().unwrap();
+        let shrunk = cfg(4).to_builder().grid(2, 1).build().unwrap();
+        t.reconfigure(shrunk.clone()).unwrap();
+        assert_eq!(t.cluster.layout.p, 2);
+        assert_eq!(t.cluster.layout.q, 1);
+        let a = t.run().unwrap();
+        let b = Trainer::new(shrunk).unwrap().run().unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.history.losses(), b.history.losses());
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+    }
+
+    #[test]
+    fn throughput_staging_splits_sparse_rows_by_nnz_mass() {
+        use crate::data::{CsrMatrix, Store};
+
+        // 60 rows x 8 cols: the first 20 rows are 6x denser than the
+        // rest, so count-balanced shards would give partition 0 three
+        // quarters of the work
+        let rows: Vec<Vec<(usize, f32)>> = (0..60)
+            .map(|r| {
+                let nnz = if r < 20 { 6 } else { 1 };
+                (0..nnz).map(|j| (j, 1.0 + r as f32)).collect()
+            })
+            .collect();
+        let ds = Dataset {
+            x: Store::Sparse(CsrMatrix::from_row_entries(60, 8, rows)),
+            y: vec![1.0; 60],
+            name: "skewed".into(),
+        };
+        let costs = ds.x.row_costs().unwrap();
+        let base = ExperimentConfig::builder()
+            .name("nnz-staging")
+            .sparse(60, 8, 3)
+            .grid(2, 2)
+            .outer_iters(1)
+            .build()
+            .unwrap();
+
+        // Balanced weighting ignores density (frozen legacy layout)
+        let balanced = staged_layout(&base, &ds).unwrap();
+        assert_eq!(balanced.row_bounds(), Layout::new(60, 8, 2, 2).unwrap().row_bounds());
+
+        // Throughput weighting on CSR splits by nnz mass even under a
+        // uniform profile: each shard carries ~half the nonzeros
+        let thr = base.to_builder().shard_weighting(ShardWeighting::Throughput).build().unwrap();
+        let l = staged_layout(&thr, &ds).unwrap();
+        assert_eq!(
+            l.row_bounds(),
+            Layout::weighted_by_cost(60, 8, 2, 2, &[1.0, 1.0], &costs).unwrap().row_bounds()
+        );
+        assert_ne!(l.row_bounds(), balanced.row_bounds());
+        let cut = l.row_bounds()[1];
+        let mass: f64 = costs[..cut].iter().sum();
+        let total: f64 = costs.iter().sum();
+        assert!(
+            (mass / total - 0.5).abs() < 0.05,
+            "nnz mass below the cut should be ~half, got {} of {}",
+            mass,
+            total
+        );
+
+        // dense Throughput layouts are unchanged by the cost-aware path
+        let dense_thr =
+            cfg(1).to_builder().shard_weighting(ShardWeighting::Throughput).build().unwrap();
+        let dense_ds = dense_thr.data.try_materialize(3).unwrap();
+        let dl = staged_layout(&dense_thr, &dense_ds).unwrap();
+        assert_eq!(dl.row_bounds(), Layout::new(200, 24, 2, 2).unwrap().row_bounds());
+    }
+
+    #[test]
+    fn permanent_loss_shrinks_the_grid_and_continues() {
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.set_fault_plan(Some("3@2:grad!perm".parse().unwrap()));
+        let out = t.run().unwrap();
+        // the 2x2 grid lost an observation-row partition
+        assert_eq!((t.config().p, t.config().q), (1, 2));
+        assert_eq!(out.history.reshards.len(), 1);
+        let r = &out.history.reshards[0];
+        assert_eq!((r.iter, r.worker), (2, 3));
+        assert_eq!((r.from_p, r.from_q, r.to_p, r.to_q), (2, 2, 1, 2));
+        assert!(r.bytes > 0, "re-staging the survivors moves bytes");
+        assert!(r.sim_s > 0.0, "the shuffle costs simulated time");
+        // the interrupted iteration was rolled back and re-run: the full
+        // horizon completes and every iteration lands exactly once
+        assert_eq!(out.history.records.len(), 5); // F(ω^0) + 4 iterations
+        assert!(t.is_done());
+        assert!(out.history.faults.iter().any(|f| f.perm), "the kill is logged as permanent");
+        // the degraded tail is the shrunk grid's own trajectory: from the
+        // rollback point on, the run is the 1x2 session's math (pinned
+        // exhaustively in tests/faults.rs)
+        assert!(out.history.losses().iter().all(|l| l.is_finite()));
     }
 
     #[test]

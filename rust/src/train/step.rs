@@ -30,7 +30,7 @@ use std::sync::Arc;
 
 use super::faults::FaultPlan;
 use super::Trainer;
-use crate::cluster::{Cluster, SvrgTask};
+use crate::cluster::{Cluster, PermanentLoss, SvrgTask};
 use crate::config::AlgorithmKind;
 use crate::coordinator::sampling::{self, SampleSets};
 use crate::metrics::{FaultPhase, FaultRecord, History, IterRecord};
@@ -43,7 +43,10 @@ use crate::util::arc_mut;
 /// the cluster module docs). Every worker participates in every phase,
 /// so an armed kill always fires within its phase. Recovered faults are
 /// observability-only — they land in [`History::faults`], never in the
-/// trajectory.
+/// trajectory. The records are pushed here, at *arm* time, before any
+/// transport-dependent recovery runs — so the fault log is identical
+/// across executors even when a `!perm` kill (or exhausted respawn
+/// retries) later escalates the phase to [`PermanentLoss`].
 fn arm_due_faults(
     plan: Option<&FaultPlan>,
     cluster: &Cluster,
@@ -53,9 +56,13 @@ fn arm_due_faults(
     workers: usize,
 ) {
     let Some(plan) = plan else { return };
-    for worker in plan.kills_for(iter, phase, workers) {
-        cluster.inject_fault(worker);
-        history.faults.push(FaultRecord { iter, worker, phase });
+    for (worker, perm) in plan.kills_for(iter, phase, workers) {
+        if perm {
+            cluster.inject_permanent_fault(worker);
+        } else {
+            cluster.inject_fault(worker);
+        }
+        history.faults.push(FaultRecord { iter, worker, phase, perm });
     }
 }
 
@@ -122,7 +129,10 @@ impl Trainer {
 
     /// Run outer iteration `self.state.t` (already advanced by `step`).
     /// Returns the record when this iteration hits the eval cadence.
-    pub(super) fn iterate(&mut self) -> Option<IterRecord> {
+    /// `Err` means a worker was permanently lost mid-phase — the
+    /// iteration is incomplete and its side effects are undone by the
+    /// caller's rollback (`Trainer::step` re-shards and re-runs).
+    pub(super) fn iterate(&mut self) -> Result<Option<IterRecord>, PermanentLoss> {
         let Trainer { cfg, cluster, leader_engine, state, ws, fault_plan, .. } = self;
         let fault_plan = fault_plan.as_ref();
         let (p, q) = (cfg.p, cfg.q);
@@ -217,10 +227,16 @@ impl Trainer {
         arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Mu, p * q);
         let leader = leader_engine.as_ref();
         if b_sampled {
-            cluster
-                .partial_u_cols_into(&ws.w_blocks, &ws.bcols, &ws.rows, leader, cfg.loss, &mut ws.u);
+            cluster.partial_u_cols_into(
+                &ws.w_blocks,
+                &ws.bcols,
+                &ws.rows,
+                leader,
+                cfg.loss,
+                &mut ws.u,
+            )?;
         } else {
-            cluster.partial_u_into(&ws.w_blocks, &ws.rows, leader, cfg.loss, &mut ws.u);
+            cluster.partial_u_into(&ws.w_blocks, &ws.rows, leader, cfg.loss, &mut ws.u)?;
         }
         state.net.local(ws.sets.d.len() as f64);
 
@@ -238,9 +254,9 @@ impl Trainer {
             // offsets (g returns already projected onto C^t); the
             // cluster debug-asserts each reply length against its id
             // list, so the cq charge below is the actual reply size
-            cluster.grad_cols_into(&ws.u, &ws.ccols, &ws.rows, g);
+            cluster.grad_cols_into(&ws.u, &ws.ccols, &ws.rows, g)?;
         } else {
-            cluster.grad_into(&ws.u, &ws.rows, g);
+            cluster.grad_into(&ws.u, &ws.rows, g)?;
         }
         {
             let mut bytes = 0u64;
@@ -323,7 +339,7 @@ impl Trainer {
             let task_cols = &ws.task_cols;
             cluster.svrg_run(&mut ws.tasks, |ti, w_l| {
                 w[task_cols[ti].clone()].copy_from_slice(w_l);
-            });
+            })?;
         }
         // cost from the actual (ragged) sub-block dims: the phase waits
         // on the slowest worker — the max per-worker (width × density) /
@@ -347,16 +363,16 @@ impl Trainer {
         if t % self.cfg.eval_every == 0 || t == self.cfg.outer_iters {
             let rec = IterRecord {
                 iter: t,
-                loss: self.objective_now(),
+                loss: self.objective_now()?,
                 wall_s: self.state.t_start.elapsed().as_secs_f64(),
                 sim_s: self.state.net.sim_s(),
                 comm_bytes: self.state.net.total_bytes(),
                 grad_coord_evals: self.state.grad_coord_evals,
             };
             self.state.history.push(rec);
-            Some(rec)
+            Ok(Some(rec))
         } else {
-            None
+            Ok(None)
         }
     }
 
@@ -366,7 +382,7 @@ impl Trainer {
     /// offline). The full-row index vectors are computed once per
     /// session and the w-block slices are refilled in place, so repeat
     /// evaluations allocate nothing.
-    pub(super) fn objective_now(&mut self) -> f64 {
+    pub(super) fn objective_now(&mut self) -> Result<f64, PermanentLoss> {
         let Trainer { cfg, cluster, leader_engine, state, ws, .. } = self;
         if ws.eval_rows.len() != cluster.p {
             ws.eval_rows = (0..cluster.p)
@@ -379,8 +395,12 @@ impl Trainer {
             dst.clear();
             dst.extend_from_slice(&state.w[cluster.layout.block_cols(qi)]);
         }
-        let total =
-            cluster.block_loss(&ws.eval_w_blocks, &ws.eval_rows, leader_engine.as_ref(), cfg.loss);
-        total / cluster.layout.n_total as f64
+        let total = cluster.block_loss(
+            &ws.eval_w_blocks,
+            &ws.eval_rows,
+            leader_engine.as_ref(),
+            cfg.loss,
+        )?;
+        Ok(total / cluster.layout.n_total as f64)
     }
 }

@@ -1,12 +1,21 @@
 //! Unreliable-cluster suite: fault injection with leader-side recovery,
-//! and checkpoint/resume.
+//! permanent loss with elastic re-sharding, and checkpoint/resume.
 //!
-//! The contract under test is *bit-transparency*: a run that loses (and
+//! Two contracts under test. *Bit-transparency*: a run that loses (and
 //! recovers) workers mid-phase, or that is checkpointed to JSON and
 //! resumed in a fresh session, must reproduce the uninterrupted
 //! fault-free trajectory exactly — same iterate, same losses, same
 //! simulated-cost and wire accounting (`wall_s` excepted: wall clocks
-//! restart with the process).
+//! restart with the process). *Degradation equivalence*: a run that
+//! loses a worker **permanently** must, from the loss on, be
+//! bit-identical to a fresh run staged on the shrunk grid and
+//! warm-started from the last completed iteration — offset only by the
+//! honestly-charged shuffle cost of the re-shard.
+//!
+//! The permanent-loss tests carry `perm` in their names: the CI
+//! escalation lane exports a `!perm` plan and filters to them (an
+//! escalating plan breaks the transparency contract the other tests
+//! pin, by design).
 //!
 //! Staging a `Trainer` reads `SODDA_FAULT_PLAN`, so every test in this
 //! binary serializes on the crate-wide `util::env` lock: the
@@ -149,6 +158,115 @@ fn fault_log_records_what_the_plan_scheduled() {
     assert_eq!(History::from_json(&v).unwrap().faults, t.history().faults);
 }
 
+// ---- permanent loss / elastic re-sharding ----------------------------------
+
+/// ISSUE 9 acceptance: a run that permanently loses a worker at
+/// iteration t escalates, re-shards, and continues **as the shrunk-grid
+/// run** — bit-identical from t on to a fresh session staged at the
+/// shrunk grid and warm-started from the (t-1)-th checkpoint. The only
+/// difference is the honestly-accounted shuffle: `sim_s`/`comm_bytes`
+/// offset by exactly the [`ReshardRecord`]'s charge. Both executors,
+/// dense + CSR, even + ragged; the executors must also agree with each
+/// other on every observable, fault and re-shard logs included.
+#[test]
+fn permanent_loss_continues_as_the_shrunk_grid_run() {
+    let _g = locked();
+    let t_kill = 3usize;
+    let shapes: [(ExperimentConfigBuilder, &str); 4] = [
+        (base(120, 24, 2, 2, 6), "dense even"),
+        (base(97, 23, 3, 2, 6), "dense ragged"),
+        (base(120, 24, 2, 2, 6).sparse(120, 24, 4), "csr even"),
+        (base(85, 19, 2, 3, 6).sparse(85, 19, 5), "csr ragged"),
+    ];
+    for (b, shape) in shapes {
+        let mut per_kind = Vec::new();
+        for kind in [ExecutorKind::InProcess, ExecutorKind::Threaded] {
+            let label = format!("{shape} on {kind}");
+            let mut lossy = Trainer::new(b.clone().executor(kind).build().unwrap()).unwrap();
+            lossy.set_fault_plan(Some("1@3:grad!perm".parse().unwrap()));
+            let a = lossy.run().unwrap();
+            assert_eq!(a.history.reshards.len(), 1, "{label}: expected exactly one re-shard");
+            let r = a.history.reshards[0];
+            assert_eq!((r.iter, r.worker), (t_kill, 1), "{label}: wrong re-shard provenance");
+            assert!(r.bytes > 0 && r.sim_s > 0.0, "{label}: shuffle must cost bytes and time");
+
+            // the reference: the same run, fault-free, checkpointed at
+            // t-1 and warm-started into a session staged directly on
+            // the shrunk grid
+            let mut pre = Trainer::new(b.clone().executor(kind).build().unwrap()).unwrap();
+            pre.set_fault_plan(None);
+            for _ in 0..t_kill - 1 {
+                pre.step().unwrap();
+            }
+            let shrunk = b.clone().grid(r.to_p, r.to_q).executor(kind).build().unwrap();
+            let mut reference = Trainer::resume(shrunk, pre.checkpoint()).unwrap();
+            reference.set_fault_plan(None);
+            let o = reference.run().unwrap();
+
+            assert_eq!(a.w, o.w, "{label}: final iterate diverged from the shrunk-grid run");
+            assert_eq!(a.history.records.len(), o.history.records.len(), "{label}");
+            for (x, y) in a.history.records.iter().zip(&o.history.records) {
+                assert_eq!(x.iter, y.iter, "{label}: cadence diverged");
+                assert_eq!(
+                    x.loss.to_bits(),
+                    y.loss.to_bits(),
+                    "{label}: loss at iter {}",
+                    x.iter
+                );
+                assert_eq!(
+                    x.grad_coord_evals, y.grad_coord_evals,
+                    "{label}: grad_coord_evals at iter {}",
+                    x.iter
+                );
+                if x.iter < t_kill {
+                    // before the loss: the original grid's own numbers
+                    assert_eq!(x.sim_s.to_bits(), y.sim_s.to_bits(), "{label}: iter {}", x.iter);
+                    assert_eq!(x.comm_bytes, y.comm_bytes, "{label}: iter {}", x.iter);
+                } else {
+                    // after: offset by exactly the shuffle charge
+                    assert_eq!(
+                        x.comm_bytes,
+                        y.comm_bytes + r.bytes,
+                        "{label}: comm_bytes at iter {} must carry the re-shard bytes",
+                        x.iter
+                    );
+                    let want = y.sim_s + r.sim_s;
+                    assert!(
+                        (x.sim_s - want).abs() <= 1e-9 * want.abs().max(1.0),
+                        "{label}: sim_s at iter {} is {} but shrunk-run + shuffle is {}",
+                        x.iter,
+                        x.sim_s,
+                        want
+                    );
+                }
+            }
+            per_kind.push((a, lossy.history().faults.clone()));
+        }
+        // deterministic observable escalation: both executors produce
+        // identical trajectories *and* identical fault/re-shard logs
+        let (a, fa) = &per_kind[0];
+        let (t, ft) = &per_kind[1];
+        assert_eq!(a.w, t.w, "{shape}: executors diverged under permanent loss");
+        assert_same_trajectory(&a.history, &t.history, &format!("{shape}: cross-executor"));
+        assert_eq!(fa, ft, "{shape}: fault logs diverged across executors");
+        assert_eq!(a.history.reshards, t.history.reshards, "{shape}: re-shard logs diverged");
+    }
+}
+
+/// An env-exported `!perm` plan (the CI escalation lane's knob) stages,
+/// escalates, re-shards, and leaves the run on the shrunk grid.
+#[test]
+fn env_perm_plan_escalates_and_reshards() {
+    with_plan_env(Some("1@2:grad!perm"), || {
+        let mut t = Trainer::new(base(80, 16, 2, 2, 4).build().unwrap()).unwrap();
+        t.run().unwrap();
+        assert_eq!(t.history().reshards.len(), 1);
+        assert!(t.history().faults.iter().any(|f| f.perm), "the kill must be logged as permanent");
+        assert_eq!((t.config().p, t.config().q), (1, 2), "the grid must have shrunk");
+        assert!(t.is_done(), "the degraded run must still complete its horizon");
+    });
+}
+
 // ---- checkpoint / resume ---------------------------------------------------
 
 /// Checkpoint at every possible boundary t, resume in a fresh session,
@@ -212,6 +330,39 @@ fn faulted_interrupted_run_still_matches_the_pristine_one() {
         let label = format!("{kind} plan=[{plan}]");
         assert_eq!(a.w, o.w, "{label}: final iterate diverged");
         assert_same_trajectory(&a.history, &o.history, &label);
+    }
+}
+
+/// A checkpoint is executor-agnostic: a snapshot taken under one
+/// transport resumes under the other and reproduces the uninterrupted
+/// trajectory bit-for-bit — `RunState::executor` is provenance, not a
+/// constraint.
+#[test]
+fn checkpoints_resume_across_executors() {
+    let _g = locked();
+    let cfg = |kind| base(90, 18, 2, 2, 6).executor(kind).build().unwrap();
+    let mut full = Trainer::new(cfg(ExecutorKind::InProcess)).unwrap();
+    let a = full.run().unwrap();
+    let pairs = [
+        (ExecutorKind::InProcess, ExecutorKind::Threaded),
+        (ExecutorKind::Threaded, ExecutorKind::InProcess),
+    ];
+    for (from, to) in pairs {
+        let mut first = Trainer::new(cfg(from)).unwrap();
+        for _ in 0..3 {
+            first.step().unwrap();
+        }
+        // through the serialized form, as a real cross-machine move would go
+        let text = first.checkpoint().to_json().to_string_pretty();
+        let snap = RunState::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(snap.executor, from, "snapshot must record its provenance");
+        let mut second = Trainer::resume(cfg(to), snap).unwrap();
+        assert_eq!(second.executor(), to);
+        let o = second.run().unwrap();
+        let label = format!("{from} -> {to}");
+        assert_eq!(a.w, o.w, "{label}: final iterate diverged");
+        assert_same_trajectory(&a.history, &o.history, &label);
+        assert_eq!(a.comm_bytes, o.comm_bytes, "{label}: wire accounting diverged");
     }
 }
 

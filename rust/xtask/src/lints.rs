@@ -10,7 +10,7 @@
 //! | `steady_alloc` | `train/step.rs` never calls the allocating (non-`_into`) cluster/engine entry points — the steady state is allocation-free by budget |
 //! | `wildcard_cmd` | `WorkerCore::execute` has no wildcard `Cmd` arm — adding a command must force every transport-visible match to be revisited |
 //! | `doc_refs` | backticked path references in README/ROADMAP/CHANGES and `//!` module docs point at files that exist |
-//! | `doc_contract` | the determinism-contract doc section and the CI lanes that enforce it stay present |
+//! | `doc_contract` | the determinism-contract and checkpoint-durability doc sections, the README fault-tolerance subsections, and the CI lanes that enforce them stay present |
 //!
 //! Any flagged line can be waived with `lint:allow(<name>)` in a
 //! comment on the same line or the line above — waivers are meant to
@@ -633,6 +633,7 @@ fn doc_refs(root: &Path, files: &[LintFile]) -> Vec<Violation> {
 }
 
 const CONTRACT_HEADING: &str = "## Determinism contract";
+const CHECKPOINT_MOD: &str = "rust/src/train/checkpoint.rs";
 const CI_FILE: &str = ".github/workflows/ci.yml";
 const CI_LANES: [&str; 4] = ["rust-loom:", "rust-tsan:", "rust-miri:", "xtask"];
 
@@ -678,6 +679,31 @@ fn doc_contract(files: &[LintFile]) -> Vec<Violation> {
                       tooling (loom/TSan/Miri/xtask) must stay wired into CI"),
         );
     }
+    require(
+        "README.md",
+        "### Escalation, permanent loss & live re-sharding",
+        "README lost the escalation/re-sharding subsection — RecoveryPolicy and the \
+         elastic-degradation behavior must stay documented under Fault tolerance",
+    );
+    require(
+        "README.md",
+        "### Durable checkpoints",
+        "README lost the durable-checkpoints subsection — atomic saves and the \
+         incremental delta mode must stay documented under Checkpoint / resume",
+    );
+    require(
+        CHECKPOINT_MOD,
+        "## Durability",
+        "the `## Durability` section is gone from the checkpoint module docs — it is \
+         the normative statement of atomic saves and the delta format; move it, don't \
+         delete it (and update this lint)",
+    );
+    require(
+        CI_FILE,
+        "grad!perm",
+        "the permanent-loss fault lane (a `!perm` plan entry) disappeared from the CI \
+         matrix — escalation + live re-sharding must stay exercised on both executors",
+    );
     out
 }
 
@@ -891,8 +917,14 @@ let c = '"'; let d = b"env::var"; let e = br#"env::var"#; let done = 1;
     fn contract_files() -> Vec<LintFile> {
         files(&[
             (TRANSPORT_MOD, "//! ## Determinism contract\nfn execute() {}\n"),
-            ("README.md", "the determinism contract lives in the transport docs\n"),
-            (CI_FILE, "jobs:\n  rust-loom:\n  rust-tsan:\n  rust-miri:\n  x:\n    run: cargo run -p xtask -- lint\n"),
+            (
+                "README.md",
+                "the determinism contract lives in the transport docs\n\
+                 ### Escalation, permanent loss & live re-sharding\n\
+                 ### Durable checkpoints\n",
+            ),
+            (CI_FILE, "jobs:\n  rust-loom:\n  rust-tsan:\n  rust-miri:\n  x:\n    run: cargo run -p xtask -- lint\n    plan: \"1@2:grad!perm\"\n"),
+            (CHECKPOINT_MOD, "//! ## Durability\nfn save() {}\n"),
         ])
     }
 
@@ -908,10 +940,19 @@ let c = '"'; let d = b"env::var"; let e = br#"env::var"#; let done = 1;
         assert_eq!(doc_contract(&fs_).len(), 1);
 
         let mut fs_ = contract_files();
-        fs_[2] = lint_file(CI_FILE, "jobs:\n  rust-loom:\n  rust-miri:\n    run: xtask\n");
+        fs_[2] = lint_file(
+            CI_FILE,
+            "jobs:\n  rust-loom:\n  rust-miri:\n    run: xtask\n    plan: \"1@2:grad!perm\"\n",
+        );
         let v = doc_contract(&fs_);
         assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
         assert!(v[0].msg.contains("rust-tsan"), "{}", v[0].msg);
+
+        let mut fs_ = contract_files();
+        fs_[3] = lint_file(CHECKPOINT_MOD, "//! just a module\nfn save() {}\n");
+        let v = doc_contract(&fs_);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert!(v[0].msg.contains("Durability"), "{}", v[0].msg);
     }
 
     // -- end to end on this repo --
