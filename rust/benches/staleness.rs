@@ -1,0 +1,130 @@
+//! Bounded-staleness benchmark: hard barrier vs 0.75 quorum under a
+//! persistent modeled straggler (PR 10's tentpole acceptance).
+//!
+//! Under `one-slow:4` a barrier phase is pinned to the 4×-slow worker,
+//! while a `0.75` quorum on the 3×2 grid releases at the 5th of six
+//! block replies — the straggler's reply parks in the `LateSet` and
+//! folds into the next iteration at half weight. Both headline numbers
+//! come from the `SimNet` cost model and are fully deterministic, so
+//! they are gated even in quick mode:
+//!
+//! - simulated seconds per outer iteration must improve by ≥ 1.3×
+//!   (the µ/gradient phases improve ~4×; the straggler's inner loops
+//!   still bound phase 3, which caps the overall ratio well below 4);
+//! - statistical efficiency must survive the stale folds: at the
+//!   quorum run's final simulated time, its loss must be ≤ 1.05× the
+//!   barrier's loss at the same simulated budget (the barrier has
+//!   completed ~3× fewer iterations by then, so this holds with slack
+//!   unless late folding actively corrupts the aggregates).
+//!
+//! Wall-clock rows are report-only, as in `benches/straggler.rs`: the
+//! in-process executor runs workers back to back, so host time measures
+//! total work, which quorum release does not change. BENCH_10.json
+//! records the ratios.
+
+use sodda::config::{ClusterProfile, ExecutorKind};
+use sodda::util::bench::Bench;
+use sodda::{ExperimentConfig, StalenessPolicy, Trainer, TrainOutcome};
+
+const ITERS: usize = 8;
+
+fn session(staleness: Option<StalenessPolicy>) -> ExperimentConfig {
+    let mut b = ExperimentConfig::builder()
+        .name("staleness")
+        .dense(6000, 600)
+        .grid(3, 2)
+        .inner_steps(4)
+        .outer_iters(ITERS)
+        .eval_every(1)
+        .fractions_bcd(1.0, 1.0, 0.85)
+        .seed(42)
+        .executor(ExecutorKind::InProcess)
+        .cluster_profile(ClusterProfile::one_slow(4.0));
+    if let Some(pol) = staleness {
+        b = b.staleness(pol);
+    }
+    b.build().unwrap()
+}
+
+fn run(cfg: ExperimentConfig) -> TrainOutcome {
+    Trainer::new(cfg).unwrap().run().unwrap()
+}
+
+fn quorum() -> StalenessPolicy {
+    StalenessPolicy { quorum_frac: 0.75, max_staleness_iters: 2, timeout_factor: 4.0 }
+}
+
+fn main() {
+    let mut b = Bench::from_env("staleness");
+
+    let barrier = run(session(None));
+    let bounded = run(session(Some(quorum())));
+
+    let end = |o: &TrainOutcome| *o.history.records.last().unwrap();
+    let (b_end, q_end) = (end(&barrier), end(&bounded));
+    let speedup = b_end.sim_s / q_end.sim_s;
+    println!(
+        "one-slow:4 3x2: barrier {:.3} ms/iter (sim), quorum@0.75 {:.3} ms/iter (sim), \
+         speedup {speedup:.2}x",
+        b_end.sim_s / ITERS as f64 * 1e3,
+        q_end.sim_s / ITERS as f64 * 1e3
+    );
+
+    // loss at equal simulated budget: the barrier record closest below
+    // the quorum run's final simulated time
+    let b_at = barrier
+        .history
+        .records
+        .iter()
+        .filter(|r| r.sim_s <= q_end.sim_s)
+        .last()
+        .unwrap_or(&barrier.history.records[0]);
+    let loss_ratio = q_end.loss / b_at.loss;
+    println!(
+        "loss at sim budget {:.3} ms: quorum {:.6} vs barrier {:.6} (iter {}), \
+         ratio {loss_ratio:.3}",
+        q_end.sim_s * 1e3,
+        q_end.loss,
+        b_at.loss,
+        b_at.iter
+    );
+    let parked: usize = bounded.history.staleness.iter().map(|r| r.late).sum();
+    let folds: usize = bounded.history.staleness.iter().map(|r| r.folds).sum();
+    println!("staleness log: {parked} parked, {folds} folded over {ITERS} iters");
+
+    // wall-clock presence rows for the bench-gate file (report-only
+    // medians; the gated quantities above are simulated, not measured)
+    for (name, policy) in [
+        ("one outer iter barrier (one-slow:4 3x2)", None),
+        ("one outer iter quorum@0.75 (one-slow:4 3x2)", Some(quorum())),
+    ] {
+        let mut t = Trainer::new(session(policy)).unwrap();
+        b.bench(name, || {
+            if t.is_done() {
+                t.reset();
+            }
+            t.step().unwrap();
+        });
+    }
+    b.finish();
+
+    // the model ratios are deterministic — gate them in every mode
+    if speedup < 1.3 {
+        eprintln!(
+            "REGRESSION: quorum release beats the barrier by only {speedup:.2}x \
+             (< 1.3x) under one-slow:4"
+        );
+        std::process::exit(1);
+    }
+    if loss_ratio > 1.05 {
+        eprintln!(
+            "REGRESSION: bounded staleness costs {loss_ratio:.3}x loss (> 1.05x) \
+             at an equal simulated budget"
+        );
+        std::process::exit(1);
+    }
+    if parked == 0 || folds == 0 {
+        eprintln!("REGRESSION: the straggler was never parked/folded — the gate proved nothing");
+        std::process::exit(1);
+    }
+}

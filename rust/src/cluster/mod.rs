@@ -61,6 +61,23 @@
 //! iteration — see `train/mod.rs` and the README's elastic
 //! re-sharding section.
 //!
+//! ## Bounded-staleness quorums
+//!
+//! The µ and gradient phases also come in quorum flavors
+//! ([`Cluster::partial_u_quorum_into`], [`Cluster::grad_quorum_into`])
+//! for the trainer's bounded-staleness mode
+//! ([`crate::config::StalenessPolicy`]): membership is decided by the
+//! *trainer* on modeled per-worker phase times and passed down as a
+//! [`QuorumCtx`] mask, replies outside the mask are parked in the
+//! [`LateSet`] with per-block iteration tags, and parked replies drain
+//! into the matching phase of a later iteration at an age-discounted
+//! weight (or are dropped past `max_staleness_iters`). Collection still
+//! physically receives every reply, so buffer recycling and the whole
+//! fault-recovery seam above — including [`PermanentLoss`] escalation —
+//! behave exactly as in barrier mode, and a full-true mask is
+//! bit-identical to the barrier phases (README "Bounded-staleness
+//! aggregation").
+//!
 //! ## Steady-state memory
 //!
 //! After warm-up the message protocol allocates nothing per phase:
@@ -141,6 +158,257 @@ enum Armed {
     Clear,
     Transient,
     Perm,
+}
+
+/// One parked straggler reply, exactly as the worker shipped it.
+///
+/// The bounded-staleness quorum phases ([`Cluster::partial_u_quorum_into`],
+/// [`Cluster::grad_quorum_into`]) physically collect every block reply —
+/// preserving buffer recycling and the fault-recovery seam — but replies
+/// outside the quorum mask are parked here instead of folded, and drained
+/// into the *matching phase* of a later iteration with an age-discounted
+/// weight (`LateSet::weight`). Shapes stay valid across iterations
+/// because `|D^t ∩ partition p|` is constant (the `d` fraction is fixed)
+/// and gradient slices carry their own global column ids.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LateSlice {
+    /// A phase-1 reply: the per-partition z margin part (`Q > 1`) or the
+    /// fused u derivative part (`Q == 1`) of observation partition `p`.
+    Mu { p: usize, part: Vec<f32> },
+    /// A phase-2 gradient slice: `data[k]` belongs to global column
+    /// `cols[k]`; `inv_d` is the origin iteration's `1/|D^t|` scale, so
+    /// the fold lands directly in µ-units regardless of when it drains.
+    Grad { cols: Vec<u32>, data: Vec<f32>, inv_d: f64 },
+}
+
+/// A [`LateSlice`] tagged with its origin iteration and worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LateReply {
+    /// outer iteration the reply was parked in
+    pub iter: usize,
+    /// linear worker id (`p·Q + q`) on the grid at park time
+    pub worker: usize,
+    pub slice: LateSlice,
+}
+
+/// The parked-reply store, owned by the trainer (it is run state: the
+/// checkpoint serializes it so resume stays trajectory-exact, rollback
+/// snapshots it, and a re-shard clears it — parked slices reference the
+/// dead grid's shapes). Entries drain in park order, so folding is
+/// deterministic on both executors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LateSet {
+    pub entries: Vec<LateReply>,
+}
+
+impl LateSet {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Age-discounted fold weight: a reply parked `age` iterations ago
+    /// contributes `2^-age` of its raw value (age ≥ 1 by construction —
+    /// a parked reply never folds into its own iteration).
+    pub fn weight(age: usize) -> f32 {
+        0.5f32.powi(age as i32)
+    }
+
+    /// Drain parked gradient slices from earlier iterations into the
+    /// (already `1/|D|`-scaled) µ vector: each folded entry adds
+    /// `weight(age) · inv_d₀ · v` at its recorded global columns, and
+    /// entries older than `max_staleness_iters` are dropped instead.
+    /// `on_fold(cols, weight)` fires per folded entry (the trainer uses
+    /// it to damp per-block step sizes). Returns `(folds, drops)`.
+    pub fn fold_grad_into(
+        &mut self,
+        iter: usize,
+        max_staleness_iters: usize,
+        mu: &mut [f32],
+        mut on_fold: impl FnMut(&[u32], f32),
+    ) -> (usize, usize) {
+        let (mut folds, mut drops) = (0usize, 0usize);
+        let mut i = 0;
+        while i < self.entries.len() {
+            let due = matches!(self.entries[i].slice, LateSlice::Grad { .. })
+                && self.entries[i].iter < iter;
+            if !due {
+                i += 1;
+                continue;
+            }
+            let e = self.entries.remove(i);
+            let age = iter - e.iter;
+            let LateSlice::Grad { cols, data, inv_d } = e.slice else { unreachable!() };
+            if age > max_staleness_iters {
+                drops += 1;
+                continue;
+            }
+            folds += 1;
+            let w = Self::weight(age);
+            let scale = w * inv_d as f32;
+            for (&c, &v) in cols.iter().zip(&data) {
+                if let Some(slot) = mu.get_mut(c as usize) {
+                    *slot += scale * v;
+                }
+            }
+            on_fold(&cols, w);
+        }
+        (folds, drops)
+    }
+
+    /// Serialize for the checkpoint layer (offline build: in-tree json).
+    pub fn to_json_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{self, Value};
+        Value::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    let mut fields = vec![
+                        ("iter", json::num(e.iter as f64)),
+                        ("worker", json::num(e.worker as f64)),
+                    ];
+                    match &e.slice {
+                        LateSlice::Mu { p, part } => {
+                            fields.push(("kind", json::s("mu")));
+                            fields.push(("p", json::num(*p as f64)));
+                            fields.push((
+                                "part",
+                                Value::Arr(part.iter().map(|&v| json::num(v as f64)).collect()),
+                            ));
+                        }
+                        LateSlice::Grad { cols, data, inv_d } => {
+                            fields.push(("kind", json::s("grad")));
+                            fields.push((
+                                "cols",
+                                Value::Arr(cols.iter().map(|&c| json::num(c as f64)).collect()),
+                            ));
+                            fields.push((
+                                "data",
+                                Value::Arr(data.iter().map(|&v| json::num(v as f64)).collect()),
+                            ));
+                            fields.push(("inv_d", json::num(*inv_d)));
+                        }
+                    }
+                    json::obj(fields)
+                })
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`LateSet::to_json_value`] (f32 values round-trip
+    /// exactly through the f64 JSON numbers).
+    pub fn from_json_value(v: &crate::util::json::Value) -> anyhow::Result<LateSet> {
+        let mut set = LateSet::default();
+        for e in v.as_arr()? {
+            let iter = e.get("iter")?.as_usize()?;
+            let worker = e.get("worker")?.as_usize()?;
+            let slice = match e.get("kind")?.as_str()? {
+                "mu" => LateSlice::Mu {
+                    p: e.get("p")?.as_usize()?,
+                    part: e
+                        .get("part")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_f64().map(|f| f as f32))
+                        .collect::<anyhow::Result<Vec<f32>>>()?,
+                },
+                "grad" => LateSlice::Grad {
+                    cols: e
+                        .get("cols")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize().map(|c| c as u32))
+                        .collect::<anyhow::Result<Vec<u32>>>()?,
+                    data: e
+                        .get("data")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_f64().map(|f| f as f32))
+                        .collect::<anyhow::Result<Vec<f32>>>()?,
+                    inv_d: e.get("inv_d")?.as_f64()?,
+                },
+                other => anyhow::bail!("unknown late-reply kind {other:?}"),
+            };
+            set.entries.push(LateReply { iter, worker, slice });
+        }
+        Ok(set)
+    }
+}
+
+/// Per-phase quorum outcome counters, merged by the trainer into its
+/// per-iteration `StalenessRecord`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QuorumStats {
+    /// replies inside the quorum mask (folded now)
+    pub quorum: usize,
+    /// replies parked into the [`LateSet`]
+    pub parked: usize,
+    /// previously parked replies folded this phase
+    pub folds: usize,
+    /// previously parked replies dropped (older than the staleness bound)
+    pub drops: usize,
+    /// summed age-discount weights of this phase's folds (drives the
+    /// trainer's per-block step-size damping)
+    pub fold_weight: f64,
+}
+
+/// Everything a quorum phase needs beyond the barrier arguments. The
+/// mask is decided by the *trainer* on modeled per-worker phase times
+/// (profile rates × armed slowdowns), never wall-clock — both executors
+/// see the same membership and produce identical trajectories.
+pub struct QuorumCtx<'a> {
+    /// per-worker membership (`wid = p·Q + q` order, length P·Q): `true`
+    /// folds now, `false` parks the reply
+    pub mask: &'a [bool],
+    /// current outer iteration (tags parked replies)
+    pub iter: usize,
+    /// parked replies older than this many iterations are dropped
+    pub max_staleness_iters: usize,
+    /// the current iteration's `1/|D^t|` scale, stamped on parked
+    /// gradient slices (unused by the µ phase)
+    pub inv_d: f64,
+    pub late: &'a mut LateSet,
+    pub stats: &'a mut QuorumStats,
+}
+
+/// Drain parked phase-1 (µ) replies from earlier iterations, in park
+/// order: `fold(p, weight, part)` adds one age-discounted part to the
+/// caller's accumulator (z margins on `Q > 1` grids, u derivative parts
+/// on `Q == 1` grids). Entries older than the staleness bound are
+/// dropped and counted; drained buffers are recycled into `pool`.
+fn drain_mu_late(
+    ctx: &mut QuorumCtx<'_>,
+    pool: &mut Vec<Vec<f32>>,
+    mut fold: impl FnMut(usize, f32, &[f32]),
+) {
+    let mut i = 0;
+    while i < ctx.late.entries.len() {
+        let due = matches!(ctx.late.entries[i].slice, LateSlice::Mu { .. })
+            && ctx.late.entries[i].iter < ctx.iter;
+        if !due {
+            i += 1;
+            continue;
+        }
+        let e = ctx.late.entries.remove(i);
+        let age = ctx.iter - e.iter;
+        let LateSlice::Mu { p, part } = e.slice else { unreachable!() };
+        if age > ctx.max_staleness_iters {
+            ctx.stats.drops += 1;
+        } else {
+            let w = LateSet::weight(age);
+            fold(p, w, &part);
+            ctx.stats.folds += 1;
+            ctx.stats.fold_weight += w as f64;
+        }
+        pool.push(part);
+    }
 }
 
 /// One SVRG assignment for the inner-loop phase.
@@ -460,7 +728,7 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
     ) -> Result<(), PermanentLoss> {
-        self.partial_z_impl(w_blocks, None, rows, z)
+        self.partial_z_impl(w_blocks, None, rows, z, None)
     }
 
     /// Sampled-width [`Cluster::partial_z_into`]: `bcols[q]` is the
@@ -477,7 +745,7 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
     ) -> Result<(), PermanentLoss> {
-        self.partial_z_impl(w_blocks, Some(bcols), rows, z)
+        self.partial_z_impl(w_blocks, Some(bcols), rows, z, None)
     }
 
     fn partial_z_impl(
@@ -486,6 +754,7 @@ impl Cluster {
         bcols: Option<&[Arc<Vec<u32>>]>,
         rows: &[Arc<Vec<u32>>],
         z: &mut Vec<Vec<f32>>,
+        mut quorum: Option<&mut QuorumCtx<'_>>,
     ) -> Result<(), PermanentLoss> {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
@@ -542,10 +811,34 @@ impl Cluster {
         for id in 0..self.p * self.q {
             let part = s.slots[id].take().expect("reply staged");
             let pi = id / self.q;
-            for (acc, &v) in z[pi].iter_mut().zip(&part) {
-                *acc += v;
+            match quorum.as_deref_mut() {
+                Some(ctx) if !ctx.mask[id] => {
+                    ctx.stats.parked += 1;
+                    ctx.late.entries.push(LateReply {
+                        iter: ctx.iter,
+                        worker: id,
+                        slice: LateSlice::Mu { p: pi, part },
+                    });
+                }
+                other => {
+                    for (acc, &v) in z[pi].iter_mut().zip(&part) {
+                        *acc += v;
+                    }
+                    s.f32_pool.push(part);
+                    if let Some(ctx) = other {
+                        ctx.stats.quorum += 1;
+                    }
+                }
             }
-            s.f32_pool.push(part);
+        }
+        if let Some(ctx) = quorum {
+            // fold straggler z-parts from earlier iterations before the
+            // leader applies the derivative
+            drain_mu_late(ctx, &mut s.f32_pool, |p, w, part| {
+                for (acc, &v) in z[p].iter_mut().zip(part) {
+                    *acc += w * v;
+                }
+            });
         }
         Ok(())
     }
@@ -588,7 +881,7 @@ impl Cluster {
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
     ) -> Result<(), PermanentLoss> {
-        self.partial_u_impl(w_blocks, None, rows, leader, loss, u)
+        self.partial_u_impl(w_blocks, None, rows, leader, loss, u, None)
     }
 
     /// Sampled-width [`Cluster::partial_u_into`]: compact `w_blocks`
@@ -605,9 +898,34 @@ impl Cluster {
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
     ) -> Result<(), PermanentLoss> {
-        self.partial_u_impl(w_blocks, Some(bcols), rows, leader, loss, u)
+        self.partial_u_impl(w_blocks, Some(bcols), rows, leader, loss, u, None)
     }
 
+    /// Bounded-staleness phase 1: identical collection to
+    /// [`Cluster::partial_u_into`] / [`Cluster::partial_u_cols_into`]
+    /// (every reply is physically received, so buffer recycling and the
+    /// fault-recovery seam — retry, respawn, [`PermanentLoss`]
+    /// escalation — are untouched), but replies outside `ctx.mask` are
+    /// parked in the [`LateSet`] instead of folded, and parked µ parts
+    /// from *earlier* iterations are drained into this phase with
+    /// age-discounted weights. Pass `bcols` exactly as for the barrier
+    /// variants (`Some` on sampled-B iterations). A full-true mask is
+    /// bit-identical to the barrier path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn partial_u_quorum_into(
+        &self,
+        w_blocks: &[Arc<Vec<f32>>],
+        bcols: Option<&[Arc<Vec<u32>>]>,
+        rows: &[Arc<Vec<u32>>],
+        leader: &dyn ComputeEngine,
+        loss: Loss,
+        u: &mut Vec<Arc<Vec<f32>>>,
+        ctx: &mut QuorumCtx<'_>,
+    ) -> Result<(), PermanentLoss> {
+        self.partial_u_impl(w_blocks, bcols, rows, leader, loss, u, Some(ctx))
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn partial_u_impl(
         &self,
         w_blocks: &[Arc<Vec<f32>>],
@@ -616,11 +934,12 @@ impl Cluster {
         leader: &dyn ComputeEngine,
         loss: Loss,
         u: &mut Vec<Arc<Vec<f32>>>,
+        mut quorum: Option<&mut QuorumCtx<'_>>,
     ) -> Result<(), PermanentLoss> {
         u.resize_with(self.p, Default::default);
         if self.q > 1 {
             let mut z = std::mem::take(&mut self.scratch.borrow_mut().z);
-            self.partial_z_impl(w_blocks, bcols, rows, &mut z)?;
+            self.partial_z_impl(w_blocks, bcols, rows, &mut z, quorum.as_deref_mut())?;
             let mut s = self.scratch.borrow_mut();
             let s = &mut *s;
             for (pi, up) in u.iter_mut().enumerate() {
@@ -649,8 +968,29 @@ impl Cluster {
                 // reduction), so arrival order cannot change results
                 match self.transport.recv() {
                     (id, Reply::U(mut ub)) => {
-                        std::mem::swap(arc_mut(&mut u[id]), &mut ub);
-                        s.f32_pool.push(ub);
+                        match quorum.as_deref_mut() {
+                            Some(ctx) if !ctx.mask[id] => {
+                                // straggler: the derivative part is
+                                // parked and this partition contributes
+                                // zeros until it folds back in
+                                let up = arc_mut(&mut u[id]);
+                                up.clear();
+                                up.resize(rows[id].len(), 0.0);
+                                ctx.stats.parked += 1;
+                                ctx.late.entries.push(LateReply {
+                                    iter: ctx.iter,
+                                    worker: id,
+                                    slice: LateSlice::Mu { p: id, part: ub },
+                                });
+                            }
+                            other => {
+                                std::mem::swap(arc_mut(&mut u[id]), &mut ub);
+                                s.f32_pool.push(ub);
+                                if let Some(ctx) = other {
+                                    ctx.stats.quorum += 1;
+                                }
+                            }
+                        }
                         remaining -= 1;
                     }
                     (id, Reply::Fault) => {
@@ -668,6 +1008,14 @@ impl Cluster {
                     }
                     _ => panic!("expected U reply"),
                 }
+            }
+            if let Some(ctx) = quorum {
+                // fold straggler u-parts from earlier iterations
+                drain_mu_late(ctx, &mut s.f32_pool, |p, w, part| {
+                    for (acc, &v) in arc_mut(&mut u[p]).iter_mut().zip(part) {
+                        *acc += w * v;
+                    }
+                });
             }
         }
         Ok(())
@@ -751,7 +1099,7 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         g: &mut Vec<f32>,
     ) -> Result<(), PermanentLoss> {
-        self.grad_impl(u, None, rows, g)
+        self.grad_impl(u, None, rows, g, None)
     }
 
     /// Sampled-width [`Cluster::grad_into`]: workers return **compact**
@@ -769,7 +1117,26 @@ impl Cluster {
         rows: &[Arc<Vec<u32>>],
         g: &mut Vec<f32>,
     ) -> Result<(), PermanentLoss> {
-        self.grad_impl(u, Some(ccols), rows, g)
+        self.grad_impl(u, Some(ccols), rows, g, None)
+    }
+
+    /// Bounded-staleness phase 2: as [`Cluster::grad_into`] /
+    /// [`Cluster::grad_cols_into`], but slices outside `ctx.mask` are
+    /// parked (tagged with their **global** column ids and the origin
+    /// iteration's `1/|D^t|` from `ctx.inv_d`) instead of scattered.
+    /// Parked gradient slices are *not* drained here — the trainer
+    /// folds them into µ after the `1/|D|` scaling via
+    /// [`LateSet::fold_grad_into`], so folds land in µ-units no matter
+    /// which iteration (or sampling pattern) they drain into.
+    pub fn grad_quorum_into(
+        &self,
+        u: &[Arc<Vec<f32>>],
+        ccols: Option<&[Arc<Vec<u32>>]>,
+        rows: &[Arc<Vec<u32>>],
+        g: &mut Vec<f32>,
+        ctx: &mut QuorumCtx<'_>,
+    ) -> Result<(), PermanentLoss> {
+        self.grad_impl(u, ccols, rows, g, Some(ctx))
     }
 
     fn grad_impl(
@@ -778,6 +1145,7 @@ impl Cluster {
         ccols: Option<&[Arc<Vec<u32>>]>,
         rows: &[Arc<Vec<u32>>],
         g: &mut Vec<f32>,
+        mut quorum: Option<&mut QuorumCtx<'_>>,
     ) -> Result<(), PermanentLoss> {
         let mut s = self.scratch.borrow_mut();
         for pi in 0..self.p {
@@ -825,6 +1193,22 @@ impl Cluster {
             let slice = s.slots[id].take().expect("reply staged");
             let qi = id % self.q;
             let base = self.layout.block_cols(qi).start;
+            if let Some(ctx) = quorum.as_deref_mut() {
+                if !ctx.mask[id] {
+                    let cols: Vec<u32> = match ccols {
+                        Some(cc) => cc[qi].iter().map(|&ci| (base + ci as usize) as u32).collect(),
+                        None => (base as u32..(base + slice.len()) as u32).collect(),
+                    };
+                    ctx.stats.parked += 1;
+                    ctx.late.entries.push(LateReply {
+                        iter: ctx.iter,
+                        worker: id,
+                        slice: LateSlice::Grad { cols, data: slice, inv_d: ctx.inv_d },
+                    });
+                    continue;
+                }
+                ctx.stats.quorum += 1;
+            }
             match ccols {
                 Some(cc) => {
                     debug_assert_eq!(
@@ -1590,5 +1974,286 @@ mod tests {
         c.inject_fault(1);
         assert_eq!(c.partial_z(&w_blocks, &rows), Ok(base), "second attempt must succeed");
         assert_eq!(c.recovered_workers(), vec![1]);
+    }
+
+    #[test]
+    fn quorum_with_a_full_mask_is_bit_identical_to_the_barrier() {
+        let (c, _ds) = cluster(30, 12, 3, 2, 23);
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.19).sin() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[c.layout.block_cols(qi)].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new(vec![0u32, 2, 5, 9])).collect();
+
+        let mut u_b = Vec::new();
+        c.partial_u_into(&w_blocks, &rows, &NativeEngine, Loss::Hinge, &mut u_b).unwrap();
+        let mask = vec![true; 6];
+        let mut late = LateSet::default();
+        let mut stats = QuorumStats::default();
+        let mut u_q = Vec::new();
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        assert_eq!(u_b, u_q);
+        assert!(late.is_empty());
+        assert_eq!(stats.quorum, 6);
+        assert_eq!(stats.parked + stats.folds + stats.drops, 0);
+
+        let g_b = c.grad(&u_b, &rows).unwrap();
+        let mut stats = QuorumStats::default();
+        let mut g_q = Vec::new();
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.grad_quorum_into(&u_b, None, &rows, &mut g_q, &mut ctx).unwrap();
+        assert_eq!(g_b, g_q);
+        assert!(late.is_empty());
+        assert_eq!(stats.quorum, 6);
+    }
+
+    #[test]
+    fn quorum_drops_replies_past_the_staleness_bound_without_touching_the_fold() {
+        // park worker 1's z-part at iter 0, then run the next quorum
+        // phase at iter 5 with a staleness bound of 2: the entry must be
+        // dropped, leaving the phase bit-identical to the barrier
+        let (c, _ds) = cluster(20, 8, 1, 2, 24);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.27).sin() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[c.layout.block_cols(qi)].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = vec![Arc::new(vec![0u32, 3, 7, 11])];
+        let mut u_b = Vec::new();
+        c.partial_u_into(&w_blocks, &rows, &NativeEngine, Loss::Hinge, &mut u_b).unwrap();
+
+        let mut late = LateSet::default();
+        let mut stats = QuorumStats::default();
+        let mut u_q = Vec::new();
+        let mask = vec![true, false];
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        assert_eq!((stats.quorum, stats.parked), (1, 1));
+        assert_eq!(late.len(), 1);
+        assert_eq!(late.entries[0].worker, 1);
+        assert_eq!(late.entries[0].iter, 0);
+        let LateSlice::Mu { p, ref part } = late.entries[0].slice else { panic!("mu slice") };
+        assert_eq!((p, part.len()), (0, rows[0].len()));
+
+        let full = vec![true, true];
+        let mut stats = QuorumStats::default();
+        let mut ctx = QuorumCtx {
+            mask: &full,
+            iter: 5,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        assert_eq!(u_q, u_b, "a dropped late reply must not perturb the phase");
+        assert!(late.is_empty());
+        assert_eq!((stats.folds, stats.drops), (0, 1));
+    }
+
+    #[test]
+    fn quorum_folds_late_u_parts_with_age_discount() {
+        // Q == 1 fused path: the straggler partition reads zero while
+        // parked, then folds back at half weight one iteration later
+        let (c, _ds) = cluster(30, 8, 3, 1, 25);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.33).sin() * 0.4).collect();
+        let w_blocks = vec![Arc::new(w.clone())];
+        let rows: Vec<Arc<Vec<u32>>> = (0..3).map(|_| Arc::new(vec![0u32, 2, 5, 9])).collect();
+        let mut u_b = Vec::new();
+        c.partial_u_into(&w_blocks, &rows, &NativeEngine, Loss::Hinge, &mut u_b).unwrap();
+
+        let mut late = LateSet::default();
+        let mut stats = QuorumStats::default();
+        let mut u_q = Vec::new();
+        let mask = vec![true, false, true];
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        assert_eq!(*u_q[1], vec![0.0f32; rows[1].len()], "parked partition reads zero");
+        assert_eq!(u_q[0], u_b[0]);
+        assert_eq!(u_q[2], u_b[2]);
+
+        let full = vec![true; 3];
+        let mut stats = QuorumStats::default();
+        let mut ctx = QuorumCtx {
+            mask: &full,
+            iter: 1,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        // same w and rows, so the parked part equals the barrier part:
+        // the fold lands exactly at u + 0.5·u
+        let want: Vec<f32> = u_b[1].iter().map(|&v| v + 0.5 * v).collect();
+        assert_eq!(*u_q[1], want);
+        assert_eq!((stats.folds, stats.drops), (1, 0));
+        crate::assert_close!(stats.fold_weight, 0.5, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn quorum_folds_late_z_parts_before_the_derivative() {
+        // Q > 1 reduce path, exact reconstruction: park worker 1's
+        // z-part at iter 0, drain at iter 1 and check u against a
+        // manually folded margin
+        let (c, _ds) = cluster(20, 8, 1, 2, 26);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 * 0.21).sin() * 0.4).collect();
+        let w_blocks: Vec<Arc<Vec<f32>>> =
+            (0..2).map(|qi| Arc::new(w[c.layout.block_cols(qi)].to_vec())).collect();
+        let rows: Vec<Arc<Vec<u32>>> = vec![Arc::new(vec![0u32, 2, 5, 9, 13])];
+        // worker 1's reply in isolation: zero the block-0 parameters
+        let zero0 = vec![Arc::new(vec![0.0f32; w_blocks[0].len()]), Arc::clone(&w_blocks[1])];
+        let part1 = c.partial_z(&zero0, &rows).unwrap().remove(0);
+        let z_full = c.partial_z(&w_blocks, &rows).unwrap();
+
+        let mut late = LateSet::default();
+        let mut stats = QuorumStats::default();
+        let mut u_q = Vec::new();
+        let mask = vec![true, false];
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        let full = vec![true, true];
+        let mut stats = QuorumStats::default();
+        let mut ctx = QuorumCtx {
+            mask: &full,
+            iter: 1,
+            max_staleness_iters: 2,
+            inv_d: 0.25,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.partial_u_quorum_into(&w_blocks, None, &rows, &NativeEngine, Loss::Hinge, &mut u_q, &mut ctx)
+            .unwrap();
+        let zp: Vec<f32> = z_full[0].iter().zip(&part1).map(|(&a, &b)| a + 0.5 * b).collect();
+        let y: Vec<f32> = rows[0].iter().map(|&r| c.y[0][r as usize]).collect();
+        let mut want = Vec::new();
+        NativeEngine.dloss_u_into(Loss::Hinge, &zp, &y, &mut want);
+        assert_eq!(*u_q[0], want);
+        assert_eq!((stats.folds, stats.drops), (1, 0));
+    }
+
+    #[test]
+    fn grad_quorum_parks_global_slices_and_folds_into_mu() {
+        let (c, _ds) = cluster(20, 8, 1, 2, 27);
+        let rows: Vec<Arc<Vec<u32>>> = vec![Arc::new(vec![0u32, 3, 7, 11])];
+        let u: Vec<Arc<Vec<f32>>> =
+            vec![Arc::new((0..rows[0].len()).map(|k| 0.1 * k as f32 - 0.2).collect())];
+        let g_full = c.grad(&u, &rows).unwrap();
+        let r1 = c.layout.block_cols(1);
+
+        let mut late = LateSet::default();
+        let mut stats = QuorumStats::default();
+        let mask = vec![true, false];
+        let mut g_q = Vec::new();
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.2,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.grad_quorum_into(&u, None, &rows, &mut g_q, &mut ctx).unwrap();
+        assert_eq!(g_q[..r1.start], g_full[..r1.start], "member block scattered as usual");
+        assert!(g_q[r1.clone()].iter().all(|&v| v == 0.0), "parked block stays zero");
+        assert_eq!(late.len(), 1);
+        let LateSlice::Grad { ref cols, ref data, inv_d } = late.entries[0].slice else {
+            panic!("grad slice")
+        };
+        assert_eq!(*cols, (r1.start as u32..r1.end as u32).collect::<Vec<u32>>());
+        assert_eq!(*data, g_full[r1.clone()], "single partition: slice == assembled block");
+        crate::assert_close!(inv_d, 0.2, 1e-12, 1e-12);
+        let parked = data.clone();
+
+        // fold one iteration later: µ gains weight · inv_d₀ · v
+        let mut mu = vec![0.0f32; 8];
+        let mut touched = Vec::new();
+        let (folds, drops) =
+            late.fold_grad_into(1, 2, &mut mu, |cols, w| touched.push((cols.len(), w)));
+        assert_eq!((folds, drops), (1, 0));
+        assert!(late.is_empty());
+        assert_eq!(touched, vec![(r1.len(), 0.5)]);
+        let scale = 0.5f32 * 0.2f32;
+        for (k, gi) in r1.clone().enumerate() {
+            assert_eq!(mu[gi], scale * parked[k]);
+        }
+        assert!(mu[..r1.start].iter().all(|&v| v == 0.0));
+
+        // a reply older than the bound is dropped, not folded
+        let mut stats = QuorumStats::default();
+        let mut ctx = QuorumCtx {
+            mask: &mask,
+            iter: 0,
+            max_staleness_iters: 2,
+            inv_d: 0.2,
+            late: &mut late,
+            stats: &mut stats,
+        };
+        c.grad_quorum_into(&u, None, &rows, &mut g_q, &mut ctx).unwrap();
+        let mut mu = vec![0.0f32; 8];
+        let (folds, drops) = late.fold_grad_into(5, 2, &mut mu, |_, _| panic!("must not fold"));
+        assert_eq!((folds, drops), (0, 1));
+        assert!(mu.iter().all(|&v| v == 0.0));
+        assert!(late.is_empty());
+    }
+
+    #[test]
+    fn late_set_json_round_trips() {
+        let mut set = LateSet::default();
+        set.entries.push(LateReply {
+            iter: 3,
+            worker: 5,
+            slice: LateSlice::Mu { p: 1, part: vec![0.5, -1.25, 3.0] },
+        });
+        set.entries.push(LateReply {
+            iter: 4,
+            worker: 2,
+            slice: LateSlice::Grad { cols: vec![7, 9], data: vec![0.125, -2.5], inv_d: 0.0125 },
+        });
+        let text = set.to_json_value().to_string_pretty();
+        let back =
+            LateSet::from_json_value(&crate::util::json::Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(set, back);
+        let empty = crate::util::json::Value::Arr(vec![]);
+        assert_eq!(LateSet::from_json_value(&empty).unwrap(), LateSet::default());
     }
 }

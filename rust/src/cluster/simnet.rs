@@ -93,6 +93,31 @@ impl SimNet {
         self.sim_s += flops / self.flops_per_sec;
     }
 
+    /// Bounded-staleness barrier cut: the simulated makespan of a phase
+    /// that releases once `⌈quorum_frac·W⌉` workers have replied (the
+    /// k-th order statistic of the per-worker times) or once the
+    /// straggler timeout — `timeout_factor` times the *fastest* reply —
+    /// fires, whichever comes first. `times` are the modeled per-worker
+    /// phase seconds (caller-folded via [`SimNet::worker_s`], with any
+    /// armed slowdown factors applied); `sorted` is reusable scratch.
+    /// Workers with `time ≤ cut` are the quorum members. The timeout
+    /// floor is the fastest reply, so the quorum is never empty.
+    pub fn quorum_cut(
+        times: &[f64],
+        sorted: &mut Vec<f64>,
+        quorum_frac: f64,
+        timeout_factor: f64,
+    ) -> f64 {
+        sorted.clear();
+        sorted.extend_from_slice(times);
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        let w = sorted.len();
+        let k = ((quorum_frac * w as f64).ceil() as usize).clamp(1, w);
+        let t_quorum = sorted[k - 1];
+        let deadline = timeout_factor * sorted[0];
+        t_quorum.min(deadline)
+    }
+
     /// Overwrite the accumulators from a checkpoint snapshot (the
     /// rates/link parameters are rebuilt from the config, which the
     /// checkpoint does not duplicate).
@@ -211,6 +236,32 @@ mod tests {
         let mut base = uniform(4);
         base.phase(0.0, 0, 2, 1);
         assert_close!(skewed.sim_s(), 3.0 * base.sim_s(), 1e-9);
+    }
+
+    #[test]
+    fn quorum_cut_takes_the_kth_order_statistic() {
+        // 6 workers, one 4x straggler: a 0.75 quorum releases after the
+        // 5th reply (1 s), not the straggler's 4 s barrier
+        let times = [4.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut scratch = Vec::new();
+        assert_close!(SimNet::quorum_cut(&times, &mut scratch, 0.75, 4.0), 1.0, 1e-12);
+        // a full quorum is the barrier max when the deadline allows it
+        assert_close!(SimNet::quorum_cut(&times, &mut scratch, 1.0, 8.0), 4.0, 1e-12);
+        // ... and the straggler timeout caps it when it does not:
+        // deadline = 2x the fastest reply
+        assert_close!(SimNet::quorum_cut(&times, &mut scratch, 1.0, 2.0), 2.0, 1e-12);
+        // the cut never undercuts the fastest worker
+        assert_close!(SimNet::quorum_cut(&[3.0, 5.0], &mut scratch, 0.1, 1.0), 3.0, 1e-12);
+    }
+
+    #[test]
+    fn quorum_membership_follows_the_cut() {
+        let times = [4.0, 1.0, 2.0, 1.0];
+        let mut scratch = Vec::new();
+        let cut = SimNet::quorum_cut(&times, &mut scratch, 0.75, 4.0);
+        assert_close!(cut, 2.0, 1e-12);
+        let mask: Vec<bool> = times.iter().map(|&t| t <= cut).collect();
+        assert_eq!(mask, vec![false, true, true, true]);
     }
 
     #[test]

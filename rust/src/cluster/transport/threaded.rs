@@ -303,6 +303,54 @@ mod tests {
     }
 
     #[test]
+    fn probe_storm_never_misclassifies_a_slow_worker_as_dead() {
+        // regression for the timeout-vs-death discrimination in `recv`:
+        // with a probe interval far below the phase's compute time the
+        // leader probes the in-flight worker over and over — every
+        // `Cmd::Nop` must be swallowed by the live thread and the
+        // eventual reply must be the real value, never a synthetic
+        // `Reply::Fault` (a slow worker is a straggler, not a corpse)
+        let mut all = cores(20_000, 16, 1, 1, 7);
+        let core = all.pop().unwrap();
+        let expected = oracle_loss(
+            WorkerCore::new(core.block.clone(), Arc::clone(&core.engine), Loss::Hinge),
+            loss_cmd(20_000, 16),
+        );
+        let t = Threaded::spawn_with_probe(vec![core], Duration::from_micros(50));
+        for _ in 0..3 {
+            assert!(t.send(0, loss_cmd(20_000, 16)));
+            match t.recv() {
+                (0, Reply::Loss(l)) => assert_eq!(l.to_bits(), expected.to_bits()),
+                other => panic!("slow-but-alive worker was misclassified: {other:?}"),
+            }
+        }
+        drop(t);
+    }
+
+    #[test]
+    fn dead_and_slow_workers_are_told_apart_in_one_phase() {
+        // one killed worker and one alive-but-slow worker in flight
+        // under a short probe: the Nop sweep must fault exactly the
+        // dead one while the slow one's reply still lands intact
+        let all = cores(20_000, 16, 2, 1, 8);
+        let t = Threaded::spawn_with_probe(all, Duration::from_micros(50));
+        t.kill(0);
+        let _ = t.send(0, loss_cmd(10_000, 16));
+        assert!(t.send(1, loss_cmd(10_000, 16)));
+        let (mut got_fault, mut got_loss) = (false, false);
+        for _ in 0..2 {
+            match t.recv() {
+                (0, Reply::Fault) => got_fault = true,
+                (1, Reply::Loss(_)) => got_loss = true,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(got_fault, "the killed worker must surface exactly one fault");
+        assert!(got_loss, "the slow worker's reply must survive the probe sweep");
+        drop(t);
+    }
+
+    #[test]
     fn double_kill_in_one_phase_faults_once_then_recovers() {
         let mut all = cores(8, 4, 1, 1, 6);
         let core = all.pop().unwrap();

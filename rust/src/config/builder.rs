@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 
 use super::{
     AlgorithmKind, ClusterProfile, DataConfig, EngineKind, ExecutorKind, ExperimentConfig,
-    NetworkConfig, RecoveryPolicy, SamplingFractions, Schedule, ShardWeighting,
+    NetworkConfig, RecoveryPolicy, SamplingFractions, Schedule, ShardWeighting, StalenessPolicy,
 };
 use crate::loss::Loss;
 
@@ -49,6 +49,7 @@ pub struct ExperimentConfigBuilder {
     cluster_profile: Option<ClusterProfile>,
     shard_weighting: ShardWeighting,
     recovery: Option<RecoveryPolicy>,
+    staleness: Option<StalenessPolicy>,
     eval_every: usize,
     strict_even_grid: bool,
 }
@@ -73,6 +74,7 @@ impl Default for ExperimentConfigBuilder {
             cluster_profile: None,
             shard_weighting: ShardWeighting::Balanced,
             recovery: None,
+            staleness: None,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -194,6 +196,15 @@ impl ExperimentConfigBuilder {
         self
     }
 
+    /// Bounded-staleness aggregation policy (see [`StalenessPolicy`]):
+    /// quorum barriers, straggler timeouts and late-reply folding.
+    /// Unset = hard barrier unless `SODDA_STALENESS` is set at staging
+    /// time; an explicit policy here always wins over the env knob.
+    pub fn staleness(mut self, policy: StalenessPolicy) -> Self {
+        self.staleness = Some(policy);
+        self
+    }
+
     /// Evaluate F(ω) every `k` outer iterations (1 = every iteration).
     pub fn eval_every(mut self, k: usize) -> Self {
         self.eval_every = k;
@@ -235,6 +246,7 @@ impl ExperimentConfigBuilder {
             cluster_profile: self.cluster_profile,
             shard_weighting: self.shard_weighting,
             recovery: self.recovery,
+            staleness: self.staleness,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         };
@@ -270,6 +282,7 @@ impl ExperimentConfig {
             cluster_profile: self.cluster_profile.clone(),
             shard_weighting: self.shard_weighting,
             recovery: self.recovery,
+            staleness: self.staleness,
             eval_every: self.eval_every,
             strict_even_grid: self.strict_even_grid,
         }
@@ -397,6 +410,24 @@ mod tests {
             .grid(3, 2)
             .recovery(RecoveryPolicy { max_retries: 0, backoff_ms: 5, probe_ms: 50 });
         assert!(bad.build().is_err(), "zero-retry policy must be rejected at build");
+    }
+
+    #[test]
+    fn staleness_policy_survives_to_builder() {
+        let policy =
+            StalenessPolicy { quorum_frac: 0.75, max_staleness_iters: 2, timeout_factor: 4.0 };
+        let cfg = ExperimentConfig::builder()
+            .dense(300, 60)
+            .grid(3, 2)
+            .staleness(policy)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.staleness, Some(policy));
+        assert_eq!(cfg.to_builder().build().unwrap().staleness, Some(policy));
+        let bad = ExperimentConfig::builder().dense(300, 60).grid(3, 2).staleness(
+            StalenessPolicy { quorum_frac: 2.0, max_staleness_iters: 2, timeout_factor: 4.0 },
+        );
+        assert!(bad.build().is_err(), "quorum_frac > 1 must be rejected at build");
     }
 
     #[test]

@@ -634,6 +634,122 @@ impl std::str::FromStr for RecoveryPolicy {
     }
 }
 
+/// Bounded-staleness aggregation policy (ROADMAP item 3): the outer
+/// loop's µ and gradient phases stop waiting for the full P·Q barrier
+/// and proceed once `⌈quorum_frac · P·Q⌉` block replies land (or a
+/// profile-derived timeout fires). Replies outside the quorum are
+/// parked in a `LateSet` and folded into the matching phase of a later
+/// iteration with an age-discounted weight; entries older than
+/// `max_staleness_iters` are dropped and recorded. `None` on the config
+/// (or `quorum_frac = 1.0`) is the hard barrier — bit-frozen.
+///
+/// Quorum membership is decided on *modeled* per-worker phase times
+/// (the active [`ClusterProfile`] rates plus any armed `FaultPlan`
+/// slowdowns), never wall-clock, so both executors produce identical
+/// trajectories and staleness logs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StalenessPolicy {
+    /// Fraction of the P·Q block replies the leader waits for before
+    /// proceeding, in (0, 1]. `1.0` = the full barrier (bit-frozen).
+    pub quorum_frac: f64,
+    /// Parked replies older than this many outer iterations are dropped
+    /// (and counted in the `StalenessRecord`) instead of folded.
+    pub max_staleness_iters: usize,
+    /// Straggler deadline as a multiple of the *fastest* worker's
+    /// modeled phase time: replies that would land after
+    /// `timeout_factor × t_min` are parked even if the quorum count has
+    /// not been reached yet (≥ 1).
+    pub timeout_factor: f64,
+}
+
+impl Default for StalenessPolicy {
+    fn default() -> Self {
+        // quorum_frac 1.0 = hard barrier: the default policy is
+        // bit-identical to no policy at all
+        StalenessPolicy { quorum_frac: 1.0, max_staleness_iters: 2, timeout_factor: 4.0 }
+    }
+}
+
+impl StalenessPolicy {
+    /// The env override knob: a non-empty `SODDA_STALENESS` value is
+    /// parsed at Trainer staging when the config carries no explicit
+    /// policy (an explicit `.staleness(...)` pin always wins).
+    pub const ENV: &'static str = "SODDA_STALENESS";
+
+    /// True when this policy is the hard barrier (no quorum cut, no
+    /// timeouts, no late folding) — the bit-frozen default path.
+    pub fn is_barrier(&self) -> bool {
+        self.quorum_frac >= 1.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.quorum_frac.is_finite() && self.quorum_frac > 0.0 && self.quorum_frac <= 1.0,
+            "staleness policy: quorum_frac={} outside (0, 1]",
+            self.quorum_frac
+        );
+        ensure!(
+            self.max_staleness_iters >= 1,
+            "staleness policy: max_staleness_iters must be ≥ 1"
+        );
+        ensure!(
+            self.timeout_factor.is_finite() && self.timeout_factor >= 1.0,
+            "staleness policy: timeout_factor={} must be ≥ 1",
+            self.timeout_factor
+        );
+        Ok(())
+    }
+
+    fn to_json_value(&self) -> Value {
+        json::obj(vec![
+            ("quorum_frac", json::num(self.quorum_frac)),
+            ("max_staleness_iters", json::num(self.max_staleness_iters as f64)),
+            ("timeout_factor", json::num(self.timeout_factor)),
+        ])
+    }
+
+    fn from_json_value(v: &Value) -> Result<Self> {
+        Ok(StalenessPolicy {
+            quorum_frac: v.get("quorum_frac")?.as_f64()?,
+            max_staleness_iters: v.get("max_staleness_iters")?.as_usize()?,
+            timeout_factor: v.get("timeout_factor")?.as_f64()?,
+        })
+    }
+}
+
+impl std::fmt::Display for StalenessPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}", self.quorum_frac, self.max_staleness_iters, self.timeout_factor)
+    }
+}
+
+/// CLI syntax: `quorum_frac[:max_staleness[:timeout_factor]]` — omitted
+/// fields keep their defaults (`1:2:4`).
+impl std::str::FromStr for StalenessPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut policy = StalenessPolicy::default();
+        let mut parts = s.split(':');
+        let frac = parts.next().unwrap_or("").trim();
+        policy.quorum_frac =
+            frac.parse().map_err(|e| format!("staleness quorum_frac {frac:?}: {e}"))?;
+        if let Some(m) = parts.next() {
+            policy.max_staleness_iters =
+                m.trim().parse().map_err(|e| format!("staleness max_staleness {m:?}: {e}"))?;
+        }
+        if let Some(t) = parts.next() {
+            policy.timeout_factor =
+                t.trim().parse().map_err(|e| format!("staleness timeout_factor {t:?}: {e}"))?;
+        }
+        if let Some(extra) = parts.next() {
+            return Err(format!(
+                "staleness policy {s:?}: trailing {extra:?} (syntax: quorum[:max_stale[:timeout]])"
+            ));
+        }
+        Ok(policy)
+    }
+}
+
 /// Everything needed to launch one training run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -668,6 +784,10 @@ pub struct ExperimentConfig {
     /// fault retry/escalation policy (see [`RecoveryPolicy`]); `None` =
     /// the default policy (3 retries, 10ms backoff, 100ms probe)
     pub recovery: Option<RecoveryPolicy>,
+    /// bounded-staleness aggregation policy (see [`StalenessPolicy`]);
+    /// `None` = hard barrier unless the `SODDA_STALENESS` env knob is
+    /// set at staging time (an explicit policy here always wins)
+    pub staleness: Option<StalenessPolicy>,
     /// evaluate F(w) every k outer iterations (1 = every iteration)
     pub eval_every: usize,
     /// reject shapes that don't divide evenly into the grid (the paper's
@@ -709,6 +829,9 @@ impl ExperimentConfig {
         }
         if let Some(recovery) = &self.recovery {
             recovery.validate()?;
+        }
+        if let Some(staleness) = &self.staleness {
+            staleness.validate()?;
         }
         if self.shard_weighting == ShardWeighting::Throughput {
             ensure!(
@@ -813,6 +936,9 @@ impl ExperimentConfig {
         if let Some(recovery) = &self.recovery {
             fields.push(("recovery", recovery.to_json_value()));
         }
+        if let Some(staleness) = &self.staleness {
+            fields.push(("staleness", staleness.to_json_value()));
+        }
         json::obj(fields).to_string_pretty()
     }
 
@@ -887,6 +1013,7 @@ impl ExperimentConfig {
                 None => ShardWeighting::default(),
             },
             recovery: v.opt("recovery").map(RecoveryPolicy::from_json_value).transpose()?,
+            staleness: v.opt("staleness").map(StalenessPolicy::from_json_value).transpose()?,
             eval_every: v.opt("eval_every").map(|e| e.as_usize()).transpose()?.unwrap_or(1),
             strict_even_grid: v
                 .opt("strict_even_grid")
@@ -922,6 +1049,7 @@ mod tests {
             cluster_profile: None,
             shard_weighting: ShardWeighting::Balanced,
             recovery: None,
+            staleness: None,
             eval_every: 1,
             strict_even_grid: false,
         }
@@ -1117,6 +1245,60 @@ mod tests {
         assert!(cfg.validate().is_err(), "absurd backoff must be rejected");
         cfg.recovery = Some(RecoveryPolicy::default());
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn staleness_policy_parses_and_round_trips() {
+        let p: StalenessPolicy = "0.75".parse().unwrap();
+        assert_eq!(p, StalenessPolicy { quorum_frac: 0.75, ..StalenessPolicy::default() });
+        let p: StalenessPolicy = "0.5:3".parse().unwrap();
+        assert_eq!(
+            p,
+            StalenessPolicy { quorum_frac: 0.5, max_staleness_iters: 3, timeout_factor: 4.0 }
+        );
+        let p: StalenessPolicy = "0.8:1:2.5".parse().unwrap();
+        assert_eq!(
+            p,
+            StalenessPolicy { quorum_frac: 0.8, max_staleness_iters: 1, timeout_factor: 2.5 }
+        );
+        // Display → FromStr round trip
+        assert_eq!(p.to_string().parse::<StalenessPolicy>().unwrap(), p);
+        assert!("".parse::<StalenessPolicy>().is_err());
+        assert!(
+            "0.8:1:2:9".parse::<StalenessPolicy>().is_err(),
+            "trailing field must be rejected"
+        );
+        assert!("x".parse::<StalenessPolicy>().is_err());
+
+        let mut cfg = sample();
+        cfg.staleness = Some(p);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.staleness, Some(p));
+        // unset policy is not emitted — legacy configs stay byte-identical
+        let json = sample().to_json();
+        assert!(!json.contains("staleness"), "unset policy must not serialize");
+        assert_eq!(ExperimentConfig::from_json(&json).unwrap().staleness, None);
+    }
+
+    #[test]
+    fn staleness_policy_validation() {
+        let mut cfg = sample();
+        cfg.staleness =
+            Some(StalenessPolicy { quorum_frac: 0.0, max_staleness_iters: 2, timeout_factor: 4.0 });
+        assert!(cfg.validate().is_err(), "zero quorum must be rejected");
+        cfg.staleness =
+            Some(StalenessPolicy { quorum_frac: 1.5, max_staleness_iters: 2, timeout_factor: 4.0 });
+        assert!(cfg.validate().is_err(), "quorum above 1 must be rejected");
+        cfg.staleness =
+            Some(StalenessPolicy { quorum_frac: 0.5, max_staleness_iters: 0, timeout_factor: 4.0 });
+        assert!(cfg.validate().is_err(), "zero staleness bound must be rejected");
+        cfg.staleness =
+            Some(StalenessPolicy { quorum_frac: 0.5, max_staleness_iters: 2, timeout_factor: 0.5 });
+        assert!(cfg.validate().is_err(), "timeout below the fastest worker must be rejected");
+        cfg.staleness = Some(StalenessPolicy::default());
+        assert!(cfg.validate().is_ok());
+        assert!(StalenessPolicy::default().is_barrier(), "default policy is the hard barrier");
+        assert!(!StalenessPolicy { quorum_frac: 0.75, ..Default::default() }.is_barrier());
     }
 
     #[test]

@@ -93,5 +93,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod train;
 
-pub use config::{ExperimentConfig, ExperimentConfigBuilder};
+pub use config::{ExperimentConfig, ExperimentConfigBuilder, StalenessPolicy};
 pub use train::{FaultEvent, FaultPlan, RunState, TrainOutcome, Trainer};

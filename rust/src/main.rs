@@ -93,6 +93,14 @@ TRAIN FLAGS
                    (linear backoff B ms between attempts) before the
                    leader declares the worker permanently lost; P ms
                    liveness-probe interval (default 3:10:100)
+  --staleness Q[:S[:T]]  bounded-staleness quorum: release each mu/
+                   gradient phase once ceil(Q * P*Q) block replies land
+                   (or after T x the fastest worker's modeled time);
+                   stragglers park and fold into a later iteration at
+                   age-discounted weight, dropped past S iterations
+                   (default 1:2:4 — Q=1 is the hard barrier, bit-for-
+                   bit. Overrides the SODDA_STALENESS environment
+                   variable; see README \"Bounded-staleness\")
   --checkpoint F   write a resumable snapshot to <out>/F every
                    --checkpoint-every K iterations (default 1) and at
                    the end; excludes --target-loss
@@ -232,6 +240,9 @@ fn cfg_from(
     }
     if let Some(r) = args.get("recovery") {
         b = b.recovery(r.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
+    if let Some(s) = args.get("staleness") {
+        b = b.staleness(s.parse().map_err(|e: String| anyhow::anyhow!(e))?);
     }
     b.build()
 }

@@ -98,6 +98,27 @@ pub struct ReshardRecord {
     pub sim_s: f64,
 }
 
+/// One outer iteration's bounded-staleness accounting (recorded only
+/// when a `StalenessPolicy` with `quorum_frac < 1` is active and the
+/// iteration deviated from the full barrier in some way).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StalenessRecord {
+    /// outer iteration
+    pub iter: usize,
+    /// block replies inside the µ-phase quorum (out of `workers`)
+    pub mu_quorum: usize,
+    /// block replies inside the gradient-phase quorum
+    pub grad_quorum: usize,
+    /// grid size P·Q at this iteration
+    pub workers: usize,
+    /// replies parked in the `LateSet` this iteration
+    pub late: usize,
+    /// parked replies folded into this iteration's aggregates
+    pub folds: usize,
+    /// parked replies dropped for exceeding `max_staleness_iters`
+    pub drops: usize,
+}
+
 /// Append-only training history.
 #[derive(Debug, Clone, Default)]
 pub struct History {
@@ -111,11 +132,19 @@ pub struct History {
     pub faults: Vec<FaultRecord>,
     /// live re-shards (permanent losses and `reconfigure` grid changes)
     pub reshards: Vec<ReshardRecord>,
+    /// bounded-staleness accounting (empty for barrier runs)
+    pub staleness: Vec<StalenessRecord>,
 }
 
 impl History {
     pub fn new(run: impl Into<String>) -> Self {
-        Self { run: run.into(), records: Vec::new(), faults: Vec::new(), reshards: Vec::new() }
+        Self {
+            run: run.into(),
+            records: Vec::new(),
+            faults: Vec::new(),
+            reshards: Vec::new(),
+            staleness: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, rec: IterRecord) {
@@ -228,6 +257,27 @@ impl History {
                 ),
             ));
         }
+        if !self.staleness.is_empty() {
+            fields.push((
+                "staleness",
+                Value::Arr(
+                    self.staleness
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("iter", json::num(s.iter as f64)),
+                                ("mu_quorum", json::num(s.mu_quorum as f64)),
+                                ("grad_quorum", json::num(s.grad_quorum as f64)),
+                                ("workers", json::num(s.workers as f64)),
+                                ("late", json::num(s.late as f64)),
+                                ("folds", json::num(s.folds as f64)),
+                                ("drops", json::num(s.drops as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         json::obj(fields)
     }
 
@@ -264,6 +314,19 @@ impl History {
                     to_q: r.get("to_q")?.as_usize()?,
                     bytes: r.get("bytes")?.as_f64()? as u64,
                     sim_s: r.get("sim_s")?.as_f64()?,
+                });
+            }
+        }
+        if let Some(staleness) = v.opt("staleness") {
+            for s in staleness.as_arr()? {
+                h.staleness.push(StalenessRecord {
+                    iter: s.get("iter")?.as_usize()?,
+                    mu_quorum: s.get("mu_quorum")?.as_usize()?,
+                    grad_quorum: s.get("grad_quorum")?.as_usize()?,
+                    workers: s.get("workers")?.as_usize()?,
+                    late: s.get("late")?.as_usize()?,
+                    folds: s.get("folds")?.as_usize()?,
+                    drops: s.get("drops")?.as_usize()?,
                 });
             }
         }
@@ -360,6 +423,37 @@ mod tests {
         let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
         let back = History::from_json(&v).unwrap();
         assert_eq!(back.reshards, h.reshards);
+    }
+
+    #[test]
+    fn staleness_records_round_trip_and_stay_off_the_legacy_schema() {
+        let mut h = History::new("t");
+        h.push(rec(1, 0.5, 0.1));
+        assert!(
+            !h.to_json().to_string_pretty().contains("staleness"),
+            "barrier history must keep the legacy schema"
+        );
+        h.staleness.push(StalenessRecord {
+            iter: 2,
+            mu_quorum: 5,
+            grad_quorum: 6,
+            workers: 6,
+            late: 1,
+            folds: 1,
+            drops: 0,
+        });
+        h.staleness.push(StalenessRecord {
+            iter: 4,
+            mu_quorum: 4,
+            grad_quorum: 5,
+            workers: 6,
+            late: 2,
+            folds: 0,
+            drops: 2,
+        });
+        let v = crate::util::json::Value::parse(&h.to_json().to_string_pretty()).unwrap();
+        let back = History::from_json(&v).unwrap();
+        assert_eq!(back.staleness, h.staleness);
     }
 
     #[test]

@@ -46,6 +46,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use super::{sim_net_for, RunCore, TrainOutcome, Trainer};
+use crate::cluster::LateSet;
 use crate::config::{ExecutorKind, ExperimentConfig};
 use crate::data::Dataset;
 use crate::metrics::History;
@@ -116,6 +117,12 @@ pub struct RunState {
     pub comm_bytes: u64,
     pub comm_msgs: u64,
     pub grad_coord_evals: u64,
+    /// bounded-staleness: replies parked past a quorum cut at snapshot
+    /// time. Part of the trajectory (they fold into later iterations),
+    /// so resume must carry them; always empty under the hard barrier,
+    /// and serialized only when non-empty so barrier checkpoints are
+    /// byte-identical to the pre-staleness format.
+    pub late: LateSet,
 }
 
 fn rng_to_json(s: [u64; 4]) -> Value {
@@ -138,7 +145,7 @@ fn u64_from_json(v: &Value, key: &str) -> Result<u64> {
 
 impl RunState {
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("format", json::s(CHECKPOINT_FORMAT)),
             ("run", json::s(self.run.clone())),
             ("executor", json::s(self.executor.to_string())),
@@ -152,7 +159,11 @@ impl RunState {
             ("rng_rows", rng_to_json(self.rng_rows)),
             ("w", Value::Arr(self.w.iter().map(|&x| json::num(x as f64)).collect())),
             ("history", self.history.to_json()),
-        ])
+        ];
+        if !self.late.is_empty() {
+            fields.push(("late_set", self.late.to_json_value()));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<RunState> {
@@ -182,6 +193,12 @@ impl RunState {
             comm_bytes: u64_from_json(v, "comm_bytes")?,
             comm_msgs: u64_from_json(v, "comm_msgs")?,
             grad_coord_evals: u64_from_json(v, "grad_coord_evals")?,
+            late: v
+                .opt("late_set")
+                .map(LateSet::from_json_value)
+                .transpose()
+                .context("late_set")?
+                .unwrap_or_default(),
         })
     }
 
@@ -230,8 +247,9 @@ impl RunState {
             records: self.history.records[base.history.records.len()..].to_vec(),
             faults: self.history.faults[base.history.faults.len()..].to_vec(),
             reshards: self.history.reshards[base.history.reshards.len()..].to_vec(),
+            staleness: self.history.staleness[base.history.staleness.len()..].to_vec(),
         };
-        json::obj(vec![
+        let mut fields = vec![
             ("format", json::s(CHECKPOINT_DELTA_FORMAT)),
             ("run", json::s(self.run.clone())),
             ("executor", json::s(self.executor.to_string())),
@@ -248,7 +266,14 @@ impl RunState {
             ("dw_idx", Value::Arr(dw_idx)),
             ("dw_val", Value::Arr(dw_val)),
             ("history_tail", tail.to_json()),
-        ])
+        ];
+        // the parked set is replaced wholesale on apply (entries both
+        // arrive and drain between snapshots), so an absent key means
+        // "empty now", not "unchanged"
+        if !self.late.is_empty() {
+            fields.push(("late_set", self.late.to_json_value()));
+        }
+        json::obj(fields)
     }
 
     /// Reconstruct the full state `base` + delta. Errors if the delta
@@ -287,6 +312,13 @@ impl RunState {
         out.history.records.extend_from_slice(&tail.records);
         out.history.faults.extend_from_slice(&tail.faults);
         out.history.reshards.extend_from_slice(&tail.reshards);
+        out.history.staleness.extend_from_slice(&tail.staleness);
+        out.late = v
+            .opt("late_set")
+            .map(LateSet::from_json_value)
+            .transpose()
+            .context("late_set")?
+            .unwrap_or_default();
         Ok(out)
     }
 
@@ -425,6 +457,7 @@ impl Trainer {
             comm_bytes: self.state.net.total_bytes(),
             comm_msgs: self.state.net.total_msgs(),
             grad_coord_evals: self.state.grad_coord_evals,
+            late: self.state.late.clone(),
         }
     }
 
@@ -511,6 +544,7 @@ impl Trainer {
             t: snap.t,
             grad_coord_evals: snap.grad_coord_evals,
             t_start: Instant::now(),
+            late: snap.late,
         };
         Ok(())
     }
@@ -696,6 +730,48 @@ mod tests {
             ExecutorKind::Threaded => ExecutorKind::InProcess,
         };
         assert!(Trainer::resume(cfg(4), snap).is_ok());
+    }
+
+    #[test]
+    fn late_set_round_trips_and_stays_out_of_barrier_snapshots() {
+        use crate::cluster::{LateReply, LateSlice};
+
+        let mut t = Trainer::new(cfg(4)).unwrap();
+        t.step().unwrap();
+        let barrier = t.checkpoint();
+        assert!(barrier.late.is_empty());
+        let text = barrier.to_json().to_string_pretty();
+        assert!(
+            !text.contains("late_set"),
+            "a barrier snapshot must not grow a late_set key (format is frozen)"
+        );
+
+        // a quorum-mode snapshot carries its parked replies exactly
+        let mut snap = barrier.clone();
+        snap.late.entries.push(LateReply {
+            iter: 1,
+            worker: 2,
+            slice: LateSlice::Mu { p: 0, part: vec![0.25, -1.5] },
+        });
+        snap.late.entries.push(LateReply {
+            iter: 1,
+            worker: 3,
+            slice: LateSlice::Grad { cols: vec![4, 9], data: vec![1.0, 2.0], inv_d: 0.125 },
+        });
+        let text = snap.to_json().to_string_pretty();
+        let back = RunState::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.late, snap.late, "parked replies must survive the text round trip");
+
+        // delta apply REPLACES the parked set: present key installs it...
+        let delta = snap.delta_to_json(&barrier);
+        let applied = RunState::apply_delta(&barrier, &delta).unwrap();
+        assert_eq!(applied.late, snap.late);
+        // ...and an absent key (everything drained since) empties it
+        let drained = barrier.clone();
+        let delta = drained.delta_to_json(&snap);
+        assert!(!delta.to_string_pretty().contains("late_set"));
+        let applied = RunState::apply_delta(&snap, &delta).unwrap();
+        assert!(applied.late.is_empty(), "an absent late_set key must clear the parked set");
     }
 
     #[test]

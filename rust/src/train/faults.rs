@@ -17,6 +17,15 @@
 //! (`"1@2:grad!perm"`) marks the loss *permanent*: the leader skips
 //! the respawn path entirely and escalates, so the trainer's
 //! re-shard-and-continue machinery is exercised deterministically.
+//!
+//! A `~slow:F` suffix (`"2@3:mu~slow:4"`, `F ≥ 1`) schedules a
+//! **transient slowdown** instead of a kill: the worker survives, but
+//! its modeled time for that one phase is multiplied by `F`. Slowdowns
+//! drive the bounded-staleness quorum machinery (the straggler misses
+//! the quorum cut and its reply is parked — see the README's
+//! "Bounded-staleness aggregation" section); under a hard barrier they
+//! simply stretch the phase's simulated makespan. A slowdown cannot be
+//! permanent — `!perm` and `~slow` on one event is a parse error.
 
 use std::fmt;
 use std::str::FromStr;
@@ -26,8 +35,8 @@ use anyhow::{ensure, Context, Result};
 use crate::metrics::FaultPhase;
 use crate::util::rng::Rng;
 
-/// One scheduled kill.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One scheduled fault: a kill (`slow: None`) or a transient slowdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultEvent {
     /// outer iteration (1-based, like the trainer's `t`)
     pub iter: usize,
@@ -37,6 +46,9 @@ pub struct FaultEvent {
     /// permanent loss: respawn is refused and the leader escalates
     /// (re-shard onto a shrunk grid) instead of recovering in place
     pub perm: bool,
+    /// transient slowdown: the worker survives but its modeled time for
+    /// this one phase is multiplied by the factor (`~slow:F`, `F ≥ 1`)
+    pub slow: Option<f64>,
 }
 
 impl fmt::Display for FaultEvent {
@@ -44,6 +56,9 @@ impl fmt::Display for FaultEvent {
         write!(f, "{}@{}:{}", self.worker, self.iter, self.phase)?;
         if self.perm {
             f.write_str("!perm")?;
+        }
+        if let Some(factor) = self.slow {
+            write!(f, "~slow:{factor}")?;
         }
         Ok(())
     }
@@ -62,6 +77,27 @@ impl FromStr for FaultEvent {
             }
             None => (s, false),
         };
+        let (body, slow) = match body.split_once('~') {
+            Some((body, modifier)) => {
+                let factor = modifier.trim().strip_prefix("slow:").with_context(|| {
+                    format!("fault event {s:?}: unknown modifier {modifier:?} (only ~slow:F)")
+                })?;
+                let factor: f64 = factor
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("fault event {s:?}: bad slowdown factor"))?;
+                ensure!(
+                    factor.is_finite() && factor >= 1.0,
+                    "fault event {s:?}: slowdown factor must be finite and >= 1"
+                );
+                (body, Some(factor))
+            }
+            None => (body, None),
+        };
+        ensure!(
+            !(perm && slow.is_some()),
+            "fault event {s:?}: a transient slowdown cannot be permanent"
+        );
         let (worker, rest) = body
             .split_once('@')
             .with_context(|| format!("fault event {s:?}: expected worker@iter:phase[!perm]"))?;
@@ -73,6 +109,7 @@ impl FromStr for FaultEvent {
             iter: iter.trim().parse().with_context(|| format!("fault event {s:?}: bad iteration"))?,
             phase: phase.trim().parse()?,
             perm,
+            slow,
         })
     }
 }
@@ -85,7 +122,7 @@ impl FromStr for FaultEvent {
 /// `rust-faults` CI lane's kill matrix) applicable across every test's
 /// grid size — and since recovery is bit-exact, the ignored/applied
 /// distinction never shows up in numbers.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
 }
@@ -115,6 +152,7 @@ impl FaultPlan {
                 },
                 worker: rng.below(workers.max(1)),
                 perm: false,
+                slow: None,
             })
             .collect();
         FaultPlan { events }
@@ -137,6 +175,7 @@ impl FaultPlan {
                 },
                 worker: rng.below(workers.max(1)),
                 perm: rng.below(3) == 0,
+                slow: None,
             })
             .collect();
         FaultPlan { events }
@@ -167,7 +206,8 @@ impl FaultPlan {
     /// each with its permanence flag (deduplicated — killing a dead
     /// worker twice in one phase is one kill, and a permanent event
     /// absorbs a transient one on the same worker; out-of-range events
-    /// are ignored, see the type docs).
+    /// are ignored, see the type docs). Slowdown events are not kills
+    /// and never appear here — see [`FaultPlan::slowdowns_for`].
     pub(crate) fn kills_for(
         &self,
         iter: usize,
@@ -177,7 +217,9 @@ impl FaultPlan {
         let mut due: Vec<(usize, bool)> = self
             .events
             .iter()
-            .filter(|e| e.iter == iter && e.phase == phase && e.worker < workers)
+            .filter(|e| {
+                e.iter == iter && e.phase == phase && e.worker < workers && e.slow.is_none()
+            })
             .map(|e| (e.worker, e.perm))
             .collect();
         // sort puts (w, false) before (w, true); keep the perm entry
@@ -185,6 +227,28 @@ impl FaultPlan {
         due.reverse();
         due.dedup_by_key(|&mut (w, _)| w);
         due.reverse();
+        due
+    }
+
+    /// Transient slowdowns (`~slow:F`) armed for `(iter, phase)` on a
+    /// `workers`-sized grid: `(worker, factor)` pairs sorted by worker
+    /// id, deduplicated to the **largest** factor per worker (two
+    /// slowdowns on one worker in one phase don't stack — the worst
+    /// one governs). Out-of-range events are ignored, like kills.
+    pub(crate) fn slowdowns_for(
+        &self,
+        iter: usize,
+        phase: FaultPhase,
+        workers: usize,
+    ) -> Vec<(usize, f64)> {
+        let mut due: Vec<(usize, f64)> = self
+            .events
+            .iter()
+            .filter(|e| e.iter == iter && e.phase == phase && e.worker < workers)
+            .filter_map(|e| e.slow.map(|f| (e.worker, f)))
+            .collect();
+        due.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        due.dedup_by_key(|&mut (w, _)| w);
         due
     }
 
@@ -232,7 +296,7 @@ mod tests {
         assert_eq!(plan.events().len(), 3);
         assert_eq!(
             plan.events()[0],
-            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2, perm: false }
+            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2, perm: false, slow: None }
         );
         let back: FaultPlan = plan.to_string().parse().unwrap();
         assert_eq!(back, plan);
@@ -243,7 +307,7 @@ mod tests {
         let plan: FaultPlan = "1@2:grad!perm, 0@5:mu".parse().unwrap();
         assert_eq!(
             plan.events()[0],
-            FaultEvent { iter: 2, phase: FaultPhase::Grad, worker: 1, perm: true }
+            FaultEvent { iter: 2, phase: FaultPhase::Grad, worker: 1, perm: true, slow: None }
         );
         assert!(!plan.events()[1].perm);
         assert_eq!(plan.to_string(), "1@2:grad!perm,0@5:mu");
@@ -307,6 +371,59 @@ mod tests {
             assert!(!e.perm, "plain seeded plans stay transient");
         }
         assert_ne!(FaultPlan::seeded(8, 5, 6, 20), a, "different seed, different plan");
+    }
+
+    #[test]
+    fn slow_suffix_parses_and_round_trips() {
+        let plan: FaultPlan = "2@3:mu~slow:4, 0@5:grad~slow:1.5,1@1:inner".parse().unwrap();
+        assert_eq!(
+            plan.events()[0],
+            FaultEvent { iter: 3, phase: FaultPhase::Mu, worker: 2, perm: false, slow: Some(4.0) }
+        );
+        assert_eq!(plan.events()[1].slow, Some(1.5));
+        assert_eq!(plan.events()[2].slow, None);
+        assert_eq!(plan.to_string(), "2@3:mu~slow:4,0@5:grad~slow:1.5,1@1:inner");
+        let back: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(back, plan);
+        assert!("2@3:mu~slow:0.5".parse::<FaultEvent>().is_err(), "factor below 1");
+        assert!("2@3:mu~slow:inf".parse::<FaultEvent>().is_err(), "non-finite factor");
+        assert!("2@3:mu~slow:".parse::<FaultEvent>().is_err(), "missing factor");
+        assert!("2@3:mu~fast:2".parse::<FaultEvent>().is_err(), "unknown modifier");
+        assert!("2@3:mu~slow:4!perm".parse::<FaultEvent>().is_err(), "slowdown cannot be perm");
+    }
+
+    #[test]
+    fn slowdowns_for_filters_dedups_and_keeps_the_max() {
+        let plan: FaultPlan =
+            "2@3:mu~slow:2,2@3:mu~slow:4,0@3:mu~slow:1.5,9@3:mu~slow:8,2@3:mu,1@4:grad~slow:3"
+                .parse()
+                .unwrap();
+        assert_eq!(plan.slowdowns_for(3, FaultPhase::Mu, 4), vec![(0, 1.5), (2, 4.0)]);
+        assert_eq!(plan.slowdowns_for(4, FaultPhase::Grad, 4), vec![(1, 3.0)]);
+        assert_eq!(plan.slowdowns_for(3, FaultPhase::Grad, 4), Vec::<(usize, f64)>::new());
+        // worker 9 exists on a bigger grid
+        assert_eq!(plan.slowdowns_for(3, FaultPhase::Mu, 16)[2], (9, 8.0));
+        // the kill on worker 2 is independent of its slowdowns, and
+        // slowdown events never surface as kills
+        assert_eq!(plan.kills_for(3, FaultPhase::Mu, 4), vec![(2, false)]);
+        assert_eq!(plan.kills_for(4, FaultPhase::Grad, 4), Vec::<(usize, bool)>::new());
+    }
+
+    #[test]
+    fn display_from_str_round_trips_over_slowdown_plans() {
+        // property test over the extended syntax: every third event of a
+        // seeded plan becomes a slowdown with a varied factor
+        for seed in 0..64u64 {
+            let mut plan = FaultPlan::seeded(seed, 6, 8, 12);
+            for (i, e) in plan.events.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    e.slow = Some(1.0 + i as f64 * 0.75 + seed as f64 * 0.125);
+                }
+            }
+            let text = plan.to_string();
+            let back: FaultPlan = text.parse().unwrap_or_else(|e| panic!("{text:?}: {e}"));
+            assert_eq!(back, plan, "round trip failed for {text:?}");
+        }
     }
 
     #[test]

@@ -62,9 +62,9 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::cluster::{Cluster, SimNet};
+use crate::cluster::{Cluster, LateSet, SimNet};
 use crate::config::{
-    ClusterProfile, EngineKind, ExecutorKind, ExperimentConfig, ShardWeighting,
+    ClusterProfile, EngineKind, ExecutorKind, ExperimentConfig, ShardWeighting, StalenessPolicy,
 };
 use crate::data::{Dataset, Grid, Layout};
 use crate::engine::ComputeEngine;
@@ -97,6 +97,10 @@ struct RunCore {
     t: usize,
     grad_coord_evals: u64,
     t_start: Instant,
+    /// bounded-staleness: replies parked past a quorum cut, waiting to
+    /// fold into a later iteration (always empty under the hard
+    /// barrier). Part of the run's math, so checkpoints carry it.
+    late: LateSet,
 }
 
 /// Iteration-start snapshot for the permanent-loss rollback. A failed
@@ -119,6 +123,12 @@ struct Rollback {
     /// records.len() at iteration start (pushes only happen at iteration
     /// end today, but truncating keeps the snapshot future-proof)
     records: usize,
+    /// history.staleness.len() at iteration start (staleness records
+    /// land mid-iteration, before the SVRG phase can fail)
+    staleness: usize,
+    /// parked late replies at iteration start — a failed quorum
+    /// iteration may have parked new entries or drained old ones
+    late: LateSet,
 }
 
 /// A staged, reusable training session (see the module docs).
@@ -147,6 +157,11 @@ pub struct Trainer {
     /// not the run's math (recovery is bit-transparent), so a resumed
     /// run re-reads its environment.
     fault_plan: Option<FaultPlan>,
+    /// Bounded-staleness aggregation policy (see [`StalenessPolicy`]):
+    /// resolved at staging from the explicit config pin or the
+    /// `SODDA_STALENESS` env knob; `None` (or a full quorum) keeps the
+    /// frozen hard-barrier path bit-for-bit.
+    staleness: Option<StalenessPolicy>,
     /// Persistent iteration-start snapshot for permanent-loss rollback.
     rollback: Rollback,
 }
@@ -259,6 +274,8 @@ impl Trainer {
         let fault_plan = FaultPlan::from_env()
             .with_context(|| format!("staging {:?}", cfg.name))?
             .filter(|plan| !plan.is_empty());
+        let staleness =
+            staged_staleness(&cfg).with_context(|| format!("staging {:?}", cfg.name))?;
         Ok(Trainer {
             state: fresh_state(&cfg, cluster.layout.m_total),
             cfg,
@@ -268,6 +285,7 @@ impl Trainer {
             cluster,
             ws: step::Workspace::default(),
             fault_plan,
+            staleness,
             rollback: Rollback::default(),
         })
     }
@@ -307,6 +325,13 @@ impl Trainer {
     /// `SODDA_FAULT_PLAN` or set via [`Trainer::set_fault_plan`]).
     pub fn fault_plan(&self) -> Option<&FaultPlan> {
         self.fault_plan.as_ref()
+    }
+
+    /// The session's bounded-staleness policy, if any (an explicit
+    /// `.staleness(...)` pin, or staged from `SODDA_STALENESS`). `None`
+    /// — and any full-quorum policy — is the hard barrier.
+    pub fn staleness(&self) -> Option<StalenessPolicy> {
+        self.staleness
     }
 
     /// Replace the session's fault schedule (`None` disables injection).
@@ -407,6 +432,10 @@ impl Trainer {
         rb.msgs = self.state.net.total_msgs();
         rb.grad_coord_evals = self.state.grad_coord_evals;
         rb.records = self.state.history.records.len();
+        rb.staleness = self.state.history.staleness.len();
+        // empty under the hard barrier, so the default path clones
+        // nothing and stays inside the O(1)-allocations budget
+        rb.late.clone_from(&self.state.late);
     }
 
     /// Undo a half-finished iteration (see [`Rollback`]). `History::faults`
@@ -422,6 +451,8 @@ impl Trainer {
         self.state.net.restore(rb.sim_s, rb.bytes, rb.msgs);
         self.state.grad_coord_evals = rb.grad_coord_evals;
         self.state.history.records.truncate(rb.records);
+        self.state.history.staleness.truncate(rb.staleness);
+        self.state.late.clone_from(&rb.late);
     }
 
     /// Elastic degradation after a permanent worker loss: shrink the grid
@@ -517,6 +548,9 @@ impl Trainer {
         self.cfg = cfg2;
         // per-iteration buffers are sized to the old grid; drop them
         self.ws = step::Workspace::default();
+        // parked replies reference the dead grid's partitions and worker
+        // ids — they cannot fold into the re-sharded run
+        self.state.late.clear();
         // fault events at or before the interrupted iteration targeted
         // the old grid and were already armed — the re-run must not
         // re-arm them (worker ids have been renumbered anyway)
@@ -746,6 +780,28 @@ fn staged_layout(cfg: &ExperimentConfig, ds: &Dataset) -> Result<Layout> {
     }
 }
 
+/// Resolve the session's bounded-staleness policy, mirroring the fault
+/// plan's contract: an explicit `.staleness(...)` config pin always
+/// wins; otherwise a non-empty `SODDA_STALENESS` is parsed and
+/// validated here, at staging — not silently mid-run. Empty/unset
+/// keeps the hard barrier.
+fn staged_staleness(cfg: &ExperimentConfig) -> Result<Option<StalenessPolicy>> {
+    if cfg.staleness.is_some() {
+        return Ok(cfg.staleness);
+    }
+    match crate::util::env::read(StalenessPolicy::ENV) {
+        Some(raw) if !raw.trim().is_empty() => {
+            let pol: StalenessPolicy = raw
+                .trim()
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!("{}: {e}", StalenessPolicy::ENV))?;
+            pol.validate().with_context(|| StalenessPolicy::ENV)?;
+            Ok(Some(pol))
+        }
+        _ => Ok(None),
+    }
+}
+
 fn fresh_state(cfg: &ExperimentConfig, m_total: usize) -> RunCore {
     // independent RNG streams (see util::rng docs)
     let root = Rng::seed_from_u64(cfg.seed);
@@ -759,6 +815,7 @@ fn fresh_state(cfg: &ExperimentConfig, m_total: usize) -> RunCore {
         t: 0,
         grad_coord_evals: 0,
         t_start: Instant::now(),
+        late: LateSet::default(),
     }
 }
 

@@ -30,10 +30,10 @@ use std::sync::Arc;
 
 use super::faults::FaultPlan;
 use super::Trainer;
-use crate::cluster::{Cluster, PermanentLoss, SvrgTask};
-use crate::config::AlgorithmKind;
+use crate::cluster::{Cluster, PermanentLoss, QuorumCtx, QuorumStats, SimNet, SvrgTask};
+use crate::config::{AlgorithmKind, StalenessPolicy};
 use crate::coordinator::sampling::{self, SampleSets};
-use crate::metrics::{FaultPhase, FaultRecord, History, IterRecord};
+use crate::metrics::{FaultPhase, FaultRecord, History, IterRecord, StalenessRecord};
 use crate::util::arc_mut;
 
 /// Arm this `(iter, phase)`'s scheduled kills right before the phase's
@@ -63,6 +63,42 @@ fn arm_due_faults(
             cluster.inject_fault(worker);
         }
         history.faults.push(FaultRecord { iter, worker, phase, perm });
+    }
+}
+
+/// Stretch this `(iter, phase)`'s modeled per-worker times by the armed
+/// transient slowdowns (`~slow:F` plan events). No plan or no due
+/// events leaves the times untouched, keeping default trajectories
+/// bit-frozen. Under a hard barrier a slowdown simply stretches the
+/// phase's simulated makespan; under a staleness policy it pushes the
+/// worker past the quorum cut so its reply is parked.
+fn apply_slowdowns(plan: Option<&FaultPlan>, iter: usize, phase: FaultPhase, times: &mut [f64]) {
+    let Some(plan) = plan else { return };
+    for (worker, factor) in plan.slowdowns_for(iter, phase, times.len()) {
+        times[worker] *= factor;
+    }
+}
+
+/// The phase's simulated makespan under the active staleness policy: a
+/// hard barrier (`None`) waits for the slowest modeled worker, while a
+/// quorum policy charges the [`SimNet::quorum_cut`] and fills `mask`
+/// with the membership it implies. The barrier arm reproduces the
+/// historical incremental fold bit-for-bit — same values, and `f64::max`
+/// is order-independent without NaNs.
+fn quorum_makespan(
+    policy: Option<StalenessPolicy>,
+    times: &[f64],
+    sorted: &mut Vec<f64>,
+    mask: &mut Vec<bool>,
+) -> f64 {
+    match policy {
+        Some(pol) => {
+            let cut = SimNet::quorum_cut(times, sorted, pol.quorum_frac, pol.timeout_factor);
+            mask.clear();
+            mask.extend(times.iter().map(|&s| s <= cut));
+            cut
+        }
+        None => times.iter().fold(0.0f64, |a, &b| a.max(b)),
     }
 }
 
@@ -114,6 +150,16 @@ pub(super) struct Workspace {
     eval_rows: Vec<Arc<Vec<u32>>>,
     /// `objective_now`: per-feature-block slices of the current iterate
     eval_w_blocks: Vec<Arc<Vec<f32>>>,
+    /// bounded-staleness: modeled per-worker phase seconds (wid order),
+    /// also the barrier path's makespan source
+    times: Vec<f64>,
+    /// bounded-staleness: sort scratch for the quorum cut
+    times_sorted: Vec<f64>,
+    /// bounded-staleness: quorum membership of the current phase
+    quorum_mask: Vec<bool>,
+    /// bounded-staleness: per-feature-block stale-fold weight of this
+    /// iteration (damps the SVRG step size on touched blocks)
+    stale_mass: Vec<f64>,
 }
 
 impl Trainer {
@@ -133,8 +179,13 @@ impl Trainer {
     /// iteration is incomplete and its side effects are undone by the
     /// caller's rollback (`Trainer::step` re-shards and re-runs).
     pub(super) fn iterate(&mut self) -> Result<Option<IterRecord>, PermanentLoss> {
-        let Trainer { cfg, cluster, leader_engine, state, ws, fault_plan, .. } = self;
+        let Trainer { cfg, cluster, leader_engine, state, ws, fault_plan, staleness, .. } = self;
         let fault_plan = fault_plan.as_ref();
+        // a full-quorum policy is the hard barrier; route it through the
+        // frozen path so default configs stay bit-for-bit unchanged
+        let policy = (*staleness).filter(|pol| !pol.is_barrier());
+        let mut mu_stats = QuorumStats::default();
+        let mut grad_stats = QuorumStats::default();
         let (p, q) = (cfg.p, cfg.q);
         let (n_total, m_total) = (cluster.layout.n_total, cluster.layout.m_total);
         let t = state.t;
@@ -168,6 +219,9 @@ impl Trainer {
         // bytes scale with |B∩block| / |C∩block| — exactly what the
         // cost loops below charge. |B| == M (RADiSA, full-fraction
         // SODDA) keeps the frozen full-width path bit-for-bit.
+        // |D^t| is fixed for the whole iteration: it scales µ below and
+        // stamps parked gradient slices so late folds land in µ-units
+        let inv_d = 1.0 / ws.sets.d.len() as f32;
         let b_sampled = ws.sets.b.len() < m_total;
         ws.w_blocks.resize_with(q, Default::default);
         if b_sampled {
@@ -201,7 +255,8 @@ impl Trainer {
             // intersection lists (the full path covers every column) —
             // no per-(p,q) binary searches.
             let mut bytes = 0u64;
-            let mut max_s = 0f64;
+            ws.times.clear();
+            ws.times.resize(p * q, 0.0);
             for qi in 0..q {
                 let bq =
                     if b_sampled { ws.bcols[qi].len() } else { cluster.layout.cols_in(qi) };
@@ -216,17 +271,39 @@ impl Trainer {
                     bytes += 4 * (bq as u64 + ws.rows[pi].len() as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * bq as f64 * cluster.density_at(pi, qi);
-                    max_s = max_s.max(state.net.worker_s(pi * q + qi, fl));
+                    ws.times[pi * q + qi] = state.net.worker_s(pi * q + qi, fl);
                 }
             }
-            state.net.phase(max_s, bytes, 2 * (p * q) as u64, 1);
+            apply_slowdowns(fault_plan, t, FaultPhase::Mu, &mut ws.times);
+            let makespan =
+                quorum_makespan(policy, &ws.times, &mut ws.times_sorted, &mut ws.quorum_mask);
+            state.net.phase(makespan, bytes, 2 * (p * q) as u64, 1);
         }
 
         // u = f'(z, y): fused on-worker when the grid has one feature
         // block, z-reduce + leader dloss otherwise (the cluster picks)
         arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Mu, p * q);
         let leader = leader_engine.as_ref();
-        if b_sampled {
+        if let Some(pol) = policy {
+            let mut ctx = QuorumCtx {
+                mask: &ws.quorum_mask,
+                iter: t,
+                max_staleness_iters: pol.max_staleness_iters,
+                inv_d: inv_d as f64,
+                late: &mut state.late,
+                stats: &mut mu_stats,
+            };
+            let bcols = if b_sampled { Some(&ws.bcols[..]) } else { None };
+            cluster.partial_u_quorum_into(
+                &ws.w_blocks,
+                bcols,
+                &ws.rows,
+                leader,
+                cfg.loss,
+                &mut ws.u,
+                &mut ctx,
+            )?;
+        } else if b_sampled {
             cluster.partial_u_cols_into(
                 &ws.w_blocks,
                 &ws.bcols,
@@ -241,8 +318,6 @@ impl Trainer {
         state.net.local(ws.sets.d.len() as f64);
 
         let c_sampled = ws.sets.c.len() < m_total;
-        arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Grad, p * q);
-        let g = arc_mut(&mut ws.mu);
         if c_sampled {
             ws.ccols.resize_with(q, Default::default);
             sampling::rows_per_partition_into(
@@ -250,17 +325,15 @@ impl Trainer {
                 cluster.layout.col_bounds(),
                 ws.ccols.iter_mut().map(arc_mut),
             );
-            // compact |C∩block| replies, scattered into g at the C^t
-            // offsets (g returns already projected onto C^t); the
-            // cluster debug-asserts each reply length against its id
-            // list, so the cq charge below is the actual reply size
-            cluster.grad_cols_into(&ws.u, &ws.ccols, &ws.rows, g)?;
-        } else {
-            cluster.grad_into(&ws.u, &ws.rows, g)?;
         }
         {
+            // phase-2 cost, charged up front so a quorum policy knows the
+            // membership mask before the replies fold. The charge order on
+            // the accumulator is unchanged (phase-1, |D| dloss, phase-2),
+            // so barrier trajectories keep their exact sim_s bits.
             let mut bytes = 0u64;
-            let mut max_s = 0f64;
+            ws.times.clear();
+            ws.times.resize(p * q, 0.0);
             for qi in 0..q {
                 let cq =
                     if c_sampled { ws.ccols[qi].len() } else { cluster.layout.cols_in(qi) };
@@ -268,14 +341,38 @@ impl Trainer {
                     bytes += 4 * (ws.rows[pi].len() as u64 + cq as u64);
                     let fl =
                         2.0 * ws.rows[pi].len() as f64 * cq as f64 * cluster.density_at(pi, qi);
-                    max_s = max_s.max(state.net.worker_s(pi * q + qi, fl));
+                    ws.times[pi * q + qi] = state.net.worker_s(pi * q + qi, fl);
                 }
             }
-            state.net.phase(max_s, bytes, 2 * (p * q) as u64, 1);
+            apply_slowdowns(fault_plan, t, FaultPhase::Grad, &mut ws.times);
+            let makespan =
+                quorum_makespan(policy, &ws.times, &mut ws.times_sorted, &mut ws.quorum_mask);
+            state.net.phase(makespan, bytes, 2 * (p * q) as u64, 1);
+        }
+        arm_due_faults(fault_plan, cluster, &mut state.history, t, FaultPhase::Grad, p * q);
+        let g = arc_mut(&mut ws.mu);
+        if let Some(pol) = policy {
+            let mut ctx = QuorumCtx {
+                mask: &ws.quorum_mask,
+                iter: t,
+                max_staleness_iters: pol.max_staleness_iters,
+                inv_d: inv_d as f64,
+                late: &mut state.late,
+                stats: &mut grad_stats,
+            };
+            let ccols = if c_sampled { Some(&ws.ccols[..]) } else { None };
+            cluster.grad_quorum_into(&ws.u, ccols, &ws.rows, g, &mut ctx)?;
+        } else if c_sampled {
+            // compact |C∩block| replies, scattered into g at the C^t
+            // offsets (g returns already projected onto C^t); the
+            // cluster debug-asserts each reply length against its id
+            // list, so the cq charge above is the actual reply size
+            cluster.grad_cols_into(&ws.u, &ws.ccols, &ws.rows, g)?;
+        } else {
+            cluster.grad_into(&ws.u, &ws.rows, g)?;
         }
 
         // µ = (g ∘ C) / d^t — in place; `ws.mu` then ships to every task
-        let inv_d = 1.0 / ws.sets.d.len() as f32;
         if c_sampled {
             // already projected by the compact scatter; scale the C^t
             // coordinates only — O(|C|), not O(M)
@@ -288,8 +385,57 @@ impl Trainer {
                 *v *= inv_d;
             }
         }
+        if let Some(pol) = policy {
+            // drain due parked gradient slices into the fresh µ. Each
+            // carries its origin |D| stamp, so the age-discounted fold
+            // lands in µ-units regardless of this iteration's |D^t|;
+            // blocks a stale slice (or a phase-1 µ fold) touched get
+            // their SVRG step damped below.
+            ws.stale_mass.clear();
+            ws.stale_mass.resize(q, 0.0);
+            if mu_stats.fold_weight > 0.0 {
+                for mass in ws.stale_mass.iter_mut() {
+                    // a stale µ part perturbs every block through u
+                    *mass += mu_stats.fold_weight;
+                }
+            }
+            let layout = &cluster.layout;
+            let mass = &mut ws.stale_mass;
+            let (folds, drops) =
+                state.late.fold_grad_into(t, pol.max_staleness_iters, g, |cols, w| {
+                    for (qi, m) in mass.iter_mut().enumerate() {
+                        let r = layout.block_cols(qi);
+                        if cols.iter().any(|&c| r.contains(&(c as usize))) {
+                            *m += w as f64;
+                        }
+                    }
+                });
+            grad_stats.folds += folds;
+            grad_stats.drops += drops;
+        }
         state.net.local(ws.sets.c.len() as f64);
         state.grad_coord_evals += (ws.sets.c.len() * ws.sets.d.len()) as u64;
+
+        if policy.is_some() {
+            let workers = p * q;
+            let rec = StalenessRecord {
+                iter: t,
+                mu_quorum: mu_stats.quorum,
+                grad_quorum: grad_stats.quorum,
+                workers,
+                late: mu_stats.parked + grad_stats.parked,
+                folds: mu_stats.folds + grad_stats.folds,
+                drops: mu_stats.drops + grad_stats.drops,
+            };
+            let trivial = rec.mu_quorum == workers
+                && rec.grad_quorum == workers
+                && rec.late == 0
+                && rec.folds == 0
+                && rec.drops == 0;
+            if !trivial {
+                state.history.staleness.push(rec);
+            }
+        }
 
         // ---- inner loops (steps 9-18) + assembly (step 19) ------------------
         // All three algorithms run one parallel sub-epoch: π_q assigns each
@@ -308,6 +454,16 @@ impl Trainer {
         ws.task_cols.clear();
         ws.task_density.clear();
         for qi in 0..q {
+            // per-block step damping: blocks whose µ absorbed stale mass
+            // this iteration take shorter SVRG steps (γ / (1 + mass)),
+            // so a heavily-discounted fold cannot fling the iterate
+            let gamma_q = match policy {
+                Some(_) => match ws.stale_mass.get(qi) {
+                    Some(&m) if m > 0.0 => gamma * (1.0 / (1.0 + m)) as f32,
+                    _ => gamma,
+                },
+                None => gamma,
+            };
             state.rng_perm.permutation_into(p, &mut ws.perm);
             for pi in 0..p {
                 let k = ws.perm[pi] as usize;
@@ -326,7 +482,7 @@ impl Trainer {
                     w: Arc::clone(&ws.w_snap),
                     mu: Arc::clone(&ws.mu),
                     idx,
-                    gamma,
+                    gamma: gamma_q,
                     avg,
                 });
                 ws.task_cols.push(gcols);

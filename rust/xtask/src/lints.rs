@@ -635,7 +635,7 @@ fn doc_refs(root: &Path, files: &[LintFile]) -> Vec<Violation> {
 const CONTRACT_HEADING: &str = "## Determinism contract";
 const CHECKPOINT_MOD: &str = "rust/src/train/checkpoint.rs";
 const CI_FILE: &str = ".github/workflows/ci.yml";
-const CI_LANES: [&str; 4] = ["rust-loom:", "rust-tsan:", "rust-miri:", "xtask"];
+const CI_LANES: [&str; 5] = ["rust-async:", "rust-loom:", "rust-tsan:", "rust-miri:", "xtask"];
 
 /// The correctness-tooling docs and CI lanes reference each other;
 /// this keeps any of them from quietly disappearing in a refactor.
@@ -703,6 +703,19 @@ fn doc_contract(files: &[LintFile]) -> Vec<Violation> {
         "grad!perm",
         "the permanent-loss fault lane (a `!perm` plan entry) disappeared from the CI \
          matrix — escalation + live re-sharding must stay exercised on both executors",
+    );
+    require(
+        "README.md",
+        "### Bounded-staleness aggregation",
+        "README lost the bounded-staleness subsection — the quorum/timeout/late-fold \
+         semantics and the barrier-freeze guarantee must stay documented under Fault \
+         tolerance",
+    );
+    require(
+        CI_FILE,
+        "SODDA_STALENESS",
+        "the bounded-staleness lane (a `SODDA_STALENESS` quorum policy) disappeared \
+         from the CI matrix — quorum aggregation must stay exercised on both executors",
     );
     out
 }
@@ -921,9 +934,10 @@ let c = '"'; let d = b"env::var"; let e = br#"env::var"#; let done = 1;
                 "README.md",
                 "the determinism contract lives in the transport docs\n\
                  ### Escalation, permanent loss & live re-sharding\n\
-                 ### Durable checkpoints\n",
+                 ### Durable checkpoints\n\
+                 ### Bounded-staleness aggregation\n",
             ),
-            (CI_FILE, "jobs:\n  rust-loom:\n  rust-tsan:\n  rust-miri:\n  x:\n    run: cargo run -p xtask -- lint\n    plan: \"1@2:grad!perm\"\n"),
+            (CI_FILE, "jobs:\n  rust-async:\n    SODDA_STALENESS: \"0.75:2:4\"\n  rust-loom:\n  rust-tsan:\n  rust-miri:\n  x:\n    run: cargo run -p xtask -- lint\n    plan: \"1@2:grad!perm\"\n"),
             (CHECKPOINT_MOD, "//! ## Durability\nfn save() {}\n"),
         ])
     }
@@ -942,7 +956,8 @@ let c = '"'; let d = b"env::var"; let e = br#"env::var"#; let done = 1;
         let mut fs_ = contract_files();
         fs_[2] = lint_file(
             CI_FILE,
-            "jobs:\n  rust-loom:\n  rust-miri:\n    run: xtask\n    plan: \"1@2:grad!perm\"\n",
+            "jobs:\n  rust-async:\n    SODDA_STALENESS: \"0.75:2:4\"\n  rust-loom:\n  \
+             rust-miri:\n    run: xtask\n    plan: \"1@2:grad!perm\"\n",
         );
         let v = doc_contract(&fs_);
         assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
